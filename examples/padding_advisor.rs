@@ -1,0 +1,45 @@
+//! Padding advisor walkthrough: scan a band of grid sizes, flag the
+//! unfavorable ones (§6), and print the advised padding with its cost.
+//!
+//! Run with: `cargo run --release --example padding_advisor -- [--n2 91]`
+
+use stencilcache::cache::CacheParams;
+use stencilcache::grid::GridDesc;
+use stencilcache::lattice::InterferenceLattice;
+use stencilcache::padding;
+use stencilcache::report::Table;
+use stencilcache::stencil::Stencil;
+use stencilcache::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env(&[]).unwrap_or_default();
+    let n2 = args.get_usize("n2", 91).unwrap_or(91);
+    let cache = CacheParams::r10000();
+    let stencil = Stencil::star13();
+
+    let mut table = Table::new(
+        &format!("padding advice for n1×{n2}×100 grids, cache (2,512,4)"),
+        &["n1", "min L1 vec", "unfavorable", "advised pad", "storage", "overhead %", "min L1 after"],
+    );
+    for n1 in 40..100 {
+        let grid = GridDesc::new(&[n1, n2, 100]);
+        let lat = InterferenceLattice::new(grid.storage_dims(), cache.lattice_modulus());
+        let unfav = padding::is_unfavorable(&grid, &stencil, &cache);
+        if !unfav {
+            continue; // only report the problem cases
+        }
+        let advice = padding::advise(&grid, &stencil, &cache, 8);
+        table.add_row(vec![
+            n1.to_string(),
+            lat.min_l1(8).map(|m| m.to_string()).unwrap_or_else(|| ">8".into()),
+            "YES".into(),
+            format!("{:?}", advice.pad),
+            format!("{:?}", advice.storage_dims),
+            format!("{:.2}", advice.overhead * 100.0),
+            advice.min_l1.map(|m| m.to_string()).unwrap_or_else(|| ">bar".into()),
+        ]);
+    }
+    println!("{}", table.to_text());
+    println!("(grids not listed are already favorable; padding the first two dims");
+    println!(" moves n1·n2 off the k·S/2 hyperbolae — see Figure 5 of the paper)");
+}

@@ -1,0 +1,62 @@
+//! Quickstart: the 60-second tour of the public API.
+//!
+//! 1. describe a grid and a stencil;
+//! 2. inspect its interference lattice (is it unfavorable?);
+//! 3. compare traversal orders in the cache simulator;
+//! 4. ask the padding advisor for a fix.
+//!
+//! Run with: `cargo run --release --example quickstart`
+
+use stencilcache::cache::{CacheParams, CacheSim};
+use stencilcache::engine;
+use stencilcache::grid::{GridDesc, MultiArrayLayout};
+use stencilcache::lattice::InterferenceLattice;
+use stencilcache::padding;
+use stencilcache::stencil::Stencil;
+use stencilcache::traversal;
+use stencilcache::tuner;
+
+fn main() {
+    // The paper's measurement platform: MIPS R10000, 32 KB 2-way L1,
+    // S = 4096 double-precision words.
+    let cache = CacheParams::r10000();
+    // A grid right on the paper's Figure-4 spike: 45×91×100.
+    let grid = GridDesc::new(&[45, 91, 100]);
+    let stencil = Stencil::star13();
+
+    println!("grid {:?}, stencil |K|={} r={}", grid.dims(), stencil.size(), stencil.radius());
+
+    // --- lattice analysis -------------------------------------------------
+    let lat = InterferenceLattice::new(grid.storage_dims(), cache.lattice_modulus());
+    println!("interference lattice (Eq 8/9): det = {} (= S)", lat.determinant());
+    println!("  reduced basis: {:?}", lat.reduced_basis());
+    println!("  shortest vector: {:?} (|v|₂ = {:.2})", lat.shortest(), lat.shortest_len());
+    println!("  unfavorable for this stencil? {}", lat.is_unfavorable(stencil.diameter() as i64));
+
+    // --- measure traversals ----------------------------------------------
+    let layout = MultiArrayLayout::paper_offsets(&grid, 1, cache.size_words());
+    let mut measure = |name: &str, order: &traversal::Order| {
+        let mut sim = CacheSim::new(cache);
+        let rep = engine::simulate(order, &layout, &stencil, &mut sim);
+        println!("  {name:<28} misses/pt = {:.3}  u-loads/pt = {:.3}", rep.misses_per_point(), rep.u_loads_per_point());
+    };
+    println!("\nsimulated misses on (2,512,4):");
+    measure("natural (compiler)", &traversal::natural(&grid, 2));
+    let (auto_order, chosen) = tuner::auto_fitting_order(&grid, &stencil, &cache);
+    measure(&format!("cache fitting [{}]", chosen.name()), &auto_order);
+
+    // --- padding advice ----------------------------------------------------
+    let advice = padding::advise(&grid, &stencil, &cache, 8);
+    println!(
+        "\npadding advisor: pad {:?} → storage {:?} (overhead {:.1}%)",
+        advice.pad,
+        advice.storage_dims,
+        advice.overhead * 100.0
+    );
+    let padded = GridDesc::with_padding(grid.dims(), &advice.pad);
+    let playout = MultiArrayLayout::paper_offsets(&padded, 1, cache.size_words());
+    let (porder, pchosen) = tuner::auto_fitting_order(&padded, &stencil, &cache);
+    let mut sim = CacheSim::new(cache);
+    let rep = engine::simulate(&porder, &playout, &stencil, &mut sim);
+    println!("  after padding [{}]: misses/pt = {:.3}", pchosen.name(), rep.misses_per_point());
+}

@@ -1,0 +1,44 @@
+//! Reproduce the §6 unfavorable-grid phenomenology interactively: scan
+//! (n1, n2) space, print the short-vector map (Figure 5B) and verify the
+//! hyperbola law n1·n2 ≈ k·S/2.
+//!
+//! Run with: `cargo run --release --example unfavorable_scan -- [--lo 40 --hi 100]`
+
+use stencilcache::cache::CacheParams;
+use stencilcache::lattice::InterferenceLattice;
+use stencilcache::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env(&[]).unwrap_or_default();
+    let lo = args.get_usize("lo", 40).unwrap_or(40);
+    let hi = args.get_usize("hi", 100).unwrap_or(100);
+    let cache = CacheParams::r10000();
+    let s = cache.lattice_modulus();
+
+    println!("short-vector map (L1 < 8), n1,n2 ∈ [{lo},{hi}), S = {s}; ■ = unfavorable\n");
+    let mut on_hyperbola = 0usize;
+    let mut short_total = 0usize;
+    for n2 in (lo..hi).rev() {
+        let mut row = String::with_capacity(hi - lo + 8);
+        for n1 in lo..hi {
+            let lat = InterferenceLattice::new(&[n1, n2, 50], s);
+            let short = lat.min_l1(7).is_some();
+            if short {
+                short_total += 1;
+                let prod = (n1 * n2) as f64;
+                let k = (prod / (s as f64 / 2.0)).round();
+                if k >= 1.0 && (prod - k * s as f64 / 2.0).abs() / (s as f64 / 2.0) <= 0.02 {
+                    on_hyperbola += 1;
+                }
+            }
+            row.push(if short { '■' } else { '·' });
+        }
+        println!("{n2:>4} {row}");
+    }
+    println!(
+        "\n{short_total} unfavorable grids; {on_hyperbola} lie within 2% of a n1·n2 = k·S/2 hyperbola ({:.0}%)",
+        100.0 * on_hyperbola as f64 / short_total.max(1) as f64
+    );
+    println!("(the paper: 'arrays with unfavorable size are those whose z-slices are");
+    println!(" (close to) multiples of half the cache size')");
+}

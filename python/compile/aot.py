@@ -1,0 +1,108 @@
+"""AOT lowering: JAX (L2 + L1) → HLO text artifacts for the rust runtime.
+
+Interchange format is HLO **text**, not serialized HloModuleProto: jax ≥ 0.5
+emits protos with 64-bit instruction ids that the xla crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Each artifact is lowered with `return_tuple=True`, so the rust side unwraps
+with `to_tuple1()` (or indexes the tuple for multi-output entries).
+
+Usage:  python -m compile.aot --out-dir ../artifacts [--shapes 32,64]
+
+Writes `<name>.hlo.txt` per entry point plus `manifest.json` describing
+every artifact (name, inputs, outputs, dtype) for the rust artifact
+registry.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# Default e2e solver step-count compiled into the sweep artifact.
+SWEEP_STEPS = 10
+# Heat-stable step size for the 13-point star: |α|·Σ|w| < 1 ⇒ α ≤ 0.05.
+ALPHA = 0.05
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (the 0.5.1-compatible path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def entries_for_shape(n: int):
+    """The artifact set for one cubic grid extent n."""
+    spec = jax.ShapeDtypeStruct((n, n, n), jnp.float32)
+
+    def sweep(u):
+        return model.jacobi_sweep(u, ALPHA, SWEEP_STEPS)
+
+    def step(u):
+        return model.jacobi_step(u, ALPHA)
+
+    def step_norms(u):
+        return model.step_with_norms(u, ALPHA)
+
+    return [
+        # (name, fn, example args, output arity, description)
+        (f"star13_{n}", model.star13_apply, (spec,), 1, "q = Ku, 13-pt star"),
+        (f"jacobi_step_{n}", step, (spec,), 1, f"u + {ALPHA}*Ku"),
+        (f"jacobi_sweep_{n}x{SWEEP_STEPS}", sweep, (spec,), 1, f"{SWEEP_STEPS} fused steps"),
+        (f"norms_{n}", model.norms, (spec,), 1, "[||u||, ||Ku||]"),
+        (f"step_norms_{n}", step_norms, (spec,), 2, "(u', [||u'||, ||Ku'||])"),
+    ]
+
+
+def lower_all(out_dir: str, shapes) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {"alpha": ALPHA, "sweep_steps": SWEEP_STEPS, "artifacts": []}
+    for n in shapes:
+        for name, fn, args, n_outputs, desc in entries_for_shape(n):
+            lowered = jax.jit(fn).lower(*args)
+            text = to_hlo_text(lowered)
+            path = os.path.join(out_dir, f"{name}.hlo.txt")
+            with open(path, "w") as f:
+                f.write(text)
+            manifest["artifacts"].append(
+                {
+                    "name": name,
+                    "file": f"{name}.hlo.txt",
+                    "input_shape": [n, n, n],
+                    "dtype": "f32",
+                    "n_outputs": n_outputs,
+                    "description": desc,
+                }
+            )
+            print(f"wrote {path} ({len(text)} chars)")
+    manifest_path = os.path.join(out_dir, "manifest.json")
+    with open(manifest_path, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {manifest_path}")
+    return manifest
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--shapes",
+        default="16,32,64",
+        help="comma-separated cubic grid extents to compile",
+    )
+    args = ap.parse_args()
+    shapes = [int(s) for s in args.shapes.split(",") if s]
+    lower_all(args.out_dir, shapes)
+
+
+if __name__ == "__main__":
+    main()

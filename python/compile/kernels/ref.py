@@ -1,0 +1,57 @@
+"""Pure-jnp correctness oracles for the Pallas kernels (L1).
+
+Every kernel in this package has a reference implementation here built only
+from `jnp.pad` + static slicing. pytest sweeps shapes/dtypes (hypothesis)
+and asserts allclose between kernel and oracle — this is the build-time
+correctness gate for the AOT artifacts the rust runtime executes.
+
+The stencil is the paper's measurement operator: the 13-point second-order
+star in 3-D (radius 2; fourth-order Laplacian weights), matching
+`rust/src/stencil/mod.rs::Stencil::star13`.
+"""
+
+import jax.numpy as jnp
+
+# 13-point star weights, identical to the rust side (Stencil::star(3, 2)):
+# center −2·d·Σw, axis ±1 → 4/3, axis ±2 → −1/12.
+W1 = 4.0 / 3.0
+W2 = -1.0 / 12.0
+WC = -2.0 * 3.0 * (W1 + W2)
+
+# (dx, dy, dz, weight) for all 13 points.
+STAR13 = [(0, 0, 0, WC)] + [
+    (sign * k * ax, sign * k * ay, sign * k * az, w)
+    for (ax, ay, az) in [(1, 0, 0), (0, 1, 0), (0, 0, 1)]
+    for k, w in [(1, W1), (2, W2)]
+    for sign in (1, -1)
+]
+
+
+def star13_ref(u):
+    """q = Ku with zero (Dirichlet) halo: apply the 13-point star to every
+    point of u, treating out-of-grid neighbors as 0."""
+    r = 2
+    up = jnp.pad(u, r)
+    nx, ny, nz = u.shape
+    acc = jnp.zeros_like(u)
+    for dx, dy, dz, w in STAR13:
+        acc = acc + jnp.asarray(w, u.dtype) * up[
+            r + dx : r + dx + nx, r + dy : r + dy + ny, r + dz : r + dz + nz
+        ]
+    return acc
+
+
+def jacobi_step_ref(u, alpha):
+    """One damped-Jacobi / explicit-Euler heat step: u' = u + α·Ku."""
+    return u + jnp.asarray(alpha, u.dtype) * star13_ref(u)
+
+
+def jacobi_run_ref(u, alpha, steps):
+    for _ in range(steps):
+        u = jacobi_step_ref(u, alpha)
+    return u
+
+
+def norms_ref(u):
+    """(‖u‖₂, ‖Ku‖₂) — the residual pair logged by the e2e driver."""
+    return jnp.sqrt(jnp.sum(u * u)), jnp.sqrt(jnp.sum(jnp.square(star13_ref(u))))

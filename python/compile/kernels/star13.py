@@ -1,0 +1,157 @@
+"""L1 Pallas kernel: the paper's 13-point second-order star stencil.
+
+Hardware adaptation (DESIGN.md §3). The paper tiles a hardware-indexed
+cache by the fundamental parallelepiped of the interference lattice; on TPU
+the fast memory (VMEM) is a *software-managed* scratchpad, so there is no
+interference lattice to dodge — what survives of the paper's algorithm is
+its **surface-to-volume objective**: choose the HBM→VMEM block so that halo
+traffic (the analogue of pencil-boundary replacement loads) is minimal for
+the VMEM budget. `choose_block_z` implements that objective for the z-sliced
+sweep this kernel uses:
+
+- x,y are kept whole (the face `F` of the sweep; contiguous in the
+  (8,128)-tiled register layout),
+- z is blocked: each program instance receives an *overlapping* window
+  `[k·bz − r, k·bz + bz + r)` of the zero-padded input (`pl.Element`
+  indexing), computes one z-slab of the output, and the Pallas pipeline
+  double-buffers consecutive windows — the moral equivalent of the paper's
+  scanning face `F + k·w` sweeping a pencil.
+
+The kernel must be lowered with `interpret=True`: the CPU PJRT plugin
+cannot execute Mosaic custom-calls, and the interpret path produces plain
+HLO that the rust runtime loads (see /opt/xla-example/README.md).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import STAR13
+
+R = 2  # stencil radius
+
+# VMEM budget for one input window, in words. Real TPUs have ~16 MiB of
+# VMEM per core; we target ≤ 1 MiW (4 MiB f32) for the window so that
+# double-buffering input + output + accumulator head-room fits comfortably.
+VMEM_BUDGET_WORDS = 1 << 20
+
+
+def choose_block_z(shape, budget_words=VMEM_BUDGET_WORDS):
+    """Pick the z-block size: the largest divisor `bz` of nz whose padded
+    window (nx+2r)(ny+2r)(bz+2r) fits the VMEM budget.
+
+    Surface-to-volume: halo traffic per block is ∝ (bz+2r)/bz, so larger bz
+    is strictly better until the budget bites — the 1-D specialization of
+    the paper's Eq 11 objective.
+    """
+    nx, ny, nz = shape
+    face = (nx + 2 * R) * (ny + 2 * R)
+    best = 1
+    for bz in range(1, nz + 1):
+        if nz % bz == 0 and face * (bz + 2 * R) <= budget_words:
+            best = bz
+    return best
+
+
+def _star13_kernel(u_ref, o_ref):
+    """One program instance: apply the star to a (nx, ny, bz) output slab
+    from its haloed (nx+2r, ny+2r, bz+2r) input window."""
+    u = u_ref[...]
+    nx = o_ref.shape[0]
+    ny = o_ref.shape[1]
+    bz = o_ref.shape[2]
+    acc = jnp.zeros(o_ref.shape, u.dtype)
+    for dx, dy, dz, w in STAR13:
+        acc = acc + jnp.asarray(w, u.dtype) * u[
+            R + dx : R + dx + nx, R + dy : R + dy + ny, R + dz : R + dz + bz
+        ]
+    o_ref[...] = acc
+
+
+def _fused_jacobi_kernel(u_ref, uwin_ref, alpha_ref, o_ref):
+    """Fused u' = u + α·Ku: reads the unpadded slab (for u) and the haloed
+    window (for Ku); one pass through VMEM instead of two."""
+    nx, ny, bz = o_ref.shape
+    u = uwin_ref[...]
+    acc = jnp.zeros(o_ref.shape, u.dtype)
+    for dx, dy, dz, w in STAR13:
+        acc = acc + jnp.asarray(w, u.dtype) * u[
+            R + dx : R + dx + nx, R + dy : R + dy + ny, R + dz : R + dz + bz
+        ]
+    alpha = alpha_ref[0]
+    o_ref[...] = u_ref[...] + alpha.astype(u.dtype) * acc
+
+
+def _specs(shape, bz):
+    nx, ny, nz = shape
+    in_win = pl.BlockSpec(
+        (nx + 2 * R, ny + 2 * R, pl.Element(bz + 2 * R, padding=(0, 0))),
+        lambda k: (0, 0, k * bz),
+    )
+    out_spec = pl.BlockSpec((nx, ny, bz), lambda k: (0, 0, k))
+    return in_win, out_spec
+
+
+def star13_pallas(u, block_z=None, interpret=True):
+    """q = Ku over the full grid with zero (Dirichlet) halo.
+
+    `u`: (nx, ny, nz) array. `block_z`: override the VMEM block chooser
+    (must divide nz).
+    """
+    shape = u.shape
+    nx, ny, nz = shape
+    bz = block_z or choose_block_z(shape)
+    assert nz % bz == 0, f"block_z={bz} must divide nz={nz}"
+    up = jnp.pad(u, R)
+    in_win, out_spec = _specs(shape, bz)
+    return pl.pallas_call(
+        _star13_kernel,
+        grid=(nz // bz,),
+        in_specs=[in_win],
+        out_specs=out_spec,
+        out_shape=jax.ShapeDtypeStruct(shape, u.dtype),
+        interpret=interpret,
+    )(up)
+
+
+def jacobi_step_pallas(u, alpha, block_z=None, interpret=True):
+    """u' = u + α·Ku (fused single-pass kernel). `alpha` is a scalar."""
+    shape = u.shape
+    nx, ny, nz = shape
+    bz = block_z or choose_block_z(shape)
+    assert nz % bz == 0, f"block_z={bz} must divide nz={nz}"
+    up = jnp.pad(u, R)
+    in_win, out_spec = _specs(shape, bz)
+    u_spec = pl.BlockSpec((nx, ny, bz), lambda k: (0, 0, k))
+    alpha_arr = jnp.asarray(alpha, u.dtype).reshape(1)
+    alpha_spec = pl.BlockSpec((1,), lambda k: (0,))
+    return pl.pallas_call(
+        _fused_jacobi_kernel,
+        grid=(nz // bz,),
+        in_specs=[u_spec, in_win, alpha_spec],
+        out_specs=out_spec,
+        out_shape=jax.ShapeDtypeStruct(shape, u.dtype),
+        interpret=interpret,
+    )(u, up, alpha_arr)
+
+
+@functools.lru_cache(maxsize=None)
+def vmem_report(shape, block_z=None):
+    """Estimated VMEM footprint (words) and halo-traffic overhead of the
+    chosen blocking — the quantities DESIGN.md §Perf reports for real-TPU
+    estimates (interpret-mode wallclock is *not* a TPU proxy)."""
+    nx, ny, nz = shape
+    bz = block_z or choose_block_z(shape)
+    window = (nx + 2 * R) * (ny + 2 * R) * (bz + 2 * R)
+    out_block = nx * ny * bz
+    halo_overhead = window / ((nx * ny) * bz) - 1.0
+    return {
+        "block_z": bz,
+        "window_words": window,
+        "out_block_words": out_block,
+        # double-buffered in + out resident simultaneously
+        "vmem_words": 2 * (window + out_block),
+        "halo_overhead": halo_overhead,
+    }

@@ -1,0 +1,52 @@
+"""L2: the JAX compute graph built on the L1 Pallas kernels.
+
+Build-time only — these functions are lowered once by `aot.py` to HLO text
+and executed forever after from the rust runtime. Python never runs on the
+request path.
+
+The model is the paper's workload: explicit evaluation of the 13-point
+star operator `q = Ku` on a 3-D structured grid, plus the explicit heat
+solver (damped Jacobi sweeps) that the end-to-end example drives.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.star13 import jacobi_step_pallas, star13_pallas
+
+
+def star13_apply(u):
+    """q = Ku (single stencil application)."""
+    return star13_pallas(u)
+
+
+def jacobi_step(u, alpha):
+    """One explicit heat/Jacobi step: u' = u + α·Ku (fused Pallas kernel)."""
+    return jacobi_step_pallas(u, alpha)
+
+
+def jacobi_sweep(u, alpha, steps: int):
+    """`steps` fused Jacobi steps inside one compiled graph.
+
+    `lax.fori_loop` keeps the HLO size O(1) in `steps` (a while-loop in
+    HLO), instead of unrolling the kernel body `steps` times.
+    """
+
+    def body(_, v):
+        return jacobi_step_pallas(v, alpha)
+
+    return jax.lax.fori_loop(0, steps, body, u)
+
+
+def norms(u):
+    """(‖u‖₂, ‖Ku‖₂) packed as a length-2 vector — the convergence metrics
+    the e2e driver logs per step."""
+    ku = star13_pallas(u)
+    return jnp.stack([jnp.sqrt(jnp.sum(u * u)), jnp.sqrt(jnp.sum(ku * ku))])
+
+
+def step_with_norms(u, alpha):
+    """Fused service call for the solver hot loop: one Jacobi step plus the
+    metrics of the *new* iterate, in a single PJRT execution."""
+    v = jacobi_step_pallas(u, alpha)
+    return v, norms(v)

@@ -1,0 +1,157 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracle.
+
+hypothesis sweeps grid shapes, block sizes and dtypes; every case asserts
+allclose between `star13_pallas` / `jacobi_step_pallas` (interpret mode)
+and `ref.py`.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.ref import STAR13, jacobi_step_ref, star13_ref
+from compile.kernels.star13 import (
+    R,
+    choose_block_z,
+    jacobi_step_pallas,
+    star13_pallas,
+    vmem_report,
+)
+
+jax.config.update("jax_platform_name", "cpu")
+jax.config.update("jax_enable_x64", True)  # for the f64 oracle cases
+
+
+def rand(shape, dtype=jnp.float32, seed=0):
+    rng = np.random.RandomState(seed)
+    return jnp.asarray(rng.standard_normal(shape), dtype)
+
+
+def tol(dtype):
+    return dict(rtol=2e-4, atol=2e-4) if dtype == jnp.float32 else dict(rtol=1e-10, atol=1e-10)
+
+
+class TestStar13Weights:
+    def test_thirteen_points(self):
+        assert len(STAR13) == 13
+        assert len({(dx, dy, dz) for dx, dy, dz, _ in STAR13}) == 13
+
+    def test_weights_sum_to_zero(self):
+        assert abs(sum(w for *_, w in STAR13)) < 1e-12
+
+    def test_symmetric(self):
+        pts = {(dx, dy, dz): w for dx, dy, dz, w in STAR13}
+        for (dx, dy, dz), w in pts.items():
+            assert pts[(-dx, -dy, -dz)] == w
+
+
+class TestStar13Kernel:
+    @pytest.mark.parametrize("shape", [(8, 8, 8), (16, 12, 10), (5, 9, 6), (32, 8, 16)])
+    def test_matches_ref(self, shape):
+        u = rand(shape)
+        got = star13_pallas(u)
+        want = star13_ref(u)
+        np.testing.assert_allclose(got, want, **tol(jnp.float32))
+
+    @pytest.mark.parametrize("bz", [1, 2, 4, 8])
+    def test_block_size_invariance(self, bz):
+        u = rand((12, 10, 8), seed=3)
+        got = star13_pallas(u, block_z=bz)
+        want = star13_ref(u)
+        np.testing.assert_allclose(got, want, **tol(jnp.float32))
+
+    def test_f64(self):
+        u = rand((9, 7, 5), dtype=jnp.float64, seed=4)
+        np.testing.assert_allclose(
+            star13_pallas(u), star13_ref(u), **tol(jnp.float64)
+        )
+
+    def test_zero_input(self):
+        u = jnp.zeros((8, 8, 8), jnp.float32)
+        assert jnp.all(star13_pallas(u) == 0)
+
+    def test_constant_interior_annihilated(self):
+        # weights sum to 0 ⇒ interior of a constant field maps to ~0.
+        u = jnp.ones((16, 16, 16), jnp.float32)
+        q = star13_pallas(u)
+        interior = q[2 * R : -2 * R, 2 * R : -2 * R, 2 * R : -2 * R]
+        np.testing.assert_allclose(interior, 0.0, atol=1e-5)
+
+    def test_linearity(self):
+        a, b = rand((8, 8, 8), seed=5), rand((8, 8, 8), seed=6)
+        lhs = star13_pallas(2.0 * a + 3.0 * b)
+        rhs = 2.0 * star13_pallas(a) + 3.0 * star13_pallas(b)
+        np.testing.assert_allclose(lhs, rhs, rtol=1e-3, atol=1e-3)
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        nx=st.integers(5, 20),
+        ny=st.integers(5, 20),
+        nz=st.integers(5, 16),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis_shapes(self, nx, ny, nz, seed):
+        u = rand((nx, ny, nz), seed=seed % 1000)
+        np.testing.assert_allclose(
+            star13_pallas(u), star13_ref(u), **tol(jnp.float32)
+        )
+
+
+class TestJacobiKernel:
+    @pytest.mark.parametrize("alpha", [0.0, 0.05, -0.01])
+    def test_matches_ref(self, alpha):
+        u = rand((10, 12, 8), seed=7)
+        got = jacobi_step_pallas(u, alpha)
+        want = jacobi_step_ref(u, alpha)
+        np.testing.assert_allclose(got, want, **tol(jnp.float32))
+
+    def test_alpha_zero_is_identity(self):
+        u = rand((8, 8, 8), seed=8)
+        np.testing.assert_allclose(jacobi_step_pallas(u, 0.0), u, rtol=1e-6)
+
+    def test_fused_equals_two_pass(self):
+        u = rand((8, 8, 8), seed=9)
+        fused = jacobi_step_pallas(u, 0.05)
+        two_pass = u + 0.05 * star13_pallas(u)
+        np.testing.assert_allclose(fused, two_pass, rtol=1e-5, atol=1e-5)
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        nx=st.integers(5, 16),
+        nz=st.integers(5, 12),
+        alpha=st.floats(-0.1, 0.1, allow_nan=False),
+    )
+    def test_hypothesis(self, nx, nz, alpha):
+        u = rand((nx, 8, nz), seed=nx * 31 + nz)
+        np.testing.assert_allclose(
+            jacobi_step_pallas(u, alpha),
+            jacobi_step_ref(u, alpha),
+            rtol=5e-4,
+            atol=5e-4,
+        )
+
+
+class TestBlockChooser:
+    def test_divides(self):
+        for nz in [5, 8, 12, 64, 97]:
+            bz = choose_block_z((16, 16, nz))
+            assert nz % bz == 0
+
+    def test_respects_budget(self):
+        shape = (64, 64, 64)
+        budget = 80_000
+        bz = choose_block_z(shape, budget)
+        assert (shape[0] + 2 * R) * (shape[1] + 2 * R) * (bz + 2 * R) <= budget
+
+    def test_prefers_bigger_blocks(self):
+        small = choose_block_z((16, 16, 64), budget_words=10_000)
+        big = choose_block_z((16, 16, 64), budget_words=10_000_000)
+        assert big >= small
+        assert big == 64  # whole axis fits the big budget
+
+    def test_vmem_report_fields(self):
+        rep = vmem_report((64, 64, 64))
+        assert rep["vmem_words"] <= 4 * (1 << 20)
+        assert 0.0 < rep["halo_overhead"] < 5.0

@@ -1,0 +1,29 @@
+//! Bounds-machinery bench: octahedron combinatorics, Eq 7/12 evaluation,
+//! LLL reduction and the Appendix-B construction across cache sizes.
+
+use stencilcache::bounds;
+use stencilcache::grid::GridDesc;
+use stencilcache::lattice::lll_reduce;
+use stencilcache::util::bench::Bencher;
+
+fn main() {
+    let mut b = Bencher::from_env();
+
+    b.bench("octahedron/volume(5, 1e6)", || bounds::octahedron_volume(5, 1_000_000));
+    b.bench("octahedron/radius_for_surface(3, 8dS)", || bounds::radius_for_surface(3, 24 * 4096));
+
+    let g = GridDesc::new(&[400, 400, 400]);
+    b.bench("bounds/eq7_lower", || bounds::lower_bound_loads(&g, 4096));
+    b.bench("bounds/eq12_upper", || bounds::upper_bound_loads(&g, 4096, 2, 3.0));
+
+    b.bench("lll/reduce_3d_interference_basis", || {
+        let mut basis = vec![vec![4096i64, 0, 0], vec![-91, 1, 0], vec![-9100, 0, 1]];
+        lll_reduce(&mut basis);
+        basis
+    });
+
+    for log_s in [10u32, 14, 18] {
+        let s = 1usize << log_s;
+        b.bench(&format!("appb/construct_favorable_3d_S=2^{log_s}"), || bounds::favorable::construct(3, s));
+    }
+}

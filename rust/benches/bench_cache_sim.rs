@@ -1,0 +1,48 @@
+//! Microbench: the cache-simulator hot path (the L3 bottleneck — FIG5A
+//! pushes ~2·10⁹ accesses through `CacheSim::access`). §Perf tracks the
+//! accesses/s number here.
+
+use stencilcache::cache::{CacheParams, CacheSim};
+use stencilcache::util::bench::Bencher;
+use stencilcache::util::rng::Rng;
+
+fn main() {
+    let mut b = Bencher::from_env();
+    let n = 100_000u64;
+
+    // Sequential sweep: MRU-hit fast path.
+    let mut sim = CacheSim::new(CacheParams::r10000());
+    b.bench_items("cache_sim/sequential_100k", n as f64, || {
+        for a in 0..n {
+            sim.access(a % 1_000_000);
+        }
+    });
+
+    // Strided column walk: the conflict-heavy pattern of natural-order 3-D.
+    let mut sim2 = CacheSim::new(CacheParams::r10000());
+    b.bench_items("cache_sim/strided_100k", n as f64, || {
+        let mut a = 0u64;
+        for _ in 0..n {
+            a = (a + 4004) % 4_000_000;
+            sim2.access(a);
+        }
+    });
+
+    // Random access: worst-case branchy path.
+    let mut sim3 = CacheSim::new(CacheParams::r10000());
+    let mut rng = Rng::new(7);
+    let addrs: Vec<u64> = (0..n).map(|_| rng.below(4_000_000)).collect();
+    b.bench_items("cache_sim/random_100k", n as f64, || {
+        for &a in &addrs {
+            sim3.access(a);
+        }
+    });
+
+    // Fully associative (one big set).
+    let mut sim4 = CacheSim::new(CacheParams::fully_associative(4096, 4));
+    b.bench_items("cache_sim/fully_assoc_seq_100k", n as f64, || {
+        for a in 0..n {
+            sim4.access(a % 100_000);
+        }
+    });
+}

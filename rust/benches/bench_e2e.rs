@@ -1,0 +1,45 @@
+//! End-to-end bench: the coordinator serving a mixed workload (plans,
+//! analyses, PJRT executes) through batching + thread pool — the headline
+//! L3 throughput number for §Perf.
+
+use stencilcache::coordinator::{Coordinator, JobKind, PlannerConfig, StencilRequest, StencilSpec};
+use stencilcache::runtime::RuntimeService;
+use stencilcache::util::bench::Bencher;
+
+fn main() {
+    let mut b = Bencher::from_env();
+
+    // analysis-only serving (no PJRT dependency)
+    let coord = Coordinator::analysis_only(PlannerConfig::default());
+    let reqs: Vec<StencilRequest> = (0..16)
+        .map(|i| {
+            let n = [16usize, 20, 24][i % 3];
+            StencilRequest::analyze(&[n, n, n])
+        })
+        .collect();
+    b.bench_items("coordinator/serve_16_analyses", 16.0, || coord.serve(&reqs));
+
+    // plan-only latency (pure lattice math)
+    let plan_req = StencilRequest {
+        dims: vec![45, 91, 100],
+        stencil: StencilSpec::Star13,
+        rhs_arrays: 1,
+        kind: JobKind::Plan,
+    };
+    b.bench("coordinator/plan_45x91x100", || coord.submit(&plan_req).unwrap());
+
+    // with runtime: solve steps end to end
+    if let Ok(svc) = RuntimeService::start(None) {
+        let c2 = Coordinator::with_runtime(PlannerConfig::default(), svc.handle());
+        let solve = StencilRequest {
+            dims: vec![16, 16, 16],
+            stencil: StencilSpec::Star13,
+            rhs_arrays: 1,
+            kind: JobKind::Solve { steps: 5 },
+        };
+        let _ = c2.submit(&solve).unwrap(); // warm the executable cache
+        b.bench_items("coordinator/solve_16^3_x5steps", 5.0 * 4096.0, || c2.submit(&solve).unwrap());
+    } else {
+        eprintln!("(skipping PJRT e2e bench — run `make artifacts`)");
+    }
+}

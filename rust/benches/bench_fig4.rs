@@ -1,0 +1,31 @@
+//! FIG4 regeneration bench: one Figure-4 column (n1 = 67, favorable) and
+//! one spike column (n1 = 45), natural vs auto-fitted, end to end through
+//! order generation + simulation. `cargo bench --bench bench_fig4`.
+//!
+//! The full figure is `stencilcache experiment fig4`; this bench tracks the
+//! per-column cost that dominates the sweep.
+
+use stencilcache::cache::CacheParams;
+use stencilcache::experiments::{measure, OrderKind};
+use stencilcache::grid::GridDesc;
+use stencilcache::stencil::Stencil;
+use stencilcache::util::bench::Bencher;
+
+fn main() {
+    let mut b = Bencher::from_env();
+    let stencil = Stencil::star13();
+    let cache = CacheParams::r10000();
+    let n3 = 20usize;
+
+    for (label, n1) in [("favorable_n1=67", 67usize), ("spike_n1=45", 45)] {
+        let grid = GridDesc::new(&[n1, 91, n3]);
+        let pts = grid.interior_points(2) as f64;
+        let accesses = pts * 14.0;
+        b.bench_items(&format!("fig4/{label}/natural"), accesses, || {
+            measure(&grid, &stencil, cache, OrderKind::Natural, 1)
+        });
+        b.bench_items(&format!("fig4/{label}/auto_fitting"), accesses, || {
+            measure(&grid, &stencil, cache, OrderKind::Auto, 1)
+        });
+    }
+}

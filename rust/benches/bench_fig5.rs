@@ -1,0 +1,35 @@
+//! FIG5 regeneration bench: one (n1, n2) cell of the Plot-A sweep plus the
+//! pure-lattice Plot-B classification over the full 60×60 region (the
+//! latter is number theory only and must stay trivially cheap).
+
+use stencilcache::cache::CacheParams;
+use stencilcache::experiments::{measure, OrderKind};
+use stencilcache::grid::GridDesc;
+use stencilcache::lattice::InterferenceLattice;
+use stencilcache::stencil::Stencil;
+use stencilcache::util::bench::Bencher;
+
+fn main() {
+    let mut b = Bencher::from_env();
+    let stencil = Stencil::star13();
+    let cache = CacheParams::r10000();
+
+    let grid = GridDesc::new(&[70, 70, 10]);
+    let accesses = grid.interior_points(2) as f64 * 14.0;
+    b.bench_items("fig5a/one_cell_70x70x10", accesses, || {
+        measure(&grid, &stencil, cache, OrderKind::Natural, 1)
+    });
+
+    b.bench_items("fig5b/full_60x60_classification", 3600.0, || {
+        let mut short = 0usize;
+        for n1 in 40..100usize {
+            for n2 in 40..100usize {
+                let lat = InterferenceLattice::new(&[n1, n2, 50], 4096);
+                if lat.min_l1(7).is_some() {
+                    short += 1;
+                }
+            }
+        }
+        short
+    });
+}

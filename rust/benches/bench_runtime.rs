@@ -1,0 +1,52 @@
+//! PJRT runtime bench: artifact execution latency/throughput through the
+//! full L3 path (literal marshalling + execute + tuple fetch) and via the
+//! actor service thread. Needs `make artifacts`.
+
+use stencilcache::coordinator::deterministic_input;
+use stencilcache::runtime::{Runtime, RuntimeService};
+use stencilcache::util::bench::Bencher;
+
+fn main() {
+    let rt = match Runtime::open_default() {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("skipping runtime bench (no artifacts): {e}");
+            return;
+        }
+    };
+    let mut b = Bencher::from_env();
+
+    for n in [16usize, 32, 64] {
+        let u = deterministic_input(&[n, n, n], 42);
+        let name = format!("star13_{n}");
+        if rt.manifest().find(&name).is_none() {
+            continue;
+        }
+        let _ = rt.execute(&name, &[&u]).unwrap(); // compile outside timing
+        let pts = (n * n * n) as f64;
+        b.bench_items(&format!("pjrt/star13_{n}"), pts, || rt.execute(&name, &[&u]).unwrap());
+    }
+
+    // fused step+norms (the solver hot call)
+    let u = deterministic_input(&[64, 64, 64], 43);
+    if rt.manifest().find("step_norms_64").is_some() {
+        let _ = rt.execute("step_norms_64", &[&u]).unwrap();
+        b.bench_items("pjrt/step_norms_64", 64.0 * 64.0 * 64.0, || rt.execute("step_norms_64", &[&u]).unwrap());
+    }
+    // in-graph 10-step sweep vs 10 round trips
+    if rt.manifest().find("jacobi_sweep_64x10").is_some() {
+        let _ = rt.execute("jacobi_sweep_64x10", &[&u]).unwrap();
+        b.bench_items("pjrt/jacobi_sweep_64x10 (10 steps fused)", 10.0 * 64.0 * 64.0 * 64.0, || {
+            rt.execute("jacobi_sweep_64x10", &[&u]).unwrap()
+        });
+    }
+    drop(rt);
+
+    // the actor-service path (adds channel hops)
+    if let Ok(svc) = RuntimeService::start(None) {
+        let h = svc.handle();
+        let u16 = deterministic_input(&[16, 16, 16], 44);
+        let _ = h.execute("star13_16", &[&u16]).unwrap();
+        b.bench_items("pjrt/service_star13_16", 16.0 * 16.0 * 16.0, || h.execute("star13_16", &[&u16]).unwrap());
+    }
+}

@@ -1,0 +1,41 @@
+//! Bench: traversal-order generation (the planner-side cost of the cache
+//! fitting algorithm) plus the sweep-vector / candidate ablation.
+
+use stencilcache::cache::CacheParams;
+use stencilcache::grid::GridDesc;
+use stencilcache::lattice::InterferenceLattice;
+use stencilcache::stencil::Stencil;
+use stencilcache::traversal::{self, FittingOptions};
+use stencilcache::tuner;
+use stencilcache::util::bench::Bencher;
+
+fn main() {
+    let mut b = Bencher::from_env();
+    let grid = GridDesc::new(&[64, 91, 40]);
+    let pts = grid.interior_points(2) as f64;
+    let cache = CacheParams::r10000();
+    let lat = InterferenceLattice::new(grid.storage_dims(), cache.lattice_modulus());
+
+    b.bench_items("order/natural_64x91x40", pts, || traversal::natural(&grid, 2));
+    b.bench_items("order/blocked_16^3", pts, || traversal::blocked(&grid, 2, &[16, 16, 16]));
+    b.bench_items("order/pencil_fitting", pts, || traversal::cache_fitting(&grid, 2, &lat));
+    b.bench_items("order/pencil_raster", pts, || {
+        traversal::fitting::cache_fitting_opts(
+            &grid,
+            2,
+            &lat,
+            &FittingOptions { serpentine: false, ..FittingOptions::default() },
+        )
+    });
+    b.bench_items("order/tiled_z", pts, || traversal::tiled::tiled_z_sweep(&grid, 2, 4096));
+
+    // lattice machinery (per-grid planning costs)
+    b.bench("lattice/build+reduce", || InterferenceLattice::new(grid.storage_dims(), 4096));
+    b.bench("lattice/shortest_vector", || lat.shortest());
+    b.bench("lattice/min_l1(8)", || lat.min_l1(8));
+    b.bench("tile/conflict_free_search", || traversal::conflict_free_tile(grid.storage_dims(), 4096, 2));
+
+    // the full auto-tuner (calibration included)
+    let stencil = Stencil::star13();
+    b.bench("tuner/auto_fitting_order", || tuner::auto_fitting_order(&grid, &stencil, &cache));
+}

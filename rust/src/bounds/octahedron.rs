@@ -1,0 +1,216 @@
+//! Appendix A: lattice-point counts for the discrete octahedron and simplex,
+//! and the isoperimetric machinery behind the paper's lower bound.
+//!
+//! Definitions (Eq 15/16):
+//! - `O(d,t) = {x ∈ Z^d : Σ|x_i| ≤ t}` — the standard octahedron;
+//! - `S(d,t) = {x ∈ Z^d : x_i ≥ 0, Σ x_i ≤ t}` — the standard simplex.
+//!
+//! Closed forms (Eq 18/19/23):
+//! - `|O(d,t)| = Σ_k 2^k C(d,k) C(t,k)`
+//! - `|δO(d,t−1)| = Σ_k 2^k C(d,k) C(t−1,k−1)`
+//! - `|S(d,t)| = C(d+t,d)`
+
+/// Binomial coefficient C(n, k) in u128 (n may exceed usize range of k).
+pub fn binom(n: u64, k: u64) -> u128 {
+    if k > n {
+        return 0;
+    }
+    let k = k.min(n - k);
+    let mut acc: u128 = 1;
+    for i in 0..k {
+        acc = acc * (n - i) as u128 / (i + 1) as u128;
+    }
+    acc
+}
+
+/// |O(d,t)| — integer points in the octahedron of radius t (Eq 18).
+pub fn octahedron_volume(d: u32, t: u64) -> u128 {
+    (0..=d as u64).map(|k| (1u128 << k) * binom(d as u64, k) * binom(t, k)).sum()
+}
+
+/// |δO(d,t)| — boundary points of the octahedron of radius t: the shell
+/// `O(d,t+1) − O(d,t)` … the paper indexes it as Eq 19, equivalently the
+/// Eq 4 form `Σ_k 2^k C(d,k) C(t,k−1)`.
+pub fn octahedron_surface(d: u32, t: u64) -> u128 {
+    (1..=d as u64).map(|k| (1u128 << k) * binom(d as u64, k) * binom(t, k - 1)).sum()
+}
+
+/// |S(d,t)| = C(d+t, d) — integer points in the simplex (Eq 23).
+pub fn simplex_volume(d: u32, t: u64) -> u128 {
+    binom(d as u64 + t, d as u64)
+}
+
+/// Brute-force octahedron count (for testing the closed forms).
+pub fn octahedron_volume_brute(d: u32, t: i64) -> u128 {
+    fn rec(d: u32, budget: i64) -> u128 {
+        if d == 0 {
+            return 1;
+        }
+        let mut acc = 0u128;
+        for x in -budget..=budget {
+            acc += rec(d - 1, budget - x.abs());
+        }
+        acc
+    }
+    rec(d, t)
+}
+
+/// Choose the smallest octahedron radius `t` with `|δO(d,t)| ≥ target`
+/// (the paper's σ selection around Eq 4: σ = |δO(d,t)| ≥ 8dS, and by Eq 21
+/// σ < 8d(2d+1)S for the minimal such t).
+pub fn radius_for_surface(d: u32, target: u128) -> u64 {
+    let mut t = 1u64;
+    while octahedron_surface(d, t) < target {
+        t = if t < 16 { t + 1 } else { t + t / 8 + 1 };
+    }
+    // back off to the minimal t by linear descent (cheap: few steps).
+    while t > 1 && octahedron_surface(d, t - 1) >= target {
+        t -= 1;
+    }
+    t
+}
+
+/// Surface-to-volume ratio of the octahedron with |δO| ≈ the given surface
+/// target — the isoperimetric quantity in Eq 5.
+pub fn isoperimetric_ratio(d: u32, surface_target: u128) -> f64 {
+    let t = radius_for_surface(d, surface_target);
+    octahedron_surface(d, t) as f64 / octahedron_volume(d, t) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn binom_basics() {
+        assert_eq!(binom(5, 2), 10);
+        assert_eq!(binom(5, 0), 1);
+        assert_eq!(binom(5, 5), 1);
+        assert_eq!(binom(4, 7), 0);
+        assert_eq!(binom(52, 5), 2_598_960);
+    }
+
+    #[test]
+    fn octahedron_matches_brute_force() {
+        for d in 1..=4u32 {
+            for t in 0..=6u64 {
+                assert_eq!(
+                    octahedron_volume(d, t),
+                    octahedron_volume_brute(d, t as i64),
+                    "d={d} t={t}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn small_octahedra_known_values() {
+        // d=2: diamond of radius t has 2t²+2t+1 points.
+        for t in 0..10u64 {
+            assert_eq!(octahedron_volume(2, t), (2 * t * t + 2 * t + 1) as u128);
+        }
+        // d=3, t=1: center + 6 = 7.
+        assert_eq!(octahedron_volume(3, 1), 7);
+        assert_eq!(octahedron_volume(3, 2), 25);
+    }
+
+    #[test]
+    fn surface_is_volume_difference() {
+        // |δO(d,t)| must equal |O(d,t+1)| − |O(d,t)| (shell of radius t+1)
+        // — the paper's Eq 19 with its t−1 shifted to t.
+        for d in 1..=4u32 {
+            for t in 0..=8u64 {
+                assert_eq!(
+                    octahedron_surface(d, t),
+                    octahedron_volume(d, t + 1) - octahedron_volume(d, t),
+                    "d={d} t={t}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn recurrence_eq17() {
+        // |O(d,t)| = |O(d−1,t)| + 2 Σ_{k=0}^{t−1} |O(d−1,k)|
+        for d in 2..=4u32 {
+            for t in 1..=8u64 {
+                let rhs: u128 = octahedron_volume(d - 1, t)
+                    + 2 * (0..t).map(|k| octahedron_volume(d - 1, k)).sum::<u128>();
+                assert_eq!(octahedron_volume(d, t), rhs, "d={d} t={t}");
+            }
+        }
+    }
+
+    #[test]
+    fn recurrence_eq20() {
+        // |δO(d,t)| = |δO(d,t−1)| + |δO(d−1,t)| + |δO(d−1,t−1)|
+        for d in 2..=4u32 {
+            for t in 1..=8u64 {
+                let rhs = octahedron_surface(d, t - 1)
+                    + octahedron_surface(d - 1, t)
+                    + octahedron_surface(d - 1, t - 1);
+                assert_eq!(octahedron_surface(d, t), rhs, "d={d} t={t}");
+            }
+        }
+    }
+
+    #[test]
+    fn growth_bound_eq21() {
+        // |δO(d,t)| ≤ (2d+1)|δO(d,t−1)|
+        for d in 2..=4u32 {
+            for t in 1..=10u64 {
+                assert!(
+                    octahedron_surface(d, t) <= (2 * d as u128 + 1) * octahedron_surface(d, t - 1),
+                    "d={d} t={t}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn simplex_recurrence_eq22_and_closed_form() {
+        for d in 1..=5u32 {
+            for t in 1..=8u64 {
+                assert_eq!(
+                    simplex_volume(d, t),
+                    simplex_volume(d - 1, t) + simplex_volume(d, t - 1),
+                    "d={d} t={t}"
+                );
+            }
+        }
+        assert_eq!(simplex_volume(3, 3), binom(6, 3));
+    }
+
+    #[test]
+    fn octahedron_simplex_sandwich_eq24() {
+        // 2|S(d−1,t)| ≤ |δO(d,t−1)| ≤ 2^d |S(d−1,t)| for d ≥ 2
+        for d in 2..=4u32 {
+            for t in 1..=8u64 {
+                let s = simplex_volume(d - 1, t);
+                let shell = octahedron_surface(d, t - 1);
+                assert!(2 * s <= shell, "lower d={d} t={t}");
+                assert!(shell <= (1 << d) * s, "upper d={d} t={t}");
+            }
+        }
+    }
+
+    #[test]
+    fn radius_for_surface_minimal() {
+        for d in 2..=3u32 {
+            for target in [10u128, 100, 10_000, 1_000_000] {
+                let t = radius_for_surface(d, target);
+                assert!(octahedron_surface(d, t) >= target);
+                if t > 1 {
+                    assert!(octahedron_surface(d, t - 1) < target);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn isoperimetric_ratio_decreases_with_size() {
+        let r1 = isoperimetric_ratio(3, 1_000);
+        let r2 = isoperimetric_ratio(3, 1_000_000);
+        assert!(r2 < r1);
+    }
+}

@@ -1,0 +1,180 @@
+//! Two-level cache + TLB simulation — the paper's §7 "future work"
+//! extension ("we plan ... to take into account a secondary cache and TLB").
+//!
+//! The hierarchy is inclusive and write-allocate like the R10000/Origin2000:
+//! an L1 miss probes L2; a TLB is a small fully-associative LRU cache over
+//! virtual pages. We reuse [`CacheSim`] for every level — a TLB *is* a
+//! cache of page numbers.
+
+use super::{AccessKind, CacheParams, CacheSim};
+
+/// TLB geometry: `entries` fully-associative entries over pages of
+/// `page_words` words (R10000: 64 dual entries over 4 KB pages ⇒ model as
+/// 64 entries × 512 words).
+#[derive(Debug, Clone, Copy)]
+pub struct TlbParams {
+    pub entries: usize,
+    pub page_words: usize,
+}
+
+impl TlbParams {
+    pub fn r10000() -> TlbParams {
+        TlbParams { entries: 64, page_words: 512 }
+    }
+}
+
+/// Aggregated statistics for a hierarchical access stream.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct HierarchyStats {
+    pub accesses: u64,
+    pub l1_misses: u64,
+    pub l2_misses: u64,
+    pub tlb_misses: u64,
+}
+
+impl HierarchyStats {
+    /// Approximate stall cycles with a simple additive latency model
+    /// (hit costs folded into CPI): L1 miss → `l2_lat`, L2 miss → `mem_lat`,
+    /// TLB miss → `tlb_lat` (software-refill on MIPS).
+    pub fn stall_cycles(&self, l2_lat: u64, mem_lat: u64, tlb_lat: u64) -> u64 {
+        self.l1_misses * l2_lat + self.l2_misses * mem_lat + self.tlb_misses * tlb_lat
+    }
+}
+
+/// L1 + L2 + TLB simulator.
+pub struct Hierarchy {
+    l1: CacheSim,
+    l2: CacheSim,
+    tlb: CacheSim,
+    tlb_page_shift: u32,
+    stats: HierarchyStats,
+}
+
+impl Hierarchy {
+    pub fn new(l1: CacheParams, l2: CacheParams, tlb: TlbParams) -> Hierarchy {
+        assert!(tlb.page_words.is_power_of_two(), "page size must be a power of two");
+        assert!(l2.size_words() >= l1.size_words(), "L2 must not be smaller than L1");
+        Hierarchy {
+            l1: CacheSim::new(l1),
+            l2: CacheSim::new(l2),
+            // model TLB as a fully-associative cache of 1-word lines over
+            // page numbers.
+            tlb: CacheSim::new(CacheParams::fully_associative(tlb.entries, 1)),
+            tlb_page_shift: tlb.page_words.trailing_zeros(),
+            stats: HierarchyStats::default(),
+        }
+    }
+
+    /// The paper's platform with a 4 MB unified L2 (R10000 Origin 2000):
+    /// L1 (2,512,4), L2 2-way, 16-word (128 B) lines, 512K words.
+    pub fn r10000() -> Hierarchy {
+        Hierarchy::new(
+            CacheParams::r10000(),
+            CacheParams::new(2, 16 * 1024, 16), // 2*16384*16 = 512K words = 4MB
+            TlbParams::r10000(),
+        )
+    }
+
+    pub fn stats(&self) -> HierarchyStats {
+        self.stats
+    }
+
+    pub fn l1_stats(&self) -> super::CacheStats {
+        self.l1.stats()
+    }
+
+    pub fn l2_stats(&self) -> super::CacheStats {
+        self.l2.stats()
+    }
+
+    pub fn reset(&mut self) {
+        self.l1.reset();
+        self.l2.reset();
+        self.tlb.reset();
+        self.stats = HierarchyStats::default();
+    }
+
+    /// One word access through TLB → L1 → (on miss) L2.
+    #[inline]
+    pub fn access(&mut self, addr: u64) -> AccessKind {
+        self.stats.accesses += 1;
+        if self.tlb.access(addr >> self.tlb_page_shift) != AccessKind::Hit {
+            self.stats.tlb_misses += 1;
+        }
+        let k1 = self.l1.access(addr);
+        if k1 != AccessKind::Hit {
+            self.stats.l1_misses += 1;
+            if self.l2.access(addr) != AccessKind::Hit {
+                self.stats.l2_misses += 1;
+            }
+        }
+        k1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Hierarchy {
+        Hierarchy::new(
+            CacheParams::new(1, 4, 1),  // 4-word L1
+            CacheParams::new(1, 16, 1), // 16-word L2
+            TlbParams { entries: 2, page_words: 8 },
+        )
+    }
+
+    #[test]
+    fn l2_absorbs_l1_conflicts() {
+        let mut h = tiny();
+        // 0 and 4 conflict in L1 (4 sets) but not in L2 (16 sets).
+        h.access(0);
+        h.access(4);
+        h.access(0);
+        h.access(4);
+        let s = h.stats();
+        assert_eq!(s.l1_misses, 4); // every access misses L1
+        assert_eq!(s.l2_misses, 2); // only cold misses reach memory
+    }
+
+    #[test]
+    fn tlb_counts_page_walks() {
+        let mut h = tiny();
+        // 3 pages touched with 2 TLB entries, round-robin → thrash.
+        for _ in 0..3 {
+            h.access(0); // page 0
+            h.access(8); // page 1
+            h.access(16); // page 2
+        }
+        assert!(h.stats().tlb_misses > 3, "tlb misses: {}", h.stats().tlb_misses);
+    }
+
+    #[test]
+    fn hits_do_not_touch_l2() {
+        let mut h = tiny();
+        h.access(0);
+        h.access(0);
+        h.access(0);
+        assert_eq!(h.stats().l1_misses, 1);
+        assert_eq!(h.l2_stats().accesses, 1);
+    }
+
+    #[test]
+    fn stall_model_monotonic() {
+        let mut h = tiny();
+        for a in 0..32u64 {
+            h.access(a);
+        }
+        let s = h.stats();
+        assert!(s.stall_cycles(10, 100, 50) >= s.stall_cycles(1, 1, 1));
+    }
+
+    #[test]
+    fn r10000_hierarchy_constructs() {
+        let mut h = Hierarchy::r10000();
+        for a in 0..10_000u64 {
+            h.access(a % 5000);
+        }
+        assert!(h.stats().l2_misses <= h.stats().l1_misses);
+    }
+}

@@ -1,0 +1,383 @@
+//! The set-associative cache simulator.
+//!
+//! This is the hottest code in the repository: the FIG5A experiment pushes
+//! billions of accesses through [`CacheSim::access`]. The hit path is a
+//! short linear scan over the ways of one set (move-to-front LRU), with no
+//! allocation and no hashing. Cold/replacement classification is done with
+//! growable bitsets indexed by line / word address.
+
+use super::CacheParams;
+
+/// Outcome of a single access, at line granularity.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AccessKind {
+    /// Word's line was resident.
+    Hit,
+    /// Line never seen before (compulsory miss).
+    ColdMiss,
+    /// Line was evicted earlier and re-fetched now (conflict/capacity miss).
+    ReplacementMiss,
+}
+
+/// Counters, following the definitions of §2 of the paper.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    /// Total word requests issued.
+    pub accesses: u64,
+    /// Requests whose line was resident.
+    pub hits: u64,
+    /// φ restricted to first-touch lines.
+    pub cold_misses: u64,
+    /// φ restricted to re-fetched lines.
+    pub replacement_misses: u64,
+    /// μ cold component: first explicit request to each distinct word.
+    pub cold_loads: u64,
+    /// μ replacement component: re-request to a previously-requested word
+    /// whose residence expired.
+    pub replacement_loads: u64,
+    /// Lines evicted (diagnostics).
+    pub evictions: u64,
+}
+
+impl CacheStats {
+    /// φ — total cache misses.
+    pub fn misses(&self) -> u64 {
+        self.cold_misses + self.replacement_misses
+    }
+
+    /// μ — total cache loads (the quantity the paper's bounds constrain).
+    pub fn loads(&self) -> u64 {
+        self.cold_loads + self.replacement_loads
+    }
+
+    /// Miss rate φ / accesses.
+    pub fn miss_rate(&self) -> f64 {
+        if self.accesses == 0 {
+            0.0
+        } else {
+            self.misses() as f64 / self.accesses as f64
+        }
+    }
+}
+
+/// Growable bitset over u64 indices.
+#[derive(Debug, Default)]
+struct BitSet {
+    words: Vec<u64>,
+}
+
+impl BitSet {
+    #[inline]
+    fn test_and_set(&mut self, idx: u64) -> bool {
+        let w = (idx >> 6) as usize;
+        if w >= self.words.len() {
+            self.words.resize(w + 1 + w / 2, 0);
+        }
+        let mask = 1u64 << (idx & 63);
+        let was = self.words[w] & mask != 0;
+        self.words[w] |= mask;
+        was
+    }
+
+    #[inline]
+    fn get(&self, idx: u64) -> bool {
+        let w = (idx >> 6) as usize;
+        w < self.words.len() && self.words[w] & (1u64 << (idx & 63)) != 0
+    }
+}
+
+const EMPTY: u64 = u64::MAX;
+
+/// Set-associative LRU cache simulator with §2's load/miss classification.
+///
+/// Addresses are word addresses (one word = one array element = one f64).
+/// The simulator is exact: LRU per set, move-to-front encoding (way 0 is
+/// most recently used).
+pub struct CacheSim {
+    params: CacheParams,
+    /// `sets × assoc` line tags, most-recently-used first within each set.
+    /// Tag stored = full line number (cheaper than splitting tag/index).
+    ways: Vec<u64>,
+    assoc: usize,
+    set_mask: u64,
+    line_shift: u32,
+    /// Lines ever fetched (cold vs replacement miss classification).
+    seen_lines: BitSet,
+    /// Words ever explicitly requested (cold vs replacement load).
+    requested_words: BitSet,
+    /// Lines currently resident — kept in sync with `ways`; needed to answer
+    /// "did this word's residence expire?" without scanning the set twice.
+    resident_lines: BitSet,
+    stats: CacheStats,
+}
+
+impl CacheSim {
+    pub fn new(params: CacheParams) -> CacheSim {
+        CacheSim {
+            params,
+            ways: vec![EMPTY; params.sets * params.assoc],
+            assoc: params.assoc,
+            set_mask: (params.sets - 1) as u64,
+            line_shift: params.line_words.trailing_zeros(),
+            seen_lines: BitSet::default(),
+            requested_words: BitSet::default(),
+            resident_lines: BitSet::default(),
+            stats: CacheStats::default(),
+        }
+    }
+
+    pub fn params(&self) -> CacheParams {
+        self.params
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        self.stats
+    }
+
+    /// Reset counters and contents (address-history bitsets included).
+    pub fn reset(&mut self) {
+        self.ways.fill(EMPTY);
+        self.seen_lines = BitSet::default();
+        self.requested_words = BitSet::default();
+        self.resident_lines = BitSet::default();
+        self.stats = CacheStats::default();
+    }
+
+    /// Is the word at `addr` currently resident (non-mutating probe)?
+    pub fn is_resident(&self, addr: u64) -> bool {
+        self.resident_lines.get(addr >> self.line_shift)
+    }
+
+    /// Issue one word request; returns the line-level outcome and updates
+    /// all §2 counters (misses *and* loads).
+    #[inline]
+    pub fn access(&mut self, addr: u64) -> AccessKind {
+        self.stats.accesses += 1;
+        let line = addr >> self.line_shift;
+        let set = (line & self.set_mask) as usize;
+        let base = set * self.assoc;
+        let ways = &mut self.ways[base..base + self.assoc];
+
+        // --- line-level lookup with move-to-front LRU ---
+        let kind = if ways[0] == line {
+            AccessKind::Hit // fast path: MRU hit (dominant in stencil sweeps)
+        } else if let Some(pos) = ways[1..].iter().position(|&t| t == line) {
+            let pos = pos + 1;
+            ways[..=pos].rotate_right(1); // move to front
+            AccessKind::Hit
+        } else {
+            // miss: evict LRU (last way), insert line at front.
+            let victim = ways[self.assoc - 1];
+            ways.rotate_right(1);
+            ways[0] = line;
+            if victim != EMPTY {
+                self.stats.evictions += 1;
+                self.clear_resident(victim);
+            }
+            self.set_resident(line);
+            if self.seen_lines.test_and_set(line) {
+                AccessKind::ReplacementMiss
+            } else {
+                AccessKind::ColdMiss
+            }
+        };
+
+        match kind {
+            AccessKind::Hit => self.stats.hits += 1,
+            AccessKind::ColdMiss => self.stats.cold_misses += 1,
+            AccessKind::ReplacementMiss => self.stats.replacement_misses += 1,
+        }
+
+        // --- word-level load classification (paper §2) ---
+        // cold load: first explicit request to this word, regardless of
+        //            whether its line happened to be resident already;
+        // replacement load: previously-requested word whose line had to be
+        //            re-fetched (i.e. this request missed).
+        let requested_before = self.requested_words.test_and_set(addr);
+        if !requested_before {
+            self.stats.cold_loads += 1;
+        } else if kind != AccessKind::Hit {
+            self.stats.replacement_loads += 1;
+        }
+        kind
+    }
+
+    /// Convenience: run a sequence of accesses.
+    pub fn access_all<I: IntoIterator<Item = u64>>(&mut self, addrs: I) {
+        for a in addrs {
+            self.access(a);
+        }
+    }
+
+    #[inline]
+    fn set_resident(&mut self, line: u64) {
+        self.resident_lines.test_and_set(line);
+    }
+
+    #[inline]
+    fn clear_resident(&mut self, line: u64) {
+        let w = (line >> 6) as usize;
+        if w < self.resident_lines.words.len() {
+            self.resident_lines.words[w] &= !(1u64 << (line & 63));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> CacheSim {
+        // direct-mapped, 4 sets, 1 word/line → 4-word cache; collisions every
+        // 4 words.
+        CacheSim::new(CacheParams::new(1, 4, 1))
+    }
+
+    #[test]
+    fn cold_then_hit() {
+        let mut c = tiny();
+        assert_eq!(c.access(0), AccessKind::ColdMiss);
+        assert_eq!(c.access(0), AccessKind::Hit);
+        let s = c.stats();
+        assert_eq!(s.accesses, 2);
+        assert_eq!(s.hits, 1);
+        assert_eq!(s.cold_misses, 1);
+        assert_eq!(s.cold_loads, 1);
+        assert_eq!(s.replacement_loads, 0);
+    }
+
+    #[test]
+    fn conflict_eviction_direct_mapped() {
+        let mut c = tiny();
+        c.access(0); // set 0
+        assert_eq!(c.access(4), AccessKind::ColdMiss); // evicts 0
+        assert!(!c.is_resident(0));
+        assert_eq!(c.access(0), AccessKind::ReplacementMiss);
+        let s = c.stats();
+        assert_eq!(s.replacement_misses, 1);
+        assert_eq!(s.replacement_loads, 1); // word 0 requested before, expired
+        assert_eq!(s.evictions, 2);
+    }
+
+    #[test]
+    fn two_way_lru_order() {
+        // 2-way, 1 set, 1 word/line: capacity 2, LRU.
+        let mut c = CacheSim::new(CacheParams::new(2, 1, 1));
+        c.access(0);
+        c.access(1);
+        c.access(0); // 0 is now MRU; LRU is 1
+        assert_eq!(c.access(2), AccessKind::ColdMiss); // evicts 1
+        assert!(c.is_resident(0));
+        assert!(!c.is_resident(1));
+        assert_eq!(c.access(0), AccessKind::Hit);
+        assert_eq!(c.access(1), AccessKind::ReplacementMiss);
+    }
+
+    #[test]
+    fn line_fetch_makes_neighbors_resident() {
+        // 1 set, 1 way, 4 words/line.
+        let mut c = CacheSim::new(CacheParams::new(1, 1, 4));
+        assert_eq!(c.access(0), AccessKind::ColdMiss);
+        // Word 3 is on the same line: hit, but still a *cold load* (first
+        // explicit request to the word) per §2.
+        assert_eq!(c.access(3), AccessKind::Hit);
+        let s = c.stats();
+        assert_eq!(s.cold_loads, 2);
+        assert_eq!(s.misses(), 1);
+    }
+
+    #[test]
+    fn loads_vs_misses_interval_inequality() {
+        // μ ≤ w·φ (paper §2) for any access pattern.
+        let w = 4;
+        let mut c = CacheSim::new(CacheParams::new(2, 8, w));
+        // pseudo-random address stream in a space larger than the cache
+        let mut x = 12345u64;
+        for _ in 0..10_000 {
+            x = x.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            c.access(x % 4096);
+        }
+        let s = c.stats();
+        assert!(s.loads() <= w as u64 * s.misses(), "μ={} > w·φ={}", s.loads(), w as u64 * s.misses());
+    }
+
+    #[test]
+    fn sequential_sweep_miss_rate_is_one_over_w() {
+        // A long unit-stride sweep misses exactly once per line.
+        let p = CacheParams::new(2, 512, 4);
+        let mut c = CacheSim::new(p);
+        let n = 64 * 1024u64;
+        for a in 0..n {
+            c.access(a);
+        }
+        let s = c.stats();
+        assert_eq!(s.misses(), n / 4);
+        assert_eq!(s.cold_loads, n);
+        assert_eq!(s.replacement_loads, 0);
+    }
+
+    #[test]
+    fn full_associativity_no_conflicts_within_capacity() {
+        let p = CacheParams::fully_associative(64, 4);
+        let mut c = CacheSim::new(p);
+        // touch 64 words (16 lines), then touch again: all hits.
+        for a in 0..64u64 {
+            c.access(a);
+        }
+        for a in 0..64u64 {
+            assert_eq!(c.access(a), AccessKind::Hit, "addr {a}");
+        }
+        assert_eq!(c.stats().replacement_misses, 0);
+    }
+
+    #[test]
+    fn fully_associative_lru_capacity_eviction() {
+        let p = CacheParams::fully_associative(4, 1);
+        let mut c = CacheSim::new(p);
+        for a in 0..5u64 {
+            c.access(a); // 5th evicts addr 0 (LRU)
+        }
+        assert!(!c.is_resident(0));
+        assert!(c.is_resident(4));
+        assert_eq!(c.access(0), AccessKind::ReplacementMiss);
+    }
+
+    #[test]
+    fn reset_clears_everything() {
+        let mut c = tiny();
+        c.access(0);
+        c.access(4);
+        c.reset();
+        assert_eq!(c.stats(), CacheStats::default());
+        assert_eq!(c.access(0), AccessKind::ColdMiss);
+    }
+
+    #[test]
+    fn same_set_different_ways_coexist() {
+        // 2-way: addresses 0 and 8 map to set 0 of a (2, 8, 1) cache and must
+        // coexist; adding 16 evicts the LRU of the two.
+        let mut c = CacheSim::new(CacheParams::new(2, 8, 1));
+        c.access(0);
+        c.access(8);
+        assert_eq!(c.access(0), AccessKind::Hit);
+        assert_eq!(c.access(8), AccessKind::Hit);
+        c.access(16); // set 0 full of {8, 0}; LRU is 0
+        assert!(!c.is_resident(0));
+        assert!(c.is_resident(8));
+        assert!(c.is_resident(16));
+    }
+
+    #[test]
+    fn paper_interference_period() {
+        // Two addresses S/a = z·w apart collide in the same set.
+        let p = CacheParams::r10000();
+        let mut c = CacheSim::new(p);
+        let stride = p.way_words() as u64; // 2048
+        // Three lines stride apart → same set, 2 ways → third evicts first.
+        c.access(0);
+        c.access(stride);
+        assert_eq!(c.access(0), AccessKind::Hit);
+        c.access(2 * stride); // evicts LRU (= stride)
+        assert_eq!(c.access(stride), AccessKind::ReplacementMiss);
+    }
+}

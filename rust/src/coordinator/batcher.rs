@@ -1,0 +1,87 @@
+//! Shape-keyed batching.
+//!
+//! Numeric jobs are served by AOT-compiled executables keyed on the input
+//! shape; grouping same-shape requests amortizes executable lookup and
+//! keeps the PJRT compile cache hot, and analysis jobs that share
+//! (dims, stencil, cache) can share one traversal order — generating the
+//! cache-fitting order is O(N log N) and dominates small analyses.
+
+use std::collections::HashMap;
+
+/// A batch: the shared shape key plus the indices of the member requests
+/// (into the original submission order).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Batch {
+    pub key: BatchKey,
+    pub members: Vec<usize>,
+}
+
+/// Requests batch together iff dims and kind agree.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct BatchKey {
+    pub kind: &'static str,
+    pub dims: Vec<usize>,
+}
+
+/// Group request indices by key, preserving first-seen batch order and
+/// submission order within each batch (fairness: no request starves).
+pub fn group_by_shape(keys: &[BatchKey]) -> Vec<Batch> {
+    let mut index: HashMap<&BatchKey, usize> = HashMap::new();
+    let mut batches: Vec<Batch> = Vec::new();
+    for (i, k) in keys.iter().enumerate() {
+        match index.get(k) {
+            Some(&b) => batches[b].members.push(i),
+            None => {
+                index.insert(k, batches.len());
+                batches.push(Batch { key: k.clone(), members: vec![i] });
+            }
+        }
+    }
+    batches
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn key(kind: &'static str, dims: &[usize]) -> BatchKey {
+        BatchKey { kind, dims: dims.to_vec() }
+    }
+
+    #[test]
+    fn groups_same_shape() {
+        let keys = vec![
+            key("exec", &[16, 16, 16]),
+            key("exec", &[32, 32, 32]),
+            key("exec", &[16, 16, 16]),
+            key("analyze", &[16, 16, 16]),
+            key("exec", &[16, 16, 16]),
+        ];
+        let batches = group_by_shape(&keys);
+        assert_eq!(batches.len(), 3);
+        assert_eq!(batches[0].members, vec![0, 2, 4]);
+        assert_eq!(batches[1].members, vec![1]);
+        assert_eq!(batches[2].members, vec![3]);
+    }
+
+    #[test]
+    fn empty_input() {
+        assert!(group_by_shape(&[]).is_empty());
+    }
+
+    #[test]
+    fn all_members_covered_exactly_once() {
+        let keys: Vec<BatchKey> =
+            (0..50).map(|i| key(if i % 2 == 0 { "a" } else { "b" }, &[i % 5, 8, 8])).collect();
+        let batches = group_by_shape(&keys);
+        let mut seen = vec![false; keys.len()];
+        for b in &batches {
+            for &m in &b.members {
+                assert!(!seen[m], "request {m} in two batches");
+                seen[m] = true;
+                assert_eq!(keys[m], b.key);
+            }
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+}

@@ -1,0 +1,86 @@
+//! Coordinator metrics registry: lock-free counters + JSON snapshots.
+
+use crate::util::json::Json;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Counters exported by the coordinator. All updates are relaxed atomics —
+/// metrics never synchronize program logic.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub requests: AtomicU64,
+    pub planned: AtomicU64,
+    pub analyzed: AtomicU64,
+    pub executed: AtomicU64,
+    pub failed: AtomicU64,
+    pub points_processed: AtomicU64,
+    pub sim_accesses: AtomicU64,
+    pub sim_misses: AtomicU64,
+    pub pjrt_executions: AtomicU64,
+    pub pjrt_micros: AtomicU64,
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics::default()
+    }
+
+    pub fn bump(counter: &AtomicU64, by: u64) {
+        counter.fetch_add(by, Ordering::Relaxed);
+    }
+
+    /// Point-in-time snapshot as JSON (insertion-ordered, stable for diffs).
+    pub fn snapshot(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("requests", self.requests.load(Ordering::Relaxed))
+            .set("planned", self.planned.load(Ordering::Relaxed))
+            .set("analyzed", self.analyzed.load(Ordering::Relaxed))
+            .set("executed", self.executed.load(Ordering::Relaxed))
+            .set("failed", self.failed.load(Ordering::Relaxed))
+            .set("points_processed", self.points_processed.load(Ordering::Relaxed))
+            .set("sim_accesses", self.sim_accesses.load(Ordering::Relaxed))
+            .set("sim_misses", self.sim_misses.load(Ordering::Relaxed))
+            .set("pjrt_executions", self.pjrt_executions.load(Ordering::Relaxed))
+            .set("pjrt_micros", self.pjrt_micros.load(Ordering::Relaxed));
+        o
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let m = Metrics::new();
+        Metrics::bump(&m.requests, 3);
+        Metrics::bump(&m.requests, 2);
+        assert_eq!(m.requests.load(Ordering::Relaxed), 5);
+    }
+
+    #[test]
+    fn snapshot_shape() {
+        let m = Metrics::new();
+        Metrics::bump(&m.executed, 1);
+        let s = m.snapshot().to_string();
+        assert!(s.contains("\"executed\":1"));
+        assert!(s.contains("\"requests\":0"));
+    }
+
+    #[test]
+    fn concurrent_updates() {
+        let m = std::sync::Arc::new(Metrics::new());
+        let mut handles = Vec::new();
+        for _ in 0..8 {
+            let m = m.clone();
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..1000 {
+                    Metrics::bump(&m.sim_accesses, 1);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(m.sim_accesses.load(Ordering::Relaxed), 8000);
+    }
+}

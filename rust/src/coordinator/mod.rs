@@ -1,0 +1,432 @@
+//! L3 coordinator: the serving layer that turns stencil jobs into plans,
+//! simulations, and PJRT executions.
+//!
+//! Pipeline per request:
+//!
+//! ```text
+//! StencilRequest ─▶ Planner (lattice analysis, padding, traversal choice,
+//!                   bound predictions)
+//!                ─▶ Batcher (group by shape/kind)
+//!                ─▶ Workers (thread pool):
+//!                     Analyze  → traversal order → engine::simulate
+//!                     Execute  → PJRT artifact (runtime::execute)
+//!                     Solve    → repeated fused step+norms executions
+//! ```
+//!
+//! Python never appears here: numeric work runs from the AOT artifacts in
+//! `artifacts/` via the PJRT CPU client; analysis work runs on the cache
+//! simulator. Both paths are pure rust at request time.
+
+mod batcher;
+mod metrics;
+mod planner;
+
+pub use batcher::{group_by_shape, Batch, BatchKey};
+pub use metrics::Metrics;
+pub use planner::{plan, Plan, PlannerConfig, TraversalChoice};
+
+use crate::cache::CacheSim;
+use crate::engine::{self, MissReport};
+use crate::grid::{GridDesc, MultiArrayLayout};
+use crate::runtime::{HostTensor, RuntimeHandle};
+use crate::stencil::Stencil;
+use crate::traversal::{self, Order};
+use crate::util::threadpool::ThreadPool;
+use anyhow::{anyhow, bail, Result};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Stencil shape specification in requests.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum StencilSpec {
+    /// Star of radius r in the dims' dimensionality.
+    Star { r: usize },
+    /// The paper's 13-point star (3-D, r = 2).
+    Star13,
+}
+
+impl StencilSpec {
+    pub fn build(&self, ndim: usize) -> Stencil {
+        match self {
+            StencilSpec::Star { r } => Stencil::star(ndim, *r),
+            StencilSpec::Star13 => {
+                assert_eq!(ndim, 3, "star13 is 3-D");
+                Stencil::star13()
+            }
+        }
+    }
+}
+
+/// What the caller wants done.
+#[derive(Debug, Clone)]
+pub enum JobKind {
+    /// Plan only (lattice analysis + bounds).
+    Plan,
+    /// Simulate cache behaviour under the planned traversal.
+    Analyze,
+    /// Simulate under an explicitly requested traversal (baseline runs).
+    AnalyzeWith(TraversalChoice),
+    /// One stencil application via PJRT (needs a matching artifact).
+    Execute,
+    /// `steps` heat/Jacobi iterations via PJRT, logging norms.
+    Solve { steps: usize },
+}
+
+/// A stencil job.
+#[derive(Debug, Clone)]
+pub struct StencilRequest {
+    pub dims: Vec<usize>,
+    pub stencil: StencilSpec,
+    /// Number of RHS arrays (§5); 1 for the classic q = Ku.
+    pub rhs_arrays: usize,
+    pub kind: JobKind,
+}
+
+impl StencilRequest {
+    pub fn analyze(dims: &[usize]) -> StencilRequest {
+        StencilRequest { dims: dims.to_vec(), stencil: StencilSpec::Star13, rhs_arrays: 1, kind: JobKind::Analyze }
+    }
+
+    fn batch_key(&self) -> BatchKey {
+        let kind = match self.kind {
+            JobKind::Plan => "plan",
+            JobKind::Analyze => "analyze",
+            JobKind::AnalyzeWith(TraversalChoice::Natural) => "analyze-nat",
+            JobKind::AnalyzeWith(TraversalChoice::CacheFitting) => "analyze-fit",
+            JobKind::Execute => "execute",
+            JobKind::Solve { .. } => "solve",
+        };
+        BatchKey { kind, dims: self.dims.clone() }
+    }
+}
+
+/// Per-step solver log entry.
+#[derive(Debug, Clone, Copy)]
+pub struct SolveStep {
+    pub step: usize,
+    pub u_norm: f64,
+    pub residual_norm: f64,
+    pub micros: u64,
+}
+
+/// The coordinator's answer.
+#[derive(Debug)]
+pub struct StencilResponse {
+    pub plan: Plan,
+    pub miss_report: Option<MissReport>,
+    /// Final tensor norm for numeric jobs.
+    pub result_norm: Option<f64>,
+    pub solve_log: Vec<SolveStep>,
+    pub wall_micros: u64,
+}
+
+/// The coordinator.
+pub struct Coordinator {
+    config: PlannerConfig,
+    runtime: Option<Arc<RuntimeHandle>>,
+    pool: ThreadPool,
+    metrics: Arc<Metrics>,
+}
+
+impl Coordinator {
+    /// Analysis-only coordinator (no PJRT): plans and simulations work,
+    /// Execute/Solve jobs fail with a clear error.
+    pub fn analysis_only(config: PlannerConfig) -> Coordinator {
+        Coordinator { config, runtime: None, pool: ThreadPool::with_default_parallelism(), metrics: Arc::new(Metrics::new()) }
+    }
+
+    /// Full coordinator with the PJRT runtime service attached.
+    pub fn with_runtime(config: PlannerConfig, runtime: Arc<RuntimeHandle>) -> Coordinator {
+        Coordinator {
+            config,
+            runtime: Some(runtime),
+            pool: ThreadPool::with_default_parallelism(),
+            metrics: Arc::new(Metrics::new()),
+        }
+    }
+
+    pub fn metrics(&self) -> &Metrics {
+        &self.metrics
+    }
+
+    pub fn config(&self) -> &PlannerConfig {
+        &self.config
+    }
+
+    /// Handle one request synchronously.
+    pub fn submit(&self, req: &StencilRequest) -> Result<StencilResponse> {
+        Metrics::bump(&self.metrics.requests, 1);
+        let t0 = Instant::now();
+        let result = self.dispatch(req);
+        if result.is_err() {
+            Metrics::bump(&self.metrics.failed, 1);
+        }
+        result.map(|mut r| {
+            r.wall_micros = t0.elapsed().as_micros() as u64;
+            r
+        })
+    }
+
+    /// Handle a slice of requests: batch by shape, run batches across the
+    /// worker pool, return responses in submission order.
+    pub fn serve(&self, reqs: &[StencilRequest]) -> Vec<Result<StencilResponse>> {
+        let keys: Vec<BatchKey> = reqs.iter().map(|r| r.batch_key()).collect();
+        let batches = group_by_shape(&keys);
+        // flatten batches into a worklist of request indices, batch-major:
+        // same-shape requests run adjacently (cache-hot executables/orders).
+        let ordered: Vec<usize> = batches.iter().flat_map(|b| b.members.iter().copied()).collect();
+        let outcomes = self.pool.scope_map(ordered.len(), |slot| {
+            let idx = ordered[slot];
+            (idx, self.submit(&reqs[idx]))
+        });
+        let mut slots: Vec<Option<Result<StencilResponse>>> = (0..reqs.len()).map(|_| None).collect();
+        for (idx, resp) in outcomes {
+            slots[idx] = Some(resp);
+        }
+        slots.into_iter().map(|s| s.expect("every request answered")).collect()
+    }
+
+    fn dispatch(&self, req: &StencilRequest) -> Result<StencilResponse> {
+        if req.dims.is_empty() || req.dims.iter().any(|&d| d == 0) {
+            bail!("invalid dims {:?}", req.dims);
+        }
+        if req.rhs_arrays == 0 {
+            bail!("rhs_arrays must be >= 1");
+        }
+        let stencil = req.stencil.build(req.dims.len());
+        let plan = plan(&self.config, &req.dims, &stencil, req.rhs_arrays);
+        Metrics::bump(&self.metrics.planned, 1);
+
+        match &req.kind {
+            JobKind::Plan => Ok(StencilResponse { plan, miss_report: None, result_norm: None, solve_log: Vec::new(), wall_micros: 0 }),
+            JobKind::Analyze => self.run_analysis(req, &stencil, plan, None),
+            JobKind::AnalyzeWith(choice) => self.run_analysis(req, &stencil, plan, Some(*choice)),
+            JobKind::Execute => self.run_execute(req, plan),
+            JobKind::Solve { steps } => self.run_solve(req, plan, *steps),
+        }
+    }
+
+    fn run_analysis(
+        &self,
+        req: &StencilRequest,
+        stencil: &Stencil,
+        plan: Plan,
+        force: Option<TraversalChoice>,
+    ) -> Result<StencilResponse> {
+        let grid = GridDesc::with_padding(&plan.dims, &plan.pad);
+        let r = stencil.radius();
+        let choice = force.unwrap_or(plan.traversal);
+        let order: Order = match choice {
+            TraversalChoice::Natural => traversal::natural(&grid, r),
+            TraversalChoice::CacheFitting => {
+                // the planner's fitting path is the auto-tuned family
+                crate::tuner::auto_fitting_order(&grid, stencil, &self.config.cache).0
+            }
+        };
+        let layout = MultiArrayLayout::paper_offsets(&grid, req.rhs_arrays, self.config.cache.size_words());
+        let mut sim = CacheSim::new(self.config.cache);
+        let report = engine::simulate(&order, &layout, stencil, &mut sim);
+        Metrics::bump(&self.metrics.analyzed, 1);
+        Metrics::bump(&self.metrics.points_processed, report.points);
+        Metrics::bump(&self.metrics.sim_accesses, report.total.accesses);
+        Metrics::bump(&self.metrics.sim_misses, report.total.misses());
+        Ok(StencilResponse { plan, miss_report: Some(report), result_norm: None, solve_log: Vec::new(), wall_micros: 0 })
+    }
+
+    fn runtime(&self) -> Result<&Arc<RuntimeHandle>> {
+        self.runtime.as_ref().ok_or_else(|| anyhow!("coordinator started without a PJRT runtime (analysis-only)"))
+    }
+
+    fn artifact_for(&self, prefix: &str, dims: &[usize]) -> Result<String> {
+        let rt = self.runtime()?;
+        rt.manifest()
+            .find_for_shape(prefix, dims)
+            .map(|a| a.name.clone())
+            .ok_or_else(|| {
+                anyhow!(
+                    "no {prefix} artifact for shape {dims:?}; available: {:?}. Add the shape to `make artifacts` (aot.py --shapes).",
+                    rt.manifest().names()
+                )
+            })
+    }
+
+    fn run_execute(&self, req: &StencilRequest, plan: Plan) -> Result<StencilResponse> {
+        let rt = self.runtime()?.clone();
+        let name = self.artifact_for("star13_", &req.dims)?;
+        let u = deterministic_input(&req.dims, 0xC0FFEE);
+        let t0 = Instant::now();
+        let out = rt.execute(&name, &[&u])?;
+        let micros = t0.elapsed().as_micros() as u64;
+        Metrics::bump(&self.metrics.pjrt_executions, 1);
+        Metrics::bump(&self.metrics.pjrt_micros, micros);
+        Metrics::bump(&self.metrics.executed, 1);
+        Metrics::bump(&self.metrics.points_processed, u.len() as u64);
+        Ok(StencilResponse {
+            plan,
+            miss_report: None,
+            result_norm: Some(out[0].norm()),
+            solve_log: Vec::new(),
+            wall_micros: 0,
+        })
+    }
+
+    fn run_solve(&self, req: &StencilRequest, plan: Plan, steps: usize) -> Result<StencilResponse> {
+        let rt = self.runtime()?.clone();
+        let name = self.artifact_for("step_norms_", &req.dims)?;
+        let mut u = deterministic_input(&req.dims, 0xBEEF);
+        let mut log = Vec::with_capacity(steps);
+        for step in 0..steps {
+            let t0 = Instant::now();
+            let mut out = rt.execute(&name, &[&u])?;
+            let micros = t0.elapsed().as_micros() as u64;
+            Metrics::bump(&self.metrics.pjrt_executions, 1);
+            Metrics::bump(&self.metrics.pjrt_micros, micros);
+            let norms = out.pop().expect("norms output");
+            u = out.pop().expect("state output");
+            log.push(SolveStep {
+                step,
+                u_norm: norms.data[0] as f64,
+                residual_norm: norms.data[1] as f64,
+                micros,
+            });
+        }
+        Metrics::bump(&self.metrics.executed, 1);
+        Metrics::bump(&self.metrics.points_processed, (u.len() * steps) as u64);
+        Ok(StencilResponse { plan, miss_report: None, result_norm: Some(u.norm()), solve_log: log, wall_micros: 0 })
+    }
+
+    /// Snapshot the metrics as JSON text.
+    pub fn metrics_json(&self) -> String {
+        let mut j = self.metrics.snapshot();
+        j.set("pool_workers", self.pool.workers());
+        if let Some(rt) = &self.runtime {
+            j.set("cached_executables", rt.cached_executables());
+            j.set("platform", rt.platform());
+        }
+        j.to_pretty()
+    }
+}
+
+/// Deterministic pseudo-random input field for numeric jobs: reproducible
+/// across runs so EXPERIMENTS.md numbers are stable.
+pub fn deterministic_input(dims: &[usize], seed: u64) -> HostTensor {
+    let n: usize = dims.iter().product();
+    let mut rng = crate::util::rng::Rng::new(seed);
+    let data: Vec<f32> = (0..n).map(|_| (rng.f64() as f32) - 0.5).collect();
+    HostTensor::new(dims.to_vec(), data).expect("consistent dims")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::Ordering;
+
+    fn coord() -> Coordinator {
+        Coordinator::analysis_only(PlannerConfig::default())
+    }
+
+    #[test]
+    fn plan_job_returns_plan_only() {
+        let c = coord();
+        let req = StencilRequest {
+            dims: vec![45, 91, 100],
+            stencil: StencilSpec::Star13,
+            rhs_arrays: 1,
+            kind: JobKind::Plan,
+        };
+        let resp = c.submit(&req).unwrap();
+        assert!(resp.plan.was_unfavorable);
+        assert!(resp.miss_report.is_none());
+        assert_eq!(c.metrics.planned.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn analyze_small_grid() {
+        let c = coord();
+        let req = StencilRequest::analyze(&[20, 20, 20]);
+        let resp = c.submit(&req).unwrap();
+        let rep = resp.miss_report.unwrap();
+        assert_eq!(rep.points, 16 * 16 * 16);
+        assert!(rep.total.misses() > 0);
+    }
+
+    #[test]
+    fn forced_traversals_differ_on_conflicting_grid() {
+        // Grid engineered to conflict: storage rows collide every 4 columns
+        // (n1·n2 = 2048·… use a small cache to keep runtime down).
+        let config = PlannerConfig { cache: crate::cache::CacheParams::new(1, 64, 1), max_pad: 0, auto_pad: false };
+        let c = Coordinator::analysis_only(config);
+        let mk = |kind| StencilRequest {
+            dims: vec![60, 32],
+            stencil: StencilSpec::Star { r: 1 },
+            rhs_arrays: 1,
+            kind,
+        };
+        let nat = c.submit(&mk(JobKind::AnalyzeWith(TraversalChoice::Natural))).unwrap();
+        let fit = c.submit(&mk(JobKind::AnalyzeWith(TraversalChoice::CacheFitting))).unwrap();
+        let (nm, fm) = (
+            nat.miss_report.unwrap().total.replacement_misses,
+            fit.miss_report.unwrap().total.replacement_misses,
+        );
+        assert!(fm < nm, "fitting {fm} !< natural {nm}");
+    }
+
+    #[test]
+    fn invalid_requests_rejected() {
+        let c = coord();
+        let bad_dims = StencilRequest { dims: vec![], stencil: StencilSpec::Star { r: 1 }, rhs_arrays: 1, kind: JobKind::Plan };
+        assert!(c.submit(&bad_dims).is_err());
+        let zero_dim = StencilRequest { dims: vec![0, 4], stencil: StencilSpec::Star { r: 1 }, rhs_arrays: 1, kind: JobKind::Plan };
+        assert!(c.submit(&zero_dim).is_err());
+        let no_rhs = StencilRequest { dims: vec![8, 8], stencil: StencilSpec::Star { r: 1 }, rhs_arrays: 0, kind: JobKind::Plan };
+        assert!(c.submit(&no_rhs).is_err());
+        assert_eq!(c.metrics.failed.load(Ordering::Relaxed), 3);
+    }
+
+    #[test]
+    fn execute_without_runtime_fails_cleanly() {
+        let c = coord();
+        let req = StencilRequest {
+            dims: vec![16, 16, 16],
+            stencil: StencilSpec::Star13,
+            rhs_arrays: 1,
+            kind: JobKind::Execute,
+        };
+        let err = c.submit(&req).unwrap_err();
+        assert!(format!("{err}").contains("analysis-only"));
+    }
+
+    #[test]
+    fn serve_preserves_order_and_batches() {
+        let c = coord();
+        let reqs: Vec<StencilRequest> = [16usize, 20, 16, 24, 20, 16]
+            .iter()
+            .map(|&n| StencilRequest::analyze(&[n, n, n]))
+            .collect();
+        let resps = c.serve(&reqs);
+        assert_eq!(resps.len(), 6);
+        for (req, resp) in reqs.iter().zip(&resps) {
+            let resp = resp.as_ref().unwrap();
+            assert_eq!(resp.plan.dims, req.dims);
+        }
+        assert_eq!(c.metrics.requests.load(Ordering::Relaxed), 6);
+    }
+
+    #[test]
+    fn metrics_json_renders() {
+        let c = coord();
+        let _ = c.submit(&StencilRequest::analyze(&[12, 12, 12]));
+        let j = c.metrics_json();
+        assert!(j.contains("sim_accesses"));
+        assert!(j.contains("pool_workers"));
+    }
+
+    #[test]
+    fn deterministic_input_is_deterministic() {
+        let a = deterministic_input(&[4, 4, 4], 1);
+        let b = deterministic_input(&[4, 4, 4], 1);
+        assert_eq!(a, b);
+        let c2 = deterministic_input(&[4, 4, 4], 2);
+        assert_ne!(a, c2);
+    }
+}

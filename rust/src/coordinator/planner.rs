@@ -1,0 +1,185 @@
+//! The planner: turn a stencil job into an execution plan.
+//!
+//! This is where the paper's results become *policy*:
+//!
+//! 1. build the interference lattice of the requested layout;
+//! 2. if the grid is unfavorable (§6 short-vector criterion), consult the
+//!    padding advisor and re-plan on the padded layout;
+//! 3. choose the traversal: cache-fitting (§4) by default, natural when
+//!    the whole working set already fits the cache (no replacement misses
+//!    possible — fitting buys nothing and costs order-generation time);
+//! 4. attach the Eq 7 / Eq 12 bound predictions so callers can check the
+//!    measured loads landed inside the sandwich.
+
+use crate::bounds::{lower_bound_loads_multi, upper_bound_loads_multi};
+use crate::cache::CacheParams;
+use crate::grid::GridDesc;
+use crate::lattice::InterferenceLattice;
+use crate::padding::{self, PaddingAdvice};
+use crate::stencil::Stencil;
+
+/// Traversal policy chosen by the planner.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TraversalChoice {
+    /// Lexicographic sweep — optimal when the working set fits the cache.
+    Natural,
+    /// The paper's §4 pencil sweep.
+    CacheFitting,
+}
+
+/// A complete plan for one stencil job.
+#[derive(Debug, Clone)]
+pub struct Plan {
+    /// Logical dims of the request.
+    pub dims: Vec<usize>,
+    /// Storage layout after (possible) padding.
+    pub storage_dims: Vec<usize>,
+    pub pad: Vec<usize>,
+    pub traversal: TraversalChoice,
+    /// §6 verdict on the *unpadded* layout.
+    pub was_unfavorable: bool,
+    /// Shortest lattice vector (L1, searched to the stencil diameter) of
+    /// the final layout.
+    pub min_l1: Option<i64>,
+    /// Eccentricity of the final layout's reduced basis.
+    pub eccentricity: f64,
+    /// Eq 7 prediction (loads for the whole job).
+    pub lower_bound: f64,
+    /// Eq 12 prediction.
+    pub upper_bound: f64,
+}
+
+/// Planner configuration.
+#[derive(Debug, Clone)]
+pub struct PlannerConfig {
+    pub cache: CacheParams,
+    /// Maximum per-dimension pad the advisor may spend.
+    pub max_pad: usize,
+    /// Allow the planner to pad unfavorable grids.
+    pub auto_pad: bool,
+}
+
+impl Default for PlannerConfig {
+    fn default() -> Self {
+        PlannerConfig { cache: CacheParams::r10000(), max_pad: 8, auto_pad: true }
+    }
+}
+
+/// Produce a plan for evaluating `stencil` with `p` RHS arrays over `dims`.
+pub fn plan(config: &PlannerConfig, dims: &[usize], stencil: &Stencil, p: usize) -> Plan {
+    let cache = &config.cache;
+    let grid = GridDesc::new(dims);
+    let was_unfavorable = padding::is_unfavorable(&grid, stencil, cache);
+
+    let (pad, storage_dims) = if was_unfavorable && config.auto_pad {
+        let advice: PaddingAdvice = padding::advise(&grid, stencil, cache, config.max_pad);
+        (advice.pad, advice.storage_dims)
+    } else {
+        (vec![0; dims.len()], dims.to_vec())
+    };
+    let padded = GridDesc::with_padding(dims, &pad);
+    let lattice = InterferenceLattice::new(padded.storage_dims(), cache.lattice_modulus());
+    let min_l1 = lattice.min_l1(stencil.diameter() as i64);
+    let eccentricity = lattice.eccentricity();
+
+    // Natural order is optimal when a full working slab (the K-extension of
+    // one scanning face of the natural sweep: (2r+1) planes of the leading
+    // dims product) fits in cache — then there are no replacement misses to
+    // save. For d-dim grids the natural working set is diameter × (product
+    // of all dims except the last).
+    let slab: u64 = padded.storage_dims()[..dims.len() - 1].iter().map(|&n| n as u64).product::<u64>()
+        * stencil.diameter() as u64
+        * p as u64;
+    let traversal = if dims.len() == 1 || slab <= cache.size_words() as u64 {
+        TraversalChoice::Natural
+    } else {
+        TraversalChoice::CacheFitting
+    };
+
+    let (lower_bound, upper_bound) = if dims.len() >= 2 {
+        (
+            lower_bound_loads_multi(&padded, cache.size_words(), p),
+            upper_bound_loads_multi(&padded, cache.size_words(), stencil.radius() as u32, eccentricity, p),
+        )
+    } else {
+        let g = padded.num_points() as f64 * p as f64;
+        (g, g) // 1-D: single sweep, every word loaded once
+    };
+
+    Plan {
+        dims: dims.to_vec(),
+        storage_dims,
+        pad,
+        traversal,
+        was_unfavorable,
+        min_l1,
+        eccentricity,
+        lower_bound,
+        upper_bound,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> PlannerConfig {
+        PlannerConfig::default()
+    }
+
+    #[test]
+    fn favorable_large_grid_uses_fitting_without_padding() {
+        let p = plan(&cfg(), &[67, 89, 100], &Stencil::star13(), 1);
+        assert!(!p.was_unfavorable);
+        assert_eq!(p.pad, vec![0, 0, 0]);
+        assert_eq!(p.traversal, TraversalChoice::CacheFitting);
+        assert!(p.lower_bound < p.upper_bound);
+    }
+
+    #[test]
+    fn unfavorable_grid_gets_padded() {
+        let p = plan(&cfg(), &[45, 91, 100], &Stencil::star13(), 1);
+        assert!(p.was_unfavorable);
+        assert!(p.pad.iter().any(|&x| x > 0), "{p:?}");
+        // final layout clears the bar
+        assert!(p.min_l1.is_none() || p.min_l1.unwrap() >= 5);
+    }
+
+    #[test]
+    fn auto_pad_can_be_disabled() {
+        let mut c = cfg();
+        c.auto_pad = false;
+        let p = plan(&c, &[45, 91, 100], &Stencil::star13(), 1);
+        assert!(p.was_unfavorable);
+        assert_eq!(p.pad, vec![0, 0, 0]);
+        assert_eq!(p.storage_dims, vec![45, 91, 100]);
+    }
+
+    #[test]
+    fn small_grid_prefers_natural() {
+        // 16×16×16: one slab = 16·16·5 = 1280 words < 4096 ⇒ natural.
+        let p = plan(&cfg(), &[16, 16, 16], &Stencil::star13(), 1);
+        assert_eq!(p.traversal, TraversalChoice::Natural);
+    }
+
+    #[test]
+    fn multi_rhs_shrinks_natural_window() {
+        // Same 16³ grid with p = 4: slab 4× bigger ⇒ fitting.
+        let p = plan(&cfg(), &[16, 16, 16], &Stencil::star13(), 4);
+        assert_eq!(p.traversal, TraversalChoice::CacheFitting);
+    }
+
+    #[test]
+    fn one_dimensional_grid() {
+        let p = plan(&cfg(), &[1000], &Stencil::star(1, 1), 1);
+        assert_eq!(p.traversal, TraversalChoice::Natural);
+        assert_eq!(p.lower_bound, p.upper_bound);
+    }
+
+    #[test]
+    fn bounds_scale_with_volume() {
+        let small = plan(&cfg(), &[32, 32, 32], &Stencil::star13(), 1);
+        let big = plan(&cfg(), &[64, 64, 64], &Stencil::star13(), 1);
+        assert!(big.lower_bound > 7.0 * small.lower_bound);
+    }
+}

@@ -1,0 +1,101 @@
+//! **BOUNDS** — tabulate the Eq 7 / Eq 12 sandwich.
+//!
+//! The paper proves `lower ≤ μ ≤ upper` but prints no table; we generate
+//! one: for favorable grids across cache sizes, measure the cache-fitting
+//! algorithm's actual u-loads in the simulator and place them between the
+//! two bounds. Also reports the fundamental-parallelepiped volume
+//! utilization (always exactly S — `det L = S` — versus the ≈ 0.8·S blocks
+//! of the cache-miss-equation approach [4], the comparison the paper makes
+//! at the end of §4).
+
+use super::{measure, save_csv, OrderKind};
+use crate::bounds::{lower_bound_loads, upper_bound_loads};
+use crate::cache::CacheParams;
+use crate::grid::GridDesc;
+use crate::lattice::InterferenceLattice;
+use crate::report::Table;
+use crate::stencil::Stencil;
+
+/// Favorable test grids per cache size (padded away from hyperbolae).
+fn grids_for(quick: bool) -> Vec<Vec<usize>> {
+    if quick {
+        vec![vec![33, 29, 12], vec![41, 37, 12]]
+    } else {
+        vec![vec![33, 29, 40], vec![41, 37, 40], vec![67, 53, 40], vec![61, 47, 40]]
+    }
+}
+
+pub fn run(quick: bool) -> Table {
+    let stencil = Stencil::star(3, 1); // r = 1 keeps the c''_d constant modest
+    let mut table = Table::new(
+        "BOUNDS: Eq 7 ≤ measured u-loads (cache fitting) ≤ Eq 12, r=1 star",
+        &["grid", "S", "lower (Eq7)", "measured", "upper (Eq12)", "meas/|G|", "ecc", "P volume util"],
+    );
+    for log_s in [10usize, 12, 14] {
+        let s = 1usize << log_s;
+        let cache = CacheParams::new(2, s / 8, 4);
+        assert_eq!(cache.size_words(), s);
+        for dims in grids_for(quick) {
+            let grid = GridDesc::new(&dims);
+            let lat = InterferenceLattice::new(grid.storage_dims(), s);
+            if lat.is_unfavorable(stencil.diameter() as i64) {
+                continue; // Eq 12 assumes a favorable lattice
+            }
+            let rep = measure(&grid, &stencil, cache, OrderKind::Auto, 1);
+            let lb = lower_bound_loads(&grid, s);
+            let ub = upper_bound_loads(&grid, s, stencil.radius() as u32, lat.eccentricity());
+            // det L = S always: full cache utilization (vs ~0.8·S in [4]).
+            let util = lat.determinant() as f64 / s as f64;
+            table.add_row(vec![
+                format!("{}x{}x{}", dims[0], dims[1], dims[2]),
+                s.to_string(),
+                format!("{lb:.0}"),
+                rep.u_loads.to_string(),
+                format!("{ub:.0}"),
+                format!("{:.3}", rep.u_loads as f64 / grid.num_points() as f64),
+                format!("{:.2}", lat.eccentricity()),
+                format!("{util:.2}"),
+            ]);
+        }
+    }
+    println!("{}", table.to_text());
+    save_csv(&table, "bounds");
+    table
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sandwich_holds() {
+        let t = run(true);
+        assert!(t.num_rows() >= 4);
+        for row in t.rows() {
+            let lb: f64 = row[2].parse().unwrap();
+            let measured: f64 = row[3].parse().unwrap();
+            let ub: f64 = row[4].parse().unwrap();
+            assert!(lb <= measured * 1.001, "row {row:?}");
+            assert!(measured <= ub * 1.001, "row {row:?}");
+        }
+    }
+
+    #[test]
+    fn full_parallelepiped_utilization() {
+        let t = run(true);
+        for row in t.rows() {
+            assert_eq!(row[7], "1.00", "det L must equal S: {row:?}");
+        }
+    }
+
+    #[test]
+    fn measured_loads_near_one_per_point() {
+        // Cache fitting on favorable grids should be close to compulsory:
+        // ~1 load per point, never >2.
+        let t = run(true);
+        for row in t.rows() {
+            let per: f64 = row[5].parse().unwrap();
+            assert!((0.9..2.0).contains(&per), "row {row:?}");
+        }
+    }
+}

@@ -1,0 +1,231 @@
+//! **FIG5** — reproduce Figure 5 of the paper.
+//!
+//! Plot A: for array sizes `40 ≤ n1, n2 < 100` (natural order forced, as
+//! the paper does with a circular-shift subroutine), mark grids whose
+//! measured cache misses exceed the smooth baseline by ≥ 15%. Plot B: mark
+//! grids whose interference lattice has a vector with L1 norm < 8. The
+//! paper's claims:
+//!
+//! - both maps are fitted well by the hyperbolae `n1·n2 = k·S/2`,
+//!   k = 1..4 (unfavorable slices are multiples of half the cache);
+//! - A and B coincide (short lattice vector ⇔ miss spike) — we quantify
+//!   with the φ association coefficient.
+//!
+//! Substitution note (DESIGN.md): the paper thresholds "15% above the
+//! *upper bound*"; our threshold is 15% above the **median per-point miss
+//! rate** across the sweep — the same smooth floor, without depending on
+//! the eccentricity term that itself diverges on unfavorable grids.
+
+use super::{measure, save_csv, OrderKind};
+use crate::cache::CacheParams;
+use crate::grid::GridDesc;
+use crate::lattice::InterferenceLattice;
+use crate::report::Table;
+use crate::stencil::Stencil;
+use crate::util::stats;
+use crate::util::threadpool::ThreadPool;
+
+#[derive(Debug, Clone)]
+pub struct Config {
+    pub n_range: std::ops::Range<usize>,
+    pub n3: usize,
+    pub cache: CacheParams,
+    /// Spike threshold relative to the median per-point rate.
+    pub threshold: f64,
+    /// L1 bar for plot B (paper: 8).
+    pub short_bar: i64,
+}
+
+impl Config {
+    pub fn paper(quick: bool) -> Config {
+        Config {
+            n_range: if quick { 40..70 } else { 40..100 },
+            n3: if quick { 6 } else { 10 },
+            cache: CacheParams::r10000(),
+            threshold: 1.15,
+            short_bar: 8,
+        }
+    }
+}
+
+/// Result of the Plot-A sweep.
+pub struct PlotA {
+    pub table: Table,
+    /// (n1, n2, misses_per_point, spike?)
+    pub cells: Vec<(usize, usize, f64, bool)>,
+}
+
+/// Plot A: measured miss fluctuations under natural order.
+pub fn run_a(config: Config) -> PlotA {
+    let stencil = Stencil::star13();
+    let pool = ThreadPool::with_default_parallelism();
+    let ns: Vec<usize> = config.n_range.clone().collect();
+    let pairs: Vec<(usize, usize)> = ns.iter().flat_map(|&a| ns.iter().map(move |&b| (a, b))).collect();
+    let rates: Vec<f64> = pool.scope_map(pairs.len(), |i| {
+        let (n1, n2) = pairs[i];
+        let grid = GridDesc::new(&[n1, n2, config.n3]);
+        let rep = measure(&grid, &stencil, config.cache, OrderKind::Natural, 1);
+        rep.misses_per_point()
+    });
+    let median = {
+        let mut sorted = rates.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        stats::percentile_sorted(&sorted, 0.5)
+    };
+    let cells: Vec<(usize, usize, f64, bool)> = pairs
+        .iter()
+        .zip(&rates)
+        .map(|(&(n1, n2), &rate)| (n1, n2, rate, rate > config.threshold * median))
+        .collect();
+
+    let mut table = Table::new(
+        &format!("FIG5A: miss spikes (natural order, n3={}, thr {:.0}% over median rate {:.3})", config.n3, (config.threshold - 1.0) * 100.0, median),
+        &["n1", "n2", "misses_per_point", "spike"],
+    );
+    for &(n1, n2, rate, _spike) in cells.iter().filter(|c| c.3) {
+        table.add_row(vec![n1.to_string(), n2.to_string(), format!("{rate:.3}"), "YES".into()]);
+    }
+    println!("{}", render_map("Figure 5A: miss spikes (■)", &config, &cells.iter().map(|&(a, b, _, s)| (a, b, s)).collect::<Vec<_>>()));
+    save_csv(&table, "fig5a");
+    PlotA { table, cells }
+}
+
+/// Plot B: lattices with short (< `short_bar` in L1) vectors — pure
+/// number theory, no simulation.
+pub fn run_b(config: Config) -> Table {
+    let ns: Vec<usize> = config.n_range.clone().collect();
+    let mut table = Table::new(
+        &format!("FIG5B: interference lattices with L1-short (<{}) vectors; S = {}", config.short_bar, config.cache.lattice_modulus()),
+        &["n1", "n2", "min_l1", "n1*n2 / (S/2)"],
+    );
+    let s_half = config.cache.lattice_modulus() as f64 / 2.0;
+    let mut marks = Vec::new();
+    for &n1 in &ns {
+        for &n2 in &ns {
+            let lat = InterferenceLattice::new(&[n1, n2, 50], config.cache.lattice_modulus());
+            let short = lat.min_l1(config.short_bar - 1);
+            marks.push((n1, n2, short.is_some()));
+            if let Some(m) = short {
+                table.add_row(vec![
+                    n1.to_string(),
+                    n2.to_string(),
+                    m.to_string(),
+                    format!("{:.3}", (n1 * n2) as f64 / s_half),
+                ]);
+            }
+        }
+    }
+    println!("{}", render_map("Figure 5B: short lattice vectors (■)", &config, &marks));
+    println!("{}", table.to_text());
+    save_csv(&table, "fig5b");
+    table
+}
+
+/// The §6 correlation between Plot A and Plot B, plus the hyperbola fit.
+pub fn run_corr(config: Config) -> Vec<Table> {
+    let a = run_a(config.clone());
+    let ns: Vec<usize> = config.n_range.clone().collect();
+    let mut both = 0usize;
+    let mut only_a = 0usize;
+    let mut only_b = 0usize;
+    let mut neither = 0usize;
+    let mut hyperbola_hits = 0usize;
+    let mut spikes_on_hyperbola = 0usize;
+    let s_half = config.cache.lattice_modulus() as f64 / 2.0;
+    for &(n1, n2, _, spike) in &a.cells {
+        let lat = InterferenceLattice::new(&[n1, n2, 50], config.cache.lattice_modulus());
+        let short = lat.min_l1(config.short_bar - 1).is_some();
+        match (spike, short) {
+            (true, true) => both += 1,
+            (true, false) => only_a += 1,
+            (false, true) => only_b += 1,
+            (false, false) => neither += 1,
+        }
+        // hyperbola proximity: n1 n2 within 1.5% of k·S/2
+        let prod = (n1 * n2) as f64;
+        let k = (prod / s_half).round();
+        let near = k >= 1.0 && (prod - k * s_half).abs() / s_half <= 0.015;
+        if near {
+            hyperbola_hits += 1;
+            if spike {
+                spikes_on_hyperbola += 1;
+            }
+        }
+    }
+    let phi = stats::phi_coefficient(both, only_a, only_b, neither);
+    let total = ns.len() * ns.len();
+    let mut t = Table::new("FIG5 correlation: miss spikes vs short lattice vectors", &["metric", "value", "paper"]);
+    t.add_row(vec!["grids".into(), total.to_string(), "3600".into()]);
+    t.add_row(vec!["spike ∧ short-vector".into(), both.to_string(), "—".into()]);
+    t.add_row(vec!["spike only".into(), only_a.to_string(), "—".into()]);
+    t.add_row(vec!["short-vector only".into(), only_b.to_string(), "—".into()]);
+    t.add_row(vec!["neither".into(), neither.to_string(), "—".into()]);
+    t.add_row(vec!["phi association".into(), format!("{phi:.3}"), "\"good correlation\" (§6)".into()]);
+    t.add_row(vec![
+        "spike rate on n1·n2 ≈ k·S/2 hyperbolae".into(),
+        format!("{spikes_on_hyperbola}/{hyperbola_hits}"),
+        "plots fitted well by hyperbolae".into(),
+    ]);
+    println!("{}", t.to_text());
+    save_csv(&t, "fig5corr");
+    vec![a.table, t]
+}
+
+/// ASCII density map over (n1, n2).
+fn render_map(title: &str, config: &Config, marks: &[(usize, usize, bool)]) -> String {
+    let lo = config.n_range.start;
+    let hi = config.n_range.end;
+    let w = hi - lo;
+    let mut canvas = vec![vec!['·'; w]; w];
+    for &(n1, n2, m) in marks {
+        if m {
+            canvas[n2 - lo][n1 - lo] = '■';
+        }
+    }
+    let mut out = format!("{title}  (x: n1 {lo}..{hi}, y: n2 {lo}..{hi})\n");
+    for row in canvas.iter().rev() {
+        out.push_str("  ");
+        out.push_str(&row.iter().collect::<String>());
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Config {
+        Config { n_range: 44..47, n3: 6, cache: CacheParams::r10000(), threshold: 1.15, short_bar: 8 }
+    }
+
+    #[test]
+    fn fig5b_flags_45_91_family() {
+        // 45·91 = 4095: within the tiny range we still see 45×45? 45·45 =
+        // 2025 ≈ 2048·0.989 — just off the k=1 hyperbola; (1,0,1)-style
+        // vectors need n1·n2 ≡ ±small (mod 4096). Check a wider-known cell:
+        // run the driver and just assert structural integrity here.
+        let t = run_b(tiny());
+        for row in t.rows() {
+            let m: i64 = row[2].parse().unwrap();
+            assert!(m < 8);
+        }
+    }
+
+    #[test]
+    fn fig5a_runs_and_reports() {
+        let a = run_a(tiny());
+        assert_eq!(a.cells.len(), 9);
+        assert!(a.cells.iter().all(|c| c.2 > 0.0));
+    }
+
+    #[test]
+    fn corr_counts_partition_grid() {
+        let tables = run_corr(tiny());
+        let t = &tables[1];
+        let total: usize = t.rows()[0][1].parse().unwrap();
+        let parts: usize = (1..=4).map(|i| t.rows()[i][1].parse::<usize>().unwrap()).sum();
+        assert_eq!(total, parts);
+        assert_eq!(total, 9);
+    }
+}

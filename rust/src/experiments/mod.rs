@@ -1,0 +1,140 @@
+//! Experiment drivers: one per figure/table of the paper (see DESIGN.md §4
+//! for the index). Each driver returns [`report::Table`]s (and prints an
+//! ASCII rendition of the figure) and can write CSV snapshots under
+//! `results/`.
+//!
+//! | id        | paper artifact | driver |
+//! |-----------|----------------|--------|
+//! | `fig4`    | Figure 4       | [`fig4::run`] |
+//! | `fig5a`   | Figure 5A      | [`fig5::run_a`] |
+//! | `fig5b`   | Figure 5B      | [`fig5::run_b`] |
+//! | `fig5corr`| §6 correlation | [`fig5::run_corr`] |
+//! | `sec3`    | §3 example     | [`sec3::run`] |
+//! | `bounds`  | Eq 7/12 sandwich | [`bounds_table::run`] |
+//! | `multirhs`| §5 Eq 13/14    | [`multirhs::run`] |
+//! | `appb`    | Appendix B     | [`appb::run`] |
+
+pub mod appb;
+pub mod bounds_table;
+pub mod fig4;
+pub mod fig5;
+pub mod multirhs;
+pub mod sec3;
+
+use crate::cache::{CacheParams, CacheSim};
+use crate::engine::{self, MissReport};
+use crate::grid::{GridDesc, MultiArrayLayout};
+use crate::report::Table;
+use crate::stencil::Stencil;
+use crate::traversal;
+
+/// Which traversal a measurement uses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OrderKind {
+    Natural,
+    /// The faithful §4 pencil sweep (longest-vector default).
+    CacheFitting,
+    /// Auto-tuned fitting family (pencil sweeps + lattice tiles) — what the
+    /// production planner and the FIG4 "cache fitting" line use.
+    Auto,
+    Blocked(usize),
+    Strip(usize),
+}
+
+fn build_order(grid: &GridDesc, stencil: &Stencil, cache: &CacheParams, kind: OrderKind) -> crate::traversal::Order {
+    let r = stencil.radius();
+    match kind {
+        OrderKind::Natural => traversal::natural(grid, r),
+        OrderKind::CacheFitting => traversal::cache_fitting_for_cache(grid, r, cache),
+        OrderKind::Auto => crate::tuner::auto_fitting_order(grid, stencil, cache).0,
+        OrderKind::Blocked(t) => traversal::blocked(grid, r, &vec![t; grid.ndim()]),
+        OrderKind::Strip(w) => traversal::strip(grid, r, w),
+    }
+}
+
+/// Run one simulated measurement: build the order, stream the stencil's
+/// address trace through a fresh cache, return the report. Uses the §5
+/// offset layout (q at a half-tile cache offset), the layout every
+/// comparison in the paper-reproduction suite shares.
+pub fn measure(grid: &GridDesc, stencil: &Stencil, cache: CacheParams, kind: OrderKind, p: usize) -> MissReport {
+    measure_with_offsets(grid, stencil, cache, kind, p)
+}
+
+/// Explicit-layout variant (contiguous baseline for the §5 comparison).
+pub fn measure_contiguous(
+    grid: &GridDesc,
+    stencil: &Stencil,
+    cache: CacheParams,
+    kind: OrderKind,
+    p: usize,
+) -> MissReport {
+    let order = build_order(grid, stencil, &cache, kind);
+    let layout = MultiArrayLayout::contiguous(grid, p);
+    let mut sim = CacheSim::new(cache);
+    engine::simulate(&order, &layout, stencil, &mut sim)
+}
+
+/// §5 offset layout (`addr_i = addr_1 + m_i·S + s_i`, q at half-tile).
+pub fn measure_with_offsets(
+    grid: &GridDesc,
+    stencil: &Stencil,
+    cache: CacheParams,
+    kind: OrderKind,
+    p: usize,
+) -> MissReport {
+    let order = build_order(grid, stencil, &cache, kind);
+    let layout = MultiArrayLayout::paper_offsets(grid, p, cache.size_words());
+    let mut sim = CacheSim::new(cache);
+    engine::simulate(&order, &layout, stencil, &mut sim)
+}
+
+/// Save a table as CSV under `results/` (best effort — failures logged).
+pub fn save_csv(table: &Table, name: &str) {
+    let path = std::path::Path::new("results").join(format!("{name}.csv"));
+    match crate::report::write_file(&path, &table.to_csv()) {
+        Ok(()) => crate::log_info!("wrote {}", path.display()),
+        Err(e) => crate::log_warn!("could not write {}: {e}", path.display()),
+    }
+}
+
+/// Run an experiment by id. `quick` shrinks problem sizes for smoke runs.
+pub fn run(id: &str, quick: bool) -> Result<Vec<Table>, String> {
+    match id {
+        "fig4" => Ok(fig4::run(fig4::Config::paper(quick))),
+        "fig5a" => Ok(vec![fig5::run_a(fig5::Config::paper(quick)).table]),
+        "fig5b" => Ok(vec![fig5::run_b(fig5::Config::paper(quick))]),
+        "fig5corr" => Ok(fig5::run_corr(fig5::Config::paper(quick))),
+        "sec3" => Ok(vec![sec3::run(quick)]),
+        "bounds" => Ok(vec![bounds_table::run(quick)]),
+        "multirhs" => Ok(vec![multirhs::run(quick)]),
+        "appb" => Ok(vec![appb::run()]),
+        "all" => {
+            let mut out = Vec::new();
+            for id in ["fig4", "fig5a", "fig5b", "fig5corr", "sec3", "bounds", "multirhs", "appb"] {
+                out.extend(run(id, quick)?);
+            }
+            Ok(out)
+        }
+        other => Err(format!(
+            "unknown experiment {other:?}; available: fig4 fig5a fig5b fig5corr sec3 bounds multirhs appb all"
+        )),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measure_reports_points() {
+        let g = GridDesc::new(&[12, 12, 12]);
+        let s = Stencil::star(3, 1);
+        let rep = measure(&g, &s, CacheParams::new(2, 32, 2), OrderKind::Natural, 1);
+        assert_eq!(rep.points, 10 * 10 * 10);
+    }
+
+    #[test]
+    fn unknown_experiment_is_error() {
+        assert!(run("nope", true).is_err());
+    }
+}

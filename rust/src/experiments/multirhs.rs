@@ -1,0 +1,76 @@
+//! **MULTIRHS** — §5: stencil computations with p right-hand-side arrays.
+//!
+//! Measures u-loads per point for p ∈ {1, 2, 4} under (a) natural order +
+//! contiguous array placement and (b) cache fitting + the §5 offset
+//! assignment (`addr_i = addr_1 + m_i·S + s_i`), against the Eq 13 lower
+//! and Eq 14 upper bounds. The paper's claim: the offset assignment keeps
+//! the tiles' cache images disjoint, so fitting stays near p·|G| loads
+//! while the naive layout degrades with p (arrays whose spans are close to
+//! multiples of S collide wholesale).
+
+use super::{measure_contiguous, measure_with_offsets, save_csv, OrderKind};
+use crate::bounds::{lower_bound_loads_multi, upper_bound_loads_multi};
+use crate::cache::CacheParams;
+use crate::grid::GridDesc;
+use crate::lattice::InterferenceLattice;
+use crate::report::Table;
+use crate::stencil::Stencil;
+
+pub fn run(quick: bool) -> Table {
+    let cache = CacheParams::new(2, 128, 4); // S = 1024
+    let s = cache.size_words();
+    let dims: Vec<usize> = if quick { vec![33, 29, 12] } else { vec![33, 29, 40] };
+    let grid = GridDesc::new(&dims);
+    let stencil = Stencil::star(3, 1);
+    let lat = InterferenceLattice::new(grid.storage_dims(), s);
+    let g = grid.num_points() as f64;
+
+    let mut table = Table::new(
+        &format!("MULTIRHS: loads/point for p RHS arrays, grid {dims:?}, S={s}"),
+        &["p", "Eq13 lb /pt", "natural+contig /pt", "fitting+offsets /pt", "Eq14 ub /pt", "fit within bounds"],
+    );
+    for p in [1usize, 2, 4] {
+        let nat = measure_contiguous(&grid, &stencil, cache, OrderKind::Natural, p);
+        let fit = measure_with_offsets(&grid, &stencil, cache, OrderKind::Auto, p);
+        let lb = lower_bound_loads_multi(&grid, s, p) / g;
+        let ub = upper_bound_loads_multi(&grid, s, stencil.radius() as u32, lat.eccentricity(), p) / g;
+        let natpp = nat.u_loads as f64 / g;
+        let fitpp = fit.u_loads as f64 / g;
+        let ok = lb <= fitpp * 1.001 && fitpp <= ub * 1.001;
+        table.add_row(vec![
+            p.to_string(),
+            format!("{lb:.3}"),
+            format!("{natpp:.3}"),
+            format!("{fitpp:.3}"),
+            format!("{ub:.3}"),
+            if ok { "YES".into() } else { "NO".into() },
+        ]);
+    }
+    println!("{}", table.to_text());
+    save_csv(&table, "multirhs");
+    table
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fitting_within_bounds_for_all_p() {
+        let t = run(true);
+        assert_eq!(t.num_rows(), 3);
+        for row in t.rows() {
+            assert_eq!(row[5], "YES", "row {row:?}");
+        }
+    }
+
+    #[test]
+    fn loads_scale_roughly_with_p() {
+        let t = run(true);
+        let p1: f64 = t.rows()[0][3].parse().unwrap();
+        let p4: f64 = t.rows()[2][3].parse().unwrap();
+        // per-point loads grow ≥ p-proportionally (4×) but stay bounded.
+        assert!(p4 > 3.5 * p1, "p4 {p4} vs p1 {p1}");
+        assert!(p4 < 8.0 * p1, "p4 {p4} vs p1 {p1}");
+    }
+}

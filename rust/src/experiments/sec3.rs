@@ -1,0 +1,93 @@
+//! **SEC3EX** — the §3 example showing the lower bound's order is tight.
+//!
+//! 2-D grid with `n1 = k·S`, star stencil (r = 1), associativity `a`
+//! exceeding the stencil diameter of 3. The strip order with width `S/a`
+//! incurs exactly
+//!
+//! ```text
+//! loads(u) = n1·n2·(1 − 2/n1 + 2a(1 − 2/n2)/S)
+//! ```
+//!
+//! We run the strip traversal through the simulator and compare the
+//! measured u-loads against the closed form and against Eq 7's lower bound
+//! (measured ≥ bound, and within the same order).
+
+use super::{save_csv, OrderKind};
+use crate::bounds::{lower_bound_loads, sec3_example_loads};
+use crate::cache::CacheParams;
+use crate::grid::GridDesc;
+use crate::report::Table;
+use crate::stencil::Stencil;
+
+/// Run with a small-S cache so the sweep is fast; `quick` shrinks n2.
+pub fn run(quick: bool) -> Table {
+    // a = 4 > diameter 3, as the example requires (a > 2r+1).
+    let a = 4usize;
+    let z = 64usize;
+    let w = 1usize;
+    let cache = CacheParams::new(a, z, w);
+    let s = cache.size_words(); // 256
+    let n2 = if quick { 64 } else { 200 };
+
+    let mut table = Table::new(
+        &format!("SEC3: strip order on n1 = k·S grids (S={s}, a={a}, star r=1)"),
+        &["k", "n1", "n2", "measured u-loads", "closed form", "rel err", "Eq7 lower bound", "measured/|G|"],
+    );
+    for k in 1..=3usize {
+        let n1 = k * s;
+        let grid = GridDesc::new(&[n1, n2]);
+        let stencil = Stencil::star(2, 1);
+        let rep = super::measure(&grid, &stencil, cache, OrderKind::Strip(s / a), 1);
+        let formula = sec3_example_loads(n1 as u64, n2 as u64, s as u64, a as u64, 1);
+        let lb = lower_bound_loads(&grid, s);
+        let rel = (rep.u_loads as f64 - formula).abs() / formula;
+        table.add_row(vec![
+            k.to_string(),
+            n1.to_string(),
+            n2.to_string(),
+            rep.u_loads.to_string(),
+            format!("{formula:.0}"),
+            format!("{:.4}", rel),
+            format!("{lb:.0}"),
+            format!("{:.4}", rep.u_loads as f64 / grid.num_points() as f64),
+        ]);
+    }
+    println!("{}", table.to_text());
+    save_csv(&table, "sec3");
+    table
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strip_order_matches_closed_form_within_few_percent() {
+        let t = run(true);
+        for row in t.rows() {
+            let rel: f64 = row[5].parse().unwrap();
+            assert!(rel < 0.05, "row {row:?}: rel err {rel}");
+        }
+    }
+
+    #[test]
+    fn measured_loads_at_least_lower_bound() {
+        let t = run(true);
+        for row in t.rows() {
+            let measured: f64 = row[3].parse().unwrap();
+            let lb: f64 = row[6].parse().unwrap();
+            assert!(measured >= lb * 0.999, "row {row:?}");
+        }
+    }
+
+    #[test]
+    fn loads_per_point_near_one() {
+        // The example is near-optimal: ~1.03 loads per grid point.
+        let t = run(true);
+        for row in t.rows() {
+            let per: f64 = row[7].parse().unwrap();
+            assert!(per < 1.1, "row {row:?}");
+            assert!(per > 0.9, "row {row:?}");
+        }
+    }
+}

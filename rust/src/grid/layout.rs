@@ -1,0 +1,163 @@
+//! Memory layout for multiple arrays over the same grid.
+//!
+//! §5 of the paper computes `q` from `p` right-hand-side arrays and chooses
+//! the arrays' base addresses so that the cache images of their assigned
+//! parallelepiped tiles do not overlap:
+//!
+//! ```text
+//! addr_i = addr_1 + m_i·S + s_i,   m_1 = s_1 = 0,
+//! m_i = m_{i-1} + ⌈(|V| − s_i + s_{i-1}) / S⌉
+//! ```
+//!
+//! where `s_i` is the in-cache offset of tile `P_i` relative to `P_1`. The
+//! effect: array `i`'s copy of tile `P_j` lands at cache offset
+//! `s_j − s_i (mod S)` — each array owns its own slice of the cache. A
+//! naive layout (arrays contiguous) is provided as the baseline.
+
+use super::GridDesc;
+
+/// Base addresses for `p` same-shape arrays plus the output array `q`.
+#[derive(Debug, Clone)]
+pub struct MultiArrayLayout {
+    grid: GridDesc,
+    /// Base word address of each RHS array u_1 … u_p.
+    bases: Vec<u64>,
+    /// Base of the output array q.
+    q_base: u64,
+    /// Total words spanned by the layout.
+    total_words: u64,
+}
+
+impl MultiArrayLayout {
+    /// Naive contiguous layout: arrays packed back to back (what a Fortran
+    /// COMMON block or consecutive ALLOCATEs would give you).
+    pub fn contiguous(grid: &GridDesc, p: usize) -> MultiArrayLayout {
+        assert!(p >= 1);
+        let span = grid.storage_words();
+        let bases: Vec<u64> = (0..p as u64).map(|i| i * span).collect();
+        let q_base = p as u64 * span;
+        MultiArrayLayout { grid: grid.clone(), bases, q_base, total_words: (p as u64 + 1) * span }
+    }
+
+    /// §5 offset assignment: array `i` shifted so that its tile `P_i` has
+    /// cache offset `s_i` — tiles partition the fundamental parallelepiped,
+    /// `s_i = i·⌈S/p⌉` words along the sweep direction. `cache_words` is S.
+    pub fn paper_offsets(grid: &GridDesc, p: usize, cache_words: usize) -> MultiArrayLayout {
+        assert!(p >= 1);
+        let s = cache_words as u64;
+        let v = grid.storage_words();
+        let tile = s / p as u64; // ⌈S/p⌉ rounding irrelevant for offsets here
+        let mut bases = vec![0u64];
+        let mut m_prev = 0u64;
+        let mut s_prev = 0u64;
+        for i in 1..p as u64 {
+            let s_i = i * tile;
+            // m_i = m_{i-1} + ceil((V - s_i + s_{i-1})/S)
+            let need = v + s_prev - s_i.min(v + s_prev); // V - s_i + s_{i-1}, clamped ≥ 0
+            let m_i = m_prev + need.div_ceil(s);
+            bases.push(m_i * s + s_i);
+            m_prev = m_i;
+            s_prev = s_i;
+        }
+        // q goes after the last array, at a *half-tile* cache offset: the
+        // RHS arrays occupy tile offsets {i·S/p}; shifting q by S/(2p) puts
+        // its write stream in the middle of a tile, maximizing its distance
+        // from every RHS array's active window (q is write-only traffic —
+        // §5 considers only the p inputs, but the output has to land
+        // somewhere and colliding it with u_1 doubles u_1's replacements).
+        let last_end = bases[p - 1] + v;
+        let q_base = last_end.div_ceil(s) * s + tile / 2;
+        MultiArrayLayout { grid: grid.clone(), bases, q_base, total_words: q_base + v }
+    }
+
+    pub fn grid(&self) -> &GridDesc {
+        &self.grid
+    }
+
+    pub fn num_arrays(&self) -> usize {
+        self.bases.len()
+    }
+
+    /// Base address of RHS array `i` (0-based).
+    pub fn base(&self, i: usize) -> u64 {
+        self.bases[i]
+    }
+
+    pub fn q_base(&self) -> u64 {
+        self.q_base
+    }
+
+    pub fn total_words(&self) -> u64 {
+        self.total_words
+    }
+
+    /// Word address of point `x` in RHS array `i`.
+    #[inline]
+    pub fn addr(&self, i: usize, x: &[i64]) -> u64 {
+        self.bases[i] + self.grid.offset_of(x)
+    }
+
+    /// Word address of point `x` in the output array.
+    #[inline]
+    pub fn q_addr(&self, x: &[i64]) -> u64 {
+        self.q_base + self.grid.offset_of(x)
+    }
+
+    /// Cache offset (mod S) of array `i`'s origin — used by tests to verify
+    /// the §5 non-overlap property.
+    pub fn cache_offset(&self, i: usize, cache_words: usize) -> u64 {
+        self.bases[i] % cache_words as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn contiguous_layout_packs() {
+        let g = GridDesc::new(&[10, 10]);
+        let l = MultiArrayLayout::contiguous(&g, 3);
+        assert_eq!(l.base(0), 0);
+        assert_eq!(l.base(1), 100);
+        assert_eq!(l.base(2), 200);
+        assert_eq!(l.q_base(), 300);
+        assert_eq!(l.total_words(), 400);
+        assert_eq!(l.addr(1, &[5, 0]), 105);
+        assert_eq!(l.q_addr(&[0, 1]), 310);
+    }
+
+    #[test]
+    fn paper_offsets_distinct_cache_slices() {
+        let g = GridDesc::new(&[40, 40]); // V = 1600
+        let s = 1024;
+        let p = 4;
+        let l = MultiArrayLayout::paper_offsets(&g, p, s);
+        // Each array's origin must land at its tile offset i·(S/p) mod S.
+        for i in 0..p {
+            assert_eq!(l.cache_offset(i, s), (i * (s / p)) as u64, "array {i}");
+        }
+        // Bases strictly increasing and non-overlapping in memory.
+        for i in 1..p {
+            assert!(l.base(i) >= l.base(i - 1) + g.storage_words(), "arrays {i} overlaps");
+        }
+        assert!(l.q_base() >= l.base(p - 1) + g.storage_words());
+        // q sits at a half-tile cache offset, away from every RHS tile.
+        assert_eq!(l.q_base() % s as u64, (s / p / 2) as u64);
+    }
+
+    #[test]
+    fn paper_offsets_single_array_is_trivial() {
+        let g = GridDesc::new(&[8, 8]);
+        let l = MultiArrayLayout::paper_offsets(&g, 1, 64);
+        assert_eq!(l.base(0), 0);
+        assert_eq!(l.num_arrays(), 1);
+    }
+
+    #[test]
+    fn addresses_respect_grid_strides() {
+        let g = GridDesc::with_padding(&[5, 5], &[3, 0]);
+        let l = MultiArrayLayout::contiguous(&g, 1);
+        assert_eq!(l.addr(0, &[0, 1]), 8); // padded stride
+    }
+}

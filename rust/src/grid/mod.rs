@@ -1,0 +1,225 @@
+//! Structured discretization grids and their memory layout.
+//!
+//! The paper's arrays are Fortran arrays: column-major storage, the first
+//! index varying fastest. Address arithmetic is what the interference
+//! lattice and the cache simulator consume, so this module is the single
+//! source of truth for linearization:
+//!
+//! ```text
+//! addr(x) = base + x_1 + n_1·x_2 + n_1 n_2·x_3 + …       (words)
+//! ```
+//!
+//! A [`GridDesc`] may carry padding: the *storage* dims exceed the
+//! *logical* dims — exactly the transformation §6 of the paper prescribes
+//! to escape unfavorable sizes. [`MultiArrayLayout`] implements §5's offset
+//! assignment for p right-hand-side arrays.
+
+mod layout;
+
+pub use layout::MultiArrayLayout;
+
+/// A d-dimensional structured grid with logical dims and storage padding.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct GridDesc {
+    /// Logical (computational) extents n_1 … n_d.
+    dims: Vec<usize>,
+    /// Storage extents (≥ dims); the interference lattice is built on these.
+    storage: Vec<usize>,
+    /// Column-major strides over the *storage* extents.
+    strides: Vec<u64>,
+}
+
+impl GridDesc {
+    /// Unpadded grid.
+    pub fn new(dims: &[usize]) -> GridDesc {
+        Self::with_padding(dims, &vec![0; dims.len()])
+    }
+
+    /// Grid with per-dimension padding: storage_i = dims_i + pad_i.
+    pub fn with_padding(dims: &[usize], pad: &[usize]) -> GridDesc {
+        assert!(!dims.is_empty(), "zero-dimensional grid");
+        assert_eq!(dims.len(), pad.len());
+        assert!(dims.iter().all(|&n| n >= 1), "dims must be positive: {dims:?}");
+        let storage: Vec<usize> = dims.iter().zip(pad).map(|(&n, &p)| n + p).collect();
+        let mut strides = vec![1u64; dims.len()];
+        for i in 1..dims.len() {
+            strides[i] = strides[i - 1]
+                .checked_mul(storage[i - 1] as u64)
+                .expect("grid too large: stride overflow");
+        }
+        GridDesc { dims: dims.to_vec(), storage, strides }
+    }
+
+    pub fn ndim(&self) -> usize {
+        self.dims.len()
+    }
+
+    pub fn dims(&self) -> &[usize] {
+        &self.dims
+    }
+
+    pub fn storage_dims(&self) -> &[usize] {
+        &self.storage
+    }
+
+    pub fn strides(&self) -> &[u64] {
+        &self.strides
+    }
+
+    /// Number of logical grid points |G|.
+    pub fn num_points(&self) -> u64 {
+        self.dims.iter().map(|&n| n as u64).product()
+    }
+
+    /// Number of storage words per array defined on this grid.
+    pub fn storage_words(&self) -> u64 {
+        self.storage.iter().map(|&n| n as u64).product()
+    }
+
+    /// Linear word offset of logical point `x` (no base).
+    #[inline]
+    pub fn offset_of(&self, x: &[i64]) -> u64 {
+        debug_assert_eq!(x.len(), self.dims.len());
+        let mut off = 0i64;
+        for (&xi, &s) in x.iter().zip(&self.strides) {
+            off += xi * s as i64;
+        }
+        debug_assert!(off >= 0);
+        off as u64
+    }
+
+    /// Signed linear offset of a stencil displacement vector.
+    #[inline]
+    pub fn delta_of(&self, k: &[i64]) -> i64 {
+        k.iter().zip(&self.strides).map(|(&ki, &s)| ki * s as i64).sum()
+    }
+
+    /// Is `x` a logical grid point?
+    pub fn contains(&self, x: &[i64]) -> bool {
+        x.len() == self.dims.len() && x.iter().zip(&self.dims).all(|(&xi, &n)| xi >= 0 && (xi as usize) < n)
+    }
+
+    /// The K-interior for a stencil of radius `r`: points where every
+    /// stencil neighbor stays inside the grid. (Paper: R, the K-interior of
+    /// G; D = G \ R is the boundary.) Returns per-dim [lo, hi) ranges, or
+    /// None if the grid is too small to have an interior.
+    pub fn interior(&self, r: usize) -> Option<Vec<std::ops::Range<i64>>> {
+        let mut out = Vec::with_capacity(self.dims.len());
+        for &n in &self.dims {
+            if n < 2 * r + 1 {
+                return None;
+            }
+            out.push(r as i64..(n - r) as i64);
+        }
+        Some(out)
+    }
+
+    /// |R| — number of interior points for radius `r`.
+    pub fn interior_points(&self, r: usize) -> u64 {
+        match self.interior(r) {
+            None => 0,
+            Some(ranges) => ranges.iter().map(|rg| (rg.end - rg.start) as u64).product(),
+        }
+    }
+
+    /// |D| = |G| − |R|, the boundary point count.
+    pub fn boundary_points(&self, r: usize) -> u64 {
+        self.num_points() - self.interior_points(r)
+    }
+
+    /// Smallest logical extent (the `l` in the paper's lower bound Eq 7).
+    pub fn min_dim(&self) -> usize {
+        *self.dims.iter().min().unwrap()
+    }
+
+    /// Iterate all logical points in natural (column-major) order, calling
+    /// `f` with the coordinate vector. For hot paths use the traversal
+    /// module instead; this is the simple generic walker.
+    pub fn for_each_point(&self, mut f: impl FnMut(&[i64])) {
+        let d = self.dims.len();
+        let mut x = vec![0i64; d];
+        loop {
+            f(&x);
+            // odometer increment, dim 0 fastest
+            let mut i = 0;
+            loop {
+                x[i] += 1;
+                if (x[i] as usize) < self.dims[i] {
+                    break;
+                }
+                x[i] = 0;
+                i += 1;
+                if i == d {
+                    return;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strides_column_major() {
+        let g = GridDesc::new(&[91, 100, 64]);
+        assert_eq!(g.strides(), &[1, 91, 9100]);
+        assert_eq!(g.offset_of(&[1, 0, 0]), 1);
+        assert_eq!(g.offset_of(&[0, 1, 0]), 91);
+        assert_eq!(g.offset_of(&[0, 0, 1]), 9100);
+        assert_eq!(g.offset_of(&[2, 3, 4]), 2 + 3 * 91 + 4 * 9100);
+    }
+
+    #[test]
+    fn padding_changes_strides_not_logical_dims() {
+        let g = GridDesc::with_padding(&[45, 91, 100], &[3, 0, 0]);
+        assert_eq!(g.dims(), &[45, 91, 100]);
+        assert_eq!(g.storage_dims(), &[48, 91, 100]);
+        assert_eq!(g.strides(), &[1, 48, 48 * 91]);
+        assert_eq!(g.num_points(), 45 * 91 * 100);
+        assert_eq!(g.storage_words(), 48 * 91 * 100);
+    }
+
+    #[test]
+    fn delta_of_signed() {
+        let g = GridDesc::new(&[10, 10]);
+        assert_eq!(g.delta_of(&[-1, 0]), -1);
+        assert_eq!(g.delta_of(&[0, -2]), -20);
+        assert_eq!(g.delta_of(&[1, 1]), 11);
+    }
+
+    #[test]
+    fn interior_counts() {
+        let g = GridDesc::new(&[10, 10, 10]);
+        let r = g.interior(1).unwrap();
+        assert_eq!(r, vec![1..9, 1..9, 1..9]);
+        assert_eq!(g.interior_points(1), 8 * 8 * 8);
+        assert_eq!(g.boundary_points(1), 1000 - 512);
+        // radius too large
+        assert!(GridDesc::new(&[4, 4]).interior(2).is_none());
+        assert_eq!(GridDesc::new(&[4, 4]).interior_points(2), 0);
+    }
+
+    #[test]
+    fn contains_checks_bounds() {
+        let g = GridDesc::new(&[5, 5]);
+        assert!(g.contains(&[0, 0]));
+        assert!(g.contains(&[4, 4]));
+        assert!(!g.contains(&[5, 0]));
+        assert!(!g.contains(&[-1, 0]));
+    }
+
+    #[test]
+    fn for_each_point_visits_all_once_in_order() {
+        let g = GridDesc::new(&[3, 2]);
+        let mut seen = Vec::new();
+        g.for_each_point(|x| seen.push((x[0], x[1])));
+        assert_eq!(seen, vec![(0, 0), (1, 0), (2, 0), (0, 1), (1, 1), (2, 1)]);
+    }
+
+    #[test]
+    fn min_dim() {
+        assert_eq!(GridDesc::new(&[40, 91, 100]).min_dim(), 40);
+    }
+}

@@ -1,0 +1,297 @@
+//! The **interference lattice** of a grid (paper §4).
+//!
+//! For an array of dimensions `n_1 × … × n_d` stored column-major
+//! (Fortran order, as in the paper) and a cache of size `S` words, the
+//! interference lattice `L` is the set of index-space vectors
+//! `(i_1, …, i_d)` with
+//!
+//! ```text
+//! i_1 + n_1·i_2 + n_1 n_2·i_3 + … + n_1⋯n_{d-1}·i_d ≡ 0  (mod S)     (Eq 8)
+//! ```
+//!
+//! — i.e. pairs of grid points mapping to the same cache location. `L` has
+//! the explicit basis (Eq 9) `v_1 = S·e_1`, `v_i = −m_i·e_1 + e_i`, with
+//! `m_i = Π_{j<i} n_j`, hence `det L = S`. Points of `L` are exactly where
+//! self-interference strikes; a **reduced** basis of `L` gives the
+//! fundamental parallelepiped that the cache-fitting traversal sweeps.
+
+mod lll;
+mod shortest;
+pub mod vec;
+
+pub use lll::{eccentricity, lll_reduce, satisfies_reduced_bound, DELTA};
+pub use shortest::{min_l1_norm, short_vectors_by_congruence, shortest_vector};
+pub use vec::IntVec;
+
+use vec::{det, norm1, norm2, solve_in_basis};
+
+/// The interference lattice of a grid w.r.t. a cache of `modulus` words,
+/// carrying both the canonical (Eq 9) and the LLL-reduced basis.
+#[derive(Debug, Clone)]
+pub struct InterferenceLattice {
+    dims: Vec<usize>,
+    modulus: usize,
+    /// m_i = Π_{j<i} n_j (m_1 = 1): the linearization strides.
+    strides: Vec<i64>,
+    /// Canonical basis per Eq 9.
+    canonical: Vec<IntVec>,
+    /// LLL-reduced basis.
+    reduced: Vec<IntVec>,
+}
+
+impl InterferenceLattice {
+    /// Build the lattice for `dims` and cache size `modulus` (= S in words).
+    pub fn new(dims: &[usize], modulus: usize) -> InterferenceLattice {
+        let d = dims.len();
+        assert!(d >= 1, "need at least one dimension");
+        assert!(modulus >= 2, "cache size must be >= 2 words");
+        assert!(dims.iter().all(|&n| n >= 1), "dimensions must be positive");
+        let mut strides = vec![1i64; d];
+        for i in 1..d {
+            strides[i] = strides[i - 1]
+                .checked_mul(dims[i - 1] as i64)
+                .expect("grid too large: linearization stride overflows i64");
+        }
+        let mut canonical: Vec<IntVec> = Vec::with_capacity(d);
+        let mut v1 = vec![0i64; d];
+        v1[0] = modulus as i64;
+        canonical.push(v1);
+        for i in 1..d {
+            let mut v = vec![0i64; d];
+            v[0] = -strides[i];
+            v[i] = 1;
+            canonical.push(v);
+        }
+        let mut reduced = canonical.clone();
+        lll_reduce(&mut reduced);
+        InterferenceLattice { dims: dims.to_vec(), modulus, strides, canonical, reduced }
+    }
+
+    pub fn dims(&self) -> &[usize] {
+        &self.dims
+    }
+
+    pub fn modulus(&self) -> usize {
+        self.modulus
+    }
+
+    /// Linearization strides m_1=1, m_2=n_1, m_3=n_1 n_2, …
+    pub fn strides(&self) -> &[i64] {
+        &self.strides
+    }
+
+    /// The Eq 9 basis.
+    pub fn canonical_basis(&self) -> &[IntVec] {
+        &self.canonical
+    }
+
+    /// The LLL-reduced basis (Eq 10 holds with c_d = 2^{d(d−1)/4}).
+    pub fn reduced_basis(&self) -> &[IntVec] {
+        &self.reduced
+    }
+
+    /// |det L| — always equals S (paper §4).
+    pub fn determinant(&self) -> u128 {
+        det(&self.reduced).unsigned_abs()
+    }
+
+    /// Membership test via Eq 8.
+    pub fn contains(&self, v: &[i64]) -> bool {
+        assert_eq!(v.len(), self.dims.len());
+        let sum: i128 = v.iter().zip(&self.strides).map(|(&x, &m)| x as i128 * m as i128).sum();
+        sum.rem_euclid(self.modulus as i128) == 0
+    }
+
+    /// Exact Euclidean-shortest nonzero vector.
+    pub fn shortest(&self) -> IntVec {
+        shortest_vector(&self.reduced)
+    }
+
+    /// Euclidean length of the shortest nonzero vector.
+    pub fn shortest_len(&self) -> f64 {
+        norm2(&self.shortest())
+    }
+
+    /// Minimum L1 norm among nonzero vectors, searched up to `max_l1`.
+    pub fn min_l1(&self, max_l1: i64) -> Option<i64> {
+        min_l1_norm(&self.dims, self.modulus, max_l1)
+    }
+
+    /// Eccentricity of the reduced basis (paper §4; multiplies Eq 12).
+    pub fn eccentricity(&self) -> f64 {
+        eccentricity(&self.reduced)
+    }
+
+    /// The paper's §6 **unfavorable** criterion: "when the shortest vector
+    /// of the interference lattice is shorter than the diameter of the
+    /// operator, the number of cache misses sharply increases". (The §4
+    /// *upper-bound validity* condition is the weaker diameter/associativity;
+    /// empirically — Figure 4's n1 = 90 spike on the 2-way R10000 — the
+    /// diameter itself is the right classification bar, and Figure 5B uses
+    /// an even larger horizon of 8.)
+    pub fn is_unfavorable(&self, stencil_diameter: i64) -> bool {
+        let bar = stencil_diameter;
+        self.min_l1(bar).map(|m| m < bar).unwrap_or(false)
+    }
+
+    /// Coordinates of grid point `x` (real-valued) in the reduced basis:
+    /// returns y with x = Σ y_i b_i. Used by the cache-fitting traversal to
+    /// assign points to pencils.
+    pub fn coords_in_reduced(&self, x: &[f64]) -> Vec<f64> {
+        solve_in_basis(&self.reduced, x)
+    }
+
+    /// Sort key for choosing the sweep vector `v` in the cache-fitting
+    /// algorithm: index (into the reduced basis) of the longest vector, as
+    /// §5 prescribes ("the longest edge vector is selected for subdivision";
+    /// sweeping along the longest edge gives the thinnest pencils ⇒ most
+    /// face area parallel to the sweep, fewest boundary replacements).
+    pub fn longest_basis_index(&self) -> usize {
+        (0..self.reduced.len())
+            .max_by(|&i, &j| {
+                norm2(&self.reduced[i]).partial_cmp(&norm2(&self.reduced[j])).unwrap()
+            })
+            .unwrap()
+    }
+
+    /// Surface-to-volume ratio bound of the reduced fundamental
+    /// parallelepiped (Eq 11): `|∂P| / det L ≤ 2 Σ_j Π_{i≠j} ‖b_i‖ / det L`.
+    pub fn surface_to_volume(&self) -> f64 {
+        let norms: Vec<f64> = self.reduced.iter().map(|b| norm2(b)).collect();
+        let prod: f64 = norms.iter().product();
+        let surface: f64 = 2.0 * norms.iter().map(|&n| prod / n).sum::<f64>();
+        surface / self.determinant() as f64
+    }
+
+    /// All lattice vectors within L1 radius `r`.
+    pub fn vectors_within_l1(&self, r: i64) -> Vec<IntVec> {
+        short_vectors_by_congruence(&self.dims, self.modulus, r)
+    }
+
+    /// Convenience: L1 norm of v.
+    pub fn l1(v: &[i64]) -> i64 {
+        norm1(v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn canonical_basis_matches_eq9() {
+        let l = InterferenceLattice::new(&[91, 100, 64], 4096);
+        assert_eq!(l.canonical_basis()[0], vec![4096, 0, 0]);
+        assert_eq!(l.canonical_basis()[1], vec![-91, 1, 0]);
+        assert_eq!(l.canonical_basis()[2], vec![-9100, 0, 1]);
+        assert_eq!(l.strides(), &[1, 91, 9100]);
+    }
+
+    #[test]
+    fn determinant_is_s() {
+        for &s in &[64usize, 1024, 4096] {
+            let l = InterferenceLattice::new(&[45, 91, 100], s);
+            assert_eq!(l.determinant(), s as u128);
+        }
+    }
+
+    #[test]
+    fn reduced_basis_members_of_lattice() {
+        let l = InterferenceLattice::new(&[45, 91, 100], 4096);
+        for v in l.reduced_basis() {
+            assert!(l.contains(v), "{v:?} not in lattice");
+        }
+    }
+
+    #[test]
+    fn unfavorable_grid_detection_matches_paper() {
+        // Paper Fig 4: n1 = 45 and 90 are the spikes with n2 = 91.
+        let cache = crate::cache::CacheParams::r10000();
+        let diam = 5; // 13-pt star has radius 2 ⇒ diameter 5
+        let l45 = InterferenceLattice::new(&[45, 91, 100], cache.lattice_modulus());
+        // shortest vector (1,0,1) has L1 2 < 5 ⇒ unfavorable.
+        assert!(l45.is_unfavorable(diam));
+        // n1 = 90: shortest vector (2,0,1), L1 3 < 5 ⇒ unfavorable.
+        let l90 = InterferenceLattice::new(&[90, 91, 100], cache.lattice_modulus());
+        assert!(l90.is_unfavorable(diam));
+        let l67 = InterferenceLattice::new(&[67, 89, 100], cache.lattice_modulus());
+        assert!(!l67.is_unfavorable(diam));
+    }
+
+    #[test]
+    fn shortest_vector_is_member_and_minimal_l1_consistency() {
+        let l = InterferenceLattice::new(&[45, 91, 100], 4096);
+        let sv = l.shortest();
+        assert!(l.contains(&sv));
+        assert!((l.shortest_len() - (2f64).sqrt()).abs() < 1e-9, "expected (1,0,1): {sv:?}");
+    }
+
+    #[test]
+    fn coords_in_reduced_roundtrip() {
+        let l = InterferenceLattice::new(&[40, 50, 60], 1024);
+        let b = l.reduced_basis();
+        // x = 2*b0 - 1*b1 + 3*b2
+        let d = 3;
+        let mut x = vec![0.0f64; d];
+        for i in 0..d {
+            x[i] = 2.0 * b[0][i] as f64 - b[1][i] as f64 + 3.0 * b[2][i] as f64;
+        }
+        let y = l.coords_in_reduced(&x);
+        assert!((y[0] - 2.0).abs() < 1e-8);
+        assert!((y[1] + 1.0).abs() < 1e-8);
+        assert!((y[2] - 3.0).abs() < 1e-8);
+    }
+
+    #[test]
+    fn surface_to_volume_obeys_eq11() {
+        // Eq 11: |∂P|/det ≤ e·c'_d·S^{-1/d} with c'_d = 2d·c_d,
+        // c_d = 2^{d(d-1)/4}.
+        for dims in [[40usize, 91, 100], [64, 64, 64], [45, 91, 100]] {
+            let s = 4096usize;
+            let l = InterferenceLattice::new(&dims, s);
+            let d = 3.0;
+            let c_d = 2f64.powf(d * (d - 1.0) / 4.0);
+            let bound = l.eccentricity() * 2.0 * d * c_d * (s as f64).powf(-1.0 / d);
+            assert!(
+                l.surface_to_volume() <= bound + 1e-9,
+                "eq11 violated for {dims:?}: {} > {}",
+                l.surface_to_volume(),
+                bound
+            );
+        }
+    }
+
+    #[test]
+    fn one_dimensional_lattice() {
+        let l = InterferenceLattice::new(&[100], 64);
+        assert_eq!(l.canonical_basis(), &[vec![64]]);
+        assert!(l.contains(&[128]));
+        assert!(!l.contains(&[96]));
+        assert_eq!(l.shortest(), vec![64]);
+    }
+
+    #[test]
+    fn property_shortest_is_shortest_among_sampled_members() {
+        use crate::util::proptest::{forall, DimsGen};
+        forall(7, 30, &DimsGen { d: 3, lo: 20, hi: 120 }, |dims| {
+            let l = InterferenceLattice::new(dims, 1024);
+            let sv_len_sq = vec::norm2_sq(&l.shortest());
+            // every random small combination of basis vectors must be >= sv
+            let mut rng = crate::util::rng::Rng::new(dims.iter().sum::<usize>() as u64);
+            for _ in 0..50 {
+                let c: Vec<i64> = (0..3).map(|_| rng.range_inclusive(-4, 4)).collect();
+                let b = l.reduced_basis();
+                let mut v = vec![0i64; 3];
+                for i in 0..3 {
+                    for k in 0..3 {
+                        v[k] += c[i] * b[i][k];
+                    }
+                }
+                if !vec::is_zero(&v) && vec::norm2_sq(&v) < sv_len_sq {
+                    return false;
+                }
+            }
+            true
+        });
+    }
+}

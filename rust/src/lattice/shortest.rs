@@ -1,0 +1,242 @@
+//! Shortest-vector computations on the interference lattice.
+//!
+//! Two related queries drive the paper's analysis:
+//!
+//! 1. the (Euclidean) shortest nonzero vector — used by Appendix B's
+//!    favorable-grid criterion `‖v‖ ≥ (S/f)^{1/d}` and by the eccentricity
+//!    argument after Eq 12;
+//! 2. the **L1**-shortest vector — Figure 5B classifies a grid as
+//!    *unfavorable* when the lattice contains a vector of L1 norm < 8
+//!    (more precisely: shorter than the stencil diameter / associativity).
+//!
+//! After LLL reduction the shortest vector has bounded coefficients w.r.t.
+//! the reduced basis, so a small Fincke–Pohst-style enumeration is exact.
+
+use super::vec::{gram_schmidt, is_zero, norm1, norm2_sq, IntVec};
+
+/// Exact shortest nonzero lattice vector (Euclidean norm), given an
+/// LLL-reduced basis. Enumerates coefficient vectors with a Gram–Schmidt
+/// pruning bound seeded by `‖b_0‖`.
+pub fn shortest_vector(reduced: &[IntVec]) -> IntVec {
+    let n = reduced.len();
+    assert!(n > 0);
+    let (gso, mu) = gram_schmidt(reduced);
+    let gso_norms: Vec<f64> = gso.iter().map(|v| v.iter().map(|x| x * x).sum()).collect();
+    let mut best = reduced[0].clone();
+    let mut best_sq = norm2_sq(&best) as f64;
+
+    // Depth-first enumeration over coefficients x_{n-1} ... x_0 with the
+    // classical bound sum_{i>=k} (x_i + Σ mu_ji x_j)^2 * ||b*_i||^2 <= best.
+    let mut coeff = vec![0i64; n];
+    enumerate(reduced, &mu, &gso_norms, &mut coeff, n, 0.0, &mut best, &mut best_sq, &mut vec![0.0; n]);
+    best
+}
+
+#[allow(clippy::too_many_arguments)]
+fn enumerate(
+    basis: &[IntVec],
+    mu: &[Vec<f64>],
+    gso_norms: &[f64],
+    coeff: &mut Vec<i64>,
+    level: usize, // processing index level-1; level==0 → full assignment
+    partial: f64, // accumulated squared norm from levels >= level
+    best: &mut IntVec,
+    best_sq: &mut f64,
+    centers: &mut Vec<f64>,
+) {
+    if level == 0 {
+        if coeff.iter().all(|&c| c == 0) {
+            return;
+        }
+        // materialize the vector and use its exact integer norm.
+        let d = basis[0].len();
+        let mut v = vec![0i64; d];
+        for (c, b) in coeff.iter().zip(basis) {
+            for i in 0..d {
+                v[i] += c * b[i];
+            }
+        }
+        let sq = norm2_sq(&v) as f64;
+        if sq > 0.0 && sq < *best_sq {
+            *best_sq = sq;
+            *best = v;
+        }
+        return;
+    }
+    let k = level - 1;
+    // center of the interval for x_k given choices above.
+    let mut center = 0.0;
+    for j in level..coeff.len() {
+        center -= coeff[j] as f64 * mu[j][k];
+    }
+    centers[k] = center;
+    if gso_norms[k] <= 0.0 {
+        return;
+    }
+    let radius = ((*best_sq - partial) / gso_norms[k]).max(0.0).sqrt();
+    let lo = (center - radius - 1e-9).ceil() as i64;
+    let hi = (center + radius + 1e-9).floor() as i64;
+    // Visit nearest-first for better pruning.
+    let mut candidates: Vec<i64> = (lo..=hi).collect();
+    candidates.sort_by(|a, b| {
+        let da = (*a as f64 - center).abs();
+        let db = (*b as f64 - center).abs();
+        da.partial_cmp(&db).unwrap()
+    });
+    for x in candidates {
+        let dist = x as f64 - center;
+        let add = dist * dist * gso_norms[k];
+        if partial + add >= *best_sq + 1e-9 {
+            continue;
+        }
+        coeff[k] = x;
+        enumerate(basis, mu, gso_norms, coeff, k, partial + add, best, best_sq, centers);
+        coeff[k] = 0;
+    }
+}
+
+/// All nonzero lattice vectors with L1 norm ≤ `max_l1`, found by direct
+/// congruence enumeration of the ball — exact and independent of any basis.
+///
+/// `dims` are the grid dimensions n_1..n_d and `modulus` is S: membership is
+/// `i_1 + n_1 i_2 + n_1 n_2 i_3 + ... ≡ 0 (mod S)` (Eq 8 of the paper).
+pub fn short_vectors_by_congruence(dims: &[usize], modulus: usize, max_l1: i64) -> Vec<IntVec> {
+    let d = dims.len();
+    assert!(d >= 1);
+    let mut strides = vec![1i64; d];
+    for i in 1..d {
+        strides[i] = strides[i - 1] * dims[i - 1] as i64;
+    }
+    let s = modulus as i64;
+    let mut out = Vec::new();
+    let mut v = vec![0i64; d];
+    // Walk the L1 ball; for the first coordinate solve the congruence
+    // directly instead of scanning: i1 ≡ -(Σ_{k≥2} strides_k i_k) (mod S).
+    walk_tail(&mut v, 1, max_l1, &strides, s, d, &mut out);
+    out
+}
+
+fn walk_tail(v: &mut Vec<i64>, idx: usize, budget: i64, strides: &[i64], s: i64, d: usize, out: &mut Vec<IntVec>) {
+    if idx == d {
+        // choose i1 with |i1| <= budget and i1 ≡ r (mod S)
+        let tail: i64 = (1..d).map(|k| strides[k].wrapping_mul(v[k])).sum();
+        let r = (-tail).rem_euclid(s);
+        // candidates: r - kS within [-budget, budget]
+        let mut i1 = r;
+        while i1 > budget {
+            i1 -= s;
+        }
+        while i1 >= -budget {
+            v[0] = i1;
+            if !is_zero(v) {
+                out.push(v.clone());
+            }
+            i1 -= s;
+        }
+        v[0] = 0;
+        return;
+    }
+    for x in -budget..=budget {
+        v[idx] = x;
+        walk_tail(v, idx + 1, budget - x.abs(), strides, s, d, out);
+    }
+    v[idx] = 0;
+}
+
+/// The minimum L1 norm over nonzero lattice vectors, searched up to
+/// `max_l1`; `None` if no vector that short exists.
+pub fn min_l1_norm(dims: &[usize], modulus: usize, max_l1: i64) -> Option<i64> {
+    short_vectors_by_congruence(dims, modulus, max_l1).iter().map(|v| norm1(v)).min()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lattice::lll::lll_reduce;
+    use crate::lattice::vec::norm2;
+
+    #[test]
+    fn shortest_in_z2() {
+        let b = vec![vec![1, 0], vec![0, 1]];
+        let v = shortest_vector(&b);
+        assert_eq!(norm2_sq(&v), 1);
+    }
+
+    #[test]
+    fn shortest_known_2d() {
+        // Lattice {(x,y) : x + 4y ≡ 0 mod 16}: contains (4,3)? 4+12=16 ✓
+        // norm²=25; (0,4): 16≡0 ✓ norm²=16; (-4,1): -4+4=0 ✓ norm²=17;
+        // (4,-1): 4-4=0 ✓ norm²=17; (0,4) norm 4; shortest should be (0,±4).
+        let mut b = vec![vec![16, 0], vec![-4, 1]];
+        lll_reduce(&mut b);
+        let v = shortest_vector(&b);
+        assert_eq!(norm2_sq(&v), 16, "got {v:?}");
+    }
+
+    #[test]
+    fn shortest_matches_congruence_enumeration_3d() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(4242);
+        for _ in 0..20 {
+            let s = 1usize << (6 + rng.below(6)); // 64..2048
+            let dims = vec![8 + rng.below_usize(120), 8 + rng.below_usize(120), 50];
+            let n1 = dims[0] as i64;
+            let m3 = n1 * dims[1] as i64;
+            let mut basis = vec![vec![s as i64, 0, 0], vec![-n1, 1, 0], vec![-m3, 0, 1]];
+            lll_reduce(&mut basis);
+            let sv = shortest_vector(&basis);
+            let l2 = norm2(&sv);
+            // brute-force check via congruence enumeration within L1 ball of
+            // radius ceil(l2 * sqrt(3)) — contains all vectors with L2 ≤ l2.
+            let ball = (l2 * 3f64.sqrt()).ceil() as i64 + 1;
+            let all = short_vectors_by_congruence(&dims, s, ball);
+            let brute_min = all.iter().map(|v| norm2_sq(v)).min().unwrap();
+            assert_eq!(norm2_sq(&sv), brute_min, "dims={dims:?} S={s} sv={sv:?}");
+        }
+    }
+
+    #[test]
+    fn congruence_vectors_satisfy_eq8() {
+        let dims = [45usize, 91, 100];
+        let s = 4096usize;
+        let vs = short_vectors_by_congruence(&dims, s, 8);
+        assert!(!vs.is_empty());
+        for v in &vs {
+            let val = v[0] as i128 + 45 * v[1] as i128 + 45 * 91 * v[2] as i128;
+            assert_eq!(val.rem_euclid(4096), 0, "{v:?}");
+            assert!(norm1(v) <= 8);
+        }
+    }
+
+    #[test]
+    fn paper_fig4_spikes_n1_45_and_90() {
+        // Paper: n1=45 (n2=91) yields shortest vector (1,0,1); n1=90 yields
+        // (2,0,1). Verify both are lattice members and are the L1-minima.
+        let s = 4096usize;
+        // n1=45: 1 + 45*91*1 = 4096 ≡ 0 ✓
+        let m = min_l1_norm(&[45, 91, 100], s, 8).expect("short vector expected");
+        assert_eq!(m, 2);
+        let vs = short_vectors_by_congruence(&[45, 91, 100], s, 2);
+        assert!(vs.iter().any(|v| (v[0] == 1 && v[1] == 0 && v[2] == 1) || (v[0] == -1 && v[1] == 0 && v[2] == -1)), "{vs:?}");
+        // n1=90: 2 + 90*91 = 8192 ≡ 0 mod 4096 ✓
+        let m90 = min_l1_norm(&[90, 91, 100], s, 8).expect("short vector expected");
+        assert_eq!(m90, 3);
+        let vs90 = short_vectors_by_congruence(&[90, 91, 100], s, 3);
+        assert!(vs90.iter().any(|v| (v[0] == 2 && v[1] == 0 && v[2] == 1) || (v[0] == -2 && v[1] == 0 && v[2] == -1)), "{vs90:?}");
+    }
+
+    #[test]
+    fn favorable_grid_has_no_short_vector() {
+        // A deliberately padded dimension pair should clear the L1<8 bar.
+        // 67*89 = 5963; 5963 mod 4096 = 1867 — far from 0 and 2048.
+        assert_eq!(min_l1_norm(&[67, 89, 100], 4096, 4), None);
+    }
+
+    #[test]
+    fn min_l1_respects_bound_parameter() {
+        // With a generous bound there is always *some* vector (e.g. (S,0,0)).
+        let m = min_l1_norm(&[67, 89, 100], 64, 64);
+        assert!(m.is_some());
+        assert!(m.unwrap() <= 64);
+    }
+}

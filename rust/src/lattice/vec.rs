@@ -1,0 +1,192 @@
+//! Integer vector and small dense matrix helpers for lattice computations.
+//! Dimensions are tiny (d ≤ 6), so everything is plain `Vec<i64>` / `Vec<f64>`
+//! with no SIMD heroics — the lattice math runs once per grid, not per point.
+
+/// Integer vector in Z^d.
+pub type IntVec = Vec<i64>;
+
+/// Dot product.
+pub fn dot(a: &[i64], b: &[i64]) -> i128 {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(&x, &y)| x as i128 * y as i128).sum()
+}
+
+/// Squared Euclidean norm.
+pub fn norm2_sq(a: &[i64]) -> i128 {
+    dot(a, a)
+}
+
+/// Euclidean norm as f64.
+pub fn norm2(a: &[i64]) -> f64 {
+    (norm2_sq(a) as f64).sqrt()
+}
+
+/// L1 (taxicab) norm — the norm Figure 5B uses for "short" vectors.
+pub fn norm1(a: &[i64]) -> i64 {
+    a.iter().map(|&x| x.abs()).sum()
+}
+
+/// L∞ norm.
+pub fn norm_inf(a: &[i64]) -> i64 {
+    a.iter().map(|&x| x.abs()).max().unwrap_or(0)
+}
+
+/// a - k*b in place.
+pub fn sub_scaled(a: &mut [i64], b: &[i64], k: i64) {
+    for (x, &y) in a.iter_mut().zip(b) {
+        *x -= k * y;
+    }
+}
+
+/// Is this the zero vector?
+pub fn is_zero(a: &[i64]) -> bool {
+    a.iter().all(|&x| x == 0)
+}
+
+/// f64 Gram–Schmidt orthogonalization of an integer basis.
+/// Returns (`gso`, `mu`) where `gso[i]` is b*_i and `mu[i][j]` (j<i) are the
+/// projection coefficients; exactly the quantities LLL needs.
+pub fn gram_schmidt(basis: &[IntVec]) -> (Vec<Vec<f64>>, Vec<Vec<f64>>) {
+    let n = basis.len();
+    let d = if n > 0 { basis[0].len() } else { 0 };
+    let mut gso: Vec<Vec<f64>> = Vec::with_capacity(n);
+    let mut mu = vec![vec![0.0; n]; n];
+    for i in 0..n {
+        let mut v: Vec<f64> = basis[i].iter().map(|&x| x as f64).collect();
+        for j in 0..i {
+            let denom: f64 = gso[j].iter().map(|x| x * x).sum();
+            let num: f64 = basis[i].iter().zip(&gso[j]).map(|(&x, y)| x as f64 * y).sum();
+            let m = if denom > 0.0 { num / denom } else { 0.0 };
+            mu[i][j] = m;
+            for k in 0..d {
+                v[k] -= m * gso[j][k];
+            }
+        }
+        gso.push(v);
+    }
+    (gso, mu)
+}
+
+/// Determinant of a square integer matrix (rows = vectors), via fraction-free
+/// Bareiss elimination — exact for the sizes we use.
+pub fn det(rows: &[IntVec]) -> i128 {
+    let n = rows.len();
+    assert!(rows.iter().all(|r| r.len() == n), "det requires a square matrix");
+    let mut m: Vec<Vec<i128>> = rows.iter().map(|r| r.iter().map(|&x| x as i128).collect()).collect();
+    let mut sign = 1i128;
+    let mut prev = 1i128;
+    for k in 0..n {
+        if m[k][k] == 0 {
+            // pivot search
+            let Some(p) = (k + 1..n).find(|&i| m[i][k] != 0) else {
+                return 0;
+            };
+            m.swap(k, p);
+            sign = -sign;
+        }
+        for i in k + 1..n {
+            for j in k + 1..n {
+                m[i][j] = (m[i][j] * m[k][k] - m[i][k] * m[k][j]) / prev;
+            }
+            m[i][k] = 0;
+        }
+        prev = m[k][k];
+    }
+    sign * m[n - 1][n - 1]
+}
+
+/// Solve the real linear system `B^T y = x` for y, i.e. express point `x` in
+/// the (row-vector) basis `B`: x = Σ y_i · B_i. Gaussian elimination with
+/// partial pivoting; `B` must be non-singular.
+pub fn solve_in_basis(basis: &[IntVec], x: &[f64]) -> Vec<f64> {
+    let n = basis.len();
+    debug_assert_eq!(x.len(), n);
+    // Build column matrix A with A[:, i] = basis[i] (so A y = x).
+    let mut a = vec![vec![0.0f64; n + 1]; n];
+    for (i, b) in basis.iter().enumerate() {
+        for r in 0..n {
+            a[r][i] = b[r] as f64;
+        }
+    }
+    for r in 0..n {
+        a[r][n] = x[r];
+    }
+    for col in 0..n {
+        // pivot
+        let piv = (col..n).max_by(|&i, &j| a[i][col].abs().partial_cmp(&a[j][col].abs()).unwrap()).unwrap();
+        a.swap(col, piv);
+        assert!(a[col][col].abs() > 1e-12, "singular basis");
+        for r in 0..n {
+            if r != col {
+                let f = a[r][col] / a[col][col];
+                for c in col..=n {
+                    a[r][c] -= f * a[col][c];
+                }
+            }
+        }
+    }
+    (0..n).map(|i| a[i][n] / a[i][i]).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn norms() {
+        let v = vec![3, -4, 0];
+        assert_eq!(norm2_sq(&v), 25);
+        assert_eq!(norm2(&v), 5.0);
+        assert_eq!(norm1(&v), 7);
+        assert_eq!(norm_inf(&v), 4);
+        assert!(is_zero(&[0, 0]));
+        assert!(!is_zero(&v));
+    }
+
+    #[test]
+    fn dot_large_values_no_overflow() {
+        let a = vec![i64::MAX / 4, i64::MAX / 4];
+        assert!(dot(&a, &a) > 0);
+    }
+
+    #[test]
+    fn gram_schmidt_orthogonal() {
+        let basis = vec![vec![3, 1], vec![2, 2]];
+        let (gso, mu) = gram_schmidt(&basis);
+        let d: f64 = gso[0].iter().zip(&gso[1]).map(|(a, b)| a * b).sum();
+        assert!(d.abs() < 1e-9, "GSO vectors not orthogonal: {d}");
+        assert!(mu[1][0] > 0.0);
+    }
+
+    #[test]
+    fn det_identity_and_swap() {
+        assert_eq!(det(&[vec![1, 0], vec![0, 1]]), 1);
+        assert_eq!(det(&[vec![0, 1], vec![1, 0]]), -1);
+        assert_eq!(det(&[vec![2, 0, 0], vec![0, 3, 0], vec![0, 0, 4]]), 24);
+        assert_eq!(det(&[vec![1, 2], vec![2, 4]]), 0);
+    }
+
+    #[test]
+    fn det_interference_basis_is_s() {
+        // Eq 9 basis has determinant S.
+        let s = 4096i64;
+        let basis = vec![vec![s, 0, 0], vec![-91, 1, 0], vec![-91 * 100, 0, 1]];
+        assert_eq!(det(&basis), s as i128);
+    }
+
+    #[test]
+    fn solve_in_basis_roundtrip() {
+        let basis = vec![vec![2, 1], vec![1, 3]];
+        // x = 1*b0 + 2*b1 = (4, 7)
+        let y = solve_in_basis(&basis, &[4.0, 7.0]);
+        assert!((y[0] - 1.0).abs() < 1e-9);
+        assert!((y[1] - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    #[should_panic(expected = "singular")]
+    fn solve_singular_panics() {
+        let basis = vec![vec![1, 2], vec![2, 4]];
+        solve_in_basis(&basis, &[1.0, 1.0]);
+    }
+}

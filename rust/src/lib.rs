@@ -1,0 +1,46 @@
+//! # stencilcache
+//!
+//! A production-quality reproduction of *“Efficient cache use for stencil
+//! operations on structured discretization grids”* (M. A. Frumkin &
+//! R. F. Van der Wijngaart, NASA Ames, 2000).
+//!
+//! The paper bounds the number of cache loads needed to evaluate an explicit
+//! stencil operator `q = Ku` on a structured grid, gives a **cache fitting
+//! algorithm** — a traversal order built from a reduced basis of the grid's
+//! **interference lattice** — that approaches the lower bound, and shows that
+//! grids whose interference lattice contains a *short vector* (empirically:
+//! `n1·n2 ≈ k·S/2`) suffer anomalously many misses and should be padded.
+//!
+//! ## Architecture (three layers)
+//!
+//! - **L3 (this crate)**: cache model + simulator, interference-lattice
+//!   machinery, traversal orders, bounds, padding advisor, the serving
+//!   coordinator, and the PJRT runtime that executes AOT-compiled artifacts.
+//! - **L2 (python/compile/model.py, build-time)**: the stencil compute graph
+//!   in JAX, lowered once to HLO text in `artifacts/`.
+//! - **L1 (python/compile/kernels/, build-time)**: Pallas stencil kernels
+//!   (interpret=True) with block shapes chosen by the paper's
+//!   surface-to-volume criterion.
+//!
+//! See `DESIGN.md` for the experiment index and `EXPERIMENTS.md` for
+//! paper-vs-measured results.
+
+pub mod bounds;
+pub mod cache;
+pub mod coordinator;
+pub mod engine;
+pub mod experiments;
+pub mod grid;
+pub mod lattice;
+pub mod padding;
+pub mod report;
+pub mod runtime;
+pub mod stencil;
+pub mod traversal;
+pub mod tuner;
+pub mod util;
+
+/// Crate version string.
+pub fn version() -> &'static str {
+    env!("CARGO_PKG_VERSION")
+}

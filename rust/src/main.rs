@@ -1,0 +1,213 @@
+//! `stencilcache` CLI — the L3 leader entrypoint.
+//!
+//! Subcommands:
+//!
+//! ```text
+//! stencilcache analyze --dims 45,91,100 [--cache 2,512,4] [--rhs 1]
+//!     lattice analysis + padding advice + simulated misses per traversal
+//! stencilcache experiment <fig4|fig5a|fig5b|fig5corr|sec3|bounds|multirhs|appb|all> [--quick]
+//!     regenerate a paper figure/table
+//! stencilcache solve --n 64 --steps 100
+//!     run the heat solver on the PJRT runtime (needs `make artifacts`)
+//! stencilcache serve-demo [--requests 64]
+//!     demo of the batching coordinator over a mixed workload
+//! stencilcache info
+//!     artifact + platform report
+//! ```
+
+use stencilcache::cache::CacheParams;
+use stencilcache::coordinator::{Coordinator, JobKind, PlannerConfig, StencilRequest, StencilSpec, TraversalChoice};
+use stencilcache::runtime::RuntimeService;
+use stencilcache::util::cli::Args;
+use stencilcache::util::logger;
+
+fn main() {
+    logger::init();
+    let args = match Args::from_env(&["quick", "verbose", "no-auto-pad"]) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    if args.flag("verbose") {
+        logger::set_level(logger::Level::Debug);
+    }
+    let code = match args.command() {
+        Some("analyze") => cmd_analyze(&args),
+        Some("experiment") => cmd_experiment(&args),
+        Some("solve") => cmd_solve(&args),
+        Some("serve-demo") => cmd_serve_demo(&args),
+        Some("info") => cmd_info(),
+        _ => {
+            eprintln!("usage: stencilcache <analyze|experiment|solve|serve-demo|info> [options]");
+            eprintln!("       see rust/src/main.rs docs for options");
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn parse_cache(args: &Args) -> Result<CacheParams, String> {
+    let spec = args.get_dims("cache", &[2, 512, 4])?;
+    if spec.len() != 3 {
+        return Err("--cache expects a,z,w".into());
+    }
+    Ok(CacheParams::new(spec[0], spec[1], spec[2]))
+}
+
+fn cmd_analyze(args: &Args) -> i32 {
+    let run = || -> Result<(), String> {
+        let dims = args.get_dims("dims", &[45, 91, 100])?;
+        let cache = parse_cache(args)?;
+        let rhs = args.get_usize("rhs", 1)?;
+        let config = PlannerConfig { cache, max_pad: args.get_usize("max-pad", 8)?, auto_pad: !args.flag("no-auto-pad") };
+        let coord = Coordinator::analysis_only(config);
+        let stencil = if dims.len() == 3 { StencilSpec::Star13 } else { StencilSpec::Star { r: 1 } };
+
+        println!("== plan ==");
+        let plan_resp = coord
+            .submit(&StencilRequest { dims: dims.clone(), stencil: stencil.clone(), rhs_arrays: rhs, kind: JobKind::Plan })
+            .map_err(|e| e.to_string())?;
+        println!("{:#?}", plan_resp.plan);
+
+        for (label, kind) in [
+            ("natural", JobKind::AnalyzeWith(TraversalChoice::Natural)),
+            ("cache-fitting", JobKind::AnalyzeWith(TraversalChoice::CacheFitting)),
+        ] {
+            let resp = coord
+                .submit(&StencilRequest { dims: dims.clone(), stencil: stencil.clone(), rhs_arrays: rhs, kind })
+                .map_err(|e| e.to_string())?;
+            let rep = resp.miss_report.unwrap();
+            println!(
+                "{label:>14}: misses {} ({:.3}/pt), u-loads {} ({:.3}/pt)  [{} µs]",
+                rep.total.misses(),
+                rep.misses_per_point(),
+                rep.u_loads,
+                rep.u_loads_per_point(),
+                resp.wall_micros
+            );
+        }
+        println!("\n== metrics ==\n{}", coord.metrics_json());
+        Ok(())
+    };
+    match run() {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("analyze: {e}");
+            1
+        }
+    }
+}
+
+fn cmd_experiment(args: &Args) -> i32 {
+    let id = args.positional().get(1).map(|s| s.as_str()).unwrap_or("all");
+    match stencilcache::experiments::run(id, args.flag("quick")) {
+        Ok(tables) => {
+            println!("\n(experiment {id} complete; {} table(s) printed, CSVs under results/)", tables.len());
+            0
+        }
+        Err(e) => {
+            eprintln!("experiment: {e}");
+            1
+        }
+    }
+}
+
+fn cmd_solve(args: &Args) -> i32 {
+    let run = || -> Result<(), String> {
+        let n = args.get_usize("n", 64)?;
+        let steps = args.get_usize("steps", 100)?;
+        let svc = RuntimeService::start(None).map_err(|e| e.to_string())?;
+        let coord = Coordinator::with_runtime(PlannerConfig::default(), svc.handle());
+        let resp = coord
+            .submit(&StencilRequest {
+                dims: vec![n, n, n],
+                stencil: StencilSpec::Star13,
+                rhs_arrays: 1,
+                kind: JobKind::Solve { steps },
+            })
+            .map_err(|e| e.to_string())?;
+        println!("step   ||u||        ||Ku||       µs");
+        for s in resp.solve_log.iter().step_by((steps / 20).max(1)) {
+            println!("{:>4}  {:>11.5}  {:>11.5}  {:>7}", s.step, s.u_norm, s.residual_norm, s.micros);
+        }
+        let total_us: u64 = resp.solve_log.iter().map(|s| s.micros).sum();
+        let pts = (n * n * n) as f64 * steps as f64;
+        println!(
+            "\nsolved {n}³ × {steps} steps in {:.2} ms  ({:.1} Mpoint/s through PJRT)",
+            total_us as f64 / 1e3,
+            pts / total_us as f64
+        );
+        println!("\n{}", coord.metrics_json());
+        Ok(())
+    };
+    match run() {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("solve: {e}");
+            1
+        }
+    }
+}
+
+fn cmd_serve_demo(args: &Args) -> i32 {
+    let run = || -> Result<(), String> {
+        let n_req = args.get_usize("requests", 24)?;
+        let svc = RuntimeService::start(None).ok();
+        let coord = match &svc {
+            Some(s) => Coordinator::with_runtime(PlannerConfig::default(), s.handle()),
+            None => {
+                println!("(no artifacts — serving analysis-only workload)");
+                Coordinator::analysis_only(PlannerConfig::default())
+            }
+        };
+        // mixed workload: plans, analyses, executes over a few shapes
+        let mut reqs = Vec::new();
+        let mut rng = stencilcache::util::rng::Rng::new(1);
+        for i in 0..n_req {
+            let dims = *rng.choose(&[[24usize, 24, 24], [16, 16, 16], [45, 91, 20], [32, 32, 32]]);
+            let kind = match i % 3 {
+                0 => JobKind::Plan,
+                1 => JobKind::Analyze,
+                _ if svc.is_some() && dims[0] == dims[1] && dims[1] == dims[2] && [16usize, 32].contains(&dims[0]) => JobKind::Execute,
+                _ => JobKind::Analyze,
+            };
+            reqs.push(StencilRequest { dims: dims.to_vec(), stencil: StencilSpec::Star13, rhs_arrays: 1, kind });
+        }
+        let t0 = std::time::Instant::now();
+        let resps = coord.serve(&reqs);
+        let wall = t0.elapsed();
+        let ok = resps.iter().filter(|r| r.is_ok()).count();
+        println!("served {ok}/{} requests in {:.1} ms", resps.len(), wall.as_secs_f64() * 1e3);
+        println!("{}", coord.metrics_json());
+        Ok(())
+    };
+    match run() {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("serve-demo: {e}");
+            1
+        }
+    }
+}
+
+fn cmd_info() -> i32 {
+    println!("stencilcache {}", stencilcache::version());
+    match RuntimeService::start(None) {
+        Ok(svc) => {
+            let h = svc.handle();
+            println!("platform: {}", h.platform());
+            println!("artifacts:");
+            for a in h.manifest().artifacts() {
+                println!("  {:<24} {:?} outputs={} — {}", a.name, a.input_shape, a.n_outputs, a.description);
+            }
+            0
+        }
+        Err(e) => {
+            println!("runtime unavailable: {e}");
+            println!("(run `make artifacts` to build the AOT bundle)");
+            1
+        }
+    }
+}

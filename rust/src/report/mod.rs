@@ -1,0 +1,17 @@
+//! Reporting: aligned text tables, markdown tables, CSV, and ASCII line
+//! plots. The experiment drivers print the same rows/series the paper's
+//! figures show; EXPERIMENTS.md embeds this output.
+
+mod plot;
+mod table;
+
+pub use plot::AsciiPlot;
+pub use table::Table;
+
+/// Write string content to a file, creating parent directories.
+pub fn write_file(path: &std::path::Path, content: &str) -> std::io::Result<()> {
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    std::fs::write(path, content)
+}

@@ -1,0 +1,126 @@
+//! ASCII line/scatter plots for terminal output of the paper's figures.
+//! Multiple named series share one canvas; values are auto-scaled.
+
+/// An ASCII plot canvas. X values are the series index positions mapped to
+/// columns; each series gets a distinct glyph.
+pub struct AsciiPlot {
+    title: String,
+    width: usize,
+    height: usize,
+    series: Vec<(String, char, Vec<(f64, f64)>)>,
+}
+
+const GLYPHS: &[char] = &['*', '+', 'o', 'x', '#', '@'];
+
+impl AsciiPlot {
+    pub fn new(title: &str, width: usize, height: usize) -> AsciiPlot {
+        AsciiPlot { title: title.to_string(), width: width.max(16), height: height.max(4), series: Vec::new() }
+    }
+
+    /// Add a named series of (x, y) points.
+    pub fn series(&mut self, name: &str, points: Vec<(f64, f64)>) -> &mut Self {
+        let glyph = GLYPHS[self.series.len() % GLYPHS.len()];
+        self.series.push((name.to_string(), glyph, points));
+        self
+    }
+
+    /// Render to a string. Empty plots render a placeholder.
+    pub fn render(&self) -> String {
+        let all: Vec<(f64, f64)> =
+            self.series.iter().flat_map(|(_, _, pts)| pts.iter().copied()).filter(|(x, y)| x.is_finite() && y.is_finite()).collect();
+        if all.is_empty() {
+            return format!("{}\n  (no data)\n", self.title);
+        }
+        let (mut xmin, mut xmax) = (f64::INFINITY, f64::NEG_INFINITY);
+        let (mut ymin, mut ymax) = (f64::INFINITY, f64::NEG_INFINITY);
+        for &(x, y) in &all {
+            xmin = xmin.min(x);
+            xmax = xmax.max(x);
+            ymin = ymin.min(y);
+            ymax = ymax.max(y);
+        }
+        if (xmax - xmin).abs() < f64::EPSILON {
+            xmax = xmin + 1.0;
+        }
+        if (ymax - ymin).abs() < f64::EPSILON {
+            ymax = ymin + 1.0;
+        }
+        let mut canvas = vec![vec![' '; self.width]; self.height];
+        for (_, glyph, pts) in &self.series {
+            for &(x, y) in pts {
+                if !x.is_finite() || !y.is_finite() {
+                    continue;
+                }
+                let col = ((x - xmin) / (xmax - xmin) * (self.width - 1) as f64).round() as usize;
+                let row = ((y - ymin) / (ymax - ymin) * (self.height - 1) as f64).round() as usize;
+                let r = self.height - 1 - row.min(self.height - 1);
+                canvas[r][col.min(self.width - 1)] = *glyph;
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!("{}\n", self.title));
+        let legend: Vec<String> = self.series.iter().map(|(n, g, _)| format!("{g} {n}")).collect();
+        out.push_str(&format!("  [{}]\n", legend.join("   ")));
+        for (i, row) in canvas.iter().enumerate() {
+            let label = if i == 0 {
+                format!("{ymax:>10.3}")
+            } else if i == self.height - 1 {
+                format!("{ymin:>10.3}")
+            } else {
+                " ".repeat(10)
+            };
+            out.push_str(&format!("{label} |{}\n", row.iter().collect::<String>()));
+        }
+        out.push_str(&format!("{:>10} +{}\n", "", "-".repeat(self.width)));
+        out.push_str(&format!("{:>12}{:<width$}{:>8}\n", format!("{xmin:.1}"), "", format!("{xmax:.1}"), width = self.width.saturating_sub(8)));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_plot() {
+        let p = AsciiPlot::new("empty", 40, 10);
+        assert!(p.render().contains("(no data)"));
+    }
+
+    #[test]
+    fn renders_points_in_canvas() {
+        let mut p = AsciiPlot::new("line", 40, 10);
+        p.series("up", (0..10).map(|i| (i as f64, i as f64)).collect());
+        let r = p.render();
+        assert!(r.contains('*'));
+        assert!(r.contains("up"));
+        // y axis labels present
+        assert!(r.contains("9.000"));
+        assert!(r.contains("0.000"));
+    }
+
+    #[test]
+    fn two_series_get_distinct_glyphs() {
+        let mut p = AsciiPlot::new("two", 30, 8);
+        p.series("a", vec![(0.0, 0.0), (1.0, 1.0)]);
+        p.series("b", vec![(0.0, 1.0), (1.0, 0.0)]);
+        let r = p.render();
+        assert!(r.contains('*') && r.contains('+'));
+    }
+
+    #[test]
+    fn constant_series_no_division_by_zero() {
+        let mut p = AsciiPlot::new("flat", 30, 6);
+        p.series("c", vec![(0.0, 5.0), (1.0, 5.0), (2.0, 5.0)]);
+        let r = p.render();
+        assert!(r.contains('*'));
+    }
+
+    #[test]
+    fn nonfinite_points_skipped() {
+        let mut p = AsciiPlot::new("nan", 30, 6);
+        p.series("s", vec![(0.0, f64::NAN), (1.0, 2.0)]);
+        let r = p.render();
+        assert!(r.contains('*'));
+    }
+}

@@ -1,0 +1,136 @@
+//! Artifact manifest reader (`artifacts/manifest.json`, written by
+//! `python/compile/aot.py`). The manifest is the contract between the
+//! build-time python layer and the runtime: names, input shapes, dtypes,
+//! output arity.
+
+use crate::util::json::{parse, Json};
+use anyhow::{anyhow, bail, Result};
+use std::path::Path;
+
+/// One AOT artifact.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArtifactInfo {
+    pub name: String,
+    pub file: String,
+    pub input_shape: Vec<usize>,
+    pub dtype: String,
+    pub n_outputs: usize,
+    pub description: String,
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub alpha: f64,
+    pub sweep_steps: usize,
+    artifacts: Vec<ArtifactInfo>,
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(path)?;
+        Self::parse_str(&text)
+    }
+
+    pub fn parse_str(text: &str) -> Result<Manifest> {
+        let root = parse(text).map_err(|e| anyhow!("manifest JSON: {e}"))?;
+        let alpha = root.get("alpha").and_then(Json::as_f64).ok_or_else(|| anyhow!("manifest: missing alpha"))?;
+        let sweep_steps = root
+            .get("sweep_steps")
+            .and_then(Json::as_i64)
+            .ok_or_else(|| anyhow!("manifest: missing sweep_steps"))? as usize;
+        let arr = root
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest: missing artifacts array"))?;
+        let mut artifacts = Vec::with_capacity(arr.len());
+        for a in arr {
+            let get_str = |k: &str| -> Result<String> {
+                a.get(k).and_then(Json::as_str).map(str::to_string).ok_or_else(|| anyhow!("artifact missing {k}"))
+            };
+            let shape = a
+                .get("input_shape")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("artifact missing input_shape"))?
+                .iter()
+                .map(|v| v.as_i64().map(|x| x as usize).ok_or_else(|| anyhow!("bad dim")))
+                .collect::<Result<Vec<_>>>()?;
+            let n_outputs =
+                a.get("n_outputs").and_then(Json::as_i64).ok_or_else(|| anyhow!("artifact missing n_outputs"))? as usize;
+            artifacts.push(ArtifactInfo {
+                name: get_str("name")?,
+                file: get_str("file")?,
+                input_shape: shape,
+                dtype: get_str("dtype")?,
+                n_outputs,
+                description: get_str("description")?,
+            });
+        }
+        if artifacts.is_empty() {
+            bail!("manifest has no artifacts");
+        }
+        Ok(Manifest { alpha, sweep_steps, artifacts })
+    }
+
+    pub fn artifacts(&self) -> &[ArtifactInfo] {
+        &self.artifacts
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.artifacts.iter().map(|a| a.name.as_str()).collect()
+    }
+
+    pub fn find(&self, name: &str) -> Option<&ArtifactInfo> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+
+    /// Find the artifact whose name starts with `prefix` and whose input
+    /// shape matches `dims` (used by the coordinator's shape-keyed batcher).
+    pub fn find_for_shape(&self, prefix: &str, dims: &[usize]) -> Option<&ArtifactInfo> {
+        self.artifacts.iter().find(|a| a.name.starts_with(prefix) && a.input_shape == dims)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "alpha": 0.05,
+      "sweep_steps": 10,
+      "artifacts": [
+        {"name": "star13_16", "file": "star13_16.hlo.txt",
+         "input_shape": [16, 16, 16], "dtype": "f32", "n_outputs": 1,
+         "description": "q = Ku"},
+        {"name": "step_norms_16", "file": "step_norms_16.hlo.txt",
+         "input_shape": [16, 16, 16], "dtype": "f32", "n_outputs": 2,
+         "description": "(u', norms)"}
+      ]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse_str(SAMPLE).unwrap();
+        assert_eq!(m.alpha, 0.05);
+        assert_eq!(m.sweep_steps, 10);
+        assert_eq!(m.artifacts().len(), 2);
+        let a = m.find("star13_16").unwrap();
+        assert_eq!(a.input_shape, vec![16, 16, 16]);
+        assert_eq!(a.n_outputs, 1);
+    }
+
+    #[test]
+    fn find_for_shape() {
+        let m = Manifest::parse_str(SAMPLE).unwrap();
+        assert!(m.find_for_shape("star13", &[16, 16, 16]).is_some());
+        assert!(m.find_for_shape("star13", &[32, 32, 32]).is_none());
+        assert!(m.find_for_shape("nope", &[16, 16, 16]).is_none());
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Manifest::parse_str("{}").is_err());
+        assert!(Manifest::parse_str("{\"alpha\": 0.05, \"sweep_steps\": 1, \"artifacts\": []}").is_err());
+        assert!(Manifest::parse_str("not json").is_err());
+    }
+}

@@ -1,0 +1,305 @@
+//! PJRT runtime: load AOT-compiled HLO artifacts and execute them.
+//!
+//! This is the only place the crate touches the `xla` crate. The pipeline:
+//!
+//! ```text
+//! artifacts/<name>.hlo.txt  ──HloModuleProto::from_text_file──▶ proto
+//!   ──XlaComputation::from_proto──▶ computation
+//!   ──PjRtClient::compile──▶ PjRtLoadedExecutable   (cached per name)
+//!   ──execute(literals)──▶ output tuple
+//! ```
+//!
+//! HLO *text* is the interchange format: jax ≥ 0.5 serialized protos carry
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids (see /opt/xla-example/README.md and python/compile/aot.py).
+//!
+//! All artifacts are lowered with `return_tuple=True`, so every execution
+//! returns a tuple literal; [`Runtime::execute`] decomposes it.
+
+mod manifest;
+mod service;
+
+pub use manifest::{ArtifactInfo, Manifest};
+pub use service::{RuntimeHandle, RuntimeService};
+
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+/// A host-side tensor: f32 data plus dims. The runtime's lingua franca
+/// between the engine/coordinator and PJRT.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HostTensor {
+    pub dims: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl HostTensor {
+    pub fn new(dims: Vec<usize>, data: Vec<f32>) -> Result<HostTensor> {
+        let n: usize = dims.iter().product();
+        if n != data.len() {
+            bail!("dims {:?} need {} elements, got {}", dims, n, data.len());
+        }
+        Ok(HostTensor { dims, data })
+    }
+
+    pub fn zeros(dims: &[usize]) -> HostTensor {
+        HostTensor { dims: dims.to_vec(), data: vec![0.0; dims.iter().product()] }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// L2 norm (for convergence logging).
+    pub fn norm(&self) -> f64 {
+        self.data.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt()
+    }
+}
+
+/// The PJRT runtime: CPU client + artifact registry + executable cache.
+///
+/// Compilation happens at most once per artifact (guarded by a mutex-held
+/// cache); execution needs no lock beyond the cache lookup.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    manifest: Manifest,
+    cache: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl Runtime {
+    /// Open the artifact directory (must contain `manifest.json`; run
+    /// `make artifacts` to produce it) on the PJRT CPU client.
+    pub fn open(dir: impl AsRef<Path>) -> Result<Runtime> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(&dir.join("manifest.json"))
+            .with_context(|| format!("loading manifest from {dir:?}; run `make artifacts` first"))?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT CPU client: {e:?}"))?;
+        Ok(Runtime { client, dir, manifest, cache: Mutex::new(HashMap::new()) })
+    }
+
+    /// Locate the repository's `artifacts/` directory from the current dir
+    /// or its ancestors (so examples work from any working directory).
+    pub fn open_default() -> Result<Runtime> {
+        let mut dir = std::env::current_dir()?;
+        loop {
+            let cand = dir.join("artifacts");
+            if cand.join("manifest.json").exists() {
+                return Runtime::open(cand);
+            }
+            if !dir.pop() {
+                bail!("no artifacts/manifest.json found in cwd or ancestors; run `make artifacts`");
+            }
+        }
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch from cache) the named artifact.
+    pub fn load(&self, name: &str) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.lock().unwrap().get(name) {
+            return Ok(exe.clone());
+        }
+        let info = self
+            .manifest
+            .find(name)
+            .ok_or_else(|| anyhow!("artifact {name:?} not in manifest ({:?})", self.manifest.names()))?;
+        let path = self.dir.join(&info.file);
+        let path_str = path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?;
+        let proto = xla::HloModuleProto::from_text_file(path_str)
+            .map_err(|e| anyhow!("parsing HLO text {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
+        let exe = std::sync::Arc::new(exe);
+        self.cache.lock().unwrap().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute artifact `name` on f32 inputs; returns the decomposed output
+    /// tuple as host tensors.
+    pub fn execute(&self, name: &str, inputs: &[&HostTensor]) -> Result<Vec<HostTensor>> {
+        let exe = self.load(name)?;
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|t| {
+                let dims: Vec<i64> = t.dims.iter().map(|&d| d as i64).collect();
+                xla::Literal::vec1(&t.data)
+                    .reshape(&dims)
+                    .map_err(|e| anyhow!("reshaping input to {dims:?}: {e:?}"))
+            })
+            .collect::<Result<_>>()?;
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("executing {name}: {e:?}"))?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching result of {name}: {e:?}"))?;
+        // Artifacts are lowered with return_tuple=True.
+        let parts = out.to_tuple().map_err(|e| anyhow!("decomposing tuple: {e:?}"))?;
+        parts
+            .into_iter()
+            .map(|lit| {
+                let shape = lit.shape().map_err(|e| anyhow!("shape: {e:?}"))?;
+                let dims: Vec<usize> = match &shape {
+                    xla::Shape::Array(a) => a.dims().iter().map(|&d| d as usize).collect(),
+                    other => bail!("unexpected non-array output: {other:?}"),
+                };
+                let data = lit.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}"))?;
+                HostTensor::new(dims, data)
+            })
+            .collect()
+    }
+
+    /// Number of compiled executables currently cached.
+    pub fn cached_executables(&self) -> usize {
+        self.cache.lock().unwrap().len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // These tests need `make artifacts` to have run (the Makefile test
+    // target guarantees it). They exercise the full python→HLO→PJRT→rust
+    // round trip on the smallest artifact shape (16³).
+
+    fn runtime() -> Runtime {
+        Runtime::open_default().expect("artifacts missing — run `make artifacts`")
+    }
+
+    fn rand_tensor(n: usize, seed: u64) -> HostTensor {
+        let mut rng = crate::util::rng::Rng::new(seed);
+        let data: Vec<f32> = (0..n * n * n).map(|_| rng.f64() as f32 - 0.5).collect();
+        HostTensor::new(vec![n, n, n], data).unwrap()
+    }
+
+    #[test]
+    fn manifest_lists_artifacts() {
+        let rt = runtime();
+        assert!(rt.manifest().find("star13_16").is_some());
+        assert!(rt.manifest().find("nonexistent").is_none());
+        assert!(rt.manifest().names().len() >= 5);
+    }
+
+    #[test]
+    fn star13_matches_rust_stencil() {
+        // The AOT kernel (python/pallas) must agree with the rust-native
+        // engine on the shared interior. This pins L1 ↔ L3 numerics.
+        let rt = runtime();
+        let n = 16usize;
+        let u = rand_tensor(n, 42);
+        let out = rt.execute("star13_16", &[&u]).unwrap();
+        assert_eq!(out.len(), 1);
+        let q = &out[0];
+        assert_eq!(q.dims, vec![n, n, n]);
+
+        // rust-native computation
+        let g = crate::grid::GridDesc::new(&[n, n, n]);
+        let st = crate::stencil::Stencil::star13();
+        let order = crate::traversal::natural(&g, 2);
+        let u64v: Vec<f64> = u.data.iter().map(|&x| x as f64).collect();
+        let mut qr = vec![0.0f64; u64v.len()];
+        crate::engine::apply(&order, &g, &st, &u64v, &mut qr);
+        // compare on the K-interior (python applies zero-halo everywhere;
+        // interior values must agree). python arrays are row-major (x,y,z):
+        // index = (x*n + y)*n + z; the rust grid is column-major with dim 0
+        // fastest: offset = x + y*n + z*n². Feeding the python buffer into
+        // the rust engine therefore computes the same stencil with the roles
+        // of x and z swapped — the star13 stencil is axis-symmetric, so the
+        // values coincide when we compare mirrored indices.
+        let mut checked = 0;
+        for z in 2..n - 2 {
+            for y in 2..n - 2 {
+                for x in 2..n - 2 {
+                    // rust point (x,y,z) == python point (z,y,x); see above.
+                    let pv = q.data[(z * n + y) * n + x] as f64;
+                    let rv = qr[x + y * n + z * n * n];
+                    assert!(
+                        (pv - rv).abs() < 1e-3 * (1.0 + rv.abs()),
+                        "mismatch at ({x},{y},{z}): pjrt {pv} vs rust {rv}"
+                    );
+                    checked += 1;
+                }
+            }
+        }
+        assert!(checked > 1000);
+    }
+
+    #[test]
+    fn jacobi_step_reduces_energy() {
+        let rt = runtime();
+        let u = rand_tensor(16, 7);
+        let before = u.norm();
+        let out = rt.execute("jacobi_step_16", &[&u]).unwrap();
+        let after = out[0].norm();
+        assert!(after < before, "{after} !< {before}");
+        assert!(after > 0.5 * before, "one stable step shouldn't crater the norm");
+    }
+
+    #[test]
+    fn sweep_equals_ten_steps() {
+        let rt = runtime();
+        let u = rand_tensor(16, 11);
+        let mut v = u.clone();
+        for _ in 0..10 {
+            v = rt.execute("jacobi_step_16", &[&v]).unwrap().remove(0);
+        }
+        let swept = rt.execute("jacobi_sweep_16x10", &[&u]).unwrap().remove(0);
+        for (a, b) in v.data.iter().zip(&swept.data) {
+            assert!((a - b).abs() < 1e-4 * (1.0 + b.abs()), "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn step_norms_returns_two_outputs() {
+        let rt = runtime();
+        let u = rand_tensor(16, 13);
+        let out = rt.execute("step_norms_16", &[&u]).unwrap();
+        assert_eq!(out.len(), 2);
+        assert_eq!(out[0].dims, vec![16, 16, 16]);
+        assert_eq!(out[1].dims, vec![2]);
+        // norms[0] must equal ||u'||
+        let unorm = out[0].norm();
+        assert!((out[1].data[0] as f64 - unorm).abs() < 1e-2 * (1.0 + unorm));
+    }
+
+    #[test]
+    fn executable_cache_reuses_compilations() {
+        let rt = runtime();
+        let u = rand_tensor(16, 17);
+        let _ = rt.execute("norms_16", &[&u]).unwrap();
+        let c1 = rt.cached_executables();
+        let _ = rt.execute("norms_16", &[&u]).unwrap();
+        assert_eq!(rt.cached_executables(), c1);
+    }
+
+    #[test]
+    fn missing_artifact_is_clean_error() {
+        let rt = runtime();
+        let u = rand_tensor(16, 19);
+        let err = rt.execute("no_such_artifact", &[&u]).unwrap_err();
+        assert!(format!("{err}").contains("not in manifest"));
+    }
+
+    #[test]
+    fn host_tensor_validation() {
+        assert!(HostTensor::new(vec![2, 3], vec![0.0; 6]).is_ok());
+        assert!(HostTensor::new(vec![2, 3], vec![0.0; 5]).is_err());
+        let z = HostTensor::zeros(&[4, 4]);
+        assert_eq!(z.len(), 16);
+        assert_eq!(z.norm(), 0.0);
+    }
+}

@@ -1,0 +1,182 @@
+//! Runtime service: a dedicated executor thread owning the PJRT client.
+//!
+//! The `xla` crate's handles (`PjRtClient`, `PjRtLoadedExecutable`) wrap
+//! `Rc`s and raw pointers — they are neither `Send` nor `Sync`. The
+//! coordinator, however, serves requests from a thread pool. The standard
+//! resolution (same shape as vLLM's engine-core thread) is an **actor**:
+//! one thread owns the [`Runtime`]; everyone else holds a cloneable
+//! [`RuntimeHandle`] and communicates via channels. PJRT CPU parallelizes
+//! inside a single execution, so a single executor thread does not starve
+//! the machine.
+
+use super::{HostTensor, Manifest, Runtime};
+use anyhow::{anyhow, Result};
+use std::path::PathBuf;
+use std::sync::mpsc::{channel, Sender};
+use std::sync::Mutex;
+use std::thread::JoinHandle;
+
+enum Job {
+    Execute { name: String, inputs: Vec<HostTensor>, reply: Sender<Result<Vec<HostTensor>>> },
+    CachedExecutables { reply: Sender<usize> },
+    Shutdown,
+}
+
+/// Cloneable, thread-safe handle to the runtime executor thread.
+pub struct RuntimeHandle {
+    tx: Mutex<Sender<Job>>,
+    manifest: Manifest,
+    platform: String,
+}
+
+impl RuntimeHandle {
+    /// Execute an artifact; blocks until the executor thread replies.
+    pub fn execute(&self, name: &str, inputs: &[&HostTensor]) -> Result<Vec<HostTensor>> {
+        let (reply, rx) = channel();
+        let job = Job::Execute {
+            name: name.to_string(),
+            inputs: inputs.iter().map(|&t| t.clone()).collect(),
+            reply,
+        };
+        self.tx
+            .lock()
+            .unwrap()
+            .send(job)
+            .map_err(|_| anyhow!("runtime service stopped"))?;
+        rx.recv().map_err(|_| anyhow!("runtime service dropped reply"))?
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> &str {
+        &self.platform
+    }
+
+    pub fn cached_executables(&self) -> usize {
+        let (reply, rx) = channel();
+        if self.tx.lock().unwrap().send(Job::CachedExecutables { reply }).is_err() {
+            return 0;
+        }
+        rx.recv().unwrap_or(0)
+    }
+}
+
+/// The service: owns the executor thread; dropping it shuts the thread
+/// down after in-flight jobs complete.
+pub struct RuntimeService {
+    handle: std::sync::Arc<RuntimeHandle>,
+    tx: Sender<Job>,
+    join: Option<JoinHandle<()>>,
+}
+
+impl RuntimeService {
+    /// Start the executor on the artifact directory (ancestor-searched when
+    /// `dir` is None — see [`Runtime::open_default`]).
+    pub fn start(dir: Option<PathBuf>) -> Result<RuntimeService> {
+        let (tx, rx) = channel::<Job>();
+        // Open the runtime *on the executor thread* (the client must live
+        // where it is used); ship the manifest back through a bootstrap
+        // channel so the handle can answer metadata queries locally.
+        let (boot_tx, boot_rx) = channel::<Result<(Manifest, String)>>();
+        let join = std::thread::Builder::new()
+            .name("stencilcache-pjrt".to_string())
+            .spawn(move || {
+                let runtime = match dir {
+                    Some(d) => Runtime::open(d),
+                    None => Runtime::open_default(),
+                };
+                let runtime = match runtime {
+                    Ok(rt) => {
+                        let _ = boot_tx.send(Ok((rt.manifest().clone(), rt.platform())));
+                        rt
+                    }
+                    Err(e) => {
+                        let _ = boot_tx.send(Err(e));
+                        return;
+                    }
+                };
+                while let Ok(job) = rx.recv() {
+                    match job {
+                        Job::Execute { name, inputs, reply } => {
+                            let refs: Vec<&HostTensor> = inputs.iter().collect();
+                            let _ = reply.send(runtime.execute(&name, &refs));
+                        }
+                        Job::CachedExecutables { reply } => {
+                            let _ = reply.send(runtime.cached_executables());
+                        }
+                        Job::Shutdown => break,
+                    }
+                }
+            })
+            .expect("failed to spawn runtime thread");
+        let (manifest, platform) = boot_rx.recv().map_err(|_| anyhow!("runtime thread died during startup"))??;
+        let handle = std::sync::Arc::new(RuntimeHandle { tx: Mutex::new(tx.clone()), manifest, platform });
+        Ok(RuntimeService { handle, tx, join: Some(join) })
+    }
+
+    pub fn handle(&self) -> std::sync::Arc<RuntimeHandle> {
+        self.handle.clone()
+    }
+}
+
+impl Drop for RuntimeService {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Job::Shutdown);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn service() -> RuntimeService {
+        RuntimeService::start(None).expect("artifacts missing — run `make artifacts`")
+    }
+
+    #[test]
+    fn executes_through_service_thread() {
+        let svc = service();
+        let h = svc.handle();
+        let u = HostTensor::zeros(&[16, 16, 16]);
+        let out = h.execute("star13_16", &[&u]).unwrap();
+        assert_eq!(out[0].dims, vec![16, 16, 16]);
+        assert_eq!(out[0].norm(), 0.0);
+    }
+
+    #[test]
+    fn handle_usable_from_many_threads() {
+        let svc = service();
+        let h = svc.handle();
+        std::thread::scope(|s| {
+            for seed in 0..4u64 {
+                let h = h.clone();
+                s.spawn(move || {
+                    let mut rng = crate::util::rng::Rng::new(seed);
+                    let data: Vec<f32> = (0..16 * 16 * 16).map(|_| rng.f64() as f32).collect();
+                    let u = HostTensor::new(vec![16, 16, 16], data).unwrap();
+                    let out = h.execute("jacobi_step_16", &[&u]).unwrap();
+                    assert!(out[0].norm() > 0.0);
+                });
+            }
+        });
+        assert!(h.cached_executables() >= 1);
+    }
+
+    #[test]
+    fn startup_error_is_propagated() {
+        let err = RuntimeService::start(Some(PathBuf::from("/nonexistent/artifacts"))).err();
+        assert!(err.is_some());
+    }
+
+    #[test]
+    fn manifest_available_on_handle() {
+        let svc = service();
+        assert!(svc.handle().manifest().find("star13_16").is_some());
+        assert!(!svc.handle().platform().is_empty());
+    }
+}

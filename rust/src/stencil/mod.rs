@@ -1,0 +1,255 @@
+//! Stencil operators `q = Ku`.
+//!
+//! A stencil is a finite set of displacement vectors `k_1 … k_s` (the
+//! *stencil vectors*, paper §3): `q(x) = f(u(x+k_1), …, u(x+k_s))`. We
+//! carry a coefficient per vector so the numeric path computes the common
+//! linear case `q(x) = Σ c_i·u(x+k_i)` (difference operators).
+//!
+//! Constructors cover the paper's shapes:
+//! - [`Stencil::star`] — the star of radius r: `{0, ±k·e_i | 1 ≤ k ≤ r}`;
+//!   `star(3, 2)` is the paper's **13-point second-order star** used in all
+//!   measurements;
+//! - [`Stencil::box_stencil`] — the full cube `{|x_i|∞ ≤ r}`;
+//! - [`Stencil::from_offsets`] — arbitrary.
+
+use crate::lattice::IntVec;
+
+/// A stencil operator: displacement vectors with coefficients.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Stencil {
+    ndim: usize,
+    offsets: Vec<IntVec>,
+    coeffs: Vec<f64>,
+}
+
+impl Stencil {
+    /// Arbitrary stencil from (offset, coefficient) pairs.
+    pub fn from_offsets(ndim: usize, pairs: Vec<(IntVec, f64)>) -> Stencil {
+        assert!(!pairs.is_empty(), "empty stencil");
+        for (o, _) in &pairs {
+            assert_eq!(o.len(), ndim, "offset arity mismatch");
+        }
+        // Reject duplicate offsets — a redundant stencil breaks the §2
+        // load/miss inequality assumptions.
+        let mut seen = std::collections::HashSet::new();
+        for (o, _) in &pairs {
+            assert!(seen.insert(o.clone()), "duplicate stencil offset {o:?}");
+        }
+        let (offsets, coeffs) = pairs.into_iter().unzip();
+        Stencil { ndim, offsets, coeffs }
+    }
+
+    /// Star stencil of radius `r` in `d` dimensions: center plus up to `r`
+    /// steps along each axis; `1 + 2rd` points. Coefficients are those of
+    /// the standard 2r-order accurate Laplacian-like operator normalized to
+    /// sum 0 with center weight −2rd/h² style; for cache analysis only the
+    /// *shape* matters, but the numeric path uses these weights.
+    pub fn star(d: usize, r: usize) -> Stencil {
+        assert!(d >= 1 && r >= 1);
+        let mut pairs: Vec<(IntVec, f64)> = Vec::with_capacity(1 + 2 * r * d);
+        // Second-order-style weights: center −2d·Σw_k, axis ±k weight w_k.
+        // For r=1: classical 7-point (d=3). For r=2: the 13-point star with
+        // fourth-order weights (−1/12, 4/3) per axis.
+        let axis_w: Vec<f64> = match r {
+            1 => vec![1.0],
+            2 => vec![4.0 / 3.0, -1.0 / 12.0],
+            _ => (1..=r).map(|k| 1.0 / k as f64).collect(), // generic decay
+        };
+        let center_w = -2.0 * d as f64 * axis_w.iter().sum::<f64>();
+        pairs.push((vec![0; d], center_w));
+        for i in 0..d {
+            for k in 1..=r as i64 {
+                for sign in [1i64, -1] {
+                    let mut o = vec![0i64; d];
+                    o[i] = sign * k;
+                    pairs.push((o, axis_w[(k - 1) as usize]));
+                }
+            }
+        }
+        Stencil::from_offsets(d, pairs)
+    }
+
+    /// The paper's measurement stencil: 13-point second-order star in 3-D.
+    pub fn star13() -> Stencil {
+        Stencil::star(3, 2)
+    }
+
+    /// Full box stencil `{‖x‖∞ ≤ r}` with uniform averaging weights.
+    pub fn box_stencil(d: usize, r: usize) -> Stencil {
+        let side = 2 * r + 1;
+        let count = side.pow(d as u32);
+        let w = 1.0 / count as f64;
+        let mut pairs = Vec::with_capacity(count);
+        let mut o = vec![-(r as i64); d];
+        loop {
+            pairs.push((o.clone(), w));
+            let mut i = 0;
+            loop {
+                o[i] += 1;
+                if o[i] <= r as i64 {
+                    break;
+                }
+                o[i] = -(r as i64);
+                i += 1;
+                if i == d {
+                    return Stencil::from_offsets(d, pairs);
+                }
+            }
+        }
+    }
+
+    pub fn ndim(&self) -> usize {
+        self.ndim
+    }
+
+    /// |K| — number of stencil points.
+    pub fn size(&self) -> usize {
+        self.offsets.len()
+    }
+
+    pub fn offsets(&self) -> &[IntVec] {
+        &self.offsets
+    }
+
+    pub fn coeffs(&self) -> &[f64] {
+        &self.coeffs
+    }
+
+    /// Radius r: max L∞ norm over stencil vectors (paper §3 "locality").
+    pub fn radius(&self) -> usize {
+        self.offsets.iter().map(|o| o.iter().map(|&x| x.unsigned_abs()).max().unwrap_or(0)).max().unwrap_or(0) as usize
+    }
+
+    /// Diameter `2r + 1` (the quantity compared against lattice vector
+    /// lengths in the unfavorable-grid criterion).
+    pub fn diameter(&self) -> usize {
+        2 * self.radius() + 1
+    }
+
+    /// Does this stencil contain the unit star `{0, ±e_i}`? The paper's
+    /// lower bound (§3) applies to any stencil containing the star.
+    pub fn contains_star(&self) -> bool {
+        let d = self.ndim;
+        let mut need: Vec<IntVec> = vec![vec![0; d]];
+        for i in 0..d {
+            for sign in [1i64, -1] {
+                let mut o = vec![0i64; d];
+                o[i] = sign;
+                need.push(o);
+            }
+        }
+        need.iter().all(|n| self.offsets.contains(n))
+    }
+
+    /// Signed projections of the stencil vectors onto direction `v`
+    /// (paper §4: h_1 … h_s, used to size pencils; returns (h−, h+)).
+    pub fn projection_extent(&self, v: &[i64]) -> (f64, f64) {
+        let vnorm2: f64 = v.iter().map(|&x| (x * x) as f64).sum();
+        assert!(vnorm2 > 0.0);
+        let mut h_min = f64::INFINITY;
+        let mut h_max = f64::NEG_INFINITY;
+        for o in &self.offsets {
+            let dot: f64 = o.iter().zip(v).map(|(&a, &b)| (a * b) as f64).sum();
+            let h = dot / vnorm2.sqrt();
+            h_min = h_min.min(h);
+            h_max = h_max.max(h);
+        }
+        (h_min, h_max)
+    }
+
+    /// Apply the linear stencil at one point given a flat `u` buffer and the
+    /// precomputed linear deltas (from `GridDesc::delta_of`).
+    #[inline]
+    pub fn apply_at(&self, u: &[f64], base: usize, deltas: &[i64]) -> f64 {
+        debug_assert_eq!(deltas.len(), self.coeffs.len());
+        let mut acc = 0.0;
+        for (&c, &dlt) in self.coeffs.iter().zip(deltas) {
+            acc += c * u[(base as i64 + dlt) as usize];
+        }
+        acc
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn star13_shape() {
+        let s = Stencil::star13();
+        assert_eq!(s.size(), 13);
+        assert_eq!(s.radius(), 2);
+        assert_eq!(s.diameter(), 5);
+        assert!(s.contains_star());
+        // coefficients sum to zero (difference operator annihilates constants)
+        let sum: f64 = s.coeffs().iter().sum();
+        assert!(sum.abs() < 1e-12, "sum = {sum}");
+    }
+
+    #[test]
+    fn star_r1_is_2d_plus_1_points() {
+        for d in 1..=4 {
+            let s = Stencil::star(d, 1);
+            assert_eq!(s.size(), 2 * d + 1);
+            assert!(s.contains_star());
+            assert_eq!(s.diameter(), 3);
+        }
+    }
+
+    #[test]
+    fn box_stencil_counts() {
+        assert_eq!(Stencil::box_stencil(2, 1).size(), 9);
+        assert_eq!(Stencil::box_stencil(3, 1).size(), 27);
+        assert_eq!(Stencil::box_stencil(3, 2).size(), 125);
+        assert!(Stencil::box_stencil(3, 1).contains_star());
+    }
+
+    #[test]
+    fn radius_of_asymmetric_stencil() {
+        let s = Stencil::from_offsets(2, vec![(vec![0, 0], 1.0), (vec![3, 0], 0.5), (vec![0, -1], 0.5)]);
+        assert_eq!(s.radius(), 3);
+        assert!(!s.contains_star());
+    }
+
+    #[test]
+    #[should_panic(expected = "duplicate stencil offset")]
+    fn duplicate_offsets_rejected() {
+        let _ = Stencil::from_offsets(1, vec![(vec![1], 1.0), (vec![1], 2.0)]);
+    }
+
+    #[test]
+    fn projection_extent_star13_axis() {
+        let s = Stencil::star13();
+        let (lo, hi) = s.projection_extent(&[1, 0, 0]);
+        assert_eq!((lo, hi), (-2.0, 2.0));
+        let (lo_d, hi_d) = s.projection_extent(&[1, 1, 0]);
+        // max projection: offset (2,0,0)·(1,1,0)/√2 = √2
+        assert!((hi_d - 2.0 / 2f64.sqrt()).abs() < 1e-12);
+        assert!((lo_d + 2.0 / 2f64.sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn apply_at_linear_combination() {
+        // 1-D second difference on a quadratic: u(x) = x², u'' = 2.
+        let s = Stencil::star(1, 1); // weights: center −2, ±1 → discrete u''
+        let u: Vec<f64> = (0..10).map(|x| (x * x) as f64).collect();
+        let deltas = [0i64, 1, -1];
+        // order of offsets: center, +1, -1 — match deltas accordingly.
+        let offs = s.offsets();
+        assert_eq!(offs[0], vec![0]);
+        let q = s.apply_at(&u, 5, &deltas);
+        assert!((q - 2.0).abs() < 1e-12, "q = {q}");
+    }
+
+    #[test]
+    fn star13_fourth_order_on_quartic() {
+        // The r=2 star weights (−1/12, 4/3) reproduce u'' exactly for cubics.
+        let s = Stencil::star(1, 2);
+        let u: Vec<f64> = (0..20).map(|x| (x as f64).powi(3)).collect();
+        let g = crate::grid::GridDesc::new(&[20]);
+        let deltas: Vec<i64> = s.offsets().iter().map(|o| g.delta_of(o)).collect();
+        let x = 10.0f64;
+        let q = s.apply_at(&u, 10, &deltas);
+        assert!((q - 6.0 * x).abs() < 1e-9, "q = {q}, want {}", 6.0 * x);
+    }
+}

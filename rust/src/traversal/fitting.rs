@@ -1,0 +1,364 @@
+//! The **cache fitting algorithm** (paper §4) — the paper's central
+//! contribution.
+//!
+//! Given the interference lattice `L` of the array, take a *reduced* basis
+//! `b_1 … b_d` (LLL), let `v = b_iv` be the longest basis vector, and let
+//! `F` be the face of the fundamental parallelepiped spanned by the other
+//! basis vectors. Space is partitioned into **pencils**
+//! `Q = {f + t·v | f ∈ F + integer face offsets}`; the algorithm sweeps the
+//! scanning face `F + k·(v/g)` through each pencil in the direction of `v`:
+//!
+//! ```text
+//! do Q = Qmin, Qmax                       (pencils)
+//!   do k = kmin, kmax                     (face shifts along v)
+//!     load u on K(F + k·w);  compute q on F + k·w
+//! ```
+//!
+//! Because all points of a face `F + k·w` differ by *non-lattice* vectors
+//! shorter than the parallelepiped, they map to distinct cache locations:
+//! the working set of a face sweep fits the cache by construction, and
+//! replacement loads occur only within distance `r` of pencil boundaries
+//! (≤ `r(2r+1)^d · A` in total, where `A` is the pencil surface area —
+//! Eq 12 follows from the reduced basis's surface-to-volume ratio, Eq 11).
+//!
+//! **Implementation.** Rather than enumerating faces geometrically (awkward
+//! near grid boundaries — the paper says "whenever a point is not contained
+//! in the grid, it is simply skipped"), we compute for every interior point
+//! its real coordinates `y = B⁻¹x` in the reduced basis and sort points by
+//! `(⌊y_j⌋ for j ≠ iv ; y_iv)`. Points sharing all `⌊y_j⌋, j≠iv` form
+//! exactly one fundamental-parallelepiped *pencil*; ordering by `y_iv`
+//! within a pencil is the face sweep with step `1/g` (the sort visits the
+//! integer points of the pencil in sweep order without needing `g`
+//! explicitly). This is observationally identical to the paper's loop nest
+//! and handles arbitrary grid boundaries uniformly.
+
+use super::Order;
+use crate::grid::GridDesc;
+use crate::lattice::InterferenceLattice;
+
+/// Pencil-coordinate bias: supports floor values in ±2^19.
+const BIAS: i64 = 1 << 19;
+
+/// Build the cache-fitting order for a stencil of radius `r` on `grid`,
+/// using the interference lattice of the grid's *storage* layout.
+///
+/// The lattice should be built with the same modulus as the target cache
+/// (S words) and the same dims as `grid.storage_dims()`; the convenience
+/// wrapper [`cache_fitting_for_cache`] does this.
+/// Tuning knobs for the fitting sweep (see the ablation bench
+/// `bench_traversal` and EXPERIMENTS.md §Perf for the measured effect of
+/// each).
+#[derive(Debug, Clone)]
+pub struct FittingOptions {
+    /// Which reduced-basis vector to sweep along; None → longest (§5's
+    /// prescription).
+    pub sweep_index: Option<usize>,
+    /// Pencil width in *cells* along each non-sweep basis direction. The
+    /// paper: "pencils as wide as possible"; widths beyond the cache
+    /// associativity reintroduce conflicts, so `widths_from_assoc` caps at
+    /// `a` cells total.
+    pub widths: Vec<usize>,
+    /// Serpentine (boustrophedon) pencil visiting: alternate the sweep and
+    /// inner-pencil directions so adjacent pencils share their freshest
+    /// boundary halo instead of their coldest.
+    pub serpentine: bool,
+}
+
+impl Default for FittingOptions {
+    fn default() -> Self {
+        FittingOptions { sweep_index: None, widths: Vec::new(), serpentine: true }
+    }
+}
+
+impl FittingOptions {
+    /// Widen pencils up to the cache associativity: `a` lattice-equivalent
+    /// copies fit the `a` ways, so a pencil may span `a` cells across one
+    /// face direction without self-eviction.
+    pub fn widths_from_assoc(mut self, d: usize, assoc: usize) -> Self {
+        let mut widths = vec![1usize; d];
+        if d >= 2 && assoc >= 2 {
+            // widen along the first face direction only: total copies = a.
+            widths[0] = assoc;
+        }
+        self.widths = widths;
+        self
+    }
+}
+
+pub fn cache_fitting(grid: &GridDesc, r: usize, lattice: &InterferenceLattice) -> Order {
+    cache_fitting_opts(grid, r, lattice, &FittingOptions::default())
+}
+
+/// Like [`cache_fitting`] with an explicit sweep-vector index into the
+/// reduced basis (exposed for the sweep-choice ablation bench).
+pub fn cache_fitting_sweep(grid: &GridDesc, r: usize, lattice: &InterferenceLattice, iv: usize) -> Order {
+    cache_fitting_opts(
+        grid,
+        r,
+        lattice,
+        &FittingOptions { sweep_index: Some(iv), ..FittingOptions::default() },
+    )
+}
+
+/// Full-control variant.
+pub fn cache_fitting_opts(grid: &GridDesc, r: usize, lattice: &InterferenceLattice, opts: &FittingOptions) -> Order {
+    let d = grid.ndim();
+    assert_eq!(lattice.dims().len(), d, "lattice dimensionality mismatch");
+    let Some(ranges) = grid.interior(r) else {
+        return Order::from_packed(d, Vec::new());
+    };
+    if d == 1 {
+        // One-dimensional grids have a single pencil; the sweep is natural.
+        return super::natural(grid, r);
+    }
+    let iv = opts.sweep_index.unwrap_or_else(|| lattice.longest_basis_index());
+    assert!(iv < d);
+
+    // Inverse of the reduced-basis matrix (rows = basis vectors): y = x·Binv
+    // gives basis coordinates. Computed once per grid.
+    let basis = lattice.reduced_basis();
+    let binv = invert(basis);
+    // width per face direction (cells), indexed by face slot order.
+    let mut widths = [1usize; 8];
+    {
+        let mut slot = 0;
+        for j in 0..d {
+            if j == iv {
+                continue;
+            }
+            widths[slot] = *opts.widths.get(slot).unwrap_or(&1);
+            assert!(widths[slot] >= 1);
+            slot += 1;
+        }
+    }
+
+    // Enumerate interior points (natural order), computing sort keys.
+    let n: usize = ranges.iter().map(|rg| (rg.end - rg.start) as usize).product();
+    let mut keyed: Vec<(u64, f32, u64)> = Vec::with_capacity(n);
+    let mut x: Vec<i64> = ranges.iter().map(|rg| rg.start).collect();
+    let mut y = vec![0.0f64; d];
+    loop {
+        // y = B^{-1} x (x as real vector)
+        for (i, yi) in y.iter_mut().enumerate() {
+            let mut acc = 0.0;
+            for (j, &xj) in x.iter().enumerate() {
+                acc += binv[i][j] * xj as f64;
+            }
+            *yi = acc;
+        }
+        // pencil coordinates (outermost sort key first), with serpentine
+        // parity folding: each level's coordinate is mirrored when the sum
+        // of outer-level coordinates is odd, so consecutive pencils in the
+        // visit order are spatial neighbors sharing a *fresh* wall.
+        let mut pencil_key = 0u64;
+        let mut slot = 0usize;
+        let mut parity: i64 = 0;
+        let mut shift: u32 = 40; // outermost face coord in the top bits
+        for (j, &yj) in y.iter().enumerate() {
+            if j == iv {
+                continue;
+            }
+            let mut fl = (yj / widths[slot] as f64).floor() as i64;
+            if opts.serpentine && parity & 1 == 1 {
+                fl = -fl;
+            }
+            parity += fl.abs();
+            let biased = fl + BIAS;
+            debug_assert!((0..(1 << 20)).contains(&biased), "pencil coordinate overflow");
+            pencil_key |= (biased as u64) << shift;
+            shift = shift.saturating_sub(20);
+            slot += 1;
+        }
+        let mut sweep = y[iv] as f32;
+        if opts.serpentine && parity & 1 == 1 {
+            sweep = -sweep;
+        }
+        keyed.push((pencil_key, sweep, Order::pack(&x)));
+
+        // odometer
+        let mut i = 0;
+        loop {
+            x[i] += 1;
+            if x[i] < ranges[i].end {
+                break;
+            }
+            x[i] = ranges[i].start;
+            i += 1;
+            if i == d {
+                // sort by (pencil, sweep coordinate, point) — total order.
+                keyed.sort_unstable_by(|a, b| {
+                    a.0.cmp(&b.0).then(a.1.partial_cmp(&b.1).unwrap()).then(a.2.cmp(&b.2))
+                });
+                let points = keyed.iter().map(|k| k.2).collect();
+                return Order::from_packed(d, points);
+            }
+        }
+    }
+}
+
+/// Cache-fitting order against a concrete cache: builds the interference
+/// lattice of the grid's storage dims with modulus `S`.
+pub fn cache_fitting_for_cache(grid: &GridDesc, r: usize, cache: &crate::cache::CacheParams) -> Order {
+    let lattice = InterferenceLattice::new(grid.storage_dims(), cache.lattice_modulus());
+    cache_fitting(grid, r, &lattice)
+}
+
+/// Invert a small integer matrix (rows = basis vectors) to f64.
+/// Gauss–Jordan with partial pivoting; basis matrices are well-conditioned
+/// after LLL at our dimensions.
+fn invert(rows: &[Vec<i64>]) -> Vec<Vec<f64>> {
+    let n = rows.len();
+    // We need y with x = Σ y_i b_i, i.e. Bᵀ y = x, so we invert Bᵀ:
+    // a[r][c] = basis[c][r].
+    let mut a: Vec<Vec<f64>> = (0..n).map(|r| (0..n).map(|c| rows[c][r] as f64).collect()).collect();
+    let mut inv: Vec<Vec<f64>> = (0..n).map(|r| (0..n).map(|c| if r == c { 1.0 } else { 0.0 }).collect()).collect();
+    for col in 0..n {
+        let piv = (col..n)
+            .max_by(|&i, &j| a[i][col].abs().partial_cmp(&a[j][col].abs()).unwrap())
+            .unwrap();
+        a.swap(col, piv);
+        inv.swap(col, piv);
+        let p = a[col][col];
+        assert!(p.abs() > 1e-12, "singular basis matrix");
+        for c in 0..n {
+            a[col][c] /= p;
+            inv[col][c] /= p;
+        }
+        for r in 0..n {
+            if r != col {
+                let f = a[r][col];
+                for c in 0..n {
+                    a[r][c] -= f * a[col][c];
+                    inv[r][c] -= f * inv[col][c];
+                }
+            }
+        }
+    }
+    inv
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cache::CacheParams;
+    use crate::traversal::natural;
+
+    #[test]
+    fn invert_roundtrip() {
+        let b = vec![vec![2, 1, 0], vec![0, 3, 1], vec![1, 0, 4]];
+        let inv = invert(&b);
+        // check Bᵀ · inv = I, i.e. for x = Bᵀ e_k, inv·x = e_k — equivalent:
+        // y = inv · (Bᵀ y0) must return y0.
+        let y0 = [1.0, -2.0, 0.5];
+        let mut x = [0.0f64; 3];
+        for r in 0..3 {
+            for k in 0..3 {
+                x[r] += b[k][r] as f64 * y0[k];
+            }
+        }
+        for i in 0..3 {
+            let yi: f64 = (0..3).map(|j| inv[i][j] * x[j]).sum();
+            assert!((yi - y0[i]).abs() < 1e-9, "component {i}");
+        }
+    }
+
+    #[test]
+    fn fitting_is_permutation_of_natural() {
+        let g = GridDesc::new(&[20, 17, 12]);
+        let lat = InterferenceLattice::new(g.storage_dims(), 256);
+        let fit = cache_fitting(&g, 2, &lat);
+        let nat = natural(&g, 2);
+        assert_eq!(fit.len(), nat.len());
+        assert_eq!(fit.canonical_set(), nat.canonical_set());
+    }
+
+    #[test]
+    fn fitting_1d_equals_natural() {
+        let g = GridDesc::new(&[50]);
+        let lat = InterferenceLattice::new(g.storage_dims(), 16);
+        let fit = cache_fitting(&g, 1, &lat);
+        let nat = natural(&g, 1);
+        assert_eq!(fit.packed(), nat.packed());
+    }
+
+    #[test]
+    fn fitting_groups_pencils_contiguously() {
+        // Within the produced order, each pencil's points must appear as one
+        // contiguous run (no interleaving) — this is what makes the working
+        // set cache-resident.
+        let g = GridDesc::new(&[24, 24]);
+        let lat = InterferenceLattice::new(g.storage_dims(), 64);
+        let fit = cache_fitting(&g, 1, &lat);
+        let basis = lat.reduced_basis();
+        let binv = invert(basis);
+        let iv = lat.longest_basis_index();
+        let jf = 1 - iv; // the face dim in 2-D
+        let mut seen = std::collections::HashSet::new();
+        let mut current: Option<i64> = None;
+        fit.for_each(|x| {
+            let y: f64 = (0..2).map(|j| binv[jf][j] * x[j] as f64).sum();
+            let pencil = y.floor() as i64;
+            if current != Some(pencil) {
+                assert!(seen.insert(pencil), "pencil {pencil} revisited — order interleaves pencils");
+                current = Some(pencil);
+            }
+        });
+        assert!(seen.len() > 1, "test should exercise multiple pencils");
+    }
+
+    #[test]
+    fn fitting_for_cache_wrapper() {
+        let g = GridDesc::new(&[40, 30, 10]);
+        let fit = cache_fitting_for_cache(&g, 1, &CacheParams::new(2, 64, 2));
+        assert_eq!(fit.len() as u64, g.interior_points(1));
+    }
+
+    #[test]
+    fn property_fitting_permutation_random_grids() {
+        use crate::util::proptest::{forall, DimsGen};
+        forall(31, 15, &DimsGen { d: 3, lo: 6, hi: 20 }, |dims| {
+            let g = GridDesc::new(dims);
+            let lat = InterferenceLattice::new(g.storage_dims(), 128);
+            let fit = cache_fitting(&g, 1, &lat);
+            fit.canonical_set() == natural(&g, 1).canonical_set()
+        });
+    }
+
+    #[test]
+    fn fitting_beats_natural_on_conflicting_grid() {
+        // A 2-D grid whose row length (60) nearly fills the 64-word cache:
+        // natural order needs three rows resident (180 words) and thrashes,
+        // while the lattice is favorable (shortest vector (4,1), L1 = 5 ≥
+        // diameter 3), so cache fitting's diagonal pencils fit.
+        use crate::cache::CacheSim;
+        let cache = CacheParams::new(1, 64, 1); // direct-mapped, 64 words
+        let g = GridDesc::new(&[60, 32]);
+        let r = 1;
+        let lat = InterferenceLattice::new(g.storage_dims(), cache.lattice_modulus());
+        let star = crate::stencil::Stencil::star(2, 1);
+        let deltas: Vec<i64> = star.offsets().iter().map(|o| g.delta_of(o)).collect();
+
+        let run = |order: &Order| -> (u64, u64) {
+            let mut sim = CacheSim::new(cache);
+            let mut x = vec![0i64; 2];
+            for &p in order.packed() {
+                Order::unpack(p, &mut x);
+                let base = g.offset_of(&x) as i64;
+                for &dl in &deltas {
+                    sim.access((base + dl) as u64);
+                }
+            }
+            (sim.stats().misses(), sim.stats().replacement_misses)
+        };
+        let (nat_misses, nat_repl) = run(&natural(&g, r));
+        let (fit_misses, fit_repl) = run(&cache_fitting(&g, r, &lat));
+        // Cold misses are unavoidable for both; the algorithm's claim is
+        // about *replacement* misses (ρ in the paper), which must drop
+        // sharply on a favorable lattice.
+        assert!(
+            (fit_repl as f64) < 0.6 * nat_repl as f64,
+            "fitting repl {fit_repl} vs natural repl {nat_repl}"
+        );
+        assert!(fit_misses < nat_misses, "total {fit_misses} vs {nat_misses}");
+    }
+}

@@ -1,0 +1,347 @@
+//! Traversal orders over the K-interior of a grid.
+//!
+//! The paper's entire subject is *which order* to visit grid points in:
+//! the number of replacement loads depends only on the visit order (given
+//! layout). This module provides:
+//!
+//! - [`natural`] — lexicographic column-major order: what the compiled
+//!   Fortran loop nest does (the paper's baseline, Figure 4 top line);
+//! - [`blocked`] — classical rectangular tiling (the tile-size-selection
+//!   baseline of Coleman–McKinley [3] / the CME blocks of [4]);
+//! - [`cache_fitting`] — the paper's contribution (§4): sweep the faces of
+//!   the fundamental parallelepiped of a *reduced basis* of the
+//!   interference lattice along pencils (see [`fitting`]);
+//! - [`strip`] — the §3 example order that attains the lower bound when
+//!   `n_1 = k·S` and associativity exceeds the stencil diameter.
+//!
+//! All constructors produce an [`Order`]: a materialized point sequence
+//! over the interior, packed 16 bits per coordinate. Every order visits
+//! exactly the same point set (property-tested), so simulated miss counts
+//! are directly comparable.
+
+pub mod fitting;
+pub mod tiled;
+
+use crate::grid::GridDesc;
+
+pub use fitting::{cache_fitting, cache_fitting_for_cache, cache_fitting_sweep, FittingOptions};
+pub use tiled::{conflict_free_tile, tiled_z_sweep};
+
+/// Maximum dimensions representable by the packed encoding.
+pub const MAX_DIMS: usize = 4;
+
+/// A materialized traversal order over interior points.
+/// Coordinates are packed little-endian, 16 bits per dimension.
+#[derive(Debug, Clone)]
+pub struct Order {
+    ndim: usize,
+    points: Vec<u64>,
+}
+
+impl Order {
+    pub(crate) fn from_packed(ndim: usize, points: Vec<u64>) -> Order {
+        assert!(ndim >= 1 && ndim <= MAX_DIMS);
+        Order { ndim, points }
+    }
+
+    #[inline]
+    pub fn pack(x: &[i64]) -> u64 {
+        debug_assert!(x.len() <= MAX_DIMS);
+        let mut p = 0u64;
+        for (i, &xi) in x.iter().enumerate() {
+            debug_assert!((0..65536).contains(&xi), "coordinate out of packed range: {xi}");
+            p |= (xi as u64) << (16 * i);
+        }
+        p
+    }
+
+    #[inline]
+    pub fn unpack(p: u64, out: &mut [i64]) {
+        for (i, o) in out.iter_mut().enumerate() {
+            *o = ((p >> (16 * i)) & 0xFFFF) as i64;
+        }
+    }
+
+    pub fn ndim(&self) -> usize {
+        self.ndim
+    }
+
+    pub fn len(&self) -> usize {
+        self.points.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.points.is_empty()
+    }
+
+    pub fn packed(&self) -> &[u64] {
+        &self.points
+    }
+
+    /// Visit every point in order with its coordinate vector.
+    pub fn for_each(&self, mut f: impl FnMut(&[i64])) {
+        let mut x = vec![0i64; self.ndim];
+        for &p in &self.points {
+            Self::unpack(p, &mut x);
+            f(&x);
+        }
+    }
+
+    /// The linear word offsets of the visited points (given grid strides).
+    pub fn linear_offsets(&self, grid: &GridDesc) -> Vec<u64> {
+        let mut x = vec![0i64; self.ndim];
+        self.points
+            .iter()
+            .map(|&p| {
+                Self::unpack(p, &mut x);
+                grid.offset_of(&x)
+            })
+            .collect()
+    }
+
+    /// Sorted copy of the packed points — canonical form for set-equality
+    /// checks between orders.
+    pub fn canonical_set(&self) -> Vec<u64> {
+        let mut v = self.points.clone();
+        v.sort_unstable();
+        v
+    }
+}
+
+/// Enumerate the interior ranges, or an empty order if no interior exists.
+fn interior_or_empty(grid: &GridDesc, r: usize) -> Option<Vec<std::ops::Range<i64>>> {
+    assert!(grid.ndim() <= MAX_DIMS, "packed orders support up to {MAX_DIMS} dims");
+    grid.interior(r)
+}
+
+/// Natural (lexicographic, dim-0-fastest) order over the K-interior —
+/// the compiled loop nest of the paper's baseline.
+pub fn natural(grid: &GridDesc, r: usize) -> Order {
+    let d = grid.ndim();
+    let Some(ranges) = interior_or_empty(grid, r) else {
+        return Order::from_packed(d, Vec::new());
+    };
+    let n: u64 = ranges.iter().map(|rg| (rg.end - rg.start) as u64).product();
+    let mut points = Vec::with_capacity(n as usize);
+    let mut x: Vec<i64> = ranges.iter().map(|rg| rg.start).collect();
+    loop {
+        points.push(Order::pack(&x));
+        let mut i = 0;
+        loop {
+            x[i] += 1;
+            if x[i] < ranges[i].end {
+                break;
+            }
+            x[i] = ranges[i].start;
+            i += 1;
+            if i == d {
+                return Order::from_packed(d, points);
+            }
+        }
+    }
+}
+
+/// Classical rectangular tiling: visit tile-by-tile (tiles ordered
+/// lexicographically), natural order within each tile. `tile[i]` is the
+/// tile extent along dim i.
+pub fn blocked(grid: &GridDesc, r: usize, tile: &[usize]) -> Order {
+    let d = grid.ndim();
+    assert_eq!(tile.len(), d);
+    assert!(tile.iter().all(|&t| t >= 1));
+    let Some(ranges) = interior_or_empty(grid, r) else {
+        return Order::from_packed(d, Vec::new());
+    };
+    let mut points = Vec::new();
+    // tile origin odometer
+    let mut origin: Vec<i64> = ranges.iter().map(|rg| rg.start).collect();
+    'tiles: loop {
+        // points within tile
+        let hi: Vec<i64> = (0..d).map(|i| (origin[i] + tile[i] as i64).min(ranges[i].end)).collect();
+        let mut x = origin.clone();
+        'points: loop {
+            points.push(Order::pack(&x));
+            let mut i = 0;
+            loop {
+                x[i] += 1;
+                if x[i] < hi[i] {
+                    continue 'points;
+                }
+                x[i] = origin[i];
+                i += 1;
+                if i == d {
+                    break 'points;
+                }
+            }
+        }
+        // advance tile origin
+        let mut i = 0;
+        loop {
+            origin[i] += tile[i] as i64;
+            if origin[i] < ranges[i].end {
+                break;
+            }
+            origin[i] = ranges[i].start;
+            i += 1;
+            if i == d {
+                break 'tiles;
+            }
+        }
+    }
+    Order::from_packed(d, points)
+}
+
+/// The §3 lower-bound-attaining order: partition dim 0 into strips of
+/// `width` points; for each strip, sweep the remaining dims naturally with
+/// dim 0 innermost within the strip:
+///
+/// ```text
+/// do strip                      (i in the paper, k·a strips)
+///   do x_d … x_2                (j in the paper)
+///     do x_1 in strip           (i1)
+/// ```
+pub fn strip(grid: &GridDesc, r: usize, width: usize) -> Order {
+    let d = grid.ndim();
+    assert!(width >= 1);
+    let Some(ranges) = interior_or_empty(grid, r) else {
+        return Order::from_packed(d, Vec::new());
+    };
+    let mut points = Vec::new();
+    let (lo0, hi0) = (ranges[0].start, ranges[0].end);
+    let mut s_lo = lo0;
+    while s_lo < hi0 {
+        let s_hi = (s_lo + width as i64).min(hi0);
+        if d == 1 {
+            let mut x = vec![0i64];
+            for x0 in s_lo..s_hi {
+                x[0] = x0;
+                points.push(Order::pack(&x));
+            }
+        } else {
+            // odometer over dims 1..d
+            let mut x: Vec<i64> = ranges.iter().map(|rg| rg.start).collect();
+            'outer: loop {
+                for x0 in s_lo..s_hi {
+                    x[0] = x0;
+                    points.push(Order::pack(&x));
+                }
+                let mut i = 1;
+                loop {
+                    x[i] += 1;
+                    if x[i] < ranges[i].end {
+                        break;
+                    }
+                    x[i] = ranges[i].start;
+                    i += 1;
+                    if i == d {
+                        break 'outer;
+                    }
+                }
+            }
+        }
+        s_lo = s_hi;
+    }
+    Order::from_packed(d, points)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn grid_3d() -> GridDesc {
+        GridDesc::new(&[8, 7, 6])
+    }
+
+    #[test]
+    fn pack_unpack_roundtrip() {
+        let x = [3i64, 65535, 0, 7];
+        let p = Order::pack(&x);
+        let mut y = [0i64; 4];
+        Order::unpack(p, &mut y);
+        assert_eq!(x, y);
+    }
+
+    #[test]
+    fn natural_matches_interior_count_and_order() {
+        let g = grid_3d();
+        let o = natural(&g, 1);
+        assert_eq!(o.len() as u64, g.interior_points(1));
+        // first point is (1,1,1); second is (2,1,1) — dim 0 fastest.
+        let mut pts = Vec::new();
+        o.for_each(|x| pts.push(x.to_vec()));
+        assert_eq!(pts[0], vec![1, 1, 1]);
+        assert_eq!(pts[1], vec![2, 1, 1]);
+        assert_eq!(*pts.last().unwrap(), vec![6, 5, 4]);
+    }
+
+    #[test]
+    fn natural_empty_when_no_interior() {
+        let g = GridDesc::new(&[3, 3]);
+        assert!(natural(&g, 2).is_empty());
+    }
+
+    #[test]
+    fn blocked_same_set_as_natural() {
+        let g = grid_3d();
+        let nat = natural(&g, 1);
+        for tile in [[2usize, 2, 2], [3, 5, 1], [100, 1, 2]] {
+            let b = blocked(&g, 1, &tile);
+            assert_eq!(b.canonical_set(), nat.canonical_set(), "tile {tile:?}");
+        }
+    }
+
+    #[test]
+    fn blocked_visits_tile_first() {
+        let g = GridDesc::new(&[6, 6]);
+        let b = blocked(&g, 1, &[2, 2]);
+        let mut pts = Vec::new();
+        b.for_each(|x| pts.push((x[0], x[1])));
+        // first tile covers (1..3)×(1..3)
+        assert_eq!(&pts[..4], &[(1, 1), (2, 1), (1, 2), (2, 2)]);
+    }
+
+    #[test]
+    fn strip_same_set_as_natural() {
+        let g = grid_3d();
+        let nat = natural(&g, 1);
+        for w in [1usize, 2, 3, 100] {
+            let s = strip(&g, 1, w);
+            assert_eq!(s.canonical_set(), nat.canonical_set(), "width {w}");
+        }
+    }
+
+    #[test]
+    fn strip_order_shape() {
+        let g = GridDesc::new(&[8, 4]);
+        let s = strip(&g, 1, 3);
+        let mut pts = Vec::new();
+        s.for_each(|x| pts.push((x[0], x[1])));
+        // interior x0 in 1..7, x1 in 1..3; first strip x0 in 1..4 sweeps all x1
+        assert_eq!(&pts[..6], &[(1, 1), (2, 1), (3, 1), (1, 2), (2, 2), (3, 2)]);
+        // second strip picks up x0 in 4..7
+        assert_eq!(pts[6], (4, 1));
+    }
+
+    #[test]
+    fn linear_offsets_match_strides() {
+        let g = GridDesc::new(&[5, 5]);
+        let o = natural(&g, 1);
+        let offs = o.linear_offsets(&g);
+        assert_eq!(offs[0], 6); // (1,1) → 1 + 5
+        assert_eq!(offs[1], 7); // (2,1)
+    }
+
+    #[test]
+    fn property_all_orders_are_permutations() {
+        use crate::util::proptest::{forall, DimsGen};
+        forall(21, 25, &DimsGen { d: 3, lo: 5, hi: 14 }, |dims| {
+            let g = GridDesc::new(dims);
+            let nat = natural(&g, 2).canonical_set();
+            let b = blocked(&g, 2, &[3, 2, 4]).canonical_set();
+            let s = strip(&g, 2, 4).canonical_set();
+            // canonical sets must be identical AND free of duplicates
+            let mut dedup = nat.clone();
+            dedup.dedup();
+            nat == b && nat == s && dedup.len() == nat.len()
+        });
+    }
+}

@@ -1,0 +1,184 @@
+//! Traversal auto-tuner.
+//!
+//! The paper gives a family of lattice-guided traversals (§4 pencil sweep;
+//! the §3/§4-remark axis-swept tiles); which one wins on a concrete grid
+//! depends on the lattice geometry in ways the closed-form bounds are too
+//! loose to rank (the Eq 12 constant `c''_d = r(2r+1)^d·2d·2^{d(d−1)/4}`
+//! is ~4·10³ for the 13-point star). The tuner does what a production
+//! system does: run each candidate on a cheap **calibration slice** of the
+//! grid (the paper itself notes the third dimension is irrelevant to the
+//! interference phenomenon — the lattice only involves n_1…n_{d−1}) and
+//! pick the argmin before committing to the full sweep.
+
+use crate::cache::{CacheParams, CacheSim};
+use crate::engine;
+use crate::grid::{GridDesc, MultiArrayLayout};
+use crate::stencil::Stencil;
+use crate::traversal::{self, FittingOptions, Order};
+
+/// A candidate traversal family member.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Candidate {
+    /// §4 pencil sweep with options.
+    Pencil { sweep_index: Option<usize> },
+    /// Axis-swept lattice tile (3-D only) with occupancy budget and z block.
+    TiledZ { assoc: usize, tz: usize },
+    /// Lexicographic baseline.
+    Natural,
+}
+
+impl Candidate {
+    pub fn name(&self) -> String {
+        match self {
+            Candidate::Pencil { sweep_index: None } => "pencil".into(),
+            Candidate::Pencil { sweep_index: Some(i) } => format!("pencil(iv={i})"),
+            Candidate::TiledZ { assoc, tz } => format!("tiled(a={assoc},tz={tz})"),
+            Candidate::Natural => "natural".into(),
+        }
+    }
+
+    /// Materialize the order for `grid`.
+    pub fn build(&self, grid: &GridDesc, r: usize, cache: &CacheParams) -> Order {
+        match self {
+            Candidate::Pencil { sweep_index } => {
+                let lat = crate::lattice::InterferenceLattice::new(grid.storage_dims(), cache.lattice_modulus());
+                traversal::fitting::cache_fitting_opts(
+                    grid,
+                    r,
+                    &lat,
+                    &FittingOptions { sweep_index: *sweep_index, ..FittingOptions::default() },
+                )
+            }
+            Candidate::TiledZ { assoc, tz } => {
+                let (t1, t2) =
+                    traversal::tiled::conflict_free_tile_assoc(grid.storage_dims(), cache.lattice_modulus(), r, *assoc);
+                let tz_eff = (*tz).min(grid.dims()[grid.ndim() - 1]).max(1);
+                let mut tile = vec![t1, t2];
+                tile.push(tz_eff);
+                traversal::blocked(grid, r, &tile)
+            }
+            Candidate::Natural => traversal::natural(grid, r),
+        }
+    }
+}
+
+/// The fitting-family candidate set (what the paper's "cache fitting
+/// algorithm" line uses in FIG4 — natural excluded on purpose so the
+/// unfavorable-grid pathology stays visible, as in the paper's figure).
+pub fn fitting_candidates(d: usize) -> Vec<Candidate> {
+    let mut c = vec![Candidate::Pencil { sweep_index: None }];
+    for iv in 0..d {
+        c.push(Candidate::Pencil { sweep_index: Some(iv) });
+    }
+    if d == 3 {
+        c.push(Candidate::TiledZ { assoc: 1, tz: 16 });
+        c.push(Candidate::TiledZ { assoc: 2, tz: 16 });
+        c.push(Candidate::TiledZ { assoc: 2, tz: 32 });
+    }
+    c
+}
+
+/// Outcome of tuning: the winning candidate and its calibration misses.
+#[derive(Debug)]
+pub struct Tuned {
+    pub candidate: Candidate,
+    pub calib_misses: u64,
+}
+
+/// Pick the best candidate for (grid, stencil, cache) by simulating each
+/// on a z-thinned calibration grid (last dim clamped to `calib_z`).
+pub fn tune(grid: &GridDesc, stencil: &Stencil, cache: &CacheParams, candidates: &[Candidate], calib_z: usize) -> Tuned {
+    assert!(!candidates.is_empty());
+    let d = grid.ndim();
+    let mut calib_dims = grid.dims().to_vec();
+    if d >= 2 {
+        calib_dims[d - 1] = calib_dims[d - 1].min(calib_z.max(2 * stencil.radius() + 2));
+    }
+    // preserve padding in the calibration grid
+    let pad: Vec<usize> = grid.storage_dims().iter().zip(grid.dims()).map(|(&s, &l)| s - l).collect();
+    let calib = GridDesc::with_padding(&calib_dims, &pad);
+    let layout = MultiArrayLayout::paper_offsets(&calib, 1, cache.size_words());
+    let mut best: Option<Tuned> = None;
+    for cand in candidates {
+        let order = cand.build(&calib, stencil.radius(), cache);
+        let mut sim = CacheSim::new(*cache);
+        let rep = engine::simulate(&order, &layout, stencil, &mut sim);
+        let misses = rep.total.misses();
+        if best.as_ref().map(|b| misses < b.calib_misses).unwrap_or(true) {
+            best = Some(Tuned { candidate: cand.clone(), calib_misses: misses });
+        }
+    }
+    best.unwrap()
+}
+
+/// One-call convenience: tune over the fitting family and build the
+/// winning order for the full grid.
+pub fn auto_fitting_order(grid: &GridDesc, stencil: &Stencil, cache: &CacheParams) -> (Order, Candidate) {
+    let tuned = tune(grid, stencil, cache, &fitting_candidates(grid.ndim()), 16);
+    let order = tuned.candidate.build(grid, stencil.radius(), cache);
+    (order, tuned.candidate)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tuner_picks_a_candidate() {
+        let grid = GridDesc::new(&[44, 91, 30]);
+        let stencil = Stencil::star13();
+        let cache = CacheParams::r10000();
+        let tuned = tune(&grid, &stencil, &cache, &fitting_candidates(3), 16);
+        assert!(tuned.calib_misses > 0);
+    }
+
+    #[test]
+    fn auto_order_is_permutation_of_natural() {
+        let grid = GridDesc::new(&[30, 28, 20]);
+        let stencil = Stencil::star(3, 1);
+        let cache = CacheParams::new(2, 64, 2);
+        let (order, _) = auto_fitting_order(&grid, &stencil, &cache);
+        assert_eq!(
+            order.canonical_set(),
+            traversal::natural(&grid, 1).canonical_set()
+        );
+    }
+
+    #[test]
+    fn auto_beats_natural_on_favorable_fig4_grid() {
+        let grid = GridDesc::new(&[44, 91, 40]);
+        let stencil = Stencil::star13();
+        let cache = CacheParams::r10000();
+        let layout = MultiArrayLayout::paper_offsets(&grid, 1, cache.size_words());
+        let run = |order: &Order| {
+            let mut sim = CacheSim::new(cache);
+            engine::simulate(order, &layout, &stencil, &mut sim).total.misses()
+        };
+        let nat = run(&traversal::natural(&grid, 2));
+        let (auto, cand) = auto_fitting_order(&grid, &stencil, &cache);
+        let fit = run(&auto);
+        assert!(
+            (fit as f64) < 0.45 * nat as f64,
+            "auto ({}) {fit} vs natural {nat}",
+            cand.name()
+        );
+    }
+
+    #[test]
+    fn tuner_respects_2d_grids() {
+        let grid = GridDesc::new(&[60, 32]);
+        let stencil = Stencil::star(2, 1);
+        let cache = CacheParams::new(1, 64, 1);
+        let cands = fitting_candidates(2);
+        assert!(cands.iter().all(|c| !matches!(c, Candidate::TiledZ { .. })));
+        let tuned = tune(&grid, &stencil, &cache, &cands, 16);
+        let _ = tuned.candidate.build(&grid, 1, &cache);
+    }
+
+    #[test]
+    fn candidate_names_stable() {
+        assert_eq!(Candidate::Natural.name(), "natural");
+        assert_eq!(Candidate::TiledZ { assoc: 2, tz: 16 }.name(), "tiled(a=2,tz=16)");
+        assert_eq!(Candidate::Pencil { sweep_index: Some(1) }.name(), "pencil(iv=1)");
+    }
+}

@@ -1,0 +1,237 @@
+//! Micro/meso benchmark harness (no criterion offline).
+//!
+//! Provides warmup, calibrated iteration counts, outlier-robust summary
+//! statistics, and throughput reporting. All `rust/benches/*.rs` targets
+//! (`harness = false`) are built on this.
+
+use super::stats::Summary;
+use std::time::{Duration, Instant};
+
+/// Configuration for a benchmark run.
+#[derive(Debug, Clone)]
+pub struct BenchConfig {
+    /// Minimum wall-clock time to spend in warmup.
+    pub warmup: Duration,
+    /// Minimum wall-clock time to spend measuring.
+    pub measure: Duration,
+    /// Maximum number of samples collected (caps very fast functions).
+    pub max_samples: usize,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        BenchConfig { warmup: Duration::from_millis(200), measure: Duration::from_millis(800), max_samples: 200 }
+    }
+}
+
+impl BenchConfig {
+    /// Quick mode for CI/tests: minimal warmup and measurement.
+    pub fn quick() -> Self {
+        BenchConfig { warmup: Duration::from_millis(10), measure: Duration::from_millis(50), max_samples: 20 }
+    }
+
+    /// Honors the STENCILCACHE_BENCH_QUICK env var so `cargo bench` can be
+    /// smoke-run quickly in constrained environments.
+    pub fn from_env() -> Self {
+        if std::env::var("STENCILCACHE_BENCH_QUICK").is_ok() {
+            Self::quick()
+        } else {
+            Self::default()
+        }
+    }
+}
+
+/// Result of one benchmark: per-iteration timings plus optional items/iter
+/// for throughput reporting.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub samples_ns: Vec<f64>,
+    pub items_per_iter: Option<f64>,
+}
+
+impl BenchResult {
+    pub fn summary(&self) -> Summary {
+        Summary::of(&self.samples_ns)
+    }
+
+    /// Median time per iteration in nanoseconds.
+    pub fn median_ns(&self) -> f64 {
+        self.summary().p50
+    }
+
+    /// Items processed per second at the median timing.
+    pub fn throughput(&self) -> Option<f64> {
+        self.items_per_iter.map(|items| items * 1e9 / self.median_ns())
+    }
+
+    /// One-line human-readable report.
+    pub fn report_line(&self) -> String {
+        let s = self.summary();
+        let mut line = format!(
+            "{:<44} {:>12}/iter  (p50 {:>12}, p90 {:>12}, n={})",
+            self.name,
+            fmt_ns(s.mean),
+            fmt_ns(s.p50),
+            fmt_ns(s.p90),
+            s.n
+        );
+        if let Some(tp) = self.throughput() {
+            line.push_str(&format!("  {:>14}/s", fmt_count(tp)));
+        }
+        line
+    }
+}
+
+/// Format nanoseconds with an adaptive unit.
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Format a count/throughput with an adaptive SI suffix.
+pub fn fmt_count(x: f64) -> String {
+    if x >= 1e9 {
+        format!("{:.2} G", x / 1e9)
+    } else if x >= 1e6 {
+        format!("{:.2} M", x / 1e6)
+    } else if x >= 1e3 {
+        format!("{:.2} k", x / 1e3)
+    } else {
+        format!("{x:.1} ")
+    }
+}
+
+/// A benchmark group that runs closures and prints a report.
+pub struct Bencher {
+    config: BenchConfig,
+    results: Vec<BenchResult>,
+}
+
+impl Bencher {
+    pub fn new(config: BenchConfig) -> Bencher {
+        Bencher { config, results: Vec::new() }
+    }
+
+    pub fn from_env() -> Bencher {
+        Bencher::new(BenchConfig::from_env())
+    }
+
+    /// Benchmark `f`, which performs one logical iteration per call and
+    /// returns a value that is passed to `std::hint::black_box`.
+    pub fn bench<T, F: FnMut() -> T>(&mut self, name: &str, mut f: F) -> &BenchResult {
+        self.bench_with_items(name, None, &mut f)
+    }
+
+    /// Like `bench` but records `items` processed per iteration so the
+    /// report includes throughput (e.g. cache accesses/s, grid points/s).
+    pub fn bench_items<T, F: FnMut() -> T>(&mut self, name: &str, items: f64, mut f: F) -> &BenchResult {
+        self.bench_with_items(name, Some(items), &mut f)
+    }
+
+    fn bench_with_items<T>(&mut self, name: &str, items: Option<f64>, f: &mut dyn FnMut() -> T) -> &BenchResult {
+        // Warmup until the clock budget is spent; also estimates iteration cost.
+        let warm_start = Instant::now();
+        let mut iters_done = 0u64;
+        while warm_start.elapsed() < self.config.warmup || iters_done == 0 {
+            std::hint::black_box(f());
+            iters_done += 1;
+            if iters_done > 1_000_000 {
+                break;
+            }
+        }
+        let est_ns = (warm_start.elapsed().as_nanos() as f64 / iters_done as f64).max(1.0);
+
+        // Choose a batch size so each sample takes >= ~100µs, bounding timer noise.
+        let batch = ((100_000.0 / est_ns).ceil() as u64).max(1);
+        let mut samples = Vec::new();
+        let measure_start = Instant::now();
+        while measure_start.elapsed() < self.config.measure && samples.len() < self.config.max_samples {
+            let t0 = Instant::now();
+            for _ in 0..batch {
+                std::hint::black_box(f());
+            }
+            samples.push(t0.elapsed().as_nanos() as f64 / batch as f64);
+        }
+        let result = BenchResult { name: name.to_string(), samples_ns: samples, items_per_iter: items };
+        println!("{}", result.report_line());
+        self.results.push(result);
+        self.results.last().unwrap()
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+
+    /// Write all results as a JSON array (used to snapshot bench runs).
+    pub fn to_json(&self) -> super::json::Json {
+        use super::json::Json;
+        let mut arr = Vec::new();
+        for r in &self.results {
+            let s = r.summary();
+            let mut o = Json::obj();
+            o.set("name", r.name.as_str())
+                .set("mean_ns", s.mean)
+                .set("p50_ns", s.p50)
+                .set("p90_ns", s.p90)
+                .set("n", s.n);
+            if let Some(tp) = r.throughput() {
+                o.set("throughput_per_s", tp);
+            }
+            arr.push(o);
+        }
+        Json::Arr(arr)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick() -> Bencher {
+        Bencher::new(BenchConfig { warmup: Duration::from_millis(1), measure: Duration::from_millis(5), max_samples: 10 })
+    }
+
+    #[test]
+    fn bench_produces_samples() {
+        let mut b = quick();
+        let r = b.bench("noop-ish", || 1 + 1);
+        assert!(!r.samples_ns.is_empty());
+        assert!(r.median_ns() >= 0.0);
+    }
+
+    #[test]
+    fn throughput_reported_when_items_given() {
+        let mut b = quick();
+        let r = b.bench_items("sum", 1000.0, || (0..1000u64).sum::<u64>());
+        assert!(r.throughput().unwrap() > 0.0);
+        assert!(r.report_line().contains("/s"));
+    }
+
+    #[test]
+    fn json_snapshot_shape() {
+        let mut b = quick();
+        b.bench("x", || 0);
+        let j = b.to_json().to_string();
+        assert!(j.contains("\"name\":\"x\""));
+        assert!(j.contains("mean_ns"));
+    }
+
+    #[test]
+    fn fmt_helpers() {
+        assert_eq!(fmt_ns(12.3), "12.3 ns");
+        assert!(fmt_ns(12_345.0).contains("µs"));
+        assert!(fmt_ns(12_345_678.0).contains("ms"));
+        assert!(fmt_ns(2e9).contains(" s"));
+        assert!(fmt_count(5e9).contains("G"));
+        assert!(fmt_count(5e6).contains("M"));
+        assert!(fmt_count(5e3).contains("k"));
+    }
+}

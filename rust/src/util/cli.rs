@@ -1,0 +1,179 @@
+//! Tiny command-line argument parser (no clap offline).
+//!
+//! Supports the subset the `stencilcache` binary and the experiment drivers
+//! need: `--flag`, `--key value`, `--key=value`, positional arguments, and
+//! automatically generated usage text.
+
+use std::collections::BTreeMap;
+
+/// Parsed arguments: named options plus positionals, with typed accessors.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positional: Vec<String>,
+    known_flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (excluding argv[0]).
+    /// `flag_names` lists options that take no value; everything else of the
+    /// form `--key v` consumes the following token as its value.
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I, flag_names: &[&str]) -> Result<Args, String> {
+        let mut args = Args { known_flags: flag_names.iter().map(|s| s.to_string()).collect(), ..Default::default() };
+        let mut it = raw.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(stripped) = tok.strip_prefix("--") {
+                if stripped.is_empty() {
+                    // "--" terminates option parsing; remainder is positional.
+                    args.positional.extend(it);
+                    break;
+                }
+                if let Some((k, v)) = stripped.split_once('=') {
+                    args.opts.insert(k.to_string(), v.to_string());
+                } else if flag_names.contains(&stripped) {
+                    args.flags.push(stripped.to_string());
+                } else if let Some(v) = it.peek() {
+                    if v.starts_with("--") {
+                        return Err(format!("option --{stripped} expects a value"));
+                    }
+                    let v = it.next().unwrap();
+                    args.opts.insert(stripped.to_string(), v);
+                } else {
+                    return Err(format!("option --{stripped} expects a value"));
+                }
+            } else {
+                args.positional.push(tok);
+            }
+        }
+        Ok(args)
+    }
+
+    /// Parse the process's own argv (minus the binary name).
+    pub fn from_env(flag_names: &[&str]) -> Result<Args, String> {
+        Self::parse(std::env::args().skip(1), flag_names)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name) || self.opts.get(name).map(|v| v == "true").unwrap_or(false)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    /// Typed accessor with default; returns Err on malformed values rather
+    /// than silently substituting the default.
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{name}: expected unsigned integer, got {v:?}")),
+        }
+    }
+
+    pub fn get_i64(&self, name: &str, default: i64) -> Result<i64, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{name}: expected integer, got {v:?}")),
+        }
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> Result<f64, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{name}: expected float, got {v:?}")),
+        }
+    }
+
+    /// Parse a comma-separated dimension list such as "64,91,100".
+    pub fn get_dims(&self, name: &str, default: &[usize]) -> Result<Vec<usize>, String> {
+        match self.get(name) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|p| p.trim().parse::<usize>().map_err(|_| format!("--{name}: bad dimension {p:?} in {v:?}")))
+                .collect(),
+        }
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+
+    /// First positional argument (typically a subcommand).
+    pub fn command(&self) -> Option<&str> {
+        self.positional.first().map(|s| s.as_str())
+    }
+
+    pub fn known_flags(&self) -> &[String] {
+        &self.known_flags
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(toks: &[&str], flags: &[&str]) -> Args {
+        Args::parse(toks.iter().map(|s| s.to_string()), flags).unwrap()
+    }
+
+    #[test]
+    fn positional_and_options() {
+        let a = parse(&["experiment", "fig4", "--n2", "91", "--verbose"], &["verbose"]);
+        assert_eq!(a.command(), Some("experiment"));
+        assert_eq!(a.positional(), &["experiment".to_string(), "fig4".to_string()]);
+        assert_eq!(a.get("n2"), Some("91"));
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = parse(&["--cache=2,512,4", "--seed=7"], &[]);
+        assert_eq!(a.get("cache"), Some("2,512,4"));
+        assert_eq!(a.get_usize("seed", 0).unwrap(), 7);
+    }
+
+    #[test]
+    fn typed_accessors_and_defaults() {
+        let a = parse(&["--x", "2.5"], &[]);
+        assert_eq!(a.get_f64("x", 0.0).unwrap(), 2.5);
+        assert_eq!(a.get_f64("y", 1.5).unwrap(), 1.5);
+        assert_eq!(a.get_usize("n", 10).unwrap(), 10);
+    }
+
+    #[test]
+    fn malformed_value_is_error() {
+        let a = parse(&["--n", "abc"], &[]);
+        assert!(a.get_usize("n", 0).is_err());
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        let r = Args::parse(["--key".to_string()].into_iter(), &[]);
+        assert!(r.is_err());
+        let r2 = Args::parse(["--key".to_string(), "--other".to_string(), "v".to_string()].into_iter(), &[]);
+        assert!(r2.is_err());
+    }
+
+    #[test]
+    fn dims_parsing() {
+        let a = parse(&["--dims", "64,91,100"], &[]);
+        assert_eq!(a.get_dims("dims", &[1]).unwrap(), vec![64, 91, 100]);
+        assert_eq!(a.get_dims("other", &[2, 3]).unwrap(), vec![2, 3]);
+        let bad = parse(&["--dims", "64,x"], &[]);
+        assert!(bad.get_dims("dims", &[]).is_err());
+    }
+
+    #[test]
+    fn double_dash_stops_parsing() {
+        let a = parse(&["--a", "1", "--", "--not-an-opt"], &[]);
+        assert_eq!(a.get("a"), Some("1"));
+        assert_eq!(a.positional(), &["--not-an-opt".to_string()]);
+    }
+}

@@ -1,0 +1,120 @@
+//! Tiny leveled logger writing to stderr (no `log`/`env_logger` wiring
+//! needed at this scale). Level is controlled by `STENCILCACHE_LOG`
+//! (error|warn|info|debug|trace; default info).
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::time::Instant;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+    Trace = 4,
+}
+
+impl Level {
+    pub fn parse(s: &str) -> Option<Level> {
+        match s.to_ascii_lowercase().as_str() {
+            "error" => Some(Level::Error),
+            "warn" | "warning" => Some(Level::Warn),
+            "info" => Some(Level::Info),
+            "debug" => Some(Level::Debug),
+            "trace" => Some(Level::Trace),
+            _ => None,
+        }
+    }
+
+    pub fn tag(self) -> &'static str {
+        match self {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN ",
+            Level::Info => "INFO ",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        }
+    }
+}
+
+static MAX_LEVEL: AtomicU8 = AtomicU8::new(2); // Info
+static START: std::sync::OnceLock<Instant> = std::sync::OnceLock::new();
+
+/// Initialize from the environment; idempotent.
+pub fn init() {
+    START.get_or_init(Instant::now);
+    if let Ok(v) = std::env::var("STENCILCACHE_LOG") {
+        if let Some(l) = Level::parse(&v) {
+            set_level(l);
+        }
+    }
+}
+
+pub fn set_level(l: Level) {
+    MAX_LEVEL.store(l as u8, Ordering::Relaxed);
+}
+
+pub fn level() -> Level {
+    match MAX_LEVEL.load(Ordering::Relaxed) {
+        0 => Level::Error,
+        1 => Level::Warn,
+        2 => Level::Info,
+        3 => Level::Debug,
+        _ => Level::Trace,
+    }
+}
+
+pub fn enabled(l: Level) -> bool {
+    (l as u8) <= MAX_LEVEL.load(Ordering::Relaxed)
+}
+
+/// Log a preformatted message at `l`. Prefer the macros.
+pub fn log(l: Level, target: &str, msg: std::fmt::Arguments<'_>) {
+    if !enabled(l) {
+        return;
+    }
+    let t = START.get_or_init(Instant::now).elapsed();
+    eprintln!("[{:>9.3}s {} {}] {}", t.as_secs_f64(), l.tag(), target, msg);
+}
+
+#[macro_export]
+macro_rules! log_error { ($($arg:tt)*) => { $crate::util::logger::log($crate::util::logger::Level::Error, module_path!(), format_args!($($arg)*)) } }
+#[macro_export]
+macro_rules! log_warn { ($($arg:tt)*) => { $crate::util::logger::log($crate::util::logger::Level::Warn, module_path!(), format_args!($($arg)*)) } }
+#[macro_export]
+macro_rules! log_info { ($($arg:tt)*) => { $crate::util::logger::log($crate::util::logger::Level::Info, module_path!(), format_args!($($arg)*)) } }
+#[macro_export]
+macro_rules! log_debug { ($($arg:tt)*) => { $crate::util::logger::log($crate::util::logger::Level::Debug, module_path!(), format_args!($($arg)*)) } }
+#[macro_export]
+macro_rules! log_trace { ($($arg:tt)*) => { $crate::util::logger::log($crate::util::logger::Level::Trace, module_path!(), format_args!($($arg)*)) } }
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_levels() {
+        assert_eq!(Level::parse("info"), Some(Level::Info));
+        assert_eq!(Level::parse("WARN"), Some(Level::Warn));
+        assert_eq!(Level::parse("warning"), Some(Level::Warn));
+        assert_eq!(Level::parse("bogus"), None);
+    }
+
+    #[test]
+    fn level_ordering_controls_enabled() {
+        set_level(Level::Warn);
+        assert!(enabled(Level::Error));
+        assert!(enabled(Level::Warn));
+        assert!(!enabled(Level::Info));
+        set_level(Level::Trace);
+        assert!(enabled(Level::Trace));
+        set_level(Level::Info); // restore default for other tests
+    }
+
+    #[test]
+    fn log_does_not_panic() {
+        init();
+        log(Level::Info, "test", format_args!("hello {}", 42));
+    }
+}

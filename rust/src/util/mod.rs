@@ -1,0 +1,20 @@
+//! Substrate utilities built from scratch for the offline environment
+//! (no tokio / clap / criterion / proptest / rand / serde available):
+//!
+//! - [`rng`] — xoshiro256** PRNG (deterministic experiments)
+//! - [`stats`] — summaries, percentiles, correlation
+//! - [`json`] — minimal JSON emitter for metrics snapshots
+//! - [`cli`] — argument parsing for the `stencilcache` binary
+//! - [`threadpool`] — fixed worker pool + parallel map
+//! - [`bench`] — warmup/calibrated benchmark harness
+//! - [`proptest`] — property-based testing with shrinking
+//! - [`logger`] — leveled stderr logger
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod logger;
+pub mod proptest;
+pub mod rng;
+pub mod stats;
+pub mod threadpool;

@@ -1,0 +1,160 @@
+//! Minimal property-based testing harness (no proptest crate offline).
+//!
+//! `forall(seed, cases, gen, prop)` draws `cases` random inputs from `gen`
+//! and checks `prop` on each; on failure it performs greedy shrinking via
+//! the generator's `shrink` hook and reports the minimal counterexample.
+//!
+//! The generators used across the test-suite (grid dims, cache params,
+//! stencil radii) live here so every module's property tests share them.
+
+use super::rng::Rng;
+
+/// A random-input generator with optional shrinking.
+pub trait Gen {
+    type Value: Clone + std::fmt::Debug;
+    fn generate(&self, rng: &mut Rng) -> Self::Value;
+    /// Candidate smaller versions of `v`, in decreasing preference order.
+    fn shrink(&self, _v: &Self::Value) -> Vec<Self::Value> {
+        Vec::new()
+    }
+}
+
+/// Run a property over `cases` random inputs. Panics with the (shrunk)
+/// counterexample on failure, mirroring proptest's behaviour.
+pub fn forall<G: Gen>(seed: u64, cases: usize, gen: &G, prop: impl Fn(&G::Value) -> bool) {
+    let mut rng = Rng::new(seed);
+    for case in 0..cases {
+        let v = gen.generate(&mut rng);
+        if !prop(&v) {
+            let minimal = shrink_loop(gen, v, &prop);
+            panic!("property failed (case {case}/{cases}, seed {seed}); minimal counterexample: {minimal:?}");
+        }
+    }
+}
+
+fn shrink_loop<G: Gen>(gen: &G, mut v: G::Value, prop: &impl Fn(&G::Value) -> bool) -> G::Value {
+    // Greedy descent: take the first failing shrink candidate, repeat.
+    let mut budget = 1000;
+    'outer: while budget > 0 {
+        for cand in gen.shrink(&v) {
+            budget -= 1;
+            if !prop(&cand) {
+                v = cand;
+                continue 'outer;
+            }
+        }
+        break;
+    }
+    v
+}
+
+// ---------------------------------------------------------------------------
+// Shared generators
+// ---------------------------------------------------------------------------
+
+/// Uniform usize in [lo, hi], shrinking toward lo.
+pub struct UsizeIn {
+    pub lo: usize,
+    pub hi: usize,
+}
+
+impl Gen for UsizeIn {
+    type Value = usize;
+    fn generate(&self, rng: &mut Rng) -> usize {
+        self.lo + rng.below_usize(self.hi - self.lo + 1)
+    }
+    fn shrink(&self, v: &usize) -> Vec<usize> {
+        let mut out = Vec::new();
+        if *v > self.lo {
+            out.push(self.lo);
+            out.push(self.lo + (*v - self.lo) / 2);
+            out.push(*v - 1);
+        }
+        out.dedup();
+        out
+    }
+}
+
+/// Grid dimensions: `d` dims each in [lo, hi], shrinking each dim toward lo.
+pub struct DimsGen {
+    pub d: usize,
+    pub lo: usize,
+    pub hi: usize,
+}
+
+impl Gen for DimsGen {
+    type Value = Vec<usize>;
+    fn generate(&self, rng: &mut Rng) -> Vec<usize> {
+        (0..self.d).map(|_| self.lo + rng.below_usize(self.hi - self.lo + 1)).collect()
+    }
+    fn shrink(&self, v: &Vec<usize>) -> Vec<Vec<usize>> {
+        let mut out = Vec::new();
+        for i in 0..v.len() {
+            if v[i] > self.lo {
+                let mut smaller = v.clone();
+                smaller[i] = self.lo + (v[i] - self.lo) / 2;
+                out.push(smaller);
+                let mut minus = v.clone();
+                minus[i] -= 1;
+                out.push(minus);
+            }
+        }
+        out
+    }
+}
+
+/// Pair of independent generators.
+pub struct PairGen<A, B>(pub A, pub B);
+
+impl<A: Gen, B: Gen> Gen for PairGen<A, B> {
+    type Value = (A::Value, B::Value);
+    fn generate(&self, rng: &mut Rng) -> Self::Value {
+        (self.0.generate(rng), self.1.generate(rng))
+    }
+    fn shrink(&self, v: &Self::Value) -> Vec<Self::Value> {
+        let mut out: Vec<Self::Value> =
+            self.0.shrink(&v.0).into_iter().map(|a| (a, v.1.clone())).collect();
+        out.extend(self.1.shrink(&v.1).into_iter().map(|b| (v.0.clone(), b)));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        forall(1, 200, &UsizeIn { lo: 1, hi: 100 }, |&x| x >= 1 && x <= 100);
+    }
+
+    #[test]
+    fn failing_property_shrinks_to_minimum() {
+        // Property "x < 10" fails for x >= 10; minimal counterexample is 10.
+        let result = std::panic::catch_unwind(|| {
+            forall(2, 500, &UsizeIn { lo: 0, hi: 1000 }, |&x| x < 10);
+        });
+        let err = result.unwrap_err();
+        let msg = err.downcast_ref::<String>().expect("panic message");
+        assert!(msg.contains("counterexample: 10"), "got: {msg}");
+    }
+
+    #[test]
+    fn dims_gen_in_bounds() {
+        let g = DimsGen { d: 3, lo: 4, hi: 16 };
+        let mut rng = Rng::new(3);
+        for _ in 0..100 {
+            let dims = g.generate(&mut rng);
+            assert_eq!(dims.len(), 3);
+            assert!(dims.iter().all(|&n| (4..=16).contains(&n)));
+        }
+    }
+
+    #[test]
+    fn pair_gen_shrinks_both_sides() {
+        let g = PairGen(UsizeIn { lo: 0, hi: 10 }, UsizeIn { lo: 0, hi: 10 });
+        let shrinks = g.shrink(&(5, 5));
+        assert!(shrinks.iter().any(|&(a, b)| a < 5 && b == 5));
+        assert!(shrinks.iter().any(|&(a, b)| a == 5 && b < 5));
+    }
+}

@@ -1,0 +1,237 @@
+//! Fixed-size worker thread pool (no tokio/rayon offline).
+//!
+//! Used by the coordinator's worker tier and by the experiment drivers to
+//! parallelize independent grid simulations (FIG5A sweeps ~3600 grids).
+//! Design: one shared MPMC queue guarded by a Mutex + Condvar; jobs are
+//! boxed closures. `scope_map` provides the common "parallel map over an
+//! index range" pattern with panic propagation.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+struct Shared {
+    queue: Mutex<VecDeque<Job>>,
+    cond: Condvar,
+    shutdown: AtomicBool,
+}
+
+/// A fixed pool of worker threads executing boxed jobs FIFO.
+pub struct ThreadPool {
+    shared: Arc<Shared>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl ThreadPool {
+    /// Spawn `n` workers (clamped to at least 1).
+    pub fn new(n: usize) -> ThreadPool {
+        let n = n.max(1);
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(VecDeque::new()),
+            cond: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+        });
+        let workers = (0..n)
+            .map(|i| {
+                let shared = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("stencilcache-worker-{i}"))
+                    .spawn(move || worker_loop(&shared))
+                    .expect("failed to spawn worker thread")
+            })
+            .collect();
+        ThreadPool { shared, workers }
+    }
+
+    /// Pool sized to the machine (leaving one core for the coordinator).
+    pub fn with_default_parallelism() -> ThreadPool {
+        let n = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+        ThreadPool::new(n.saturating_sub(1).max(1))
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Enqueue a job.
+    pub fn submit<F: FnOnce() + Send + 'static>(&self, job: F) {
+        let mut q = self.shared.queue.lock().unwrap();
+        q.push_back(Box::new(job));
+        drop(q);
+        self.shared.cond.notify_one();
+    }
+
+    /// Parallel map: apply `f` to every index in `0..n`, returning results in
+    /// index order. Panics in workers are propagated to the caller.
+    ///
+    /// `f` must be `Sync` because all workers share one reference to it.
+    pub fn scope_map<T, F>(&self, n: usize, f: F) -> Vec<T>
+    where
+        T: Send + 'static,
+        F: Fn(usize) -> T + Sync,
+    {
+        if n == 0 {
+            return Vec::new();
+        }
+        let results: Vec<Mutex<Option<T>>> = (0..n).map(|_| Mutex::new(None)).collect();
+        let next = AtomicUsize::new(0);
+        let panicked = AtomicBool::new(false);
+        // SAFETY-free approach: use std scoped threads are unavailable inside a
+        // pool, so we run the work-stealing loop on the *caller* thread plus
+        // the pool via raw pointers wrapped in an Arc'd closure would require
+        // 'static. Instead we use std::thread::scope directly here: the pool's
+        // value is its reusable workers for `submit`; scope_map gets its own
+        // scoped threads sized to the pool. This keeps lifetimes safe without
+        // unsafe code.
+        let width = self.workers.len().min(n);
+        std::thread::scope(|s| {
+            for _ in 0..width {
+                s.spawn(|| loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n || panicked.load(Ordering::Relaxed) {
+                        break;
+                    }
+                    let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(i)));
+                    match out {
+                        Ok(v) => *results[i].lock().unwrap() = Some(v),
+                        Err(_) => {
+                            panicked.store(true, Ordering::Relaxed);
+                            break;
+                        }
+                    }
+                });
+            }
+        });
+        if panicked.load(Ordering::Relaxed) {
+            panic!("scope_map: worker panicked");
+        }
+        results
+            .into_iter()
+            .map(|m| m.into_inner().unwrap().expect("scope_map: missing result"))
+            .collect()
+    }
+
+    /// Block until the queue is empty and all in-flight jobs finished.
+    /// Implemented with a completion-counting barrier job per worker.
+    pub fn wait_idle(&self) {
+        let n = self.workers.len();
+        let barrier = Arc::new(std::sync::Barrier::new(n + 1));
+        for _ in 0..n {
+            let b = Arc::clone(&barrier);
+            self.submit(move || {
+                b.wait();
+            });
+        }
+        barrier.wait();
+    }
+}
+
+fn worker_loop(shared: &Shared) {
+    loop {
+        let job = {
+            let mut q = shared.queue.lock().unwrap();
+            loop {
+                if let Some(job) = q.pop_front() {
+                    break Some(job);
+                }
+                if shared.shutdown.load(Ordering::Acquire) {
+                    break None;
+                }
+                q = shared.cond.wait(q).unwrap();
+            }
+        };
+        match job {
+            Some(job) => {
+                // A panicking job must not kill the worker; the pool keeps
+                // serving. catch_unwind keeps long experiment sweeps alive.
+                let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(job));
+            }
+            None => return,
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        self.shared.shutdown.store(true, Ordering::Release);
+        self.shared.cond.notify_all();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn submit_runs_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            pool.submit(move || {
+                c.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        pool.wait_idle();
+        assert_eq!(counter.load(Ordering::Relaxed), 100);
+    }
+
+    #[test]
+    fn scope_map_orders_results() {
+        let pool = ThreadPool::new(3);
+        let out = pool.scope_map(50, |i| i * i);
+        assert_eq!(out, (0..50).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn scope_map_empty() {
+        let pool = ThreadPool::new(2);
+        let out: Vec<usize> = pool.scope_map(0, |i| i);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn scope_map_more_tasks_than_workers() {
+        let pool = ThreadPool::new(1);
+        let out = pool.scope_map(10, |i| i + 1);
+        assert_eq!(out, (1..=10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    #[should_panic(expected = "scope_map: worker panicked")]
+    fn scope_map_propagates_panic() {
+        let pool = ThreadPool::new(2);
+        let _ = pool.scope_map(8, |i| {
+            if i == 3 {
+                panic!("boom");
+            }
+            i
+        });
+    }
+
+    #[test]
+    fn pool_survives_panicking_submitted_job() {
+        let pool = ThreadPool::new(2);
+        pool.submit(|| panic!("job panic"));
+        let counter = Arc::new(AtomicU64::new(0));
+        let c = Arc::clone(&counter);
+        pool.submit(move || {
+            c.fetch_add(1, Ordering::Relaxed);
+        });
+        pool.wait_idle();
+        assert_eq!(counter.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn drop_joins_workers() {
+        let pool = ThreadPool::new(2);
+        drop(pool); // must not hang
+    }
+}

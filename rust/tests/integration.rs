@@ -1,0 +1,166 @@
+//! Cross-module integration tests: the full pipeline from planning through
+//! simulation and (when artifacts are present) PJRT execution.
+
+use stencilcache::cache::{CacheParams, CacheSim};
+use stencilcache::coordinator::{Coordinator, JobKind, PlannerConfig, StencilRequest, StencilSpec, TraversalChoice};
+use stencilcache::engine;
+use stencilcache::grid::{GridDesc, MultiArrayLayout};
+use stencilcache::lattice::InterferenceLattice;
+use stencilcache::stencil::Stencil;
+use stencilcache::traversal;
+use stencilcache::tuner;
+
+/// The paper's core qualitative claim, end to end through the public API:
+/// on a favorable grid, the planner's fitting traversal strictly reduces
+/// replacement misses vs the natural order; on the Figure-4 spike grid the
+/// padding advisor rescues it.
+#[test]
+fn paper_story_end_to_end() {
+    let cache = CacheParams::r10000();
+    let stencil = Stencil::star13();
+
+    // favorable grid: fitting wins
+    let good = GridDesc::new(&[44, 91, 30]);
+    let layout = MultiArrayLayout::paper_offsets(&good, 1, cache.size_words());
+    let mut sim = CacheSim::new(cache);
+    let nat = engine::simulate(&traversal::natural(&good, 2), &layout, &stencil, &mut sim);
+    let (fit_order, _) = tuner::auto_fitting_order(&good, &stencil, &cache);
+    let mut sim2 = CacheSim::new(cache);
+    let fit = engine::simulate(&fit_order, &layout, &stencil, &mut sim2);
+    assert!(fit.total.misses() * 2 < nat.total.misses(), "fit {} vs nat {}", fit.total.misses(), nat.total.misses());
+
+    // spike grid: unfavorable, advisor pads, padded grid behaves
+    let bad = GridDesc::new(&[45, 91, 30]);
+    assert!(stencilcache::padding::is_unfavorable(&bad, &stencil, &cache));
+    let advice = stencilcache::padding::advise(&bad, &stencil, &cache, 8);
+    assert!(advice.favorable);
+    let padded = GridDesc::with_padding(bad.dims(), &advice.pad);
+    let playout = MultiArrayLayout::paper_offsets(&padded, 1, cache.size_words());
+    let (porder, _) = tuner::auto_fitting_order(&padded, &stencil, &cache);
+    let mut sim3 = CacheSim::new(cache);
+    let padded_fit = engine::simulate(&porder, &playout, &stencil, &mut sim3);
+    let mut sim4 = CacheSim::new(cache);
+    let bad_layout = MultiArrayLayout::paper_offsets(&bad, 1, cache.size_words());
+    let (border, _) = tuner::auto_fitting_order(&bad, &stencil, &cache);
+    let bad_fit = engine::simulate(&border, &bad_layout, &stencil, &mut sim4);
+    assert!(
+        padded_fit.misses_per_point() < 0.5 * bad_fit.misses_per_point(),
+        "padding must rescue the spike grid: {} vs {}",
+        padded_fit.misses_per_point(),
+        bad_fit.misses_per_point()
+    );
+}
+
+/// Eq 7 must lower-bound measured u-loads for *every* traversal order —
+/// it is a lower bound on the problem, not on an algorithm.
+#[test]
+fn lower_bound_holds_for_all_orders() {
+    let cache = CacheParams::new(2, 64, 2); // S = 256
+    let grid = GridDesc::new(&[24, 22, 18]);
+    let stencil = Stencil::star(3, 1);
+    let lb = stencilcache::bounds::lower_bound_loads(&grid, cache.size_words());
+    let layout = MultiArrayLayout::paper_offsets(&grid, 1, cache.size_words());
+    let orders = vec![
+        ("natural", traversal::natural(&grid, 1)),
+        ("blocked8", traversal::blocked(&grid, 1, &[8, 8, 8])),
+        ("strip4", traversal::strip(&grid, 1, 4)),
+        ("fitting", traversal::cache_fitting_for_cache(&grid, 1, &cache)),
+        ("tiled", traversal::tiled_z_sweep(&grid, 1, cache.size_words())),
+    ];
+    for (name, order) in orders {
+        let mut sim = CacheSim::new(cache);
+        let rep = engine::simulate(&order, &layout, &stencil, &mut sim);
+        // Eq 7 is stated for loads of u over the K-interior computation.
+        assert!(
+            rep.u_loads as f64 >= lb * 0.999,
+            "{name}: measured {} < lower bound {lb}",
+            rep.u_loads
+        );
+    }
+}
+
+/// The coordinator's full mixed-workload serve path with failure injection:
+/// invalid requests fail cleanly without poisoning the batch.
+#[test]
+fn serve_with_failure_injection() {
+    let coord = Coordinator::analysis_only(PlannerConfig::default());
+    let mut reqs: Vec<StencilRequest> = (0..6).map(|i| StencilRequest::analyze(&[14 + i % 2, 14, 14])).collect();
+    reqs.insert(2, StencilRequest { dims: vec![0, 4], stencil: StencilSpec::Star { r: 1 }, rhs_arrays: 1, kind: JobKind::Plan });
+    reqs.insert(5, StencilRequest { dims: vec![16, 16, 16], stencil: StencilSpec::Star13, rhs_arrays: 0, kind: JobKind::Plan });
+    let resps = coord.serve(&reqs);
+    assert_eq!(resps.len(), 8);
+    assert!(resps[2].is_err());
+    assert!(resps[5].is_err());
+    let ok = resps.iter().filter(|r| r.is_ok()).count();
+    assert_eq!(ok, 6);
+}
+
+/// Planner invariants across a random sample of shapes (property-style).
+#[test]
+fn planner_invariants_random_grids() {
+    use stencilcache::util::proptest::{forall, DimsGen};
+    let config = PlannerConfig::default();
+    forall(99, 25, &DimsGen { d: 3, lo: 12, hi: 80 }, |dims| {
+        let plan = stencilcache::coordinator::plan(&config, dims, &Stencil::star13(), 1);
+        let storage_ok = plan.storage_dims.iter().zip(dims).all(|(&s, &l)| s >= l);
+        let bounds_ok = plan.lower_bound <= plan.upper_bound && plan.lower_bound >= 0.0;
+        let pad_ok = plan.pad.len() == 3 && plan.pad[2] == 0;
+        storage_ok && bounds_ok && pad_ok
+    });
+}
+
+/// PJRT round trip (skipped gracefully when artifacts are absent).
+#[test]
+fn pjrt_solve_through_coordinator() {
+    let Ok(svc) = stencilcache::runtime::RuntimeService::start(None) else {
+        eprintln!("skipping: no artifacts");
+        return;
+    };
+    let coord = Coordinator::with_runtime(PlannerConfig::default(), svc.handle());
+    let resp = coord
+        .submit(&StencilRequest {
+            dims: vec![16, 16, 16],
+            stencil: StencilSpec::Star13,
+            rhs_arrays: 1,
+            kind: JobKind::Solve { steps: 8 },
+        })
+        .expect("solve");
+    assert_eq!(resp.solve_log.len(), 8);
+    // energy decreases monotonically under the stable explicit step
+    for w in resp.solve_log.windows(2) {
+        assert!(w[1].u_norm <= w[0].u_norm * 1.0001, "{:?}", w);
+    }
+    // analysis jobs work on the same coordinator
+    let a = coord
+        .submit(&StencilRequest {
+            dims: vec![20, 20, 20],
+            stencil: StencilSpec::Star13,
+            rhs_arrays: 1,
+            kind: JobKind::AnalyzeWith(TraversalChoice::Natural),
+        })
+        .expect("analyze");
+    assert!(a.miss_report.unwrap().total.misses() > 0);
+}
+
+/// Lattice ↔ simulator consistency: two addresses collide in the simulated
+/// cache iff their index difference is in the interference lattice.
+#[test]
+fn lattice_predicts_simulated_conflicts() {
+    let cache = CacheParams::new(1, 64, 1); // direct-mapped, S = 64: collisions exact
+    let dims = [12usize, 10];
+    let grid = GridDesc::new(&dims);
+    let lat = InterferenceLattice::new(&dims, cache.lattice_modulus());
+    let mut sim = CacheSim::new(cache);
+    let mut rng = stencilcache::util::rng::Rng::new(3);
+    for _ in 0..200 {
+        let a = [rng.below(12 as u64) as i64, rng.below(10) as i64];
+        let b = [rng.below(12) as i64, rng.below(10) as i64];
+        let diff = [a[0] - b[0], a[1] - b[1]];
+        let addr_a = grid.offset_of(&a);
+        let addr_b = grid.offset_of(&b);
+        let same_set = cache.set_of(addr_a) == cache.set_of(addr_b);
+        assert_eq!(lat.contains(&diff), same_set, "a={a:?} b={b:?}");
+        sim.access(addr_a);
+        sim.access(addr_b);
+    }
+}
