@@ -1,0 +1,3 @@
+"""Build-time compilation layer: JAX/Pallas kernels (L1), model graphs and
+AOT lowering to HLO text (L2). Imported as ``compile`` with ``python/`` on
+``sys.path`` (the test suite's conftest arranges this)."""

@@ -12,8 +12,9 @@ sweep this kernel uses:
 - x,y are kept whole (the face `F` of the sweep; contiguous in the
   (8,128)-tiled register layout),
 - z is blocked: each program instance receives an *overlapping* window
-  `[k·bz − r, k·bz + bz + r)` of the zero-padded input (`pl.Element`
-  indexing), computes one z-slab of the output, and the Pallas pipeline
+  `[k·bz − r, k·bz + bz + r)` of the zero-padded input (element-offset
+  indexing — `pl.unblocked` here, `pl.Element` in newer jax), computes one
+  z-slab of the output, and the Pallas pipeline
   double-buffers consecutive windows — the moral equivalent of the paper's
   scanning face `F + k·w` sweeping a pencil.
 
@@ -86,10 +87,23 @@ def _fused_jacobi_kernel(u_ref, uwin_ref, alpha_ref, o_ref):
 
 def _specs(shape, bz):
     nx, ny, nz = shape
-    in_win = pl.BlockSpec(
-        (nx + 2 * R, ny + 2 * R, pl.Element(bz + 2 * R, padding=(0, 0))),
-        lambda k: (0, 0, k * bz),
-    )
+    # Overlapping z-windows need *element* indexing: program k reads the
+    # padded slab starting at element k·bz (windows of bz+2r planes overlap
+    # by 2r). jax 0.4.x spells this `indexing_mode=pl.unblocked` (index map
+    # returns element offsets for every dim); newer jax replaced that with
+    # per-dim `pl.Element` markers. Branch on the API so the kernel runs on
+    # both generations.
+    if hasattr(pl, "Element"):
+        in_win = pl.BlockSpec(
+            (nx + 2 * R, ny + 2 * R, pl.Element(bz + 2 * R, padding=(0, 0))),
+            lambda k: (0, 0, k * bz),
+        )
+    else:
+        in_win = pl.BlockSpec(
+            (nx + 2 * R, ny + 2 * R, bz + 2 * R),
+            lambda k: (0, 0, k * bz),
+            indexing_mode=pl.unblocked,
+        )
     out_spec = pl.BlockSpec((nx, ny, bz), lambda k: (0, 0, k))
     return in_win, out_spec
 

@@ -1,0 +1,63 @@
+"""Test bootstrap: put ``python/`` on sys.path so ``compile.*`` imports
+resolve, and provide a minimal in-repo fallback for ``hypothesis`` when the
+real package is unavailable (offline CI images bake in jax/numpy/pytest but
+not necessarily hypothesis).
+
+The fallback implements just the surface these tests use — ``given``,
+``settings`` and the ``integers``/``floats`` strategies — running a fixed
+number of deterministically seeded examples per test. It does no shrinking;
+it exists so the suite stays runnable (and still sweeps dozens of sampled
+cases) without the dependency.
+"""
+
+import os
+import random
+import sys
+import types
+
+sys.path.insert(0, os.path.abspath(os.path.join(os.path.dirname(__file__), "..")))
+
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+
+    class _Strategy:
+        def __init__(self, sample):
+            self.sample = sample
+
+    def _integers(min_value, max_value):
+        return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+    def _floats(min_value=None, max_value=None, allow_nan=True, **_kw):
+        lo = -1e9 if min_value is None else min_value
+        hi = 1e9 if max_value is None else max_value
+        return _Strategy(lambda rng: rng.uniform(lo, hi))
+
+    def _settings(max_examples=20, deadline=None, **_kw):
+        def deco(fn):
+            fn._hyp_max_examples = max_examples
+            return fn
+
+        return deco
+
+    def _given(**strategies):
+        def deco(fn):
+            def wrapper(*args, **kwargs):
+                rng = random.Random(0xC0FFEE)
+                for _ in range(getattr(wrapper, "_hyp_max_examples", 20)):
+                    drawn = {k: s.sample(rng) for k, s in strategies.items()}
+                    fn(*args, **drawn, **kwargs)
+
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            return wrapper
+
+        return deco
+
+    _hyp = types.ModuleType("hypothesis")
+    _hyp.given = _given
+    _hyp.settings = _settings
+    _hyp.strategies = types.SimpleNamespace(integers=_integers, floats=_floats)
+    _hyp.__doc__ = "minimal offline fallback installed by python/tests/conftest.py"
+    sys.modules["hypothesis"] = _hyp
+    sys.modules["hypothesis.strategies"] = _hyp.strategies

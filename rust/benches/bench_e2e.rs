@@ -1,13 +1,38 @@
 //! End-to-end bench: the coordinator serving a mixed workload (plans,
 //! analyses, PJRT executes) through batching + thread pool — the headline
-//! L3 throughput number for §Perf.
+//! L3 throughput number for §Perf — plus the sharded-vs-sequential
+//! streaming analysis scaling check.
 
+use stencilcache::cache::{CacheParams, CacheSim};
 use stencilcache::coordinator::{Coordinator, JobKind, PlannerConfig, StencilRequest, StencilSpec};
+use stencilcache::engine;
+use stencilcache::grid::{GridDesc, MultiArrayLayout};
 use stencilcache::runtime::RuntimeService;
+use stencilcache::stencil::Stencil;
+use stencilcache::traversal;
 use stencilcache::util::bench::Bencher;
+use stencilcache::util::threadpool::ThreadPool;
 
 fn main() {
     let mut b = Bencher::from_env();
+
+    // sharded streaming analysis: same 96³ star13 job, sequential vs fanned
+    // out over the pool — wall time should scale with cores.
+    let grid = GridDesc::new(&[96, 96, 96]);
+    let cache = CacheParams::r10000();
+    let stencil = Stencil::star13();
+    let layout = MultiArrayLayout::paper_offsets(&grid, 1, cache.size_words());
+    let accesses = grid.interior_points(2) as f64 * 14.0;
+    let t = traversal::natural_stream(&grid, 2);
+    b.bench_items("analyze_96^3/sequential", accesses, || {
+        let mut sim = CacheSim::new(cache);
+        engine::simulate(&t, &layout, &stencil, &mut sim)
+    });
+    let pool = ThreadPool::with_default_parallelism();
+    let shards = pool.workers() * 2;
+    b.bench_items("analyze_96^3/sharded", accesses, || {
+        engine::simulate_sharded(&t, &layout, &stencil, cache, &pool, shards)
+    });
 
     // analysis-only serving (no PJRT dependency)
     let coord = Coordinator::analysis_only(PlannerConfig::default());

@@ -1,8 +1,11 @@
 //! Bench: traversal-order generation (the planner-side cost of the cache
-//! fitting algorithm) plus the sweep-vector / candidate ablation.
+//! fitting algorithm), the sweep-vector / candidate ablation, and the
+//! streaming-vs-materialized engine comparison on 128³ (the streaming path
+//! must be no slower — it skips the packed-order allocation entirely).
 
-use stencilcache::cache::CacheParams;
-use stencilcache::grid::GridDesc;
+use stencilcache::cache::{CacheParams, CacheSim};
+use stencilcache::engine;
+use stencilcache::grid::{GridDesc, MultiArrayLayout};
 use stencilcache::lattice::InterferenceLattice;
 use stencilcache::stencil::Stencil;
 use stencilcache::traversal::{self, FittingOptions};
@@ -29,6 +32,9 @@ fn main() {
     });
     b.bench_items("order/tiled_z", pts, || traversal::tiled::tiled_z_sweep(&grid, 2, 4096));
 
+    // streaming constructors are O(pencils), not O(points): planning cost
+    b.bench_items("stream/fitting_construct", pts, || traversal::cache_fitting_stream(&grid, 2, &lat));
+
     // lattice machinery (per-grid planning costs)
     b.bench("lattice/build+reduce", || InterferenceLattice::new(grid.storage_dims(), 4096));
     b.bench("lattice/shortest_vector", || lat.shortest());
@@ -38,4 +44,39 @@ fn main() {
     // the full auto-tuner (calibration included)
     let stencil = Stencil::star13();
     b.bench("tuner/auto_fitting_order", || tuner::auto_fitting_order(&grid, &stencil, &cache));
+
+    // --- streaming vs materialized, end to end on 128³ -------------------
+    // Each iteration builds the order AND simulates it, so the materialized
+    // entries pay their packed-Vec allocation + pack/unpack, the streaming
+    // entries only the lazy generator. The natural pair replays the exact
+    // same visit sequence; the fitting pair shares the pencil decomposition
+    // and point multiset but may differ on within-pencil tie-breaks (f32
+    // sweep rounding vs exact f64), so compare its two entries on wall
+    // time, not miss-for-miss.
+    let big = GridDesc::new(&[128, 128, 128]);
+    let big_pts = big.interior_points(2) as f64;
+    let accesses = big_pts * 14.0;
+    let layout = MultiArrayLayout::paper_offsets(&big, 1, cache.size_words());
+    let big_lat = InterferenceLattice::new(big.storage_dims(), cache.lattice_modulus());
+
+    b.bench_items("e2e_128^3/natural_materialized", accesses, || {
+        let order = traversal::natural(&big, 2);
+        let mut sim = CacheSim::new(cache);
+        engine::simulate(&order, &layout, &stencil, &mut sim)
+    });
+    b.bench_items("e2e_128^3/natural_streaming", accesses, || {
+        let t = traversal::natural_stream(&big, 2);
+        let mut sim = CacheSim::new(cache);
+        engine::simulate(&t, &layout, &stencil, &mut sim)
+    });
+    b.bench_items("e2e_128^3/fitting_materialized", accesses, || {
+        let order = traversal::cache_fitting(&big, 2, &big_lat);
+        let mut sim = CacheSim::new(cache);
+        engine::simulate(&order, &layout, &stencil, &mut sim)
+    });
+    b.bench_items("e2e_128^3/fitting_streaming", accesses, || {
+        let t = traversal::cache_fitting_stream(&big, 2, &big_lat);
+        let mut sim = CacheSim::new(cache);
+        engine::simulate(&t, &layout, &stencil, &mut sim)
+    });
 }

@@ -40,6 +40,24 @@ pub fn group_by_shape(keys: &[BatchKey]) -> Vec<Batch> {
     batches
 }
 
+/// Flatten batches into a worklist of request indices for the worker pool.
+///
+/// Batch-major so same-shape requests run adjacently (cache-hot
+/// executables and shared traversal geometry), with batches ordered by
+/// descending estimated weight — longest-processing-time-first keeps the
+/// pool's tail short when one giant shape batch dominates a mixed
+/// workload. Weight = member count × grid volume. Within a batch,
+/// submission order is preserved; response slots are re-mapped by the
+/// caller, so this ordering never changes observable results.
+pub fn schedule(batches: &[Batch]) -> Vec<usize> {
+    let mut order: Vec<&Batch> = batches.iter().collect();
+    order.sort_by_key(|b| {
+        let volume: u64 = b.key.dims.iter().map(|&d| d as u64).product();
+        std::cmp::Reverse(volume.saturating_mul(b.members.len() as u64))
+    });
+    order.iter().flat_map(|b| b.members.iter().copied()).collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -67,6 +85,27 @@ mod tests {
     #[test]
     fn empty_input() {
         assert!(group_by_shape(&[]).is_empty());
+    }
+
+    #[test]
+    fn schedule_is_a_permutation_heaviest_first() {
+        let keys = vec![
+            key("analyze", &[8, 8, 8]),
+            key("analyze", &[64, 64, 64]),
+            key("analyze", &[8, 8, 8]),
+            key("analyze", &[64, 64, 64]),
+            key("analyze", &[8, 8, 8]),
+        ];
+        let batches = group_by_shape(&keys);
+        let order = schedule(&batches);
+        // permutation of all indices
+        let mut sorted = order.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, vec![0, 1, 2, 3, 4]);
+        // the 64³ batch (heavier despite fewer members) runs first
+        assert_eq!(&order[..2], &[1, 3]);
+        // submission order preserved within each batch
+        assert_eq!(&order[2..], &[0, 2, 4]);
     }
 
     #[test]

@@ -15,6 +15,10 @@ pub struct Metrics {
     pub points_processed: AtomicU64,
     pub sim_accesses: AtomicU64,
     pub sim_misses: AtomicU64,
+    /// Analyze jobs that fanned out across pencil shards.
+    pub sharded_analyses: AtomicU64,
+    /// Total pencil shards executed on the worker pool.
+    pub shards_executed: AtomicU64,
     pub pjrt_executions: AtomicU64,
     pub pjrt_micros: AtomicU64,
 }
@@ -39,6 +43,8 @@ impl Metrics {
             .set("points_processed", self.points_processed.load(Ordering::Relaxed))
             .set("sim_accesses", self.sim_accesses.load(Ordering::Relaxed))
             .set("sim_misses", self.sim_misses.load(Ordering::Relaxed))
+            .set("sharded_analyses", self.sharded_analyses.load(Ordering::Relaxed))
+            .set("shards_executed", self.shards_executed.load(Ordering::Relaxed))
             .set("pjrt_executions", self.pjrt_executions.load(Ordering::Relaxed))
             .set("pjrt_micros", self.pjrt_micros.load(Ordering::Relaxed));
         o

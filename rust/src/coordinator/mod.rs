@@ -5,10 +5,12 @@
 //!
 //! ```text
 //! StencilRequest ─▶ Planner (lattice analysis, padding, traversal choice,
-//!                   bound predictions)
-//!                ─▶ Batcher (group by shape/kind)
+//!                   shard recommendation, bound predictions)
+//!                ─▶ Batcher (group by shape/kind, heaviest batch first)
 //!                ─▶ Workers (thread pool):
-//!                     Analyze  → traversal order → engine::simulate
+//!                     Analyze  → streaming traversal → engine::simulate,
+//!                                fanned out over pencil shards when the
+//!                                interior is large (simulate_sharded)
 //!                     Execute  → PJRT artifact (runtime::execute)
 //!                     Solve    → repeated fused step+norms executions
 //! ```
@@ -21,16 +23,16 @@ mod batcher;
 mod metrics;
 mod planner;
 
-pub use batcher::{group_by_shape, Batch, BatchKey};
+pub use batcher::{group_by_shape, schedule, Batch, BatchKey};
 pub use metrics::Metrics;
-pub use planner::{plan, Plan, PlannerConfig, TraversalChoice};
+pub use planner::{plan, Plan, PlannerConfig, TraversalChoice, MAX_SHARDS, SHARD_GRAIN_POINTS};
 
 use crate::cache::CacheSim;
 use crate::engine::{self, MissReport};
 use crate::grid::{GridDesc, MultiArrayLayout};
 use crate::runtime::{HostTensor, RuntimeHandle};
 use crate::stencil::Stencil;
-use crate::traversal::{self, Order};
+use crate::traversal::{self, Traversal};
 use crate::util::threadpool::ThreadPool;
 use anyhow::{anyhow, bail, Result};
 use std::sync::Arc;
@@ -126,13 +128,24 @@ pub struct Coordinator {
     runtime: Option<Arc<RuntimeHandle>>,
     pool: ThreadPool,
     metrics: Arc<Metrics>,
+    /// Analyses currently executing — divides the shard budget so that
+    /// concurrent jobs inside `serve` share the machine instead of each
+    /// fanning out to the full worker count (nested fan-out would run
+    /// O(workers²) simulator threads).
+    active_analyses: std::sync::atomic::AtomicUsize,
 }
 
 impl Coordinator {
     /// Analysis-only coordinator (no PJRT): plans and simulations work,
     /// Execute/Solve jobs fail with a clear error.
     pub fn analysis_only(config: PlannerConfig) -> Coordinator {
-        Coordinator { config, runtime: None, pool: ThreadPool::with_default_parallelism(), metrics: Arc::new(Metrics::new()) }
+        Coordinator {
+            config,
+            runtime: None,
+            pool: ThreadPool::with_default_parallelism(),
+            metrics: Arc::new(Metrics::new()),
+            active_analyses: std::sync::atomic::AtomicUsize::new(0),
+        }
     }
 
     /// Full coordinator with the PJRT runtime service attached.
@@ -142,6 +155,7 @@ impl Coordinator {
             runtime: Some(runtime),
             pool: ThreadPool::with_default_parallelism(),
             metrics: Arc::new(Metrics::new()),
+            active_analyses: std::sync::atomic::AtomicUsize::new(0),
         }
     }
 
@@ -172,9 +186,11 @@ impl Coordinator {
     pub fn serve(&self, reqs: &[StencilRequest]) -> Vec<Result<StencilResponse>> {
         let keys: Vec<BatchKey> = reqs.iter().map(|r| r.batch_key()).collect();
         let batches = group_by_shape(&keys);
-        // flatten batches into a worklist of request indices, batch-major:
-        // same-shape requests run adjacently (cache-hot executables/orders).
-        let ordered: Vec<usize> = batches.iter().flat_map(|b| b.members.iter().copied()).collect();
+        // flatten batches into a worklist of request indices, batch-major
+        // and heaviest-batch-first (see batcher::schedule): same-shape
+        // requests run adjacently (cache-hot executables/orders) and the
+        // pool's tail stays short on mixed workloads.
+        let ordered = schedule(&batches);
         let outcomes = self.pool.scope_map(ordered.len(), |slot| {
             let idx = ordered[slot];
             (idx, self.submit(&reqs[idx]))
@@ -216,16 +232,46 @@ impl Coordinator {
         let grid = GridDesc::with_padding(&plan.dims, &plan.pad);
         let r = stencil.radius();
         let choice = force.unwrap_or(plan.traversal);
-        let order: Order = match choice {
-            TraversalChoice::Natural => traversal::natural(&grid, r),
+        // The hot path is a lazy stream: nothing proportional to the grid
+        // is materialized, so Analyze scales to 512³+ grids whose packed
+        // visit sequence would not fit in memory.
+        let order: Box<dyn Traversal> = match choice {
+            TraversalChoice::Natural => Box::new(traversal::natural_stream(&grid, r)),
             TraversalChoice::CacheFitting => {
                 // the planner's fitting path is the auto-tuned family
-                crate::tuner::auto_fitting_order(&grid, stencil, &self.config.cache).0
+                crate::tuner::auto_fitting_traversal(&grid, stencil, &self.config.cache).0
             }
         };
         let layout = MultiArrayLayout::paper_offsets(&grid, req.rhs_arrays, self.config.cache.size_words());
-        let mut sim = CacheSim::new(self.config.cache);
-        let report = engine::simulate(&order, &layout, stencil, &mut sim);
+        // Fan big jobs out across pencil shards. The budget is the
+        // planner's recommendation clamped to this job's *share* of the
+        // worker pool: `scope_map` spawns fresh scoped threads per call, so
+        // N concurrent analyses each sharding to the full pool would run
+        // O(workers²) simulator threads. Dividing by the number of
+        // in-flight analyses keeps total fan-out ≈ the worker count; small
+        // jobs (or saturated pools) run the exact sequential sim.
+        // Decrement-on-drop guard: a panicking shard worker unwinds through
+        // here, and a leaked count would permanently shrink every later
+        // job's budget on this long-lived coordinator.
+        struct ActiveGuard<'a>(&'a std::sync::atomic::AtomicUsize);
+        impl Drop for ActiveGuard<'_> {
+            fn drop(&mut self) {
+                self.0.fetch_sub(1, std::sync::atomic::Ordering::SeqCst);
+            }
+        }
+        let active = self.active_analyses.fetch_add(1, std::sync::atomic::Ordering::SeqCst) + 1;
+        let _guard = ActiveGuard(&self.active_analyses);
+        let budget = (self.pool.workers() / active).max(1);
+        let shards = plan.shards.min(budget);
+        let report = if shards > 1 && order.num_pencils() > 1 {
+            let ran = traversal::shard_ranges(order.num_pencils(), shards).len() as u64;
+            Metrics::bump(&self.metrics.sharded_analyses, 1);
+            Metrics::bump(&self.metrics.shards_executed, ran);
+            engine::simulate_sharded(order.as_ref(), &layout, stencil, self.config.cache, &self.pool, shards)
+        } else {
+            let mut sim = CacheSim::new(self.config.cache);
+            engine::simulate(order.as_ref(), &layout, stencil, &mut sim)
+        };
         Metrics::bump(&self.metrics.analyzed, 1);
         Metrics::bump(&self.metrics.points_processed, report.points);
         Metrics::bump(&self.metrics.sim_accesses, report.total.accesses);
@@ -418,7 +464,20 @@ mod tests {
         let _ = c.submit(&StencilRequest::analyze(&[12, 12, 12]));
         let j = c.metrics_json();
         assert!(j.contains("sim_accesses"));
+        assert!(j.contains("sharded_analyses"));
         assert!(j.contains("pool_workers"));
+    }
+
+    #[test]
+    fn small_analyses_stay_sequential_and_exact() {
+        // below the shard grain the coordinator must run the exact
+        // sequential simulation (shard counters untouched)
+        let c = coord();
+        let resp = c.submit(&StencilRequest::analyze(&[20, 20, 20])).unwrap();
+        assert_eq!(resp.plan.shards, 1);
+        assert!(resp.miss_report.is_some());
+        assert_eq!(c.metrics.sharded_analyses.load(Ordering::Relaxed), 0);
+        assert_eq!(c.metrics.shards_executed.load(Ordering::Relaxed), 0);
     }
 
     #[test]

@@ -36,6 +36,11 @@ pub struct Plan {
     pub storage_dims: Vec<usize>,
     pub pad: Vec<usize>,
     pub traversal: TraversalChoice,
+    /// Recommended pencil-shard count for Analyze workers: 1 below
+    /// [`SHARD_GRAIN_POINTS`] (sequential, exact), growing with interior
+    /// volume so big jobs fan out across the pool. The coordinator clamps
+    /// this to its worker count.
+    pub shards: usize,
     /// §6 verdict on the *unpadded* layout.
     pub was_unfavorable: bool,
     /// Shortest lattice vector (L1, searched to the stencil diameter) of
@@ -64,6 +69,15 @@ impl Default for PlannerConfig {
         PlannerConfig { cache: CacheParams::r10000(), max_pad: 8, auto_pad: true }
     }
 }
+
+/// Interior points per Analyze shard: below this, sharding buys nothing
+/// (order generation and thread fan-out dominate) and the coordinator runs
+/// the exact sequential simulation instead.
+pub const SHARD_GRAIN_POINTS: u64 = 1 << 21;
+
+/// Hard cap on recommended shards (the coordinator further clamps to its
+/// worker count).
+pub const MAX_SHARDS: usize = 64;
 
 /// Produce a plan for evaluating `stencil` with `p` RHS arrays over `dims`.
 pub fn plan(config: &PlannerConfig, dims: &[usize], stencil: &Stencil, p: usize) -> Plan {
@@ -106,11 +120,15 @@ pub fn plan(config: &PlannerConfig, dims: &[usize], stencil: &Stencil, p: usize)
         (g, g) // 1-D: single sweep, every word loaded once
     };
 
+    let interior = padded.interior_points(stencil.radius());
+    let shards = (interior.div_ceil(SHARD_GRAIN_POINTS) as usize).clamp(1, MAX_SHARDS);
+
     Plan {
         dims: dims.to_vec(),
         storage_dims,
         pad,
         traversal,
+        shards,
         was_unfavorable,
         min_l1,
         eccentricity,
@@ -181,5 +199,20 @@ mod tests {
         let small = plan(&cfg(), &[32, 32, 32], &Stencil::star13(), 1);
         let big = plan(&cfg(), &[64, 64, 64], &Stencil::star13(), 1);
         assert!(big.lower_bound > 7.0 * small.lower_bound);
+    }
+
+    #[test]
+    fn shard_recommendation_scales_with_interior() {
+        // small grids stay sequential (exact simulation)
+        let small = plan(&cfg(), &[32, 32, 32], &Stencil::star13(), 1);
+        assert_eq!(small.shards, 1);
+        // just past the grain: 2 shards (div_ceil, not floor) — a ~170³
+        // interior is ~2.3 grains
+        let mid = plan(&cfg(), &[174, 174, 174], &Stencil::star13(), 1);
+        assert!(mid.shards >= 2, "shards = {}", mid.shards);
+        // a 512³ analyze fans out: interior ≈ 1.3·10⁸ points
+        let big = plan(&cfg(), &[512, 512, 512], &Stencil::star13(), 1);
+        assert!(big.shards > 8, "shards = {}", big.shards);
+        assert!(big.shards <= MAX_SHARDS);
     }
 }

@@ -1,4 +1,4 @@
-//! The stencil execution engine: walks a traversal [`Order`] and either
+//! The stencil execution engine: walks a [`Traversal`] stream and either
 //! feeds the induced address stream to a cache simulator (**analysis
 //! mode**) or computes the stencil numerically (**numeric mode**), or both.
 //!
@@ -6,11 +6,20 @@
 //! the paper's §6: per interior point it issues `|K|` reads of `u` (one per
 //! stencil vector, in stencil order) followed by one write of `q`, exactly
 //! like the compiled `q(i1,j,k) = c0*u(i1,j,k) + …` statement.
+//!
+//! All entry points consume the traversal as a *stream*: nothing
+//! proportional to the grid is materialized, so analysis scales to grids
+//! (512³+) whose visit sequence would not fit in memory. A materialized
+//! [`crate::traversal::Order`] still works everywhere — it is itself a
+//! (single-pencil) `Traversal`. [`simulate_sharded`] splits the stream's
+//! pencils into disjoint ranges and fans them out across a worker pool.
 
-use crate::cache::{CacheSim, CacheStats};
+use crate::cache::{CacheParams, CacheSim, CacheStats};
 use crate::grid::{GridDesc, MultiArrayLayout};
 use crate::stencil::Stencil;
-use crate::traversal::Order;
+use crate::traversal::{shard_ranges, Traversal};
+use crate::util::threadpool::ThreadPool;
+use std::ops::Range;
 
 /// Result of an analysis-mode run.
 #[derive(Debug, Clone, Copy)]
@@ -44,14 +53,61 @@ impl MissReport {
             self.u_loads as f64 / self.points as f64
         }
     }
+
+    /// Merge shard reports by summing every counter (the shard union's
+    /// exact totals, given each shard ran on its own cache).
+    pub fn merged(reports: &[MissReport]) -> MissReport {
+        let mut out = MissReport { points: 0, total: CacheStats::default(), u_loads: 0, u_misses: 0 };
+        for r in reports {
+            out.points += r.points;
+            out.u_loads += r.u_loads;
+            out.u_misses += r.u_misses;
+            out.total.accesses += r.total.accesses;
+            out.total.hits += r.total.hits;
+            out.total.cold_misses += r.total.cold_misses;
+            out.total.replacement_misses += r.total.replacement_misses;
+            out.total.cold_loads += r.total.cold_loads;
+            out.total.replacement_loads += r.total.replacement_loads;
+            out.total.evictions += r.total.evictions;
+        }
+        out
+    }
 }
 
-/// Simulate the cache behaviour of evaluating `stencil` over `order`,
-/// with `u` at `layout.base(i)` for each RHS array and `q` at
-/// `layout.q_base()`. Every RHS array is read at every stencil point
+/// Simulate the cache behaviour of evaluating `stencil` over the full
+/// `traversal` stream, with `u` at `layout.base(i)` for each RHS array and
+/// `q` at `layout.q_base()`. Every RHS array is read at every stencil point
 /// (the §5 multi-array model); `p = layout.num_arrays()`.
-pub fn simulate(
-    order: &Order,
+pub fn simulate<T: Traversal + ?Sized>(
+    traversal: &T,
+    layout: &MultiArrayLayout,
+    stencil: &Stencil,
+    sim: &mut CacheSim,
+) -> MissReport {
+    simulate_pencils(traversal, 0..traversal.num_pencils(), layout, stencil, sim)
+}
+
+/// Counter-wise difference `post − pre` of two cumulative snapshots.
+fn stats_delta(post: CacheStats, pre: CacheStats) -> CacheStats {
+    CacheStats {
+        accesses: post.accesses - pre.accesses,
+        hits: post.hits - pre.hits,
+        cold_misses: post.cold_misses - pre.cold_misses,
+        replacement_misses: post.replacement_misses - pre.replacement_misses,
+        cold_loads: post.cold_loads - pre.cold_loads,
+        replacement_loads: post.replacement_loads - pre.replacement_loads,
+        evictions: post.evictions - pre.evictions,
+    }
+}
+
+/// [`simulate`] restricted to a pencil range of the traversal — the shard
+/// body of [`simulate_sharded`], also usable directly for incremental
+/// analyses: every counter in the returned report (including `total`)
+/// covers only *this call's* accesses, so reports from successive ranges
+/// over one shared [`CacheSim`] sum cleanly via [`MissReport::merged`].
+pub fn simulate_pencils<T: Traversal + ?Sized>(
+    traversal: &T,
+    pencils: Range<usize>,
     layout: &MultiArrayLayout,
     stencil: &Stencil,
     sim: &mut CacheSim,
@@ -59,18 +115,19 @@ pub fn simulate(
     let grid = layout.grid().clone();
     let d = grid.ndim();
     assert_eq!(stencil.ndim(), d);
+    assert_eq!(traversal.ndim(), d);
     let deltas: Vec<i64> = stencil.offsets().iter().map(|o| grid.delta_of(o)).collect();
     let p = layout.num_arrays();
     let bases: Vec<i64> = (0..p).map(|i| layout.base(i) as i64).collect();
     let q_base = layout.q_base() as i64;
 
+    let entry_stats = sim.stats();
     let mut u_loads = 0u64;
     let mut u_misses = 0u64;
+    let mut points = 0u64;
 
-    let mut x = vec![0i64; d];
-    for &packed in order.packed() {
-        Order::unpack(packed, &mut x);
-        let off = grid.offset_of(&x) as i64;
+    traversal.stream_pencils(pencils, &mut |x| {
+        let off = grid.offset_of(x) as i64;
         let pre = sim.stats();
         for &b in &bases {
             let base = b + off;
@@ -83,43 +140,77 @@ pub fn simulate(
         u_misses += post.misses() - pre.misses();
         // write q(x): one access (write-allocate).
         sim.access((q_base + off) as u64);
-    }
-    MissReport { points: order.len() as u64, total: sim.stats(), u_loads, u_misses }
+        points += 1;
+    });
+    MissReport { points, total: stats_delta(sim.stats(), entry_stats), u_loads, u_misses }
 }
 
-/// Numeric mode: compute `q(x) = Σ c_i·u(x + k_i)` over the order, for a
-/// single RHS array. Buffers are sized by `grid.storage_words()`.
-pub fn apply(order: &Order, grid: &GridDesc, stencil: &Stencil, u: &[f64], q: &mut [f64]) {
+/// Sharded analysis: partition the traversal's pencils into at most
+/// `shards` disjoint ranges and simulate each on its own fresh [`CacheSim`]
+/// across the worker pool, summing the per-shard counters.
+///
+/// Pencil ranges are independent by construction (each pencil's working set
+/// is cache-resident on its own; replacement traffic crosses only pencil
+/// *walls*, §4), so per-shard caches change only the boundary terms: each
+/// shard re-fetches its leading halo cold instead of warm. Totals are
+/// therefore a slight **overcount** of the sequential run's misses —
+/// conservative for bound checking — while scaling Analyze wall time with
+/// cores. With one shard (or one pencil) this degrades to the exact
+/// sequential [`simulate`].
+pub fn simulate_sharded<T: Traversal + ?Sized>(
+    traversal: &T,
+    layout: &MultiArrayLayout,
+    stencil: &Stencil,
+    cache: CacheParams,
+    pool: &ThreadPool,
+    shards: usize,
+) -> MissReport {
+    let ranges = shard_ranges(traversal.num_pencils(), shards);
+    if ranges.len() <= 1 {
+        let mut sim = CacheSim::new(cache);
+        return simulate(traversal, layout, stencil, &mut sim);
+    }
+    let reports = pool.scope_map(ranges.len(), |i| {
+        let mut sim = CacheSim::new(cache);
+        simulate_pencils(traversal, ranges[i].clone(), layout, stencil, &mut sim)
+    });
+    MissReport::merged(&reports)
+}
+
+/// Numeric mode: compute `q(x) = Σ c_i·u(x + k_i)` over the traversal, for
+/// a single RHS array. Buffers are sized by `grid.storage_words()`. The
+/// stream is consumed allocation-free: per point the engine does address
+/// arithmetic and the |K| multiply-adds, nothing else.
+pub fn apply<T: Traversal + ?Sized>(traversal: &T, grid: &GridDesc, stencil: &Stencil, u: &[f64], q: &mut [f64]) {
     let d = grid.ndim();
     assert_eq!(stencil.ndim(), d);
+    assert_eq!(traversal.ndim(), d);
     assert!(u.len() as u64 >= grid.storage_words(), "u buffer too small");
     assert!(q.len() as u64 >= grid.storage_words(), "q buffer too small");
     let deltas: Vec<i64> = stencil.offsets().iter().map(|o| grid.delta_of(o)).collect();
     let coeffs = stencil.coeffs();
-    let mut x = vec![0i64; d];
-    for &packed in order.packed() {
-        Order::unpack(packed, &mut x);
-        let base = grid.offset_of(&x) as i64;
+    traversal.stream(&mut |x| {
+        let base = grid.offset_of(x) as i64;
         let mut acc = 0.0;
         for (&c, &dl) in coeffs.iter().zip(&deltas) {
             acc += c * u[(base + dl) as usize];
         }
         q[base as usize] = acc;
-    }
+    });
 }
 
 /// Combined mode used by tests: numeric result plus miss report in one
 /// sweep (numbers must be identical to running the two modes separately).
-pub fn apply_and_simulate(
-    order: &Order,
+pub fn apply_and_simulate<T: Traversal + ?Sized>(
+    traversal: &T,
     layout: &MultiArrayLayout,
     stencil: &Stencil,
     u: &[f64],
     q: &mut [f64],
     sim: &mut CacheSim,
 ) -> MissReport {
-    let report = simulate(order, layout, stencil, sim);
-    apply(order, layout.grid(), stencil, u, q);
+    let report = simulate(traversal, layout, stencil, sim);
+    apply(traversal, layout.grid(), stencil, u, q);
     report
 }
 
@@ -127,7 +218,7 @@ pub fn apply_and_simulate(
 mod tests {
     use super::*;
     use crate::cache::CacheParams;
-    use crate::traversal::{cache_fitting_for_cache, natural};
+    use crate::traversal::{cache_fitting_for_cache, natural, natural_stream};
 
     fn setup(dims: &[usize]) -> (GridDesc, Stencil, MultiArrayLayout) {
         let g = GridDesc::new(dims);
@@ -146,6 +237,52 @@ mod tests {
         assert_eq!(rep.points, pts);
         // |K| u-reads + 1 q-write per point
         assert_eq!(rep.total.accesses, pts * (s.size() as u64 + 1));
+    }
+
+    #[test]
+    fn streaming_equals_materialized_simulation() {
+        // The same traversal, streamed vs materialized, must produce the
+        // identical report — the stream is the same visit sequence.
+        let (g, s, l) = setup(&[10, 9]);
+        let mut sim_m = CacheSim::new(CacheParams::new(2, 16, 2));
+        let rep_m = simulate(&natural(&g, 1), &l, &s, &mut sim_m);
+        let mut sim_s = CacheSim::new(CacheParams::new(2, 16, 2));
+        let rep_s = simulate(&natural_stream(&g, 1), &l, &s, &mut sim_s);
+        assert_eq!(rep_m.points, rep_s.points);
+        assert_eq!(rep_m.total, rep_s.total);
+        assert_eq!(rep_m.u_loads, rep_s.u_loads);
+        assert_eq!(rep_m.u_misses, rep_s.u_misses);
+    }
+
+    #[test]
+    fn sharded_simulation_visits_every_point_once() {
+        let (g, s, l) = setup(&[12, 11]);
+        let cache = CacheParams::new(2, 16, 2);
+        let t = natural_stream(&g, 1);
+        let pool = ThreadPool::new(3);
+        let rep = simulate_sharded(&t, &l, &s, cache, &pool, 4);
+        let pts = g.interior_points(1);
+        assert_eq!(rep.points, pts);
+        assert_eq!(rep.total.accesses, pts * (s.size() as u64 + 1));
+        // per-shard cold boundaries can only add misses vs the warm
+        // sequential run, never remove loads below the per-point compulsory
+        let mut sim = CacheSim::new(cache);
+        let seq = simulate(&t, &l, &s, &mut sim);
+        assert!(rep.total.misses() >= seq.total.misses());
+        assert_eq!(rep.total.accesses, seq.total.accesses);
+    }
+
+    #[test]
+    fn sharded_with_one_shard_is_exact() {
+        let (g, s, l) = setup(&[9, 8]);
+        let cache = CacheParams::new(2, 16, 2);
+        let t = natural_stream(&g, 1);
+        let pool = ThreadPool::new(2);
+        let sharded = simulate_sharded(&t, &l, &s, cache, &pool, 1);
+        let mut sim = CacheSim::new(cache);
+        let seq = simulate(&t, &l, &s, &mut sim);
+        assert_eq!(sharded.total, seq.total);
+        assert_eq!(sharded.points, seq.points);
     }
 
     #[test]
@@ -185,6 +322,21 @@ mod tests {
     }
 
     #[test]
+    fn apply_streams_without_order() {
+        // numeric mode over a lazy traversal gives the same field as over
+        // the materialized order.
+        let (g, s, _) = setup(&[9, 7]);
+        let words = g.storage_words() as usize;
+        let mut rng = crate::util::rng::Rng::new(11);
+        let u: Vec<f64> = (0..words).map(|_| rng.f64()).collect();
+        let mut q_mat = vec![0.0; words];
+        let mut q_str = vec![0.0; words];
+        apply(&natural(&g, 1), &g, &s, &u, &mut q_mat);
+        apply(&natural_stream(&g, 1), &g, &s, &u, &mut q_str);
+        assert_eq!(q_mat, q_str);
+    }
+
+    #[test]
     fn apply_result_independent_of_order() {
         // The stencil is explicit (reads u, writes q): any visit order gives
         // identical results. This is the safety property that lets the
@@ -221,5 +373,39 @@ mod tests {
         let rep = simulate(&order, &l, &s, &mut sim);
         assert!(rep.misses_per_point() > 0.0);
         assert!(rep.u_loads_per_point() >= 1.0); // ≥ 1 load per point (Eq 7 prefactor)
+    }
+
+    #[test]
+    fn incremental_ranges_over_shared_sim_sum_cleanly() {
+        // simulate_pencils on successive ranges of one warm CacheSim must
+        // return per-call deltas whose merge equals the one-shot run.
+        let (g, s, l) = setup(&[10, 9]);
+        let t = natural_stream(&g, 1);
+        let np = t.num_pencils();
+        let mut sim = CacheSim::new(CacheParams::new(2, 16, 2));
+        let r1 = simulate_pencils(&t, 0..np / 2, &l, &s, &mut sim);
+        let r2 = simulate_pencils(&t, np / 2..np, &l, &s, &mut sim);
+        let merged = MissReport::merged(&[r1, r2]);
+        let mut sim2 = CacheSim::new(CacheParams::new(2, 16, 2));
+        let whole = simulate(&t, &l, &s, &mut sim2);
+        assert_eq!(merged.points, whole.points);
+        assert_eq!(merged.total, whole.total);
+        assert_eq!(merged.u_loads, whole.u_loads);
+        assert_eq!(merged.u_misses, whole.u_misses);
+    }
+
+    #[test]
+    fn merged_report_sums_counters() {
+        let a = MissReport {
+            points: 3,
+            total: CacheStats { accesses: 10, hits: 4, cold_misses: 6, ..CacheStats::default() },
+            u_loads: 5,
+            u_misses: 2,
+        };
+        let m = MissReport::merged(&[a, a]);
+        assert_eq!(m.points, 6);
+        assert_eq!(m.total.accesses, 20);
+        assert_eq!(m.total.misses(), 12);
+        assert_eq!(m.u_loads, 10);
     }
 }

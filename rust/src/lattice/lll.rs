@@ -20,7 +20,7 @@ pub const DELTA: f64 = 0.75;
 
 /// Reduce `basis` in place with LLL (δ = 0.75). Returns the number of swap
 /// steps performed (diagnostic; bounded polynomially).
-pub fn lll_reduce(basis: &mut Vec<IntVec>) -> usize {
+pub fn lll_reduce(basis: &mut [IntVec]) -> usize {
     let n = basis.len();
     if n <= 1 {
         return 0;

@@ -14,16 +14,24 @@
 //! ## Architecture (three layers)
 //!
 //! - **L3 (this crate)**: cache model + simulator, interference-lattice
-//!   machinery, traversal orders, bounds, padding advisor, the serving
-//!   coordinator, and the PJRT runtime that executes AOT-compiled artifacts.
+//!   machinery, **streaming traversal engine** (lazy pencil-at-a-time visit
+//!   orders — see [`traversal::Traversal`] — sharded across the worker pool
+//!   for large grids), bounds, padding advisor, the serving coordinator,
+//!   and the PJRT runtime that executes AOT-compiled artifacts (behind the
+//!   `pjrt` cargo feature; a clean-failing stub otherwise).
 //! - **L2 (python/compile/model.py, build-time)**: the stencil compute graph
 //!   in JAX, lowered once to HLO text in `artifacts/`.
 //! - **L1 (python/compile/kernels/, build-time)**: Pallas stencil kernels
 //!   (interpret=True) with block shapes chosen by the paper's
 //!   surface-to-volume criterion.
 //!
-//! See `DESIGN.md` for the experiment index and `EXPERIMENTS.md` for
-//! paper-vs-measured results.
+//! See `DESIGN.md` (repository root) for the experiment index and
+//! `EXPERIMENTS.md` (repository root) for paper-vs-measured results.
+
+// The numeric kernels (LLL, Gauss–Jordan, odometer sweeps) index several
+// parallel buffers per loop; rewriting them as zip chains hurts more than
+// it helps. Everything else clippy flags is fixed, not allowed.
+#![allow(clippy::needless_range_loop)]
 
 pub mod bounds;
 pub mod cache;

@@ -1,6 +1,13 @@
 //! PJRT runtime: load AOT-compiled HLO artifacts and execute them.
 //!
-//! This is the only place the crate touches the `xla` crate. The pipeline:
+//! This is the only place the crate touches the `xla` crate, and the whole
+//! backend is gated behind the **`pjrt`** cargo feature (off by default —
+//! the feature additionally requires the `xla` (xla-rs) crate, which is
+//! not part of the offline dependency set; see `rust/Cargo.toml`). Without
+//! the feature, [`Runtime`] is a stub whose constructors fail with a clear
+//! error, so the coordinator degrades to analysis-only serving and every
+//! Execute/Solve request reports the missing backend instead of failing to
+//! build. The pipeline when enabled:
 //!
 //! ```text
 //! artifacts/<name>.hlo.txt  ──HloModuleProto::from_text_file──▶ proto
@@ -11,7 +18,7 @@
 //!
 //! HLO *text* is the interchange format: jax ≥ 0.5 serialized protos carry
 //! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text parser
-//! reassigns ids (see /opt/xla-example/README.md and python/compile/aot.py).
+//! reassigns ids (see python/compile/aot.py).
 //!
 //! All artifacts are lowered with `return_tuple=True`, so every execution
 //! returns a tuple literal; [`Runtime::execute`] decomposes it.
@@ -22,9 +29,15 @@ mod service;
 pub use manifest::{ArtifactInfo, Manifest};
 pub use service::{RuntimeHandle, RuntimeService};
 
-use anyhow::{anyhow, bail, Context, Result};
+#[cfg(feature = "pjrt")]
+use anyhow::anyhow;
+use anyhow::{bail, Context, Result};
+#[cfg(feature = "pjrt")]
 use std::collections::HashMap;
-use std::path::{Path, PathBuf};
+use std::path::Path;
+#[cfg(feature = "pjrt")]
+use std::path::PathBuf;
+#[cfg(feature = "pjrt")]
 use std::sync::Mutex;
 
 /// A host-side tensor: f32 data plus dims. The runtime's lingua franca
@@ -66,6 +79,7 @@ impl HostTensor {
 ///
 /// Compilation happens at most once per artifact (guarded by a mutex-held
 /// cache); execution needs no lock beyond the cache lookup.
+#[cfg(feature = "pjrt")]
 pub struct Runtime {
     client: xla::PjRtClient,
     dir: PathBuf,
@@ -73,17 +87,23 @@ pub struct Runtime {
     cache: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
 }
 
-impl Runtime {
-    /// Open the artifact directory (must contain `manifest.json`; run
-    /// `make artifacts` to produce it) on the PJRT CPU client.
-    pub fn open(dir: impl AsRef<Path>) -> Result<Runtime> {
-        let dir = dir.as_ref().to_path_buf();
-        let manifest = Manifest::load(&dir.join("manifest.json"))
-            .with_context(|| format!("loading manifest from {dir:?}; run `make artifacts` first"))?;
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT CPU client: {e:?}"))?;
-        Ok(Runtime { client, dir, manifest, cache: Mutex::new(HashMap::new()) })
-    }
+/// Stub runtime used when the crate is built without the `pjrt` feature:
+/// constructors fail with a descriptive error, so callers (coordinator,
+/// examples, benches) degrade gracefully to analysis-only behaviour.
+#[cfg(not(feature = "pjrt"))]
+pub struct Runtime {
+    manifest: Manifest,
+}
 
+/// Load and validate the manifest of an artifact directory (shared by the
+/// real and stub backends, so discovery/validation can never diverge).
+fn load_manifest(dir: &Path) -> Result<Manifest> {
+    Manifest::load(&dir.join("manifest.json"))
+        .with_context(|| format!("loading manifest from {dir:?}; run `make artifacts` first"))
+}
+
+// Backend-independent surface: artifact discovery and metadata.
+impl Runtime {
     /// Locate the repository's `artifacts/` directory from the current dir
     /// or its ancestors (so examples work from any working directory).
     pub fn open_default() -> Result<Runtime> {
@@ -101,6 +121,41 @@ impl Runtime {
 
     pub fn manifest(&self) -> &Manifest {
         &self.manifest
+    }
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl Runtime {
+    /// Fails: executing artifacts needs the `pjrt` feature (and the `xla`
+    /// crate it pulls in). The manifest is still validated so
+    /// configuration errors surface even in stub builds.
+    pub fn open(dir: impl AsRef<Path>) -> Result<Runtime> {
+        let _ = load_manifest(dir.as_ref())?;
+        bail!("stencilcache was built without the `pjrt` feature; rebuild with `--features pjrt` (requires the xla crate) to execute artifacts")
+    }
+
+    pub fn platform(&self) -> String {
+        "unavailable (built without the pjrt feature)".to_string()
+    }
+
+    pub fn execute(&self, name: &str, _inputs: &[&HostTensor]) -> Result<Vec<HostTensor>> {
+        bail!("cannot execute artifact {name:?}: built without the `pjrt` feature")
+    }
+
+    pub fn cached_executables(&self) -> usize {
+        0
+    }
+}
+
+#[cfg(feature = "pjrt")]
+impl Runtime {
+    /// Open the artifact directory (must contain `manifest.json`; run
+    /// `make artifacts` to produce it) on the PJRT CPU client.
+    pub fn open(dir: impl AsRef<Path>) -> Result<Runtime> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = load_manifest(&dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT CPU client: {e:?}"))?;
+        Ok(Runtime { client, dir, manifest, cache: Mutex::new(HashMap::new()) })
     }
 
     pub fn platform(&self) -> String {
@@ -169,6 +224,31 @@ impl Runtime {
 }
 
 #[cfg(test)]
+mod host_tensor_tests {
+    use super::*;
+
+    #[test]
+    fn host_tensor_validation() {
+        assert!(HostTensor::new(vec![2, 3], vec![0.0; 6]).is_ok());
+        assert!(HostTensor::new(vec![2, 3], vec![0.0; 5]).is_err());
+        let z = HostTensor::zeros(&[4, 4]);
+        assert_eq!(z.len(), 16);
+        assert_eq!(z.norm(), 0.0);
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn stub_runtime_fails_with_clear_error() {
+        let err = Runtime::open_default().unwrap_err();
+        let msg = format!("{err}");
+        assert!(
+            msg.contains("pjrt") || msg.contains("artifacts"),
+            "unhelpful stub error: {msg}"
+        );
+    }
+}
+
+#[cfg(all(test, feature = "pjrt"))]
 mod tests {
     use super::*;
 
@@ -292,14 +372,5 @@ mod tests {
         let u = rand_tensor(16, 19);
         let err = rt.execute("no_such_artifact", &[&u]).unwrap_err();
         assert!(format!("{err}").contains("not in manifest"));
-    }
-
-    #[test]
-    fn host_tensor_validation() {
-        assert!(HostTensor::new(vec![2, 3], vec![0.0; 6]).is_ok());
-        assert!(HostTensor::new(vec![2, 3], vec![0.0; 5]).is_err());
-        let z = HostTensor::zeros(&[4, 4]);
-        assert_eq!(z.len(), 16);
-        assert_eq!(z.norm(), 0.0);
     }
 }

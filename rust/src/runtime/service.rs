@@ -131,6 +131,17 @@ impl Drop for RuntimeService {
 }
 
 #[cfg(test)]
+mod startup_tests {
+    use super::*;
+
+    #[test]
+    fn startup_error_is_propagated() {
+        let err = RuntimeService::start(Some(PathBuf::from("/nonexistent/artifacts"))).err();
+        assert!(err.is_some());
+    }
+}
+
+#[cfg(all(test, feature = "pjrt"))]
 mod tests {
     use super::*;
 
@@ -165,12 +176,6 @@ mod tests {
             }
         });
         assert!(h.cached_executables() >= 1);
-    }
-
-    #[test]
-    fn startup_error_is_propagated() {
-        let err = RuntimeService::start(Some(PathBuf::from("/nonexistent/artifacts"))).err();
-        assert!(err.is_some());
     }
 
     #[test]

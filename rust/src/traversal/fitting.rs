@@ -21,30 +21,38 @@
 //! (≤ `r(2r+1)^d · A` in total, where `A` is the pencil surface area —
 //! Eq 12 follows from the reduced basis's surface-to-volume ratio, Eq 11).
 //!
-//! **Implementation.** Rather than enumerating faces geometrically (awkward
-//! near grid boundaries — the paper says "whenever a point is not contained
-//! in the grid, it is simply skipped"), we compute for every interior point
-//! its real coordinates `y = B⁻¹x` in the reduced basis and sort points by
+//! **Two implementations.**
+//!
+//! [`cache_fitting_stream`] (the hot path) is the paper's loop nest made
+//! literal: pencils are enumerated from the y-space (reduced-basis
+//! coordinates) bounding box of the interior, and each pencil's points are
+//! generated cell by cell along the sweep — rasterize the x-space bounding
+//! box of one fundamental-parallelepiped cell (≈ S points), keep the
+//! integer points whose basis-coordinate floors land in the cell ("whenever
+//! a point is not contained in the grid, it is simply skipped", §4), order
+//! them along `v`, emit. Memory is O(cell), never O(grid).
+//!
+//! [`cache_fitting`] (the materialized adapter, kept for property tests and
+//! small replayed experiment orders) computes for every interior point its
+//! real coordinates `y = B⁻¹x` and sorts points by
 //! `(⌊y_j⌋ for j ≠ iv ; y_iv)`. Points sharing all `⌊y_j⌋, j≠iv` form
 //! exactly one fundamental-parallelepiped *pencil*; ordering by `y_iv`
-//! within a pencil is the face sweep with step `1/g` (the sort visits the
-//! integer points of the pencil in sweep order without needing `g`
-//! explicitly). This is observationally identical to the paper's loop nest
-//! and handles arbitrary grid boundaries uniformly.
+//! within a pencil is the face sweep with step `1/g`. Both implementations
+//! visit the same point multiset (property-tested) with the same
+//! pencil-contiguity guarantee.
 
-use super::Order;
+use super::{interior_ranges, points_of, Order, Traversal, MAX_STREAM_DIMS};
 use crate::grid::GridDesc;
 use crate::lattice::InterferenceLattice;
+use std::ops::Range;
 
 /// Pencil-coordinate bias: supports floor values in ±2^19.
 const BIAS: i64 = 1 << 19;
 
-/// Build the cache-fitting order for a stencil of radius `r` on `grid`,
-/// using the interference lattice of the grid's *storage* layout.
-///
-/// The lattice should be built with the same modulus as the target cache
-/// (S words) and the same dims as `grid.storage_dims()`; the convenience
-/// wrapper [`cache_fitting_for_cache`] does this.
+/// Float slack when rasterizing cell bounding boxes: large enough to absorb
+/// f64 rounding of basis-coordinate products, far below integer spacing.
+const EPS: f64 = 1e-6;
+
 /// Tuning knobs for the fitting sweep (see the ablation bench
 /// `bench_traversal` and EXPERIMENTS.md §Perf for the measured effect of
 /// each).
@@ -201,6 +209,305 @@ pub fn cache_fitting_opts(grid: &GridDesc, r: usize, lattice: &InterferenceLatti
 pub fn cache_fitting_for_cache(grid: &GridDesc, r: usize, cache: &crate::cache::CacheParams) -> Order {
     let lattice = InterferenceLattice::new(grid.storage_dims(), cache.lattice_modulus());
     cache_fitting(grid, r, &lattice)
+}
+
+/// One §4 pencil in the streaming traversal: the raw floor coordinates of
+/// the non-sweep basis directions, plus whether the serpentine fold
+/// reverses its sweep direction.
+#[derive(Debug, Clone)]
+struct Pencil {
+    q: Vec<i64>,
+    flip: bool,
+}
+
+/// The **streaming** cache-fitting traversal: the §4 pencil sweep generated
+/// lazily, one fundamental-parallelepiped cell at a time, with O(cell)
+/// memory instead of the O(grid) sort of [`cache_fitting`].
+///
+/// Pencils double as shard units: each pencil's point set depends only on
+/// its own floor coordinates, so disjoint pencil ranges partition the
+/// interior exactly — which is what lets the coordinator fan one Analyze
+/// job out across worker threads.
+#[derive(Debug, Clone)]
+pub struct FittingTraversal {
+    ranges: Vec<Range<i64>>,
+    iv: usize,
+    /// Reduced basis rows (owned copy — the traversal outlives the lattice).
+    basis: Vec<Vec<i64>>,
+    /// Inverse of Bᵀ: `y = binv · x` are the reduced-basis coordinates.
+    binv: Vec<Vec<f64>>,
+    /// Pencil width (cells) per face slot, in ascending non-sweep dim order.
+    widths: Vec<usize>,
+    /// Pencils in visit order (serpentine-folded lexicographic); each
+    /// carries its own precomputed sweep-direction flip.
+    pencils: Vec<Pencil>,
+    /// Global floor range of the sweep coordinate, inclusive.
+    k_lo: i64,
+    k_hi: i64,
+}
+
+/// Build the streaming cache-fitting traversal with default options.
+pub fn cache_fitting_stream(grid: &GridDesc, r: usize, lattice: &InterferenceLattice) -> FittingTraversal {
+    cache_fitting_stream_opts(grid, r, lattice, &FittingOptions::default())
+}
+
+/// Streaming cache-fitting against a concrete cache (lattice built from the
+/// grid's storage dims with modulus `S`).
+pub fn cache_fitting_stream_for_cache(grid: &GridDesc, r: usize, cache: &crate::cache::CacheParams) -> FittingTraversal {
+    let lattice = InterferenceLattice::new(grid.storage_dims(), cache.lattice_modulus());
+    cache_fitting_stream(grid, r, &lattice)
+}
+
+/// Full-control streaming variant.
+pub fn cache_fitting_stream_opts(
+    grid: &GridDesc,
+    r: usize,
+    lattice: &InterferenceLattice,
+    opts: &FittingOptions,
+) -> FittingTraversal {
+    let d = grid.ndim();
+    assert_eq!(lattice.dims().len(), d, "lattice dimensionality mismatch");
+    let ranges = interior_ranges(grid, r);
+    let empty = points_of(&ranges) == 0;
+    if d == 1 || empty {
+        // 1-D: a single pencil, swept naturally. No interior: no pencils.
+        let pencils = if empty { Vec::new() } else { vec![Pencil { q: Vec::new(), flip: false }] };
+        return FittingTraversal {
+            ranges,
+            iv: 0,
+            basis: Vec::new(),
+            binv: Vec::new(),
+            widths: Vec::new(),
+            pencils,
+            k_lo: 0,
+            k_hi: 0,
+        };
+    }
+    let iv = opts.sweep_index.unwrap_or_else(|| lattice.longest_basis_index());
+    assert!(iv < d);
+    let basis: Vec<Vec<i64>> = lattice.reduced_basis().to_vec();
+    let binv = invert(&basis);
+    let widths: Vec<usize> = (0..d - 1)
+        .map(|slot| {
+            let w = *opts.widths.get(slot).unwrap_or(&1);
+            assert!(w >= 1);
+            w
+        })
+        .collect();
+
+    // y-space bounding box of the interior: y is linear in x, so extremes
+    // occur at box corners; accumulate per-coordinate min/max directly.
+    let mut ymin = vec![0.0f64; d];
+    let mut ymax = vec![0.0f64; d];
+    for j in 0..d {
+        let (mut mn, mut mx) = (0.0f64, 0.0f64);
+        for (k, rg) in ranges.iter().enumerate() {
+            let c = binv[j][k];
+            let a = c * rg.start as f64;
+            let b = c * (rg.end - 1) as f64;
+            mn += a.min(b);
+            mx += a.max(b);
+        }
+        ymin[j] = mn;
+        ymax[j] = mx;
+    }
+    let k_lo = (ymin[iv] - EPS).floor() as i64;
+    let k_hi = (ymax[iv] + EPS).floor() as i64;
+
+    // Enumerate the (d−1)-dim box of candidate pencils and sort by the
+    // serpentine-folded key — the same total order the materialized path
+    // encodes into its packed pencil_key.
+    let mut q_lo = Vec::with_capacity(d - 1);
+    let mut q_hi = Vec::with_capacity(d - 1);
+    {
+        let mut slot = 0usize;
+        for j in 0..d {
+            if j == iv {
+                continue;
+            }
+            let w = widths[slot] as f64;
+            q_lo.push(((ymin[j] - EPS) / w).floor() as i64);
+            q_hi.push(((ymax[j] + EPS) / w).floor() as i64);
+            slot += 1;
+        }
+    }
+    let nslots = d - 1;
+    let mut keyed: Vec<(Vec<i64>, Pencil)> = Vec::new();
+    let mut q = q_lo.clone();
+    'boxes: loop {
+        let mut folded = vec![0i64; nslots];
+        let mut parity: i64 = 0;
+        for s in 0..nslots {
+            let mut fl = q[s];
+            if opts.serpentine && parity & 1 == 1 {
+                fl = -fl;
+            }
+            parity += q[s].abs();
+            folded[s] = fl;
+        }
+        let flip = opts.serpentine && parity & 1 == 1;
+        keyed.push((folded, Pencil { q: q.clone(), flip }));
+        // odometer, innermost slot last so slot 0 stays the outer key
+        let mut s = nslots;
+        loop {
+            if s == 0 {
+                break 'boxes;
+            }
+            s -= 1;
+            q[s] += 1;
+            if q[s] <= q_hi[s] {
+                break;
+            }
+            q[s] = q_lo[s];
+            if s == 0 {
+                break 'boxes;
+            }
+        }
+    }
+    keyed.sort_by(|a, b| a.0.cmp(&b.0));
+    let pencils = keyed.into_iter().map(|(_, p)| p).collect();
+
+    FittingTraversal { ranges, iv, basis, binv, widths, pencils, k_lo, k_hi }
+}
+
+impl FittingTraversal {
+    /// Stream the points of one fundamental-parallelepiped cell
+    /// `(pencil q, sweep floor k)`: rasterize the cell's x-space bounding
+    /// box, keep the integer points whose basis-coordinate floors land in
+    /// the cell, order them along the sweep, emit.
+    fn emit_cell(
+        &self,
+        q: &[i64],
+        k: i64,
+        flip: bool,
+        buf: &mut Vec<(f64, [i64; MAX_STREAM_DIMS])>,
+        f: &mut dyn FnMut(&[i64]),
+    ) {
+        let d = self.ranges.len();
+        let mut xlo = [0i64; MAX_STREAM_DIMS];
+        let mut xhi = [0i64; MAX_STREAM_DIMS];
+        for r in 0..d {
+            let (mut mn, mut mx) = (0.0f64, 0.0f64);
+            let mut slot = 0usize;
+            for c in 0..d {
+                let bc = self.basis[c][r] as f64;
+                let (ylo, yhi) = if c == self.iv {
+                    (k as f64, (k + 1) as f64)
+                } else {
+                    let w = self.widths[slot] as f64;
+                    let lo = q[slot] as f64 * w;
+                    slot += 1;
+                    (lo, lo + w)
+                };
+                let a = bc * ylo;
+                let b = bc * yhi;
+                mn += a.min(b);
+                mx += a.max(b);
+            }
+            let lo = ((mn - EPS).ceil() as i64).max(self.ranges[r].start);
+            let hi = ((mx + EPS).floor() as i64).min(self.ranges[r].end - 1);
+            if lo > hi {
+                return; // cell misses the interior entirely
+            }
+            xlo[r] = lo;
+            xhi[r] = hi;
+        }
+
+        buf.clear();
+        let mut x = xlo;
+        'points: loop {
+            // y = B^{-1} x, same summation order as the materialized path so
+            // floor classification agrees bit for bit.
+            let mut accept = true;
+            let mut sweep = 0.0f64;
+            let mut slot = 0usize;
+            for i in 0..d {
+                let mut acc = 0.0f64;
+                for j in 0..d {
+                    acc += self.binv[i][j] * x[j] as f64;
+                }
+                if i == self.iv {
+                    if acc.floor() as i64 != k {
+                        accept = false;
+                        break;
+                    }
+                    sweep = acc;
+                } else {
+                    if (acc / self.widths[slot] as f64).floor() as i64 != q[slot] {
+                        accept = false;
+                        break;
+                    }
+                    slot += 1;
+                }
+            }
+            if accept {
+                buf.push((sweep, x));
+            }
+            let mut i = 0;
+            loop {
+                x[i] += 1;
+                if x[i] <= xhi[i] {
+                    continue 'points;
+                }
+                x[i] = xlo[i];
+                i += 1;
+                if i == d {
+                    break 'points;
+                }
+            }
+        }
+        if flip {
+            buf.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap().then(a.1.cmp(&b.1)));
+        } else {
+            buf.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)));
+        }
+        for (_, pt) in buf.iter() {
+            f(&pt[..d]);
+        }
+    }
+}
+
+impl Traversal for FittingTraversal {
+    fn ndim(&self) -> usize {
+        self.ranges.len()
+    }
+
+    fn num_points(&self) -> u64 {
+        points_of(&self.ranges)
+    }
+
+    fn num_pencils(&self) -> usize {
+        self.pencils.len()
+    }
+
+    fn stream_pencils(&self, pencils: Range<usize>, f: &mut dyn FnMut(&[i64])) {
+        let np = self.pencils.len();
+        let pencils = pencils.start.min(np)..pencils.end.min(np);
+        if pencils.is_empty() {
+            return;
+        }
+        let d = self.ranges.len();
+        if d == 1 {
+            let mut x = [0i64; 1];
+            for v in self.ranges[0].clone() {
+                x[0] = v;
+                f(&x);
+            }
+            return;
+        }
+        let mut buf: Vec<(f64, [i64; MAX_STREAM_DIMS])> = Vec::new();
+        for p in &self.pencils[pencils] {
+            if p.flip {
+                for k in (self.k_lo..=self.k_hi).rev() {
+                    self.emit_cell(&p.q, k, true, &mut buf, f);
+                }
+            } else {
+                for k in self.k_lo..=self.k_hi {
+                    self.emit_cell(&p.q, k, false, &mut buf, f);
+                }
+            }
+        }
+    }
 }
 
 /// Invert a small integer matrix (rows = basis vectors) to f64.
@@ -360,5 +667,91 @@ mod tests {
             "fitting repl {fit_repl} vs natural repl {nat_repl}"
         );
         assert!(fit_misses < nat_misses, "total {fit_misses} vs {nat_misses}");
+    }
+
+    // ---- streaming implementation -------------------------------------
+
+    fn stream_multiset(t: &FittingTraversal) -> Vec<u64> {
+        let mut v = Vec::new();
+        t.stream(&mut |x| v.push(Order::pack(x)));
+        v.sort_unstable();
+        v
+    }
+
+    #[test]
+    fn stream_matches_materialized_multiset() {
+        for dims in [vec![20usize, 17, 12], vec![24, 24], vec![45, 91], vec![13, 9, 21]] {
+            let g = GridDesc::new(&dims);
+            let lat = InterferenceLattice::new(g.storage_dims(), 128);
+            let t = cache_fitting_stream(&g, 1, &lat);
+            assert_eq!(t.num_points(), g.interior_points(1), "{dims:?}");
+            assert_eq!(
+                stream_multiset(&t),
+                cache_fitting(&g, 1, &lat).canonical_set(),
+                "{dims:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn stream_1d_and_empty_grids() {
+        let g1 = GridDesc::new(&[50]);
+        let lat1 = InterferenceLattice::new(g1.storage_dims(), 16);
+        let t1 = cache_fitting_stream(&g1, 1, &lat1);
+        assert_eq!(t1.num_pencils(), 1);
+        let mut seq = Vec::new();
+        t1.stream(&mut |x| seq.push(Order::pack(x)));
+        assert_eq!(seq, natural(&g1, 1).packed());
+
+        let g0 = GridDesc::new(&[3, 3]);
+        let lat0 = InterferenceLattice::new(g0.storage_dims(), 16);
+        let t0 = cache_fitting_stream(&g0, 2, &lat0);
+        assert_eq!(t0.num_pencils(), 0);
+        assert_eq!(t0.num_points(), 0);
+    }
+
+    #[test]
+    fn stream_pencil_ranges_partition() {
+        let g = GridDesc::new(&[22, 19]);
+        let lat = InterferenceLattice::new(g.storage_dims(), 64);
+        let t = cache_fitting_stream(&g, 1, &lat);
+        let full = stream_multiset(&t);
+        for shards in [2usize, 3, 7] {
+            let mut all = Vec::new();
+            for rg in crate::traversal::shard_ranges(t.num_pencils(), shards) {
+                t.stream_pencils(rg, &mut |x| all.push(Order::pack(x)));
+            }
+            all.sort_unstable();
+            assert_eq!(all, full, "shards={shards}");
+        }
+    }
+
+    #[test]
+    fn stream_keeps_pencils_contiguous() {
+        // Same invariant as the materialized test, on the streamed order.
+        let g = GridDesc::new(&[24, 24]);
+        let lat = InterferenceLattice::new(g.storage_dims(), 64);
+        let t = cache_fitting_stream(&g, 1, &lat);
+        let binv = invert(lat.reduced_basis());
+        let iv = lat.longest_basis_index();
+        let jf = 1 - iv;
+        let mut seen = std::collections::HashSet::new();
+        let mut current: Option<i64> = None;
+        t.stream(&mut |x| {
+            let y: f64 = (0..2).map(|j| binv[jf][j] * x[j] as f64).sum();
+            let pencil = y.floor() as i64;
+            if current != Some(pencil) {
+                assert!(seen.insert(pencil), "pencil {pencil} revisited in stream");
+                current = Some(pencil);
+            }
+        });
+        assert!(seen.len() > 1);
+    }
+
+    #[test]
+    fn stream_for_cache_wrapper() {
+        let g = GridDesc::new(&[40, 30, 10]);
+        let t = cache_fitting_stream_for_cache(&g, 1, &CacheParams::new(2, 64, 2));
+        assert_eq!(stream_multiset(&t).len() as u64, g.interior_points(1));
     }
 }

@@ -4,31 +4,118 @@
 //! the number of replacement loads depends only on the visit order (given
 //! layout). This module provides:
 //!
-//! - [`natural`] — lexicographic column-major order: what the compiled
-//!   Fortran loop nest does (the paper's baseline, Figure 4 top line);
-//! - [`blocked`] — classical rectangular tiling (the tile-size-selection
-//!   baseline of Coleman–McKinley [3] / the CME blocks of [4]);
-//! - [`cache_fitting`] — the paper's contribution (§4): sweep the faces of
-//!   the fundamental parallelepiped of a *reduced basis* of the
-//!   interference lattice along pencils (see [`fitting`]);
-//! - [`strip`] — the §3 example order that attains the lower bound when
-//!   `n_1 = k·S` and associativity exceeds the stencil diameter.
+//! - [`natural_stream`] — lexicographic column-major order: what the
+//!   compiled Fortran loop nest does (the paper's baseline, Figure 4 top
+//!   line);
+//! - [`blocked_stream`] — classical rectangular tiling (the
+//!   tile-size-selection baseline of Coleman–McKinley [3] / the CME blocks
+//!   of [4]);
+//! - [`fitting::cache_fitting_stream`] — the paper's contribution (§4):
+//!   sweep the faces of the fundamental parallelepiped of a *reduced
+//!   basis* of the interference lattice along pencils (see [`fitting`]);
+//! - [`strip_stream`] — the §3 example order that attains the lower bound
+//!   when `n_1 = k·S` and associativity exceeds the stencil diameter.
 //!
-//! All constructors produce an [`Order`]: a materialized point sequence
-//! over the interior, packed 16 bits per coordinate. Every order visits
-//! exactly the same point set (property-tested), so simulated miss counts
-//! are directly comparable.
+//! ## Streaming vs materialized
+//!
+//! Every order is a [`Traversal`]: a *stream* of interior points generated
+//! lazily, one **pencil** (independently replayable chunk — a line, strip,
+//! tile, or lattice pencil) at a time. Nothing is allocated per point and
+//! nothing proportional to the grid is ever materialized, which is what
+//! lets the engine analyze grids (512³ and beyond) whose visit sequence
+//! would not fit in memory, and lets the coordinator shard one traversal
+//! into disjoint pencil ranges across worker threads ([`shard_ranges`]).
+//!
+//! The legacy [`Order`] — a packed `Vec<u64>` of the whole sequence — is
+//! kept as the *materialized adapter*: [`materialize`] collects any
+//! traversal into an `Order`, and `Order` itself implements [`Traversal`]
+//! (a single pencil). Property tests compare streamed multisets against
+//! materialized [`Order::canonical_set`]s; experiment drivers that replay
+//! one small order many times also keep using `Order`.
+//!
+//! Every order visits exactly the same point set (property-tested), so
+//! simulated miss counts are directly comparable.
 
 pub mod fitting;
 pub mod tiled;
 
 use crate::grid::GridDesc;
+use std::ops::Range;
 
-pub use fitting::{cache_fitting, cache_fitting_for_cache, cache_fitting_sweep, FittingOptions};
-pub use tiled::{conflict_free_tile, tiled_z_sweep};
+pub use fitting::{
+    cache_fitting, cache_fitting_for_cache, cache_fitting_stream, cache_fitting_stream_for_cache,
+    cache_fitting_sweep, FittingOptions, FittingTraversal,
+};
+pub use tiled::{conflict_free_tile, tiled_z_sweep, tiled_z_sweep_stream};
 
-/// Maximum dimensions representable by the packed encoding.
+/// Maximum dimensions representable by the packed [`Order`] encoding.
 pub const MAX_DIMS: usize = 4;
+
+/// Maximum dimensions supported by the streaming traversals (coordinate
+/// buffers are fixed-size stack arrays).
+pub const MAX_STREAM_DIMS: usize = 8;
+
+/// A lazily generated visit order over the K-interior of a grid.
+///
+/// The unit of generation is the **pencil**: an independently replayable
+/// contiguous chunk of the visit sequence (a dim-0 line for the natural
+/// order, a strip, a tile, a §4 lattice pencil). Pencils are the shard
+/// unit: [`shard_ranges`] partitions `0..num_pencils()` into disjoint
+/// ranges and [`Traversal::stream_pencils`] replays any range without
+/// touching the others, so workers can stream shards concurrently.
+///
+/// `Sync` is a supertrait because sharded execution hands `&self` to
+/// multiple worker threads; implementations are plain data, so this costs
+/// nothing.
+pub trait Traversal: Sync {
+    /// Grid dimensionality of the streamed coordinate vectors.
+    fn ndim(&self) -> usize;
+
+    /// Total number of interior points the full stream visits.
+    fn num_points(&self) -> u64;
+
+    /// Number of pencils (shard units). Zero when there is no interior.
+    fn num_pencils(&self) -> usize;
+
+    /// Stream the points of the pencils in `pencils` (clamped to
+    /// `0..num_pencils()`), in visit order, calling `f` with each
+    /// coordinate vector.
+    fn stream_pencils(&self, pencils: Range<usize>, f: &mut dyn FnMut(&[i64]));
+
+    /// Stream every interior point in visit order.
+    fn stream(&self, f: &mut dyn FnMut(&[i64])) {
+        self.stream_pencils(0..self.num_pencils(), f);
+    }
+}
+
+/// Partition `0..num_pencils` into at most `shards` contiguous, disjoint,
+/// gap-free ranges of near-equal size (the first `num_pencils % shards`
+/// ranges are one longer). Returns fewer ranges when there are fewer
+/// pencils than requested shards, and none when there are no pencils.
+pub fn shard_ranges(num_pencils: usize, shards: usize) -> Vec<Range<usize>> {
+    if num_pencils == 0 {
+        return Vec::new();
+    }
+    let shards = shards.clamp(1, num_pencils);
+    let base = num_pencils / shards;
+    let rem = num_pencils % shards;
+    let mut out = Vec::with_capacity(shards);
+    let mut start = 0usize;
+    for s in 0..shards {
+        let len = base + usize::from(s < rem);
+        out.push(start..start + len);
+        start += len;
+    }
+    out
+}
+
+/// Collect any traversal into a materialized [`Order`] (for property tests
+/// and small replayed experiment orders; the hot paths stream instead).
+pub fn materialize(t: &dyn Traversal) -> Order {
+    let mut points = Vec::with_capacity(t.num_points() as usize);
+    t.stream(&mut |x| points.push(Order::pack(x)));
+    Order::from_packed(t.ndim(), points)
+}
 
 /// A materialized traversal order over interior points.
 /// Coordinates are packed little-endian, 16 bits per dimension.
@@ -108,91 +195,341 @@ impl Order {
     }
 }
 
-/// Enumerate the interior ranges, or an empty order if no interior exists.
-fn interior_or_empty(grid: &GridDesc, r: usize) -> Option<Vec<std::ops::Range<i64>>> {
-    assert!(grid.ndim() <= MAX_DIMS, "packed orders support up to {MAX_DIMS} dims");
-    grid.interior(r)
-}
+/// A materialized [`Order`] is itself a (single-pencil) traversal, so the
+/// streaming engine accepts it everywhere a lazy order fits.
+impl Traversal for Order {
+    fn ndim(&self) -> usize {
+        self.ndim
+    }
 
-/// Natural (lexicographic, dim-0-fastest) order over the K-interior —
-/// the compiled loop nest of the paper's baseline.
-pub fn natural(grid: &GridDesc, r: usize) -> Order {
-    let d = grid.ndim();
-    let Some(ranges) = interior_or_empty(grid, r) else {
-        return Order::from_packed(d, Vec::new());
-    };
-    let n: u64 = ranges.iter().map(|rg| (rg.end - rg.start) as u64).product();
-    let mut points = Vec::with_capacity(n as usize);
-    let mut x: Vec<i64> = ranges.iter().map(|rg| rg.start).collect();
-    loop {
-        points.push(Order::pack(&x));
-        let mut i = 0;
-        loop {
-            x[i] += 1;
-            if x[i] < ranges[i].end {
-                break;
-            }
-            x[i] = ranges[i].start;
-            i += 1;
-            if i == d {
-                return Order::from_packed(d, points);
-            }
+    fn num_points(&self) -> u64 {
+        self.points.len() as u64
+    }
+
+    fn num_pencils(&self) -> usize {
+        usize::from(!self.points.is_empty())
+    }
+
+    fn stream_pencils(&self, pencils: Range<usize>, f: &mut dyn FnMut(&[i64])) {
+        if pencils.start == 0 && pencils.end >= 1 {
+            self.for_each(f);
         }
     }
 }
 
-/// Classical rectangular tiling: visit tile-by-tile (tiles ordered
-/// lexicographically), natural order within each tile. `tile[i]` is the
-/// tile extent along dim i.
-pub fn blocked(grid: &GridDesc, r: usize, tile: &[usize]) -> Order {
-    let d = grid.ndim();
-    assert_eq!(tile.len(), d);
-    assert!(tile.iter().all(|&t| t >= 1));
-    let Some(ranges) = interior_or_empty(grid, r) else {
-        return Order::from_packed(d, Vec::new());
-    };
-    let mut points = Vec::new();
-    // tile origin odometer
-    let mut origin: Vec<i64> = ranges.iter().map(|rg| rg.start).collect();
-    'tiles: loop {
-        // points within tile
-        let hi: Vec<i64> = (0..d).map(|i| (origin[i] + tile[i] as i64).min(ranges[i].end)).collect();
-        let mut x = origin.clone();
-        'points: loop {
-            points.push(Order::pack(&x));
-            let mut i = 0;
+/// Adapter wrapping an [`Order`] as a chunked [`Traversal`]: the packed
+/// sequence is cut into fixed-size pencils so property tests can exercise
+/// sharding against a ground-truth materialized order.
+#[derive(Debug, Clone)]
+pub struct MaterializedTraversal {
+    order: Order,
+    pencil_len: usize,
+}
+
+impl MaterializedTraversal {
+    /// Wrap with the default pencil length (4096 points).
+    pub fn new(order: Order) -> MaterializedTraversal {
+        MaterializedTraversal::with_pencil_len(order, 4096)
+    }
+
+    pub fn with_pencil_len(order: Order, pencil_len: usize) -> MaterializedTraversal {
+        assert!(pencil_len >= 1);
+        MaterializedTraversal { order, pencil_len }
+    }
+
+    pub fn order(&self) -> &Order {
+        &self.order
+    }
+
+    pub fn into_order(self) -> Order {
+        self.order
+    }
+}
+
+impl Traversal for MaterializedTraversal {
+    fn ndim(&self) -> usize {
+        self.order.ndim()
+    }
+
+    fn num_points(&self) -> u64 {
+        self.order.len() as u64
+    }
+
+    fn num_pencils(&self) -> usize {
+        self.order.len().div_ceil(self.pencil_len)
+    }
+
+    fn stream_pencils(&self, pencils: Range<usize>, f: &mut dyn FnMut(&[i64])) {
+        let n = self.order.len();
+        let lo = pencils.start.saturating_mul(self.pencil_len).min(n);
+        let hi = pencils.end.saturating_mul(self.pencil_len).min(n);
+        if lo >= hi {
+            return;
+        }
+        let mut x = vec![0i64; self.order.ndim()];
+        for &p in &self.order.packed()[lo..hi] {
+            Order::unpack(p, &mut x);
+            f(&x);
+        }
+    }
+}
+
+/// Interior ranges of `grid` for radius `r`, or per-dim empty ranges when
+/// the grid has no interior (so extents multiply to zero).
+fn interior_ranges(grid: &GridDesc, r: usize) -> Vec<Range<i64>> {
+    assert!(grid.ndim() <= MAX_STREAM_DIMS, "streaming traversals support up to {MAX_STREAM_DIMS} dims");
+    grid.interior(r).unwrap_or_else(|| vec![0..0; grid.ndim()])
+}
+
+fn extent(rg: &Range<i64>) -> usize {
+    (rg.end - rg.start).max(0) as usize
+}
+
+fn points_of(ranges: &[Range<i64>]) -> u64 {
+    ranges.iter().map(|rg| extent(rg) as u64).product()
+}
+
+/// Streaming natural (lexicographic, dim-0-fastest) order over the
+/// K-interior — the compiled loop nest of the paper's baseline. One pencil
+/// per dim-0 line.
+#[derive(Debug, Clone)]
+pub struct NaturalTraversal {
+    ranges: Vec<Range<i64>>,
+}
+
+/// Build the streaming natural order.
+pub fn natural_stream(grid: &GridDesc, r: usize) -> NaturalTraversal {
+    NaturalTraversal { ranges: interior_ranges(grid, r) }
+}
+
+impl Traversal for NaturalTraversal {
+    fn ndim(&self) -> usize {
+        self.ranges.len()
+    }
+
+    fn num_points(&self) -> u64 {
+        points_of(&self.ranges)
+    }
+
+    fn num_pencils(&self) -> usize {
+        if self.num_points() == 0 {
+            return 0;
+        }
+        self.ranges[1..].iter().map(extent).product::<usize>().max(1)
+    }
+
+    fn stream_pencils(&self, pencils: Range<usize>, f: &mut dyn FnMut(&[i64])) {
+        let np = self.num_pencils();
+        let pencils = pencils.start.min(np)..pencils.end.min(np);
+        if pencils.is_empty() {
+            return;
+        }
+        let d = self.ranges.len();
+        let (lo0, hi0) = (self.ranges[0].start, self.ranges[0].end);
+        let mut x = vec![0i64; d];
+        // Decode the first pencil index into the line odometer (dims 1..d,
+        // dim 1 fastest — matching the natural order's carry chain).
+        let mut k = pencils.start;
+        for i in 1..d {
+            let len = extent(&self.ranges[i]);
+            x[i] = self.ranges[i].start + (k % len) as i64;
+            k /= len;
+        }
+        for _ in 0..pencils.len() {
+            for v in lo0..hi0 {
+                x[0] = v;
+                f(&x);
+            }
+            // advance to the next line
+            let mut i = 1;
             loop {
-                x[i] += 1;
-                if x[i] < hi[i] {
-                    continue 'points;
-                }
-                x[i] = origin[i];
-                i += 1;
                 if i == d {
-                    break 'points;
+                    return;
                 }
-            }
-        }
-        // advance tile origin
-        let mut i = 0;
-        loop {
-            origin[i] += tile[i] as i64;
-            if origin[i] < ranges[i].end {
-                break;
-            }
-            origin[i] = ranges[i].start;
-            i += 1;
-            if i == d {
-                break 'tiles;
+                x[i] += 1;
+                if x[i] < self.ranges[i].end {
+                    break;
+                }
+                x[i] = self.ranges[i].start;
+                i += 1;
             }
         }
     }
-    Order::from_packed(d, points)
 }
 
-/// The §3 lower-bound-attaining order: partition dim 0 into strips of
-/// `width` points; for each strip, sweep the remaining dims naturally with
-/// dim 0 innermost within the strip:
+/// Streaming §3 strip order: dim 0 cut into strips of `width`; within each
+/// strip the remaining dims sweep naturally with dim 0 innermost. One
+/// pencil per strip.
+#[derive(Debug, Clone)]
+pub struct StripTraversal {
+    ranges: Vec<Range<i64>>,
+    width: usize,
+}
+
+/// Build the streaming strip order.
+pub fn strip_stream(grid: &GridDesc, r: usize, width: usize) -> StripTraversal {
+    assert!(width >= 1);
+    StripTraversal { ranges: interior_ranges(grid, r), width }
+}
+
+impl Traversal for StripTraversal {
+    fn ndim(&self) -> usize {
+        self.ranges.len()
+    }
+
+    fn num_points(&self) -> u64 {
+        points_of(&self.ranges)
+    }
+
+    fn num_pencils(&self) -> usize {
+        if self.num_points() == 0 {
+            return 0;
+        }
+        extent(&self.ranges[0]).div_ceil(self.width)
+    }
+
+    fn stream_pencils(&self, pencils: Range<usize>, f: &mut dyn FnMut(&[i64])) {
+        let np = self.num_pencils();
+        let pencils = pencils.start.min(np)..pencils.end.min(np);
+        let d = self.ranges.len();
+        let (lo0, hi0) = if pencils.is_empty() {
+            return;
+        } else {
+            (self.ranges[0].start, self.ranges[0].end)
+        };
+        let mut x = vec![0i64; d];
+        for s in pencils {
+            let s_lo = lo0 + (s * self.width) as i64;
+            let s_hi = (s_lo + self.width as i64).min(hi0);
+            if d == 1 {
+                for v in s_lo..s_hi {
+                    x[0] = v;
+                    f(&x);
+                }
+                continue;
+            }
+            for (i, rg) in self.ranges.iter().enumerate().skip(1) {
+                x[i] = rg.start;
+            }
+            'lines: loop {
+                for v in s_lo..s_hi {
+                    x[0] = v;
+                    f(&x);
+                }
+                let mut i = 1;
+                loop {
+                    x[i] += 1;
+                    if x[i] < self.ranges[i].end {
+                        break;
+                    }
+                    x[i] = self.ranges[i].start;
+                    i += 1;
+                    if i == d {
+                        break 'lines;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Streaming rectangular tiling: tiles ordered lexicographically (dim 0
+/// fastest), natural order within each tile. One pencil per tile.
+#[derive(Debug, Clone)]
+pub struct BlockedTraversal {
+    ranges: Vec<Range<i64>>,
+    tile: Vec<usize>,
+}
+
+/// Build the streaming blocked order. `tile[i]` is the tile extent along
+/// dim i.
+pub fn blocked_stream(grid: &GridDesc, r: usize, tile: &[usize]) -> BlockedTraversal {
+    assert_eq!(tile.len(), grid.ndim());
+    assert!(tile.iter().all(|&t| t >= 1));
+    BlockedTraversal { ranges: interior_ranges(grid, r), tile: tile.to_vec() }
+}
+
+impl BlockedTraversal {
+    fn tiles_along(&self, i: usize) -> usize {
+        extent(&self.ranges[i]).div_ceil(self.tile[i])
+    }
+}
+
+impl Traversal for BlockedTraversal {
+    fn ndim(&self) -> usize {
+        self.ranges.len()
+    }
+
+    fn num_points(&self) -> u64 {
+        points_of(&self.ranges)
+    }
+
+    fn num_pencils(&self) -> usize {
+        if self.num_points() == 0 {
+            return 0;
+        }
+        (0..self.ranges.len()).map(|i| self.tiles_along(i)).product()
+    }
+
+    fn stream_pencils(&self, pencils: Range<usize>, f: &mut dyn FnMut(&[i64])) {
+        let np = self.num_pencils();
+        let pencils = pencils.start.min(np)..pencils.end.min(np);
+        if pencils.is_empty() {
+            return;
+        }
+        let d = self.ranges.len();
+        let mut x = vec![0i64; d];
+        for t in pencils {
+            // decode tile index (dim 0 fastest, matching the tile odometer
+            // of the materialized blocked order)
+            let mut k = t;
+            let mut origin = [0i64; MAX_STREAM_DIMS];
+            let mut hi = [0i64; MAX_STREAM_DIMS];
+            for i in 0..d {
+                let tiles = self.tiles_along(i);
+                let ti = k % tiles;
+                k /= tiles;
+                origin[i] = self.ranges[i].start + (ti * self.tile[i]) as i64;
+                hi[i] = (origin[i] + self.tile[i] as i64).min(self.ranges[i].end);
+            }
+            x.copy_from_slice(&origin[..d]);
+            'points: loop {
+                f(&x);
+                let mut i = 0;
+                loop {
+                    x[i] += 1;
+                    if x[i] < hi[i] {
+                        continue 'points;
+                    }
+                    x[i] = origin[i];
+                    i += 1;
+                    if i == d {
+                        break 'points;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Natural (lexicographic, dim-0-fastest) materialized order — the
+/// streaming [`natural_stream`] collected into an [`Order`].
+pub fn natural(grid: &GridDesc, r: usize) -> Order {
+    assert!(grid.ndim() <= MAX_DIMS, "packed orders support up to {MAX_DIMS} dims");
+    materialize(&natural_stream(grid, r))
+}
+
+/// Classical rectangular tiling, materialized: visit tile-by-tile (tiles
+/// ordered lexicographically), natural order within each tile. `tile[i]`
+/// is the tile extent along dim i.
+pub fn blocked(grid: &GridDesc, r: usize, tile: &[usize]) -> Order {
+    assert!(grid.ndim() <= MAX_DIMS, "packed orders support up to {MAX_DIMS} dims");
+    materialize(&blocked_stream(grid, r, tile))
+}
+
+/// The §3 lower-bound-attaining order, materialized: partition dim 0 into
+/// strips of `width` points; for each strip, sweep the remaining dims
+/// naturally with dim 0 innermost within the strip:
 ///
 /// ```text
 /// do strip                      (i in the paper, k·a strips)
@@ -200,47 +537,8 @@ pub fn blocked(grid: &GridDesc, r: usize, tile: &[usize]) -> Order {
 ///     do x_1 in strip           (i1)
 /// ```
 pub fn strip(grid: &GridDesc, r: usize, width: usize) -> Order {
-    let d = grid.ndim();
-    assert!(width >= 1);
-    let Some(ranges) = interior_or_empty(grid, r) else {
-        return Order::from_packed(d, Vec::new());
-    };
-    let mut points = Vec::new();
-    let (lo0, hi0) = (ranges[0].start, ranges[0].end);
-    let mut s_lo = lo0;
-    while s_lo < hi0 {
-        let s_hi = (s_lo + width as i64).min(hi0);
-        if d == 1 {
-            let mut x = vec![0i64];
-            for x0 in s_lo..s_hi {
-                x[0] = x0;
-                points.push(Order::pack(&x));
-            }
-        } else {
-            // odometer over dims 1..d
-            let mut x: Vec<i64> = ranges.iter().map(|rg| rg.start).collect();
-            'outer: loop {
-                for x0 in s_lo..s_hi {
-                    x[0] = x0;
-                    points.push(Order::pack(&x));
-                }
-                let mut i = 1;
-                loop {
-                    x[i] += 1;
-                    if x[i] < ranges[i].end {
-                        break;
-                    }
-                    x[i] = ranges[i].start;
-                    i += 1;
-                    if i == d {
-                        break 'outer;
-                    }
-                }
-            }
-        }
-        s_lo = s_hi;
-    }
-    Order::from_packed(d, points)
+    assert!(grid.ndim() <= MAX_DIMS, "packed orders support up to {MAX_DIMS} dims");
+    materialize(&strip_stream(grid, r, width))
 }
 
 #[cfg(test)]
@@ -277,6 +575,9 @@ mod tests {
     fn natural_empty_when_no_interior() {
         let g = GridDesc::new(&[3, 3]);
         assert!(natural(&g, 2).is_empty());
+        let s = natural_stream(&g, 2);
+        assert_eq!(s.num_points(), 0);
+        assert_eq!(s.num_pencils(), 0);
     }
 
     #[test]
@@ -343,5 +644,114 @@ mod tests {
             dedup.dedup();
             nat == b && nat == s && dedup.len() == nat.len()
         });
+    }
+
+    // ---- streaming-specific tests -------------------------------------
+
+    /// Multiset of a pencil range, as sorted packed points.
+    fn stream_set(t: &dyn Traversal, pencils: Range<usize>) -> Vec<u64> {
+        let mut v = Vec::new();
+        t.stream_pencils(pencils, &mut |x| v.push(Order::pack(x)));
+        v.sort_unstable();
+        v
+    }
+
+    #[test]
+    fn shard_ranges_partition() {
+        for (n, k) in [(0usize, 3usize), (1, 4), (7, 3), (12, 4), (100, 7), (5, 5), (3, 10)] {
+            let ranges = shard_ranges(n, k);
+            if n == 0 {
+                assert!(ranges.is_empty());
+                continue;
+            }
+            assert!(ranges.len() <= k.max(1));
+            assert_eq!(ranges[0].start, 0);
+            assert_eq!(ranges.last().unwrap().end, n);
+            for w in ranges.windows(2) {
+                assert_eq!(w[0].end, w[1].start, "gap/overlap between {w:?}");
+                assert!(!w[0].is_empty());
+            }
+        }
+    }
+
+    #[test]
+    fn natural_stream_matches_materialized_sequence() {
+        let g = grid_3d();
+        let s = natural_stream(&g, 1);
+        let o = natural(&g, 1);
+        assert_eq!(s.num_points(), o.len() as u64);
+        let mut streamed = Vec::new();
+        s.stream(&mut |x| streamed.push(Order::pack(x)));
+        assert_eq!(streamed, o.packed());
+    }
+
+    #[test]
+    fn strip_and_blocked_streams_match_materialized_sequences() {
+        let g = grid_3d();
+        let ss = strip_stream(&g, 1, 3);
+        let mut streamed = Vec::new();
+        ss.stream(&mut |x| streamed.push(Order::pack(x)));
+        assert_eq!(streamed, strip(&g, 1, 3).packed());
+
+        let bs = blocked_stream(&g, 1, &[3, 2, 4]);
+        let mut streamed = Vec::new();
+        bs.stream(&mut |x| streamed.push(Order::pack(x)));
+        assert_eq!(streamed, blocked(&g, 1, &[3, 2, 4]).packed());
+    }
+
+    #[test]
+    fn pencil_shards_partition_the_interior() {
+        let g = GridDesc::new(&[9, 8, 7]);
+        let nat_set = natural(&g, 1).canonical_set();
+        let traversals: Vec<Box<dyn Traversal>> = vec![
+            Box::new(natural_stream(&g, 1)),
+            Box::new(strip_stream(&g, 1, 2)),
+            Box::new(blocked_stream(&g, 1, &[3, 3, 3])),
+            Box::new(MaterializedTraversal::with_pencil_len(natural(&g, 1), 17)),
+        ];
+        for t in &traversals {
+            for shards in [1usize, 2, 3, 5, 64] {
+                let mut all = Vec::new();
+                for rg in shard_ranges(t.num_pencils(), shards) {
+                    all.extend(stream_set(t.as_ref(), rg));
+                }
+                all.sort_unstable();
+                assert_eq!(all, nat_set, "shards={shards}");
+            }
+        }
+    }
+
+    #[test]
+    fn mid_range_pencils_stream_correct_lines() {
+        // pencil decoding must be correct for ranges not starting at 0
+        let g = GridDesc::new(&[6, 5, 4]);
+        let t = natural_stream(&g, 1);
+        let full = stream_set(&t, 0..t.num_pencils());
+        let head = stream_set(&t, 0..2);
+        let mid = stream_set(&t, 2..5);
+        let tail = stream_set(&t, 5..t.num_pencils());
+        let mut joined = [head, mid, tail].concat();
+        joined.sort_unstable();
+        assert_eq!(joined, full);
+    }
+
+    #[test]
+    fn order_is_a_single_pencil_traversal() {
+        let g = GridDesc::new(&[6, 6]);
+        let o = natural(&g, 1);
+        assert_eq!(Traversal::num_points(&o), o.len() as u64);
+        assert_eq!(o.num_pencils(), 1);
+        assert_eq!(stream_set(&o, 0..1), o.canonical_set());
+    }
+
+    #[test]
+    fn materialize_roundtrip() {
+        let g = GridDesc::new(&[7, 6, 5]);
+        let s = blocked_stream(&g, 1, &[2, 3, 4]);
+        let o = materialize(&s);
+        assert_eq!(o.canonical_set(), natural(&g, 1).canonical_set());
+        let m = MaterializedTraversal::new(o.clone());
+        assert_eq!(m.order().len(), o.len());
+        assert_eq!(m.into_order().packed(), o.packed());
     }
 }

@@ -103,6 +103,15 @@ pub fn tiled_z_sweep_assoc(grid: &GridDesc, r: usize, modulus: usize, assoc: usi
     super::blocked(grid, r, &[t1, t2, grid.dims()[2]])
 }
 
+/// Streaming tiled z-sweep: same tile geometry as [`tiled_z_sweep_assoc`],
+/// generated lazily one tile (pencil) at a time — the hot-path variant the
+/// coordinator shards across workers.
+pub fn tiled_z_sweep_stream(grid: &GridDesc, r: usize, modulus: usize, assoc: usize) -> super::BlockedTraversal {
+    assert_eq!(grid.ndim(), 3);
+    let (t1, t2) = conflict_free_tile_assoc(grid.storage_dims(), modulus, r, assoc);
+    super::blocked_stream(grid, r, &[t1, t2, grid.dims()[2]])
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -154,6 +163,15 @@ mod tests {
         let g = GridDesc::new(&[20, 18, 12]);
         let order = tiled_z_sweep(&g, 1, 256);
         assert_eq!(order.canonical_set(), super::super::natural(&g, 1).canonical_set());
+    }
+
+    #[test]
+    fn tiled_stream_matches_materialized() {
+        use crate::traversal::{materialize, Traversal};
+        let g = GridDesc::new(&[20, 18, 12]);
+        let t = tiled_z_sweep_stream(&g, 1, 256, 2);
+        assert_eq!(t.num_points(), g.interior_points(1));
+        assert_eq!(materialize(&t).packed(), tiled_z_sweep(&g, 1, 256).packed());
     }
 
     #[test]

@@ -14,7 +14,7 @@ use crate::cache::{CacheParams, CacheSim};
 use crate::engine;
 use crate::grid::{GridDesc, MultiArrayLayout};
 use crate::stencil::Stencil;
-use crate::traversal::{self, FittingOptions, Order};
+use crate::traversal::{self, FittingOptions, Order, Traversal};
 
 /// A candidate traversal family member.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -37,27 +37,46 @@ impl Candidate {
         }
     }
 
+    /// §4 fitting options for a Pencil candidate.
+    fn pencil_opts(sweep_index: Option<usize>) -> FittingOptions {
+        FittingOptions { sweep_index, ..FittingOptions::default() }
+    }
+
+    /// Tile geometry for a TiledZ candidate — single source of truth shared
+    /// by the materialized and streaming builders, so calibration (build)
+    /// and production (build_stream) can never disagree on the tile.
+    fn tiled_z_tile(grid: &GridDesc, r: usize, cache: &CacheParams, assoc: usize, tz: usize) -> Vec<usize> {
+        let (t1, t2) = traversal::tiled::conflict_free_tile_assoc(grid.storage_dims(), cache.lattice_modulus(), r, assoc);
+        let tz_eff = tz.min(grid.dims()[grid.ndim() - 1]).max(1);
+        vec![t1, t2, tz_eff]
+    }
+
     /// Materialize the order for `grid`.
     pub fn build(&self, grid: &GridDesc, r: usize, cache: &CacheParams) -> Order {
         match self {
             Candidate::Pencil { sweep_index } => {
                 let lat = crate::lattice::InterferenceLattice::new(grid.storage_dims(), cache.lattice_modulus());
-                traversal::fitting::cache_fitting_opts(
-                    grid,
-                    r,
-                    &lat,
-                    &FittingOptions { sweep_index: *sweep_index, ..FittingOptions::default() },
-                )
+                traversal::fitting::cache_fitting_opts(grid, r, &lat, &Self::pencil_opts(*sweep_index))
             }
             Candidate::TiledZ { assoc, tz } => {
-                let (t1, t2) =
-                    traversal::tiled::conflict_free_tile_assoc(grid.storage_dims(), cache.lattice_modulus(), r, *assoc);
-                let tz_eff = (*tz).min(grid.dims()[grid.ndim() - 1]).max(1);
-                let mut tile = vec![t1, t2];
-                tile.push(tz_eff);
-                traversal::blocked(grid, r, &tile)
+                traversal::blocked(grid, r, &Self::tiled_z_tile(grid, r, cache, *assoc, *tz))
             }
             Candidate::Natural => traversal::natural(grid, r),
+        }
+    }
+
+    /// Build the candidate as a **streaming** traversal for `grid` — the
+    /// production path: nothing proportional to the grid is materialized.
+    pub fn build_stream(&self, grid: &GridDesc, r: usize, cache: &CacheParams) -> Box<dyn Traversal> {
+        match self {
+            Candidate::Pencil { sweep_index } => {
+                let lat = crate::lattice::InterferenceLattice::new(grid.storage_dims(), cache.lattice_modulus());
+                Box::new(traversal::fitting::cache_fitting_stream_opts(grid, r, &lat, &Self::pencil_opts(*sweep_index)))
+            }
+            Candidate::TiledZ { assoc, tz } => {
+                Box::new(traversal::blocked_stream(grid, r, &Self::tiled_z_tile(grid, r, cache, *assoc, *tz)))
+            }
+            Candidate::Natural => Box::new(traversal::natural_stream(grid, r)),
         }
     }
 }
@@ -112,11 +131,23 @@ pub fn tune(grid: &GridDesc, stencil: &Stencil, cache: &CacheParams, candidates:
 }
 
 /// One-call convenience: tune over the fitting family and build the
-/// winning order for the full grid.
+/// winning order for the full grid (materialized — kept for the experiment
+/// drivers, which replay one small order many times).
 pub fn auto_fitting_order(grid: &GridDesc, stencil: &Stencil, cache: &CacheParams) -> (Order, Candidate) {
     let tuned = tune(grid, stencil, cache, &fitting_candidates(grid.ndim()), 16);
     let order = tuned.candidate.build(grid, stencil.radius(), cache);
     (order, tuned.candidate)
+}
+
+/// Streaming twin of [`auto_fitting_order`]: tune on the cheap calibration
+/// slice (materialized — the slice is z-thinned by construction), then
+/// build the winner as a lazy [`Traversal`] over the *full* grid. This is
+/// what the coordinator's Analyze path uses: the full-grid visit sequence
+/// is never materialized.
+pub fn auto_fitting_traversal(grid: &GridDesc, stencil: &Stencil, cache: &CacheParams) -> (Box<dyn Traversal>, Candidate) {
+    let tuned = tune(grid, stencil, cache, &fitting_candidates(grid.ndim()), 16);
+    let t = tuned.candidate.build_stream(grid, stencil.radius(), cache);
+    (t, tuned.candidate)
 }
 
 #[cfg(test)]
@@ -161,6 +192,37 @@ mod tests {
             (fit as f64) < 0.45 * nat as f64,
             "auto ({}) {fit} vs natural {nat}",
             cand.name()
+        );
+    }
+
+    #[test]
+    fn stream_candidate_matches_materialized() {
+        let grid = GridDesc::new(&[30, 28, 20]);
+        let cache = CacheParams::new(2, 64, 2);
+        for cand in fitting_candidates(3) {
+            let mat = cand.build(&grid, 1, &cache);
+            let streamed = traversal::materialize(cand.build_stream(&grid, 1, &cache).as_ref());
+            assert_eq!(
+                streamed.canonical_set(),
+                mat.canonical_set(),
+                "candidate {}",
+                cand.name()
+            );
+        }
+    }
+
+    #[test]
+    fn auto_traversal_agrees_with_auto_order() {
+        let grid = GridDesc::new(&[30, 28, 20]);
+        let stencil = Stencil::star(3, 1);
+        let cache = CacheParams::new(2, 64, 2);
+        let (order, cand_o) = auto_fitting_order(&grid, &stencil, &cache);
+        let (stream, cand_s) = auto_fitting_traversal(&grid, &stencil, &cache);
+        assert_eq!(cand_o, cand_s);
+        assert_eq!(stream.num_points(), order.len() as u64);
+        assert_eq!(
+            traversal::materialize(stream.as_ref()).canonical_set(),
+            order.canonical_set()
         );
     }
 

@@ -17,6 +17,15 @@ pub enum Json {
     Obj(Vec<(String, Json)>),
 }
 
+/// Compact serialization (`x.to_string()` comes from this impl).
+impl std::fmt::Display for Json {
+    fn fmt(&self, fm: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let mut out = String::new();
+        self.write(&mut out);
+        fm.write_str(&out)
+    }
+}
+
 impl Json {
     pub fn obj() -> Json {
         Json::Obj(Vec::new())
@@ -43,13 +52,6 @@ impl Json {
             Json::Obj(pairs) => pairs.iter().find(|(k, _)| k == key).map(|(_, v)| v),
             _ => None,
         }
-    }
-
-    /// Serialize compactly.
-    pub fn to_string(&self) -> String {
-        let mut out = String::new();
-        self.write(&mut out);
-        out
     }
 
     /// Serialize with 2-space indentation.
