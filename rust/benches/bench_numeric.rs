@@ -1,0 +1,73 @@
+//! Numeric-sweep bench: real stencil FLOPs on a 128³ star13 grid under
+//! each traversal family — the wall-clock twin of the simulator's
+//! miss-count comparison (paper §6 measured on the R10000; here measured
+//! on whatever this machine is). Also times the sharded apply and the
+//! coordinator's native solve path end-to-end.
+//!
+//! Set STENCILCACHE_BENCH_QUICK=1 for a smoke run.
+
+use stencilcache::cache::CacheParams;
+use stencilcache::coordinator::{Coordinator, JobKind, PlannerConfig, StencilRequest, StencilSpec};
+use stencilcache::engine;
+use stencilcache::grid::GridDesc;
+use stencilcache::lattice::InterferenceLattice;
+use stencilcache::solver;
+use stencilcache::stencil::Stencil;
+use stencilcache::traversal;
+use stencilcache::util::bench::Bencher;
+use stencilcache::util::threadpool::ThreadPool;
+
+fn main() {
+    let mut b = Bencher::from_env();
+    let n = 128usize;
+    let grid = GridDesc::new(&[n, n, n]);
+    let stencil = Stencil::star13();
+    let cache = CacheParams::r10000();
+    let r = stencil.radius();
+    let points = grid.interior_points(r) as f64;
+
+    let u = solver::deterministic_field(&grid, r, 1);
+    let mut q = vec![0.0f64; grid.storage_words() as usize];
+
+    // traversal families, sequential sweep: same FLOPs, different order —
+    // the measured counterpart of the FIG4 miss comparison.
+    let natural = traversal::natural_stream(&grid, r);
+    b.bench_items(&format!("apply_{n}^3_star13/natural"), points, || {
+        engine::apply(&natural, &grid, &stencil, &u, &mut q);
+        q[grid.offset_of(&[2, 2, 2]) as usize]
+    });
+
+    let tiled = traversal::tiled_z_sweep_stream(&grid, r, cache.lattice_modulus(), 2);
+    b.bench_items(&format!("apply_{n}^3_star13/tiled_z"), points, || {
+        engine::apply(&tiled, &grid, &stencil, &u, &mut q);
+        q[grid.offset_of(&[2, 2, 2]) as usize]
+    });
+
+    let lattice = InterferenceLattice::new(grid.storage_dims(), cache.lattice_modulus());
+    let fitting = traversal::cache_fitting_stream(&grid, r, &lattice);
+    b.bench_items(&format!("apply_{n}^3_star13/cache_fitting"), points, || {
+        engine::apply(&fitting, &grid, &stencil, &u, &mut q);
+        q[grid.offset_of(&[2, 2, 2]) as usize]
+    });
+
+    // sharded apply: same natural order fanned out over the pool
+    let pool = ThreadPool::with_default_parallelism();
+    let shards = pool.workers() * 2;
+    b.bench_items(&format!("apply_{n}^3_star13/natural_sharded_x{shards}"), points, || {
+        engine::apply_sharded(&natural, &grid, &stencil, &u, &mut q, &pool, shards);
+        q[grid.offset_of(&[2, 2, 2]) as usize]
+    });
+
+    // coordinator native solve end-to-end (plan → traversal → sharded
+    // sweep → residual/L2 reductions), smaller grid to keep iterations sane
+    let coord = Coordinator::analysis_only(PlannerConfig::default());
+    let solve = StencilRequest {
+        dims: vec![64, 64, 64],
+        stencil: StencilSpec::Star13,
+        rhs_arrays: 1,
+        kind: JobKind::Solve { steps: 3 },
+    };
+    b.bench_items("coordinator/native_solve_64^3_x3steps", 3.0 * 64.0 * 64.0 * 64.0, || {
+        coord.submit(&solve).unwrap()
+    });
+}

@@ -21,6 +21,9 @@ pub struct Metrics {
     pub shards_executed: AtomicU64,
     pub pjrt_executions: AtomicU64,
     pub pjrt_micros: AtomicU64,
+    /// Stencil applications served by the native numeric backend.
+    pub native_executions: AtomicU64,
+    pub native_micros: AtomicU64,
 }
 
 impl Metrics {
@@ -46,7 +49,9 @@ impl Metrics {
             .set("sharded_analyses", self.sharded_analyses.load(Ordering::Relaxed))
             .set("shards_executed", self.shards_executed.load(Ordering::Relaxed))
             .set("pjrt_executions", self.pjrt_executions.load(Ordering::Relaxed))
-            .set("pjrt_micros", self.pjrt_micros.load(Ordering::Relaxed));
+            .set("pjrt_micros", self.pjrt_micros.load(Ordering::Relaxed))
+            .set("native_executions", self.native_executions.load(Ordering::Relaxed))
+            .set("native_micros", self.native_micros.load(Ordering::Relaxed));
         o
     }
 }

@@ -1,5 +1,5 @@
 //! L3 coordinator: the serving layer that turns stencil jobs into plans,
-//! simulations, and PJRT executions.
+//! simulations, and numeric executions.
 //!
 //! Pipeline per request:
 //!
@@ -11,13 +11,18 @@
 //!                     Analyze  → streaming traversal → engine::simulate,
 //!                                fanned out over pencil shards when the
 //!                                interior is large (simulate_sharded)
-//!                     Execute  → PJRT artifact (runtime::execute)
-//!                     Solve    → repeated fused step+norms executions
+//!                     Execute  → NumericBackend (PJRT artifact when one is
+//!                                available, native engine sweep otherwise)
+//!                     Solve    → repeated step + residual/L2 reductions on
+//!                                the selected backend
 //! ```
 //!
 //! Python never appears here: numeric work runs from the AOT artifacts in
-//! `artifacts/` via the PJRT CPU client; analysis work runs on the cache
-//! simulator. Both paths are pure rust at request time.
+//! `artifacts/` via the PJRT CPU client **or** — when the `pjrt` feature is
+//! off or the shape has no artifact — on the pure-Rust
+//! [`crate::solver::NativeBackend`], which applies the stencil over the
+//! planner-chosen traversal, sharded across the worker pool. Analysis work
+//! runs on the cache simulator. All paths are pure rust at request time.
 
 mod batcher;
 mod metrics;
@@ -25,16 +30,20 @@ mod planner;
 
 pub use batcher::{group_by_shape, schedule, Batch, BatchKey};
 pub use metrics::Metrics;
-pub use planner::{plan, Plan, PlannerConfig, TraversalChoice, MAX_SHARDS, SHARD_GRAIN_POINTS};
+pub use planner::{build_traversal, plan, Plan, PlannerConfig, TraversalChoice, MAX_SHARDS, SHARD_GRAIN_POINTS};
+
+pub use crate::solver::{deterministic_input, SolveStep};
 
 use crate::cache::CacheSim;
 use crate::engine::{self, MissReport};
 use crate::grid::{GridDesc, MultiArrayLayout};
-use crate::runtime::{HostTensor, RuntimeHandle};
+use crate::runtime::RuntimeHandle;
+use crate::solver::{NativeBackend, NumericBackend, NumericJob, PjrtBackend};
 use crate::stencil::Stencil;
 use crate::traversal::{self, Traversal};
 use crate::util::threadpool::ThreadPool;
-use anyhow::{anyhow, bail, Result};
+use anyhow::{bail, Result};
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -68,9 +77,11 @@ pub enum JobKind {
     Analyze,
     /// Simulate under an explicitly requested traversal (baseline runs).
     AnalyzeWith(TraversalChoice),
-    /// One stencil application via PJRT (needs a matching artifact).
+    /// One stencil application (PJRT artifact when available, native
+    /// engine sweep otherwise).
     Execute,
-    /// `steps` heat/Jacobi iterations via PJRT, logging norms.
+    /// `steps` heat/Jacobi iterations with per-step norms, on the same
+    /// backend selection as `Execute`.
     Solve { steps: usize },
 }
 
@@ -102,15 +113,6 @@ impl StencilRequest {
     }
 }
 
-/// Per-step solver log entry.
-#[derive(Debug, Clone, Copy)]
-pub struct SolveStep {
-    pub step: usize,
-    pub u_norm: f64,
-    pub residual_norm: f64,
-    pub micros: u64,
-}
-
 /// The coordinator's answer.
 #[derive(Debug)]
 pub struct StencilResponse {
@@ -122,41 +124,64 @@ pub struct StencilResponse {
     pub wall_micros: u64,
 }
 
+/// Decrement-on-drop guard for the coordinator's in-flight fan-out count:
+/// a panicking shard worker unwinds through the job, and a leaked count
+/// would permanently shrink every later job's budget on this long-lived
+/// coordinator.
+struct ActiveGuard<'a>(&'a AtomicUsize);
+
+impl Drop for ActiveGuard<'_> {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
 /// The coordinator.
 pub struct Coordinator {
     config: PlannerConfig,
     runtime: Option<Arc<RuntimeHandle>>,
     pool: ThreadPool,
     metrics: Arc<Metrics>,
-    /// Analyses currently executing — divides the shard budget so that
-    /// concurrent jobs inside `serve` share the machine instead of each
-    /// fanning out to the full worker count (nested fan-out would run
-    /// O(workers²) simulator threads).
-    active_analyses: std::sync::atomic::AtomicUsize,
+    /// Fan-out jobs (analyses + native numeric sweeps) currently executing —
+    /// divides the shard budget so that concurrent jobs inside `serve`
+    /// share the machine instead of each fanning out to the full worker
+    /// count (nested fan-out would run O(workers²) threads).
+    active_fanout: AtomicUsize,
 }
 
 impl Coordinator {
-    /// Analysis-only coordinator (no PJRT): plans and simulations work,
-    /// Execute/Solve jobs fail with a clear error.
+    /// Standalone coordinator (no PJRT runtime attached): plans and
+    /// simulations run as always, and Execute/Solve requests are served by
+    /// the native numeric backend.
     pub fn analysis_only(config: PlannerConfig) -> Coordinator {
         Coordinator {
             config,
             runtime: None,
             pool: ThreadPool::with_default_parallelism(),
             metrics: Arc::new(Metrics::new()),
-            active_analyses: std::sync::atomic::AtomicUsize::new(0),
+            active_fanout: AtomicUsize::new(0),
         }
     }
 
-    /// Full coordinator with the PJRT runtime service attached.
+    /// Full coordinator with the PJRT runtime service attached; numeric
+    /// requests whose shape has no artifact still fall back to the native
+    /// backend.
     pub fn with_runtime(config: PlannerConfig, runtime: Arc<RuntimeHandle>) -> Coordinator {
         Coordinator {
             config,
             runtime: Some(runtime),
             pool: ThreadPool::with_default_parallelism(),
             metrics: Arc::new(Metrics::new()),
-            active_analyses: std::sync::atomic::AtomicUsize::new(0),
+            active_fanout: AtomicUsize::new(0),
         }
+    }
+
+    /// Register an in-flight fan-out job; returns the drop guard and this
+    /// job's worker-share budget (≥ 1).
+    fn enter_fanout(&self) -> (ActiveGuard<'_>, usize) {
+        let active = self.active_fanout.fetch_add(1, Ordering::SeqCst) + 1;
+        let budget = (self.pool.workers() / active).max(1);
+        (ActiveGuard(&self.active_fanout), budget)
     }
 
     pub fn metrics(&self) -> &Metrics {
@@ -217,8 +242,8 @@ impl Coordinator {
             JobKind::Plan => Ok(StencilResponse { plan, miss_report: None, result_norm: None, solve_log: Vec::new(), wall_micros: 0 }),
             JobKind::Analyze => self.run_analysis(req, &stencil, plan, None),
             JobKind::AnalyzeWith(choice) => self.run_analysis(req, &stencil, plan, Some(*choice)),
-            JobKind::Execute => self.run_execute(req, plan),
-            JobKind::Solve { steps } => self.run_solve(req, plan, *steps),
+            JobKind::Execute => self.run_numeric(req, &stencil, plan, None),
+            JobKind::Solve { steps } => self.run_numeric(req, &stencil, plan, Some(*steps)),
         }
     }
 
@@ -230,38 +255,20 @@ impl Coordinator {
         force: Option<TraversalChoice>,
     ) -> Result<StencilResponse> {
         let grid = GridDesc::with_padding(&plan.dims, &plan.pad);
-        let r = stencil.radius();
         let choice = force.unwrap_or(plan.traversal);
         // The hot path is a lazy stream: nothing proportional to the grid
         // is materialized, so Analyze scales to 512³+ grids whose packed
         // visit sequence would not fit in memory.
-        let order: Box<dyn Traversal> = match choice {
-            TraversalChoice::Natural => Box::new(traversal::natural_stream(&grid, r)),
-            TraversalChoice::CacheFitting => {
-                // the planner's fitting path is the auto-tuned family
-                crate::tuner::auto_fitting_traversal(&grid, stencil, &self.config.cache).0
-            }
-        };
+        let order = planner::build_traversal(&self.config, &grid, stencil, choice);
         let layout = MultiArrayLayout::paper_offsets(&grid, req.rhs_arrays, self.config.cache.size_words());
         // Fan big jobs out across pencil shards. The budget is the
         // planner's recommendation clamped to this job's *share* of the
         // worker pool: `scope_map` spawns fresh scoped threads per call, so
         // N concurrent analyses each sharding to the full pool would run
         // O(workers²) simulator threads. Dividing by the number of
-        // in-flight analyses keeps total fan-out ≈ the worker count; small
-        // jobs (or saturated pools) run the exact sequential sim.
-        // Decrement-on-drop guard: a panicking shard worker unwinds through
-        // here, and a leaked count would permanently shrink every later
-        // job's budget on this long-lived coordinator.
-        struct ActiveGuard<'a>(&'a std::sync::atomic::AtomicUsize);
-        impl Drop for ActiveGuard<'_> {
-            fn drop(&mut self) {
-                self.0.fetch_sub(1, std::sync::atomic::Ordering::SeqCst);
-            }
-        }
-        let active = self.active_analyses.fetch_add(1, std::sync::atomic::Ordering::SeqCst) + 1;
-        let _guard = ActiveGuard(&self.active_analyses);
-        let budget = (self.pool.workers() / active).max(1);
+        // in-flight fan-out jobs keeps total fan-out ≈ the worker count;
+        // small jobs (or saturated pools) run the exact sequential sim.
+        let (_guard, budget) = self.enter_fanout();
         let shards = plan.shards.min(budget);
         let report = if shards > 1 && order.num_pencils() > 1 {
             let ran = traversal::shard_ranges(order.num_pencils(), shards).len() as u64;
@@ -279,66 +286,75 @@ impl Coordinator {
         Ok(StencilResponse { plan, miss_report: Some(report), result_norm: None, solve_log: Vec::new(), wall_micros: 0 })
     }
 
-    fn runtime(&self) -> Result<&Arc<RuntimeHandle>> {
-        self.runtime.as_ref().ok_or_else(|| anyhow!("coordinator started without a PJRT runtime (analysis-only)"))
-    }
+    /// Serve a numeric job (`Execute` when `steps` is None, `Solve`
+    /// otherwise) on the best available backend: the PJRT artifact path
+    /// when a runtime is attached *and* the shape has a matching artifact,
+    /// the native engine sweep otherwise. The native sweep reuses the
+    /// plan's traversal choice and shard recommendation, so the numeric
+    /// path walks the grid exactly as the analysis path predicted.
+    ///
+    /// Determinism note: the result field is bitwise shard-invariant, but
+    /// norm reductions sum in chunk order, so their last bits depend on the
+    /// *effective* shard count — which `enter_fanout` may clamp below the
+    /// plan's recommendation while other fan-out jobs are in flight.
+    /// Sequential submissions are exactly reproducible; record
+    /// EXPERIMENTS.md numbers from a quiet coordinator.
+    fn run_numeric(
+        &self,
+        req: &StencilRequest,
+        stencil: &Stencil,
+        plan: Plan,
+        steps: Option<usize>,
+    ) -> Result<StencilResponse> {
+        let grid = GridDesc::with_padding(&plan.dims, &plan.pad);
+        let seed: u64 = if steps.is_some() { 0xBEEF } else { 0xC0FFEE };
+        let prefix = if steps.is_some() { "step_norms_" } else { "star13_" };
+        // The AOT artifacts compute the 13-point star specifically, so the
+        // PJRT path is eligible only for Star13 requests whose shape has an
+        // artifact; every other stencil runs natively (the engine handles
+        // arbitrary stencils).
+        let pjrt = self.runtime.as_ref().filter(|_| req.stencil == StencilSpec::Star13).cloned();
+        let pjrt = pjrt.filter(|rt| rt.manifest().find_for_shape(prefix, &req.dims).is_some());
 
-    fn artifact_for(&self, prefix: &str, dims: &[usize]) -> Result<String> {
-        let rt = self.runtime()?;
-        rt.manifest()
-            .find_for_shape(prefix, dims)
-            .map(|a| a.name.clone())
-            .ok_or_else(|| {
-                anyhow!(
-                    "no {prefix} artifact for shape {dims:?}; available: {:?}. Add the shape to `make artifacts` (aot.py --shapes).",
-                    rt.manifest().names()
-                )
-            })
-    }
-
-    fn run_execute(&self, req: &StencilRequest, plan: Plan) -> Result<StencilResponse> {
-        let rt = self.runtime()?.clone();
-        let name = self.artifact_for("star13_", &req.dims)?;
-        let u = deterministic_input(&req.dims, 0xC0FFEE);
-        let t0 = Instant::now();
-        let out = rt.execute(&name, &[&u])?;
-        let micros = t0.elapsed().as_micros() as u64;
-        Metrics::bump(&self.metrics.pjrt_executions, 1);
-        Metrics::bump(&self.metrics.pjrt_micros, micros);
+        let (order, shards, _guard) = if pjrt.is_some() {
+            // the artifact encodes its own loop nest; a cheap placeholder
+            // traversal satisfies the job shape
+            (Box::new(traversal::natural_stream(&grid, stencil.radius())) as Box<dyn Traversal>, 1, None)
+        } else {
+            let order = planner::build_traversal(&self.config, &grid, stencil, plan.traversal);
+            // native sweeps fan out like analyses: share the pool
+            let (guard, budget) = self.enter_fanout();
+            (order, plan.shards.min(budget), Some(guard))
+        };
+        let backend: Box<dyn NumericBackend + '_> = match pjrt {
+            Some(rt) => Box::new(PjrtBackend::new(rt)),
+            None => Box::new(NativeBackend::new(&self.pool)),
+        };
+        let job = NumericJob { dims: &req.dims, grid: &grid, stencil, traversal: order.as_ref(), shards, seed };
+        let out = match steps {
+            Some(n) => backend.solve(&job, n)?,
+            None => backend.execute(&job)?,
+        };
+        if backend.name() == "pjrt" {
+            Metrics::bump(&self.metrics.pjrt_executions, out.executions);
+            Metrics::bump(&self.metrics.pjrt_micros, out.micros);
+        } else {
+            Metrics::bump(&self.metrics.native_executions, out.executions);
+            Metrics::bump(&self.metrics.native_micros, out.micros);
+        }
         Metrics::bump(&self.metrics.executed, 1);
-        Metrics::bump(&self.metrics.points_processed, u.len() as u64);
+        // PJRT artifacts compute every grid point (zero-halo everywhere);
+        // the native sweep computes the K-interior — count what actually
+        // ran, matching run_analysis's interior-points semantics.
+        let points_per_exec = if backend.name() == "pjrt" { grid.num_points() } else { order.num_points() };
+        Metrics::bump(&self.metrics.points_processed, points_per_exec * out.executions);
         Ok(StencilResponse {
             plan,
             miss_report: None,
-            result_norm: Some(out[0].norm()),
-            solve_log: Vec::new(),
+            result_norm: Some(out.result_norm),
+            solve_log: out.solve_log,
             wall_micros: 0,
         })
-    }
-
-    fn run_solve(&self, req: &StencilRequest, plan: Plan, steps: usize) -> Result<StencilResponse> {
-        let rt = self.runtime()?.clone();
-        let name = self.artifact_for("step_norms_", &req.dims)?;
-        let mut u = deterministic_input(&req.dims, 0xBEEF);
-        let mut log = Vec::with_capacity(steps);
-        for step in 0..steps {
-            let t0 = Instant::now();
-            let mut out = rt.execute(&name, &[&u])?;
-            let micros = t0.elapsed().as_micros() as u64;
-            Metrics::bump(&self.metrics.pjrt_executions, 1);
-            Metrics::bump(&self.metrics.pjrt_micros, micros);
-            let norms = out.pop().expect("norms output");
-            u = out.pop().expect("state output");
-            log.push(SolveStep {
-                step,
-                u_norm: norms.data[0] as f64,
-                residual_norm: norms.data[1] as f64,
-                micros,
-            });
-        }
-        Metrics::bump(&self.metrics.executed, 1);
-        Metrics::bump(&self.metrics.points_processed, (u.len() * steps) as u64);
-        Ok(StencilResponse { plan, miss_report: None, result_norm: Some(u.norm()), solve_log: log, wall_micros: 0 })
     }
 
     /// Snapshot the metrics as JSON text.
@@ -351,15 +367,6 @@ impl Coordinator {
         }
         j.to_pretty()
     }
-}
-
-/// Deterministic pseudo-random input field for numeric jobs: reproducible
-/// across runs so EXPERIMENTS.md numbers are stable.
-pub fn deterministic_input(dims: &[usize], seed: u64) -> HostTensor {
-    let n: usize = dims.iter().product();
-    let mut rng = crate::util::rng::Rng::new(seed);
-    let data: Vec<f32> = (0..n).map(|_| (rng.f64() as f32) - 0.5).collect();
-    HostTensor::new(dims.to_vec(), data).expect("consistent dims")
 }
 
 #[cfg(test)]
@@ -430,7 +437,7 @@ mod tests {
     }
 
     #[test]
-    fn execute_without_runtime_fails_cleanly() {
+    fn execute_without_runtime_falls_back_to_native() {
         let c = coord();
         let req = StencilRequest {
             dims: vec![16, 16, 16],
@@ -438,8 +445,47 @@ mod tests {
             rhs_arrays: 1,
             kind: JobKind::Execute,
         };
-        let err = c.submit(&req).unwrap_err();
-        assert!(format!("{err}").contains("analysis-only"));
+        let resp = c.submit(&req).expect("native execute");
+        assert!(resp.result_norm.unwrap() > 0.0);
+        assert!(resp.solve_log.is_empty());
+        assert_eq!(c.metrics.native_executions.load(Ordering::Relaxed), 1);
+        assert_eq!(c.metrics.pjrt_executions.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn solve_without_runtime_runs_natively_and_dissipates() {
+        let c = coord();
+        let req = StencilRequest {
+            dims: vec![20, 20, 20],
+            stencil: StencilSpec::Star13,
+            rhs_arrays: 1,
+            kind: JobKind::Solve { steps: 6 },
+        };
+        let resp = c.submit(&req).expect("native solve");
+        assert_eq!(resp.solve_log.len(), 6);
+        for w in resp.solve_log.windows(2) {
+            assert!(w[1].u_norm <= w[0].u_norm * 1.0001, "{w:?}");
+        }
+        assert_eq!(resp.result_norm.unwrap(), resp.solve_log.last().unwrap().u_norm);
+        assert_eq!(c.metrics.native_executions.load(Ordering::Relaxed), 6);
+        assert_eq!(c.metrics.executed.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn native_solve_deterministic_across_submissions() {
+        let c = coord();
+        let mk = || StencilRequest {
+            dims: vec![18, 16, 14],
+            stencil: StencilSpec::Star { r: 1 },
+            rhs_arrays: 1,
+            kind: JobKind::Solve { steps: 4 },
+        };
+        let a = c.submit(&mk()).unwrap();
+        let b = c.submit(&mk()).unwrap();
+        for (x, y) in a.solve_log.iter().zip(&b.solve_log) {
+            assert_eq!(x.u_norm, y.u_norm);
+            assert_eq!(x.residual_norm, y.residual_norm);
+        }
     }
 
     #[test]

@@ -17,6 +17,7 @@ use crate::grid::GridDesc;
 use crate::lattice::InterferenceLattice;
 use crate::padding::{self, PaddingAdvice};
 use crate::stencil::Stencil;
+use crate::traversal::{self, Traversal};
 
 /// Traversal policy chosen by the planner.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -78,6 +79,23 @@ pub const SHARD_GRAIN_POINTS: u64 = 1 << 21;
 /// Hard cap on recommended shards (the coordinator further clamps to its
 /// worker count).
 pub const MAX_SHARDS: usize = 64;
+
+/// Build the streaming traversal for `choice` over the (padded) grid — the
+/// single construction point shared by the coordinator's Analyze path and
+/// the native numeric sweep, so analysis and computation always walk the
+/// grid in the same order the plan promised.
+pub fn build_traversal(
+    config: &PlannerConfig,
+    grid: &GridDesc,
+    stencil: &Stencil,
+    choice: TraversalChoice,
+) -> Box<dyn Traversal> {
+    match choice {
+        TraversalChoice::Natural => Box::new(traversal::natural_stream(grid, stencil.radius())),
+        // the planner's fitting path is the auto-tuned family
+        TraversalChoice::CacheFitting => crate::tuner::auto_fitting_traversal(grid, stencil, &config.cache).0,
+    }
+}
 
 /// Produce a plan for evaluating `stencil` with `p` RHS arrays over `dims`.
 pub fn plan(config: &PlannerConfig, dims: &[usize], stencil: &Stencil, p: usize) -> Plan {
@@ -199,6 +217,18 @@ mod tests {
         let small = plan(&cfg(), &[32, 32, 32], &Stencil::star13(), 1);
         let big = plan(&cfg(), &[64, 64, 64], &Stencil::star13(), 1);
         assert!(big.lower_bound > 7.0 * small.lower_bound);
+    }
+
+    #[test]
+    fn build_traversal_covers_the_interior_for_both_choices() {
+        let config = cfg();
+        let stencil = Stencil::star13();
+        let grid = GridDesc::new(&[24, 22, 20]);
+        for choice in [TraversalChoice::Natural, TraversalChoice::CacheFitting] {
+            let t = build_traversal(&config, &grid, &stencil, choice);
+            assert_eq!(t.num_points(), grid.interior_points(2), "{choice:?}");
+            assert_eq!(t.ndim(), 3);
+        }
     }
 
     #[test]

@@ -182,20 +182,90 @@ pub fn simulate_sharded<T: Traversal + ?Sized>(
 /// stream is consumed allocation-free: per point the engine does address
 /// arithmetic and the |K| multiply-adds, nothing else.
 pub fn apply<T: Traversal + ?Sized>(traversal: &T, grid: &GridDesc, stencil: &Stencil, u: &[f64], q: &mut [f64]) {
+    apply_pencils(traversal, 0..traversal.num_pencils(), grid, stencil, u, q)
+}
+
+/// Buffer/arity validation shared by the numeric entry points.
+fn check_numeric_args<T: Traversal + ?Sized>(traversal: &T, grid: &GridDesc, stencil: &Stencil, u: &[f64], q: &[f64]) {
     let d = grid.ndim();
     assert_eq!(stencil.ndim(), d);
     assert_eq!(traversal.ndim(), d);
     assert!(u.len() as u64 >= grid.storage_words(), "u buffer too small");
     assert!(q.len() as u64 >= grid.storage_words(), "q buffer too small");
+}
+
+/// The per-point stencil fold — the ONE definition shared by the
+/// sequential and sharded apply loops, so the documented bitwise equality
+/// between them can never drift apart.
+#[inline(always)]
+fn fold_point(coeffs: &[f64], deltas: &[i64], u: &[f64], base: i64) -> f64 {
+    let mut acc = 0.0;
+    for (&c, &dl) in coeffs.iter().zip(deltas) {
+        acc += c * u[(base + dl) as usize];
+    }
+    acc
+}
+
+/// [`apply`] restricted to a pencil range of the traversal — the shard body
+/// of [`apply_sharded`]. Writes only the `q` words of points in `pencils`;
+/// every other word of `q` is left untouched.
+pub fn apply_pencils<T: Traversal + ?Sized>(
+    traversal: &T,
+    pencils: Range<usize>,
+    grid: &GridDesc,
+    stencil: &Stencil,
+    u: &[f64],
+    q: &mut [f64],
+) {
+    check_numeric_args(traversal, grid, stencil, u, q);
     let deltas: Vec<i64> = stencil.offsets().iter().map(|o| grid.delta_of(o)).collect();
     let coeffs = stencil.coeffs();
-    traversal.stream(&mut |x| {
+    traversal.stream_pencils(pencils, &mut |x| {
         let base = grid.offset_of(x) as i64;
-        let mut acc = 0.0;
-        for (&c, &dl) in coeffs.iter().zip(&deltas) {
-            acc += c * u[(base + dl) as usize];
-        }
-        q[base as usize] = acc;
+        q[base as usize] = fold_point(coeffs, &deltas, u, base);
+    });
+}
+
+/// Sharded numeric apply: partition the traversal's pencils into at most
+/// `shards` disjoint ranges and run the stencil sweep concurrently on the
+/// worker pool.
+///
+/// **Write-disjointness.** Pencil ranges partition the interior point set
+/// (no dupes, no gaps — property-tested in `tests/streaming.rs`), each
+/// shard writes only `q[offset(x)]` for its own points `x`, and `u` is
+/// read-only, so no two workers ever touch the same word. Per-point
+/// arithmetic is identical to the sequential [`apply`] (same coefficient
+/// order, and `q` depends only on `u`), so the result field is **bitwise**
+/// equal to the sequential sweep for any traversal and shard count.
+pub fn apply_sharded<T: Traversal + ?Sized>(
+    traversal: &T,
+    grid: &GridDesc,
+    stencil: &Stencil,
+    u: &[f64],
+    q: &mut [f64],
+    pool: &ThreadPool,
+    shards: usize,
+) {
+    let ranges = shard_ranges(traversal.num_pencils(), shards);
+    if ranges.len() <= 1 {
+        return apply(traversal, grid, stencil, u, q);
+    }
+    check_numeric_args(traversal, grid, stencil, u, q);
+    let deltas: Vec<i64> = stencil.offsets().iter().map(|o| grid.delta_of(o)).collect();
+    let coeffs = stencil.coeffs();
+    // Raw-pointer sink so workers never hold overlapping `&mut` slices;
+    // SAFETY: the disjointness argument above — each word of q is written
+    // by at most one worker, and u/q are distinct buffers.
+    struct QPtr(*mut f64);
+    unsafe impl Sync for QPtr {}
+    let qp = QPtr(q.as_mut_ptr());
+    let qp = &qp;
+    pool.scope_map(ranges.len(), |i| {
+        traversal.stream_pencils(ranges[i].clone(), &mut |x| {
+            let base = grid.offset_of(x) as i64;
+            let acc = fold_point(coeffs, &deltas, u, base);
+            unsafe { qp.0.add(base as usize).write(acc) };
+        });
     });
 }
 
@@ -392,6 +462,98 @@ mod tests {
         assert_eq!(merged.total, whole.total);
         assert_eq!(merged.u_loads, whole.u_loads);
         assert_eq!(merged.u_misses, whole.u_misses);
+    }
+
+    #[test]
+    fn apply_pencils_ranges_partition_the_field() {
+        // Applying over split pencil ranges must produce the same q as one
+        // full sweep: each range writes exactly its own points.
+        let (g, s, _) = setup(&[11, 9]);
+        let words = g.storage_words() as usize;
+        let mut rng = crate::util::rng::Rng::new(21);
+        let u: Vec<f64> = (0..words).map(|_| rng.f64()).collect();
+        let t = natural_stream(&g, 1);
+        let np = t.num_pencils();
+        let mut q_whole = vec![0.0; words];
+        apply(&t, &g, &s, &u, &mut q_whole);
+        let mut q_split = vec![0.0; words];
+        apply_pencils(&t, 0..np / 3, &g, &s, &u, &mut q_split);
+        apply_pencils(&t, np / 3..np, &g, &s, &u, &mut q_split);
+        assert_eq!(q_whole, q_split);
+    }
+
+    #[test]
+    fn apply_sharded_bitwise_equals_sequential() {
+        let (g, s, _) = setup(&[18, 16, 14]);
+        let words = g.storage_words() as usize;
+        let mut rng = crate::util::rng::Rng::new(13);
+        let u: Vec<f64> = (0..words).map(|_| rng.f64()).collect();
+        let pool = ThreadPool::new(3);
+        let mut q_seq = vec![0.0; words];
+        let t = natural_stream(&g, 1);
+        apply(&t, &g, &s, &u, &mut q_seq);
+        for shards in [1usize, 2, 5, 64] {
+            let mut q_par = vec![0.0; words];
+            apply_sharded(&t, &g, &s, &u, &mut q_par, &pool, shards);
+            assert_eq!(q_seq, q_par, "shards={shards}");
+        }
+        // the streaming fitting traversal shards over lattice pencils —
+        // same field bit-for-bit
+        let cache = CacheParams::new(1, 16, 2);
+        let fit = crate::traversal::cache_fitting_stream_for_cache(&g, 1, &cache);
+        let mut q_fit = vec![0.0; words];
+        apply_sharded(&fit, &g, &s, &u, &mut q_fit, &pool, 4);
+        assert_eq!(q_seq, q_fit);
+    }
+
+    #[test]
+    fn merged_conserves_hit_miss_access_identity() {
+        // For any sharded run: hits + misses == accesses must hold for the
+        // merged report exactly as for the sequential one, and accesses and
+        // points must agree between the two (only the hit/miss split may
+        // shift at shard boundaries).
+        let (g, s, l) = setup(&[14, 13, 12]);
+        let cache = CacheParams::new(2, 32, 2);
+        let pool = ThreadPool::new(3);
+        for t in [natural_stream(&g, 1)] {
+            let mut sim = CacheSim::new(cache);
+            let seq = simulate(&t, &l, &s, &mut sim);
+            let shd = simulate_sharded(&t, &l, &s, cache, &pool, 5);
+            for rep in [&seq, &shd] {
+                assert_eq!(rep.total.hits + rep.total.misses(), rep.total.accesses);
+                assert!(rep.u_misses <= rep.u_loads + rep.total.misses());
+            }
+            assert_eq!(seq.points, shd.points);
+            assert_eq!(seq.total.accesses, shd.total.accesses);
+        }
+    }
+
+    #[test]
+    fn incremental_ranges_sum_cleanly_for_strip_and_blocked() {
+        // stats_delta correctness across warm-cache range splits must hold
+        // for every pencil geometry, not just dim-0 lines.
+        let g = GridDesc::new(&[12, 10, 9]);
+        let s = Stencil::star(3, 1);
+        let l = MultiArrayLayout::contiguous(&g, 1);
+        let cache = CacheParams::new(2, 16, 2);
+        let traversals: Vec<Box<dyn Traversal>> = vec![
+            Box::new(crate::traversal::strip_stream(&g, 1, 3)),
+            Box::new(crate::traversal::blocked_stream(&g, 1, &[4, 3, 5])),
+        ];
+        for t in &traversals {
+            let np = t.num_pencils();
+            let mut sim = CacheSim::new(cache);
+            let r1 = simulate_pencils(t.as_ref(), 0..np / 3, &l, &s, &mut sim);
+            let r2 = simulate_pencils(t.as_ref(), np / 3..2 * np / 3, &l, &s, &mut sim);
+            let r3 = simulate_pencils(t.as_ref(), 2 * np / 3..np, &l, &s, &mut sim);
+            let merged = MissReport::merged(&[r1, r2, r3]);
+            let mut sim2 = CacheSim::new(cache);
+            let whole = simulate(t.as_ref(), &l, &s, &mut sim2);
+            assert_eq!(merged.points, whole.points);
+            assert_eq!(merged.total, whole.total);
+            assert_eq!(merged.u_loads, whole.u_loads);
+            assert_eq!(merged.u_misses, whole.u_misses);
+        }
     }
 
     #[test]

@@ -17,8 +17,10 @@
 //!   machinery, **streaming traversal engine** (lazy pencil-at-a-time visit
 //!   orders — see [`traversal::Traversal`] — sharded across the worker pool
 //!   for large grids), bounds, padding advisor, the serving coordinator,
-//!   and the PJRT runtime that executes AOT-compiled artifacts (behind the
-//!   `pjrt` cargo feature; a clean-failing stub otherwise).
+//!   the **native numeric backend** ([`solver`]: real stencil FLOPs over
+//!   the planner's traversal, no XLA required), and the PJRT runtime that
+//!   executes AOT-compiled artifacts (behind the `pjrt` cargo feature; the
+//!   coordinator falls back to the native backend without it).
 //! - **L2 (python/compile/model.py, build-time)**: the stencil compute graph
 //!   in JAX, lowered once to HLO text in `artifacts/`.
 //! - **L1 (python/compile/kernels/, build-time)**: Pallas stencil kernels
@@ -43,6 +45,7 @@ pub mod lattice;
 pub mod padding;
 pub mod report;
 pub mod runtime;
+pub mod solver;
 pub mod stencil;
 pub mod traversal;
 pub mod tuner;

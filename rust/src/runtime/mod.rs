@@ -88,8 +88,9 @@ pub struct Runtime {
 }
 
 /// Stub runtime used when the crate is built without the `pjrt` feature:
-/// constructors fail with a descriptive error, so callers (coordinator,
-/// examples, benches) degrade gracefully to analysis-only behaviour.
+/// constructors fail with a descriptive error, so callers degrade
+/// gracefully — the coordinator serves Execute/Solve requests on the
+/// native numeric backend ([`crate::solver::NativeBackend`]) instead.
 #[cfg(not(feature = "pjrt"))]
 pub struct Runtime {
     manifest: Manifest,
@@ -128,10 +129,12 @@ impl Runtime {
 impl Runtime {
     /// Fails: executing artifacts needs the `pjrt` feature (and the `xla`
     /// crate it pulls in). The manifest is still validated so
-    /// configuration errors surface even in stub builds.
+    /// configuration errors surface even in stub builds. Numeric requests
+    /// submitted through the coordinator still complete — they fall back
+    /// to the native backend.
     pub fn open(dir: impl AsRef<Path>) -> Result<Runtime> {
         let _ = load_manifest(dir.as_ref())?;
-        bail!("stencilcache was built without the `pjrt` feature; rebuild with `--features pjrt` (requires the xla crate) to execute artifacts")
+        bail!("stencilcache was built without the `pjrt` feature; rebuild with `--features pjrt` (requires the xla crate) to execute artifacts — coordinator Solve/Execute fall back to the native numeric backend")
     }
 
     pub fn platform(&self) -> String {

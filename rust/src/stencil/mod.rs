@@ -74,8 +74,12 @@ impl Stencil {
         Stencil::star(3, 2)
     }
 
-    /// Full box stencil `{‖x‖∞ ≤ r}` with uniform averaging weights.
+    /// Full box stencil `{‖x‖∞ ≤ r}` with uniform averaging weights
+    /// (coefficients sum to 1, unlike the difference-operator stars).
     pub fn box_stencil(d: usize, r: usize) -> Stencil {
+        // d = 0 would underflow the odometer below; r = 0 is legal (the
+        // identity stencil) and useful in tests.
+        assert!(d >= 1, "box stencil needs at least one dimension");
         let side = 2 * r + 1;
         let count = side.pow(d as u32);
         let w = 1.0 / count as f64;
@@ -193,6 +197,68 @@ mod tests {
             assert_eq!(s.size(), 2 * d + 1);
             assert!(s.contains_star());
             assert_eq!(s.diameter(), 3);
+        }
+    }
+
+    #[test]
+    fn star_offset_counts_d1_to_d4() {
+        // |K| = 1 + 2rd for every (d, r), including the generic r ≥ 3
+        // weight path; construction also exercises duplicate-offset
+        // rejection (from_offsets panics on repeats).
+        for d in 1..=4usize {
+            for r in 1..=3usize {
+                let s = Stencil::star(d, r);
+                assert_eq!(s.size(), 1 + 2 * r * d, "star({d},{r})");
+                assert_eq!(s.radius(), r);
+                assert_eq!(s.ndim(), d);
+            }
+        }
+    }
+
+    #[test]
+    fn star_coefficients_sum_to_zero_d1_to_d4() {
+        // A difference operator must annihilate constants for every
+        // dimensionality and radius (the numeric backend's solve relies on
+        // this: constant modes carry no residual).
+        for d in 1..=4usize {
+            for r in 1..=3usize {
+                let sum: f64 = Stencil::star(d, r).coeffs().iter().sum();
+                assert!(sum.abs() < 1e-12, "star({d},{r}): Σc = {sum}");
+            }
+        }
+    }
+
+    #[test]
+    fn box_stencil_d1_to_d4() {
+        for d in 1..=4usize {
+            let s = Stencil::box_stencil(d, 1);
+            assert_eq!(s.size(), 3usize.pow(d as u32), "box({d},1)");
+            assert_eq!(s.radius(), 1);
+            // averaging weights sum to one
+            let sum: f64 = s.coeffs().iter().sum();
+            assert!((sum - 1.0).abs() < 1e-12, "box({d},1): Σc = {sum}");
+        }
+        // r = 0 is the identity stencil
+        let id = Stencil::box_stencil(2, 0);
+        assert_eq!(id.size(), 1);
+        assert_eq!(id.radius(), 0);
+        assert_eq!(id.diameter(), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "at least one dimension")]
+    fn box_stencil_rejects_zero_dims() {
+        let _ = Stencil::box_stencil(0, 1);
+    }
+
+    #[test]
+    fn star_offsets_unique_d1_to_d4() {
+        for d in 1..=4usize {
+            let s = Stencil::star(d, 2);
+            let mut seen = std::collections::HashSet::new();
+            for o in s.offsets() {
+                assert!(seen.insert(o.clone()), "duplicate offset {o:?} in star({d},2)");
+            }
         }
     }
 

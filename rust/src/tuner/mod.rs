@@ -97,34 +97,92 @@ pub fn fitting_candidates(d: usize) -> Vec<Candidate> {
     c
 }
 
-/// Outcome of tuning: the winning candidate and its calibration misses.
+/// What the tuner minimizes on the calibration slice.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TuneMetric {
+    /// Simulated cache misses — deterministic, machine-independent; what
+    /// the paper's analysis predicts (default).
+    SimulatedMisses,
+    /// Wall-clock of a real numeric `engine::apply` sweep — what a serving
+    /// system actually pays. Noisy, so each candidate is timed best-of-3;
+    /// use when calibrating the native numeric backend on live hardware.
+    WallClock,
+}
+
+/// Outcome of tuning: the winning candidate and its calibration score
+/// (misses and/or nanoseconds, depending on the metric).
 #[derive(Debug)]
 pub struct Tuned {
     pub candidate: Candidate,
+    /// Simulated misses on the calibration slice (0 under `WallClock`).
     pub calib_misses: u64,
+    /// Best-of-3 apply wall time on the slice (0 under `SimulatedMisses`).
+    pub calib_nanos: u64,
 }
 
-/// Pick the best candidate for (grid, stencil, cache) by simulating each
-/// on a z-thinned calibration grid (last dim clamped to `calib_z`).
-pub fn tune(grid: &GridDesc, stencil: &Stencil, cache: &CacheParams, candidates: &[Candidate], calib_z: usize) -> Tuned {
-    assert!(!candidates.is_empty());
+/// The z-thinned calibration grid for `grid` (last dim clamped to
+/// `calib_z`, padding preserved).
+fn calibration_grid(grid: &GridDesc, stencil: &Stencil, calib_z: usize) -> GridDesc {
     let d = grid.ndim();
     let mut calib_dims = grid.dims().to_vec();
     if d >= 2 {
         calib_dims[d - 1] = calib_dims[d - 1].min(calib_z.max(2 * stencil.radius() + 2));
     }
-    // preserve padding in the calibration grid
     let pad: Vec<usize> = grid.storage_dims().iter().zip(grid.dims()).map(|(&s, &l)| s - l).collect();
-    let calib = GridDesc::with_padding(&calib_dims, &pad);
-    let layout = MultiArrayLayout::paper_offsets(&calib, 1, cache.size_words());
+    GridDesc::with_padding(&calib_dims, &pad)
+}
+
+/// Pick the best candidate for (grid, stencil, cache) by simulating each
+/// on a z-thinned calibration grid (last dim clamped to `calib_z`).
+pub fn tune(grid: &GridDesc, stencil: &Stencil, cache: &CacheParams, candidates: &[Candidate], calib_z: usize) -> Tuned {
+    tune_with_metric(grid, stencil, cache, candidates, calib_z, TuneMetric::SimulatedMisses)
+}
+
+/// [`tune`] with an explicit calibration metric: simulated misses (the
+/// paper's model) or measured wall-clock of the numeric sweep (what the
+/// native backend cares about on real hardware).
+pub fn tune_with_metric(
+    grid: &GridDesc,
+    stencil: &Stencil,
+    cache: &CacheParams,
+    candidates: &[Candidate],
+    calib_z: usize,
+    metric: TuneMetric,
+) -> Tuned {
+    assert!(!candidates.is_empty());
+    let calib = calibration_grid(grid, stencil, calib_z);
+    let r = stencil.radius();
     let mut best: Option<Tuned> = None;
-    for cand in candidates {
-        let order = cand.build(&calib, stencil.radius(), cache);
-        let mut sim = CacheSim::new(*cache);
-        let rep = engine::simulate(&order, &layout, stencil, &mut sim);
-        let misses = rep.total.misses();
-        if best.as_ref().map(|b| misses < b.calib_misses).unwrap_or(true) {
-            best = Some(Tuned { candidate: cand.clone(), calib_misses: misses });
+    match metric {
+        TuneMetric::SimulatedMisses => {
+            let layout = MultiArrayLayout::paper_offsets(&calib, 1, cache.size_words());
+            for cand in candidates {
+                let order = cand.build(&calib, r, cache);
+                let mut sim = CacheSim::new(*cache);
+                let rep = engine::simulate(&order, &layout, stencil, &mut sim);
+                let misses = rep.total.misses();
+                if best.as_ref().map(|b| misses < b.calib_misses).unwrap_or(true) {
+                    best = Some(Tuned { candidate: cand.clone(), calib_misses: misses, calib_nanos: 0 });
+                }
+            }
+        }
+        TuneMetric::WallClock => {
+            let words = calib.storage_words() as usize;
+            let u = crate::solver::deterministic_field(&calib, r, 0xCA11B);
+            let mut q = vec![0.0f64; words];
+            for cand in candidates {
+                let t = cand.build_stream(&calib, r, cache);
+                let mut best_ns = u64::MAX;
+                // best-of-3: the first run also warms u/q into the caches
+                for _ in 0..3 {
+                    let t0 = std::time::Instant::now();
+                    engine::apply(t.as_ref(), &calib, stencil, &u, &mut q);
+                    best_ns = best_ns.min(t0.elapsed().as_nanos() as u64);
+                }
+                if best.as_ref().map(|b| best_ns < b.calib_nanos).unwrap_or(true) {
+                    best = Some(Tuned { candidate: cand.clone(), calib_misses: 0, calib_nanos: best_ns });
+                }
+            }
         }
     }
     best.unwrap()
@@ -161,6 +219,19 @@ mod tests {
         let cache = CacheParams::r10000();
         let tuned = tune(&grid, &stencil, &cache, &fitting_candidates(3), 16);
         assert!(tuned.calib_misses > 0);
+        assert_eq!(tuned.calib_nanos, 0);
+    }
+
+    #[test]
+    fn wallclock_metric_times_real_sweeps() {
+        let grid = GridDesc::new(&[40, 36, 30]);
+        let stencil = Stencil::star(3, 1);
+        let cache = CacheParams::new(2, 64, 2);
+        let cands = fitting_candidates(3);
+        let tuned = tune_with_metric(&grid, &stencil, &cache, &cands, 16, TuneMetric::WallClock);
+        assert!(tuned.calib_nanos > 0, "wall-clock calibration must measure something");
+        assert_eq!(tuned.calib_misses, 0);
+        assert!(cands.contains(&tuned.candidate));
     }
 
     #[test]

@@ -1,0 +1,198 @@
+//! CacheSim vs a brute-force reference model.
+//!
+//! The production simulator ([`stencilcache::cache::CacheSim`]) is the
+//! hottest code in the repo and is correspondingly optimized (move-to-front
+//! LRU arrays, growable bitsets). This file re-implements §2 of the paper
+//! in the most naive way possible — per-set `Vec`s in recency order,
+//! `HashSet`s for history — and checks the two agree **per access** on
+//! random address streams over direct-mapped, set-associative, and fully
+//! associative geometries, including the cold/replacement *load*
+//! classification the paper's bounds constrain.
+
+use stencilcache::cache::{AccessKind, CacheParams, CacheSim, CacheStats};
+use stencilcache::util::rng::Rng;
+use std::collections::HashSet;
+
+/// Naive reference: exact LRU set-associative cache with §2 counters.
+struct RefCache {
+    params: CacheParams,
+    /// One Vec per set, most-recently-used first, holding line numbers.
+    sets: Vec<Vec<u64>>,
+    seen_lines: HashSet<u64>,
+    requested_words: HashSet<u64>,
+    stats: CacheStats,
+}
+
+impl RefCache {
+    fn new(params: CacheParams) -> RefCache {
+        RefCache {
+            params,
+            sets: vec![Vec::new(); params.sets],
+            seen_lines: HashSet::new(),
+            requested_words: HashSet::new(),
+            stats: CacheStats::default(),
+        }
+    }
+
+    fn is_resident(&self, addr: u64) -> bool {
+        let line = self.params.line_of(addr);
+        self.sets[self.params.set_of(addr)].contains(&line)
+    }
+
+    fn access(&mut self, addr: u64) -> AccessKind {
+        self.stats.accesses += 1;
+        let line = self.params.line_of(addr);
+        let set = self.params.set_of(addr);
+        let ways = &mut self.sets[set];
+        let kind = if let Some(pos) = ways.iter().position(|&l| l == line) {
+            // hit: move to front
+            ways.remove(pos);
+            ways.insert(0, line);
+            AccessKind::Hit
+        } else {
+            ways.insert(0, line);
+            if ways.len() > self.params.assoc {
+                ways.pop(); // evict LRU
+                self.stats.evictions += 1;
+            }
+            if self.seen_lines.insert(line) {
+                AccessKind::ColdMiss
+            } else {
+                AccessKind::ReplacementMiss
+            }
+        };
+        match kind {
+            AccessKind::Hit => self.stats.hits += 1,
+            AccessKind::ColdMiss => self.stats.cold_misses += 1,
+            AccessKind::ReplacementMiss => self.stats.replacement_misses += 1,
+        }
+        // §2 word-level loads: cold = first explicit request to the word;
+        // replacement = re-request whose line had to be re-fetched.
+        let requested_before = !self.requested_words.insert(addr);
+        if !requested_before {
+            self.stats.cold_loads += 1;
+        } else if kind != AccessKind::Hit {
+            self.stats.replacement_loads += 1;
+        }
+        kind
+    }
+}
+
+/// Drive both models through one pseudo-random stream, asserting agreement
+/// per access (outcome + residency of a probe address) and at the end
+/// (every counter).
+fn compare_on_random_stream(params: CacheParams, addr_space: u64, accesses: usize, seed: u64) {
+    let mut fast = CacheSim::new(params);
+    let mut slow = RefCache::new(params);
+    let mut rng = Rng::new(seed);
+    for i in 0..accesses {
+        let addr = rng.below(addr_space);
+        let a = fast.access(addr);
+        let b = slow.access(addr);
+        assert_eq!(a, b, "access #{i} (addr {addr}) diverged: sim {a:?} vs reference {b:?}");
+        let probe = rng.below(addr_space);
+        assert_eq!(fast.is_resident(probe), slow.is_resident(probe), "residency diverged at access #{i}");
+    }
+    assert_eq!(fast.stats(), slow.stats, "final counters diverged for {params:?}");
+}
+
+#[test]
+fn direct_mapped_matches_reference() {
+    // Collisions every `sets·line_words` words; tiny cache, hot conflicts.
+    compare_on_random_stream(CacheParams::new(1, 4, 1), 64, 4000, 1);
+    compare_on_random_stream(CacheParams::new(1, 8, 2), 128, 4000, 2);
+}
+
+#[test]
+fn set_associative_matches_reference() {
+    compare_on_random_stream(CacheParams::new(2, 8, 2), 256, 6000, 3);
+    compare_on_random_stream(CacheParams::new(4, 4, 4), 512, 6000, 4);
+}
+
+#[test]
+fn fully_associative_matches_reference() {
+    compare_on_random_stream(CacheParams::fully_associative(32, 2), 256, 6000, 5);
+    compare_on_random_stream(CacheParams::fully_associative(16, 1), 64, 6000, 6);
+}
+
+#[test]
+fn stencil_like_streams_match_reference() {
+    // Strided sweeps (the workload the simulator actually sees) rather
+    // than uniform random: three interleaved arrays with stencil offsets.
+    let params = CacheParams::new(2, 16, 2);
+    let mut fast = CacheSim::new(params);
+    let mut slow = RefCache::new(params);
+    let n1 = 23u64;
+    for x2 in 1..40u64 {
+        for x1 in 1..n1 - 1 {
+            let base = x1 + n1 * x2;
+            for delta in [0i64, 1, -1, n1 as i64, -(n1 as i64)] {
+                let addr = (base as i64 + delta) as u64;
+                assert_eq!(fast.access(addr), slow.access(addr));
+            }
+            let q = 4096 + base;
+            assert_eq!(fast.access(q), slow.access(q));
+        }
+    }
+    assert_eq!(fast.stats(), slow.stats);
+}
+
+#[test]
+fn direct_mapped_vs_fully_associative_conflicts() {
+    // Same capacity (8 words, w=1); addresses 0 and 8 conflict only in the
+    // direct-mapped geometry. The satellite's §2 edge case: a re-request
+    // after eviction is a *replacement* load, never a cold one.
+    let mut dm = CacheSim::new(CacheParams::direct_mapped(8, 1));
+    let mut fa = CacheSim::new(CacheParams::fully_associative(8, 1));
+    for c in [&mut dm, &mut fa] {
+        assert_eq!(c.access(0), AccessKind::ColdMiss);
+        assert_eq!(c.access(8), AccessKind::ColdMiss);
+    }
+    // direct-mapped: 8 evicted 0; re-request of 0 is a replacement load
+    assert!(!dm.is_resident(0));
+    assert_eq!(dm.access(0), AccessKind::ReplacementMiss);
+    assert_eq!(dm.stats().replacement_loads, 1);
+    assert_eq!(dm.stats().cold_loads, 2);
+    // fully associative: both fit; the same re-request is a pure hit
+    assert!(fa.is_resident(0) && fa.is_resident(8));
+    assert_eq!(fa.access(0), AccessKind::Hit);
+    assert_eq!(fa.stats().replacement_loads, 0);
+}
+
+#[test]
+fn residency_tracks_lru_rotation() {
+    // 4-way single set: rotating the MRU must not disturb residency
+    // bookkeeping; the 5th distinct line evicts the true LRU.
+    let mut c = CacheSim::new(CacheParams::new(4, 1, 1));
+    for a in 0..4u64 {
+        c.access(a);
+    }
+    assert_eq!(c.access(0), AccessKind::Hit); // 0 becomes MRU; LRU is now 1
+    c.access(4); // evicts 1
+    assert!(!c.is_resident(1), "true LRU must be evicted after rotation");
+    for a in [0u64, 2, 3, 4] {
+        assert!(c.is_resident(a), "addr {a} must remain resident");
+    }
+    assert_eq!(c.access(1), AccessKind::ReplacementMiss);
+}
+
+#[test]
+fn line_granular_loads_cold_after_eviction_of_neighbor_word() {
+    // w=2: words 0 and 1 share a line. Touch word 0, evict the line, then
+    // request word 1 for the first time — §2 classifies that as a *cold*
+    // load (first explicit request) even though the line itself re-fetches
+    // as a replacement miss.
+    let mut c = CacheSim::new(CacheParams::new(1, 2, 2)); // 4-word DM cache
+    assert_eq!(c.access(0), AccessKind::ColdMiss); // line 0 in set 0
+    assert_eq!(c.access(4), AccessKind::ColdMiss); // line 2, set 0 — evicts line 0
+    assert!(!c.is_resident(0));
+    assert_eq!(c.access(1), AccessKind::ReplacementMiss); // line 0 re-fetched
+    let s = c.stats();
+    assert_eq!(s.cold_loads, 3, "word 1 was never requested before: cold load");
+    assert_eq!(s.replacement_loads, 0, "no previously-requested word expired");
+    // now word 0 again: line is resident (hit), but its residence HAD
+    // expired — §2 loads count only explicit requests, so this is a plain
+    // hit with no load at all.
+    assert_eq!(c.access(0), AccessKind::Hit);
+    assert_eq!(c.stats().loads(), 3);
+}

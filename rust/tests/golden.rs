@@ -1,0 +1,71 @@
+//! Golden regression tests for the paper-reproduction drivers: the Eq 7 /
+//! Eq 12 bound numbers (and sec3's measured + closed-form loads) are pinned
+//! to committed fixtures so they cannot silently drift when someone touches
+//! the bounds math, the lattice reduction, the layout, or the simulator.
+//!
+//! The float-valued diagnostic columns that merely *derive* from the pinned
+//! ones (rel err, per-point rates) are not pinned — they'd only duplicate
+//! the comparison with extra formatting hazards. Measured columns that
+//! depend on the auto-tuner's candidate choice (bounds `measured`) are
+//! covered by the sandwich property tests instead.
+//!
+//! To regenerate after an *intentional* change:
+//!
+//! ```text
+//! STENCILCACHE_BLESS=1 cargo test --test golden
+//! git diff rust/tests/fixtures/   # review, then commit
+//! ```
+
+use stencilcache::experiments::{bounds_table, sec3};
+use stencilcache::report::Table;
+use std::path::PathBuf;
+
+fn fixture_path(name: &str) -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures").join(name)
+}
+
+/// Project the table onto `cols`, one space-joined line per row.
+fn project(t: &Table, cols: &[usize]) -> String {
+    let mut out = String::new();
+    for row in t.rows() {
+        let cells: Vec<&str> = cols.iter().map(|&c| row[c].as_str()).collect();
+        out.push_str(&cells.join(" "));
+        out.push('\n');
+    }
+    out
+}
+
+fn check_golden(name: &str, got: &str) {
+    let path = fixture_path(name);
+    if std::env::var("STENCILCACHE_BLESS").is_ok() {
+        std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+        std::fs::write(&path, got).unwrap();
+        eprintln!("blessed {path:?}");
+        return;
+    }
+    let want = std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("missing fixture {path:?} ({e}); regenerate with STENCILCACHE_BLESS=1"));
+    if got != want {
+        eprintln!("--- got ---\n{got}--- want ---\n{want}");
+        panic!("{name} drifted; if intentional: STENCILCACHE_BLESS=1 cargo test --test golden, then commit");
+    }
+}
+
+/// sec3 columns: k, n1, n2, measured u-loads, closed form, Eq7 bound.
+/// The measured count is an exact LRU simulation of a deterministic
+/// address stream — any change is a semantic change, never noise.
+#[test]
+fn sec3_numbers_match_fixture() {
+    let t = sec3::run(true);
+    assert_eq!(t.num_rows(), 3);
+    check_golden("sec3_quick.golden", &project(&t, &[0, 1, 2, 3, 4, 6]));
+}
+
+/// bounds columns: grid, S, Eq7 lower, Eq12 upper, reduced-basis
+/// eccentricity, parallelepiped volume utilization.
+#[test]
+fn bounds_table_numbers_match_fixture() {
+    let t = bounds_table::run(true);
+    assert!(t.num_rows() >= 4, "quick bounds table lost rows");
+    check_golden("bounds_quick.golden", &project(&t, &[0, 1, 2, 4, 6, 7]));
+}

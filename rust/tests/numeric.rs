@@ -1,0 +1,244 @@
+//! Numeric-backend integration tests: the coordinator's `Solve` path must
+//! complete end-to-end **without** PJRT (the acceptance criterion for the
+//! native backend), and the numeric sweep must be equivalent across every
+//! traversal family — same visited multiset, same field, bit-for-bit when
+//! the arithmetic admits it.
+
+use stencilcache::cache::CacheParams;
+use stencilcache::coordinator::{Coordinator, JobKind, PlannerConfig, StencilRequest, StencilSpec};
+use stencilcache::engine;
+use stencilcache::grid::GridDesc;
+use stencilcache::lattice::InterferenceLattice;
+use stencilcache::solver::{self, NativeBackend, NumericBackend, NumericJob};
+use stencilcache::stencil::Stencil;
+use stencilcache::traversal::{self, Order, Traversal};
+use stencilcache::util::threadpool::ThreadPool;
+
+/// Every streaming traversal family applicable to this grid.
+fn traversal_family(g: &GridDesc, r: usize, modulus: usize) -> Vec<(String, Box<dyn Traversal>)> {
+    let mut out: Vec<(String, Box<dyn Traversal>)> = vec![
+        ("natural".into(), Box::new(traversal::natural_stream(g, r))),
+        ("strip3".into(), Box::new(traversal::strip_stream(g, r, 3))),
+        ("blocked".into(), Box::new(traversal::blocked_stream(g, r, &vec![4; g.ndim()]))),
+    ];
+    if g.ndim() <= 3 {
+        let lat = InterferenceLattice::new(g.storage_dims(), modulus);
+        out.push(("fitting".into(), Box::new(traversal::cache_fitting_stream(g, r, &lat))));
+    }
+    if g.ndim() == 3 {
+        out.push(("tiled_z".into(), Box::new(traversal::tiled_z_sweep_stream(g, r, modulus, 2))));
+    }
+    out
+}
+
+/// ACCEPTANCE: with the `pjrt` feature off (the default build), a Solve
+/// request completes numerically in CI on the native backend, logging
+/// residual/L2 norms per step and dissipating energy.
+#[test]
+fn coordinator_solve_completes_natively_in_ci() {
+    let coord = Coordinator::analysis_only(PlannerConfig::default());
+    let resp = coord
+        .submit(&StencilRequest {
+            dims: vec![32, 32, 32],
+            stencil: StencilSpec::Star13,
+            rhs_arrays: 1,
+            kind: JobKind::Solve { steps: 10 },
+        })
+        .expect("native Solve must complete without PJRT");
+    assert_eq!(resp.solve_log.len(), 10);
+    for s in &resp.solve_log {
+        assert!(s.u_norm.is_finite() && s.u_norm > 0.0);
+        assert!(s.residual_norm.is_finite() && s.residual_norm > 0.0);
+    }
+    for w in resp.solve_log.windows(2) {
+        assert!(w[1].u_norm <= w[0].u_norm * 1.0001, "energy must not grow: {w:?}");
+    }
+    assert!(resp.solve_log.last().unwrap().u_norm < resp.solve_log[0].u_norm);
+    assert!(resp.result_norm.unwrap() > 0.0);
+    // Execute also runs natively on the same coordinator
+    let exec = coord
+        .submit(&StencilRequest {
+            dims: vec![24, 24, 24],
+            stencil: StencilSpec::Star13,
+            rhs_arrays: 1,
+            kind: JobKind::Execute,
+        })
+        .expect("native Execute");
+    assert!(exec.result_norm.unwrap() > 0.0);
+}
+
+/// Mixed serve() workload with numeric jobs and no runtime: everything
+/// completes, numeric responses carry norms, analyses carry reports.
+#[test]
+fn serve_mixed_numeric_and_analysis_without_runtime() {
+    let coord = Coordinator::analysis_only(PlannerConfig::default());
+    let reqs = vec![
+        StencilRequest::analyze(&[16, 16, 16]),
+        StencilRequest {
+            dims: vec![16, 16, 16],
+            stencil: StencilSpec::Star13,
+            rhs_arrays: 1,
+            kind: JobKind::Solve { steps: 3 },
+        },
+        StencilRequest {
+            dims: vec![20, 18, 16],
+            stencil: StencilSpec::Star { r: 1 },
+            rhs_arrays: 1,
+            kind: JobKind::Execute,
+        },
+        StencilRequest::analyze(&[16, 16, 16]),
+    ];
+    let resps = coord.serve(&reqs);
+    assert_eq!(resps.len(), 4);
+    let r0 = resps[0].as_ref().unwrap();
+    assert!(r0.miss_report.is_some());
+    let r1 = resps[1].as_ref().unwrap();
+    assert_eq!(r1.solve_log.len(), 3);
+    let r2 = resps[2].as_ref().unwrap();
+    assert!(r2.result_norm.unwrap() > 0.0);
+}
+
+/// Cross-traversal equivalence: for random small grids and stencils, every
+/// traversal visits exactly the natural order's interior multiset, and the
+/// numeric apply produces the identical field. Per-point arithmetic does
+/// not depend on visit order (q reads only u, coefficients are folded in a
+/// fixed order), so equality is exact, not approximate.
+#[test]
+fn property_apply_equivalent_across_traversals_3d() {
+    use stencilcache::util::proptest::{forall, DimsGen};
+    forall(31, 10, &DimsGen { d: 3, lo: 7, hi: 15 }, |dims| {
+        let g = GridDesc::new(dims);
+        for r in [1usize, 2] {
+            let s = Stencil::star(3, r);
+            let words = g.storage_words() as usize;
+            let u = solver::deterministic_field(&g, r, 17);
+            let mut q_ref = vec![0.0; words];
+            engine::apply(&traversal::natural_stream(&g, r), &g, &s, &u, &mut q_ref);
+            let reference_set = traversal::natural(&g, r).canonical_set();
+            for (name, t) in traversal_family(&g, r, 128) {
+                let mut set = Vec::new();
+                t.stream(&mut |x| set.push(Order::pack(x)));
+                set.sort_unstable();
+                if set != reference_set {
+                    eprintln!("{name} on {dims:?} r={r}: multiset mismatch");
+                    return false;
+                }
+                let mut q = vec![0.0; words];
+                engine::apply(t.as_ref(), &g, &s, &u, &mut q);
+                if q != q_ref {
+                    eprintln!("{name} on {dims:?} r={r}: field mismatch");
+                    return false;
+                }
+            }
+        }
+        true
+    });
+}
+
+#[test]
+fn apply_equivalent_across_traversals_2d_and_4d() {
+    for (dims, r) in [(vec![13usize, 11], 2usize), (vec![7, 6, 5, 6], 1)] {
+        let g = GridDesc::new(&dims);
+        let s = Stencil::star(dims.len(), r);
+        let words = g.storage_words() as usize;
+        let u = solver::deterministic_field(&g, r, 3);
+        let mut q_ref = vec![0.0; words];
+        engine::apply(&traversal::natural_stream(&g, r), &g, &s, &u, &mut q_ref);
+        for (name, t) in traversal_family(&g, r, 64) {
+            let mut q = vec![0.0; words];
+            engine::apply(t.as_ref(), &g, &s, &u, &mut q);
+            assert_eq!(q, q_ref, "{name} on {dims:?}");
+        }
+    }
+}
+
+/// Bit-for-bit equality with dyadic (integer) coefficients, explicitly:
+/// the r=1 star has coefficients {1, −2d}, exactly representable, and the
+/// per-point accumulation runs the same op sequence under every traversal
+/// and shard split — so natural, sharded, and exotic orders must agree to
+/// the last bit.
+#[test]
+fn dyadic_star_bitwise_across_traversals_and_shards() {
+    let g = GridDesc::new(&[14, 12, 10]);
+    let s = Stencil::star(3, 1);
+    let coeffs_dyadic = s.coeffs().iter().all(|c| c.fract() == 0.0);
+    assert!(coeffs_dyadic, "r=1 star coefficients must be integers: {:?}", s.coeffs());
+    let words = g.storage_words() as usize;
+    let u = solver::deterministic_field(&g, 1, 23);
+    let mut q_ref = vec![0.0; words];
+    engine::apply(&traversal::natural_stream(&g, 1), &g, &s, &u, &mut q_ref);
+    let pool = ThreadPool::new(3);
+    for (name, t) in traversal_family(&g, 1, 64) {
+        for shards in [1usize, 2, 7] {
+            let mut q = vec![0.0; words];
+            engine::apply_sharded(t.as_ref(), &g, &s, &u, &mut q, &pool, shards);
+            assert_eq!(q, q_ref, "{name}, {shards} shards");
+        }
+    }
+}
+
+/// The native backend over different traversals must report identical
+/// norms for the same job (the field is traversal-invariant; the reduction
+/// order is fixed by the shard count, not the traversal).
+#[test]
+fn native_backend_norms_traversal_invariant() {
+    let g = GridDesc::new(&[18, 16, 14]);
+    let s = Stencil::star13();
+    let pool = ThreadPool::new(2);
+    let backend = NativeBackend::new(&pool);
+    let dims = [18usize, 16, 14];
+    let mut norms = Vec::new();
+    for (_, t) in traversal_family(&g, 2, 4096) {
+        let job = NumericJob { dims: &dims, grid: &g, stencil: &s, traversal: t.as_ref(), shards: 1, seed: 0xBEEF };
+        let out = backend.solve(&job, 4).unwrap();
+        norms.push(out.solve_log.iter().map(|st| (st.u_norm, st.residual_norm)).collect::<Vec<_>>());
+    }
+    for w in norms.windows(2) {
+        assert_eq!(w[0], w[1]);
+    }
+}
+
+/// Heavy numeric end-to-end for the scheduled CI job: a 128³ star13 solve
+/// on the native backend (sharded sweep + reductions), checking energy
+/// decay at scale. Run with:
+///
+/// ```text
+/// cargo test --release -q --test numeric -- --ignored native_solve_128
+/// ```
+#[test]
+#[ignore = "large: ~2M points × 20 steps of 13-point FLOPs; run in release (scheduled CI job does)"]
+fn native_solve_128_cubed_end_to_end() {
+    let coord = Coordinator::analysis_only(PlannerConfig::default());
+    let resp = coord
+        .submit(&StencilRequest {
+            dims: vec![128, 128, 128],
+            stencil: StencilSpec::Star13,
+            rhs_arrays: 1,
+            kind: JobKind::Solve { steps: 20 },
+        })
+        .expect("128³ native solve");
+    assert_eq!(resp.solve_log.len(), 20);
+    for w in resp.solve_log.windows(2) {
+        assert!(w[1].u_norm <= w[0].u_norm * 1.0001);
+    }
+    let (first, last) = (&resp.solve_log[0], resp.solve_log.last().unwrap());
+    assert!(last.u_norm < first.u_norm);
+    assert!(last.residual_norm > 0.0);
+}
+
+/// The §5 cache-params used by the sharded analysis must not change the
+/// numeric result either: apply with the planner's fitting traversal on a
+/// padded grid equals the natural sweep on that same padded grid.
+#[test]
+fn padded_grid_apply_matches_natural() {
+    let g = GridDesc::with_padding(&[15, 13, 11], &[3, 1, 0]);
+    let s = Stencil::star(3, 1);
+    let cache = CacheParams::new(2, 64, 2);
+    let words = g.storage_words() as usize;
+    let u = solver::deterministic_field(&g, 1, 29);
+    let mut q_nat = vec![0.0; words];
+    engine::apply(&traversal::natural_stream(&g, 1), &g, &s, &u, &mut q_nat);
+    let mut q_fit = vec![0.0; words];
+    engine::apply(&traversal::cache_fitting_stream_for_cache(&g, 1, &cache), &g, &s, &u, &mut q_fit);
+    assert_eq!(q_nat, q_fit);
+}
