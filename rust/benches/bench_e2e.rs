@@ -3,7 +3,7 @@
 //! L3 throughput number for §Perf — plus the sharded-vs-sequential
 //! streaming analysis scaling check.
 
-use stencilcache::cache::{CacheParams, CacheSim};
+use stencilcache::cache::{CacheParams, CacheSim, MachineModel};
 use stencilcache::coordinator::{Coordinator, JobKind, PlannerConfig, StencilRequest, StencilSpec};
 use stencilcache::engine;
 use stencilcache::grid::{GridDesc, MultiArrayLayout};
@@ -31,7 +31,7 @@ fn main() {
     let pool = ThreadPool::with_default_parallelism();
     let shards = pool.workers() * 2;
     b.bench_items("analyze_96^3/sharded", accesses, || {
-        engine::simulate_sharded(&t, &layout, &stencil, cache, &pool, shards)
+        engine::simulate_sharded(&t, &layout, &stencil, &MachineModel::l1_only(cache), &pool, shards)
     });
 
     // analysis-only serving (no PJRT dependency)

@@ -1,0 +1,38 @@
+//! Hierarchy bench: the same star13 analysis under natural vs
+//! cache-fitting traversals on the single-level `r10000` machine vs the
+//! full `r10000-full` (L1 + L2 + TLB) machine — §Perf tracks how much the
+//! deeper model costs per simulated access and what the fitting order
+//! saves at each level.
+
+use stencilcache::cache::{Level, MachineModel};
+use stencilcache::engine;
+use stencilcache::grid::{GridDesc, MultiArrayLayout};
+use stencilcache::stencil::Stencil;
+use stencilcache::traversal::{self, Traversal};
+use stencilcache::util::bench::Bencher;
+
+fn main() {
+    let mut b = Bencher::from_env();
+    let grid = GridDesc::new(&[64, 64, 48]);
+    let stencil = Stencil::star13();
+    let accesses = grid.interior_points(2) as f64 * 14.0;
+
+    for machine in [MachineModel::r10000(), MachineModel::r10000_full()] {
+        let layout = MultiArrayLayout::paper_offsets(&grid, 1, machine.l1.size_words());
+        let orders: [(&str, Box<dyn Traversal>); 2] = [
+            ("natural", Box::new(traversal::natural_stream(&grid, 2))),
+            ("fitting", Box::new(traversal::cache_fitting_stream_for_cache(&grid, 2, &machine.l1))),
+        ];
+        for (name, order) in &orders {
+            let label = format!("hierarchy/{}/{name}_64x64x48", machine.name);
+            let mut last_tlb = 0;
+            b.bench_items(&label, accesses, || {
+                let rep = engine::simulate_on_machine(order.as_ref(), &layout, &stencil, &machine);
+                last_tlb = rep.levels.get(Level::Tlb).map(|s| s.misses()).unwrap_or(0);
+            });
+            if machine.is_hierarchical() {
+                eprintln!("  ({label}: tlb misses {last_tlb})");
+            }
+        }
+    }
+}

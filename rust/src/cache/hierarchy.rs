@@ -4,14 +4,16 @@
 //! The hierarchy is inclusive and write-allocate like the R10000/Origin2000:
 //! an L1 miss probes L2; a TLB is a small fully-associative LRU cache over
 //! virtual pages. We reuse [`CacheSim`] for every level — a TLB *is* a
-//! cache of page numbers.
+//! cache of page numbers. Levels beyond L1 are optional
+//! ([`Hierarchy::with_levels`]) so a [`super::MachineModel`] can describe
+//! any subset; the preset constructors keep the full R10000 shape.
 
-use super::{AccessKind, CacheParams, CacheSim};
+use super::{AccessKind, CacheParams, CacheSim, LoadProfile};
 
 /// TLB geometry: `entries` fully-associative entries over pages of
 /// `page_words` words (R10000: 64 dual entries over 4 KB pages ⇒ model as
 /// 64 entries × 512 words).
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct TlbParams {
     pub entries: usize,
     pub page_words: usize,
@@ -20,6 +22,11 @@ pub struct TlbParams {
 impl TlbParams {
     pub fn r10000() -> TlbParams {
         TlbParams { entries: 64, page_words: 512 }
+    }
+
+    /// The TLB's reach in words: `entries · page_words`.
+    pub fn span_words(&self) -> usize {
+        self.entries * self.page_words
     }
 }
 
@@ -36,31 +43,74 @@ impl HierarchyStats {
     /// Approximate stall cycles with a simple additive latency model
     /// (hit costs folded into CPI): L1 miss → `l2_lat`, L2 miss → `mem_lat`,
     /// TLB miss → `tlb_lat` (software-refill on MIPS).
+    ///
+    /// This prices every L1 miss at `l2_lat`, which assumes an L2 exists;
+    /// for a hierarchy built without one ([`Hierarchy::with_levels`]) pass
+    /// `l2_lat = mem_lat`, or use the level-aware
+    /// [`super::LoadProfile::stall_cycles`] (via
+    /// [`super::MemoryModel::profile`]), which prices L1 misses at memory
+    /// latency when no L2 level is present.
     pub fn stall_cycles(&self, l2_lat: u64, mem_lat: u64, tlb_lat: u64) -> u64 {
         self.l1_misses * l2_lat + self.l2_misses * mem_lat + self.tlb_misses * tlb_lat
     }
+
+    /// Merge shard snapshots by summing every counter — the hierarchical
+    /// twin of `MissReport::merged`, so sharded runs over per-shard
+    /// hierarchies can combine their per-level totals.
+    pub fn merged(reports: &[HierarchyStats]) -> HierarchyStats {
+        let mut out = HierarchyStats::default();
+        for r in reports {
+            out.accesses += r.accesses;
+            out.l1_misses += r.l1_misses;
+            out.l2_misses += r.l2_misses;
+            out.tlb_misses += r.tlb_misses;
+        }
+        out
+    }
+
+    /// Counter-wise difference `post − pre` of two cumulative snapshots of
+    /// one hierarchy — the twin of [`super::CacheStats::delta`], for
+    /// incremental per-range reports over a shared warm hierarchy.
+    pub fn delta(post: HierarchyStats, pre: HierarchyStats) -> HierarchyStats {
+        HierarchyStats {
+            accesses: post.accesses - pre.accesses,
+            l1_misses: post.l1_misses - pre.l1_misses,
+            l2_misses: post.l2_misses - pre.l2_misses,
+            tlb_misses: post.tlb_misses - pre.tlb_misses,
+        }
+    }
 }
 
-/// L1 + L2 + TLB simulator.
+/// L1 + optional L2 + optional TLB simulator.
 pub struct Hierarchy {
     l1: CacheSim,
-    l2: CacheSim,
-    tlb: CacheSim,
+    l2: Option<CacheSim>,
+    tlb: Option<CacheSim>,
     tlb_page_shift: u32,
     stats: HierarchyStats,
 }
 
 impl Hierarchy {
     pub fn new(l1: CacheParams, l2: CacheParams, tlb: TlbParams) -> Hierarchy {
-        assert!(tlb.page_words.is_power_of_two(), "page size must be a power of two");
-        assert!(l2.size_words() >= l1.size_words(), "L2 must not be smaller than L1");
+        Hierarchy::with_levels(l1, Some(l2), Some(tlb))
+    }
+
+    /// Build with any subset of levels beyond L1 (the
+    /// [`super::MachineModel`] construction point).
+    pub fn with_levels(l1: CacheParams, l2: Option<CacheParams>, tlb: Option<TlbParams>) -> Hierarchy {
+        if let Some(t) = tlb {
+            assert!(t.page_words.is_power_of_two(), "page size must be a power of two");
+        }
+        if let Some(l2) = l2 {
+            assert!(l2.size_words() >= l1.size_words(), "L2 must not be smaller than L1");
+        }
         Hierarchy {
             l1: CacheSim::new(l1),
-            l2: CacheSim::new(l2),
+            l2: l2.map(CacheSim::new),
             // model TLB as a fully-associative cache of 1-word lines over
             // page numbers.
-            tlb: CacheSim::new(CacheParams::fully_associative(tlb.entries, 1)),
-            tlb_page_shift: tlb.page_words.trailing_zeros(),
+            tlb: tlb.map(|t| CacheSim::new(CacheParams::fully_associative(t.entries, 1))),
+            tlb_page_shift: tlb.map(|t| t.page_words.trailing_zeros()).unwrap_or(0),
             stats: HierarchyStats::default(),
         }
     }
@@ -83,14 +133,47 @@ impl Hierarchy {
         self.l1.stats()
     }
 
+    /// L2 §2 counters (zeroed when the hierarchy has no L2).
     pub fn l2_stats(&self) -> super::CacheStats {
-        self.l2.stats()
+        self.l2.as_ref().map(|c| c.stats()).unwrap_or_default()
+    }
+
+    /// TLB §2 counters over the *page-number* stream (zeroed when the
+    /// hierarchy has no TLB): `accesses` is one probe per word access,
+    /// `misses()` is page walks.
+    pub fn tlb_stats(&self) -> super::CacheStats {
+        self.tlb.as_ref().map(|c| c.stats()).unwrap_or_default()
+    }
+
+    /// Level-aware stall estimate for this hierarchy's actual shape:
+    /// delegates to [`super::LoadProfile::stall_cycles`], which prices L1
+    /// misses at memory latency when this hierarchy has no L2 (unlike the
+    /// raw [`HierarchyStats::stall_cycles`] formula, which assumes one).
+    pub fn stall_cycles(&self, lat: super::Latency) -> u64 {
+        self.profile().stall_cycles(lat)
+    }
+
+    /// Cumulative per-level profile, in probe order.
+    pub fn profile(&self) -> LoadProfile {
+        let mut p = LoadProfile::default();
+        p.push(super::Level::L1, self.l1.stats());
+        if let Some(l2) = &self.l2 {
+            p.push(super::Level::L2, l2.stats());
+        }
+        if let Some(tlb) = &self.tlb {
+            p.push(super::Level::Tlb, tlb.stats());
+        }
+        p
     }
 
     pub fn reset(&mut self) {
         self.l1.reset();
-        self.l2.reset();
-        self.tlb.reset();
+        if let Some(l2) = &mut self.l2 {
+            l2.reset();
+        }
+        if let Some(tlb) = &mut self.tlb {
+            tlb.reset();
+        }
         self.stats = HierarchyStats::default();
     }
 
@@ -98,14 +181,18 @@ impl Hierarchy {
     #[inline]
     pub fn access(&mut self, addr: u64) -> AccessKind {
         self.stats.accesses += 1;
-        if self.tlb.access(addr >> self.tlb_page_shift) != AccessKind::Hit {
-            self.stats.tlb_misses += 1;
+        if let Some(tlb) = &mut self.tlb {
+            if tlb.access(addr >> self.tlb_page_shift) != AccessKind::Hit {
+                self.stats.tlb_misses += 1;
+            }
         }
         let k1 = self.l1.access(addr);
         if k1 != AccessKind::Hit {
             self.stats.l1_misses += 1;
-            if self.l2.access(addr) != AccessKind::Hit {
-                self.stats.l2_misses += 1;
+            if let Some(l2) = &mut self.l2 {
+                if l2.access(addr) != AccessKind::Hit {
+                    self.stats.l2_misses += 1;
+                }
             }
         }
         k1
@@ -147,6 +234,7 @@ mod tests {
             h.access(16); // page 2
         }
         assert!(h.stats().tlb_misses > 3, "tlb misses: {}", h.stats().tlb_misses);
+        assert_eq!(h.tlb_stats().misses(), h.stats().tlb_misses);
     }
 
     #[test]
@@ -170,11 +258,86 @@ mod tests {
     }
 
     #[test]
+    fn level_aware_stall_prices_l1_misses_at_memory_without_l2() {
+        use super::super::Latency;
+        let lat = Latency { l2: 10, mem: 80, tlb: 50 };
+        // L1-only hierarchy: every miss goes straight to memory.
+        let mut h = Hierarchy::with_levels(CacheParams::new(1, 4, 1), None, None);
+        for a in [0u64, 4, 0, 4] {
+            h.access(a);
+        }
+        assert_eq!(h.stall_cycles(lat), h.stats().l1_misses * lat.mem);
+        // with an L2 the delegator matches the raw additive formula
+        let mut full = tiny();
+        for a in 0..32u64 {
+            full.access(a);
+        }
+        assert_eq!(full.stall_cycles(lat), full.stats().stall_cycles(lat.l2, lat.mem, lat.tlb));
+    }
+
+    #[test]
     fn r10000_hierarchy_constructs() {
         let mut h = Hierarchy::r10000();
         for a in 0..10_000u64 {
             h.access(a % 5000);
         }
         assert!(h.stats().l2_misses <= h.stats().l1_misses);
+    }
+
+    #[test]
+    fn partial_hierarchies_skip_absent_levels() {
+        // L1-only hierarchy behaves like a bare CacheSim with zeroed
+        // L2/TLB counters.
+        let mut l1_only = Hierarchy::with_levels(CacheParams::new(1, 4, 1), None, None);
+        let mut solo = CacheSim::new(CacheParams::new(1, 4, 1));
+        for a in [0u64, 4, 0, 1, 5, 1] {
+            assert_eq!(l1_only.access(a), solo.access(a));
+        }
+        assert_eq!(l1_only.l1_stats(), solo.stats());
+        assert_eq!(l1_only.stats().l2_misses, 0);
+        assert_eq!(l1_only.stats().tlb_misses, 0);
+        assert_eq!(l1_only.l2_stats(), super::super::CacheStats::default());
+        assert_eq!(l1_only.profile().levels().len(), 1);
+        // L1 + TLB, no L2: TLB still walks pages, l2_misses stays zero.
+        let mut no_l2 =
+            Hierarchy::with_levels(CacheParams::new(1, 4, 1), None, Some(TlbParams { entries: 2, page_words: 8 }));
+        for a in [0u64, 8, 16, 0] {
+            no_l2.access(a);
+        }
+        assert!(no_l2.stats().tlb_misses >= 3);
+        assert_eq!(no_l2.stats().l2_misses, 0);
+        assert_eq!(no_l2.profile().levels().len(), 2);
+    }
+
+    #[test]
+    fn stats_merged_sums_and_delta_inverts() {
+        // Run one stream in two halves on separate hierarchies (the shard
+        // picture): merged() must sum counters exactly. Then on a single
+        // warm hierarchy, delta(end, mid) + mid must reproduce end.
+        let mut a = tiny();
+        let mut b = tiny();
+        for x in 0..64u64 {
+            a.access(x % 24);
+        }
+        for x in 0..64u64 {
+            b.access((x * 5) % 40);
+        }
+        let m = HierarchyStats::merged(&[a.stats(), b.stats()]);
+        assert_eq!(m.accesses, a.stats().accesses + b.stats().accesses);
+        assert_eq!(m.l1_misses, a.stats().l1_misses + b.stats().l1_misses);
+        assert_eq!(m.l2_misses, a.stats().l2_misses + b.stats().l2_misses);
+        assert_eq!(m.tlb_misses, a.stats().tlb_misses + b.stats().tlb_misses);
+
+        let mut h = tiny();
+        for x in 0..32u64 {
+            h.access(x % 24);
+        }
+        let mid = h.stats();
+        for x in 0..32u64 {
+            h.access((x * 3) % 40);
+        }
+        let end = h.stats();
+        let tail = HierarchyStats::delta(end, mid);
+        assert_eq!(HierarchyStats::merged(&[mid, tail]), end);
     }
 }

@@ -22,9 +22,11 @@
 //! [`CacheParams::r10000`] reproduces it.
 
 mod hierarchy;
+mod model;
 mod sim;
 
 pub use hierarchy::{Hierarchy, HierarchyStats, TlbParams};
+pub use model::{Latency, Level, LevelLoad, LoadProfile, MachineModel, MemoryModel, MAX_LEVELS};
 pub use sim::{AccessKind, CacheSim, CacheStats};
 
 /// Cache geometry `(a, z, w)`; all sizes in *words* (one word = one f64).

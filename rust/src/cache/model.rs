@@ -1,0 +1,453 @@
+//! The memory-model layer: one trait over every simulated memory system.
+//!
+//! The paper analyzes a single L1 data cache, but its §6 measurements show
+//! miss spikes on unfavorable grids for the *TLB as well as the L1 cache*,
+//! and §7 names the secondary cache + TLB as the next step. This module
+//! turns "a [`CacheSim`]" into "a memory model":
+//!
+//! - [`MemoryModel`] — per-access simulation returning the paper's §2
+//!   line-level outcome, plus a per-level [`LoadProfile`] snapshot. Both
+//!   [`CacheSim`] (single level) and [`Hierarchy`] (L1 + L2 + TLB)
+//!   implement it, so `engine::simulate*` is generic over the memory
+//!   system.
+//! - [`MachineModel`] — a machine descriptor (L1 geometry, optional L2 and
+//!   TLB, miss latencies) with named presets: the paper's R10000 L1
+//!   (`r10000`), the full R10000/Origin2000 hierarchy (`r10000-full`), and
+//!   a `modern` deep-cache geometry. The planner, coordinator, tuner and
+//!   CLI thread a `MachineModel` instead of a raw [`CacheParams`].
+//! - [`LoadProfile`] — per-level §2 counters with shard-mergeable
+//!   semantics and a stall-cycle estimate under a [`Latency`] model.
+
+use super::{AccessKind, CacheParams, CacheSim, CacheStats, Hierarchy, TlbParams};
+
+/// One level of the simulated memory hierarchy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Level {
+    /// Primary data cache (the paper's single-level model).
+    L1,
+    /// Unified secondary cache.
+    L2,
+    /// Translation lookaside buffer — a fully-associative LRU cache over
+    /// virtual page numbers.
+    Tlb,
+}
+
+impl Level {
+    pub fn name(self) -> &'static str {
+        match self {
+            Level::L1 => "L1",
+            Level::L2 => "L2",
+            Level::Tlb => "TLB",
+        }
+    }
+}
+
+/// §2 counters attributed to one hierarchy level.
+///
+/// For the TLB level the "word" is a page number: `accesses` counts one
+/// page-number probe per word access and `misses()` counts page walks.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LevelLoad {
+    pub level: Level,
+    pub stats: CacheStats,
+}
+
+/// Maximum number of levels a [`LoadProfile`] can carry (L1 + L2 + TLB).
+pub const MAX_LEVELS: usize = 3;
+
+/// Per-level load statistics of a simulated run — the multi-level
+/// generalization of a single [`CacheStats`]. Fixed-capacity (and `Copy`)
+/// so `MissReport` stays a plain value; levels appear in probe order
+/// (L1, then L2, then TLB when present).
+#[derive(Debug, Clone, Copy)]
+pub struct LoadProfile {
+    len: usize,
+    levels: [LevelLoad; MAX_LEVELS],
+}
+
+impl Default for LoadProfile {
+    fn default() -> LoadProfile {
+        let empty = LevelLoad { level: Level::L1, stats: CacheStats::default() };
+        LoadProfile { len: 0, levels: [empty; MAX_LEVELS] }
+    }
+}
+
+impl PartialEq for LoadProfile {
+    fn eq(&self, other: &LoadProfile) -> bool {
+        self.levels() == other.levels()
+    }
+}
+
+impl Eq for LoadProfile {}
+
+impl LoadProfile {
+    /// Profile of a single-level run (the paper's model).
+    pub fn single(stats: CacheStats) -> LoadProfile {
+        let mut p = LoadProfile::default();
+        p.push(Level::L1, stats);
+        p
+    }
+
+    /// Append a level (probe order). Panics beyond [`MAX_LEVELS`] or on a
+    /// duplicate level.
+    pub fn push(&mut self, level: Level, stats: CacheStats) {
+        assert!(self.len < MAX_LEVELS, "LoadProfile overflow");
+        assert!(self.get(level).is_none(), "duplicate level {}", level.name());
+        self.levels[self.len] = LevelLoad { level, stats };
+        self.len += 1;
+    }
+
+    /// The recorded levels, in probe order.
+    pub fn levels(&self) -> &[LevelLoad] {
+        &self.levels[..self.len]
+    }
+
+    /// Stats of one level, if the model simulates it.
+    pub fn get(&self, level: Level) -> Option<CacheStats> {
+        self.levels().iter().find(|l| l.level == level).map(|l| l.stats)
+    }
+
+    /// Level-wise `post − pre` of two cumulative snapshots from the *same*
+    /// model — the multi-level twin of [`CacheStats::delta`].
+    pub fn delta(post: &LoadProfile, pre: &LoadProfile) -> LoadProfile {
+        assert_eq!(post.len, pre.len, "profiles from different models");
+        let mut out = LoadProfile::default();
+        for (a, b) in post.levels().iter().zip(pre.levels()) {
+            assert_eq!(a.level, b.level, "profiles from different models");
+            out.push(a.level, CacheStats::delta(a.stats, b.stats));
+        }
+        out
+    }
+
+    /// Accumulate another profile level-wise (shard merging). An empty
+    /// profile adopts `other`'s levels; otherwise the level lists must
+    /// match.
+    pub fn merge(&mut self, other: &LoadProfile) {
+        if other.len == 0 {
+            return;
+        }
+        if self.len == 0 {
+            *self = *other;
+            return;
+        }
+        assert_eq!(self.len, other.len, "merging profiles from different models");
+        for (a, b) in self.levels[..self.len].iter_mut().zip(other.levels()) {
+            assert_eq!(a.level, b.level, "merging profiles from different models");
+            a.stats.accumulate(&b.stats);
+        }
+    }
+
+    /// Additive stall-cycle estimate under `lat` (hit costs folded into
+    /// CPI, mirroring [`super::HierarchyStats::stall_cycles`]): an L1 miss
+    /// pays the next level's latency (L2 when present, memory otherwise),
+    /// an L2 miss pays memory, a TLB miss pays the refill.
+    pub fn stall_cycles(&self, lat: Latency) -> u64 {
+        let mut cycles = 0u64;
+        match (self.get(Level::L1), self.get(Level::L2)) {
+            (Some(l1), Some(l2)) => cycles += l1.misses() * lat.l2 + l2.misses() * lat.mem,
+            (Some(l1), None) => cycles += l1.misses() * lat.mem,
+            _ => {}
+        }
+        if let Some(tlb) = self.get(Level::Tlb) {
+            cycles += tlb.misses() * lat.tlb;
+        }
+        cycles
+    }
+}
+
+/// Miss latencies in cycles for the stall estimate. The numbers are coarse
+/// machine constants, not measurements — the estimate ranks traversals and
+/// machines, it does not predict wall time.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Latency {
+    /// L1 miss serviced by L2.
+    pub l2: u64,
+    /// Last-level miss serviced by memory.
+    pub mem: u64,
+    /// TLB refill (software on MIPS).
+    pub tlb: u64,
+}
+
+impl Latency {
+    /// R10000 / Origin 2000 ballpark: ~10-cycle L2, ~80-cycle local
+    /// memory, ~50-cycle software TLB refill.
+    pub fn r10000() -> Latency {
+        Latency { l2: 10, mem: 80, tlb: 50 }
+    }
+}
+
+impl Default for Latency {
+    fn default() -> Latency {
+        Latency::r10000()
+    }
+}
+
+/// A simulated memory system: per-word-access outcome plus per-level
+/// statistics. Implemented by [`CacheSim`] (the paper's single-level
+/// model) and [`Hierarchy`] (L1 + L2 + TLB).
+///
+/// `access` returns the **L1-level** outcome so the §2 load/miss
+/// accounting of `engine::simulate` is identical across models — the
+/// deeper levels only add rows to [`MemoryModel::profile`].
+pub trait MemoryModel {
+    /// Issue one word request; returns the L1 line-level outcome.
+    fn access(&mut self, addr: u64) -> AccessKind;
+
+    /// Cumulative L1 counters — the quantity the paper's bounds constrain.
+    fn l1_stats(&self) -> CacheStats;
+
+    /// Cumulative per-level counters.
+    fn profile(&self) -> LoadProfile;
+
+    /// Reset counters and contents.
+    fn reset(&mut self);
+}
+
+impl MemoryModel for CacheSim {
+    #[inline]
+    fn access(&mut self, addr: u64) -> AccessKind {
+        CacheSim::access(self, addr)
+    }
+
+    fn l1_stats(&self) -> CacheStats {
+        self.stats()
+    }
+
+    fn profile(&self) -> LoadProfile {
+        LoadProfile::single(self.stats())
+    }
+
+    fn reset(&mut self) {
+        CacheSim::reset(self)
+    }
+}
+
+impl MemoryModel for Hierarchy {
+    #[inline]
+    fn access(&mut self, addr: u64) -> AccessKind {
+        Hierarchy::access(self, addr)
+    }
+
+    fn l1_stats(&self) -> CacheStats {
+        Hierarchy::l1_stats(self)
+    }
+
+    fn profile(&self) -> LoadProfile {
+        Hierarchy::profile(self)
+    }
+
+    fn reset(&mut self) {
+        Hierarchy::reset(self)
+    }
+}
+
+/// A machine descriptor: which memory levels exist and with what geometry.
+/// This is what the planner, coordinator, tuner and CLI thread around in
+/// place of a raw [`CacheParams`] — one request can be analyzed against
+/// the paper's L1-only R10000, the full R10000, or a modern geometry by
+/// swapping the descriptor.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct MachineModel {
+    /// Preset (or caller-supplied) name, for logs and tables.
+    pub name: &'static str,
+    /// Primary data cache — always present; the lattice/bounds machinery
+    /// and the §2 load accounting run against this level.
+    pub l1: CacheParams,
+    /// Unified secondary cache (probed on L1 misses).
+    pub l2: Option<CacheParams>,
+    /// TLB (probed on every access, at page granularity).
+    pub tlb: Option<TlbParams>,
+    /// Miss latencies for the stall-cycle estimate.
+    pub latency: Latency,
+}
+
+impl MachineModel {
+    /// Single-level machine around an explicit L1 geometry (e.g. the CLI's
+    /// `--cache a,z,w`).
+    pub fn l1_only(l1: CacheParams) -> MachineModel {
+        MachineModel { name: "custom-l1", l1, l2: None, tlb: None, latency: Latency::r10000() }
+    }
+
+    /// The paper's model: MIPS R10000 32 KB L1 D-cache only.
+    pub fn r10000() -> MachineModel {
+        MachineModel { name: "r10000", ..MachineModel::l1_only(CacheParams::r10000()) }
+    }
+
+    /// The paper's measurement platform in full (§7's "secondary cache and
+    /// TLB"): R10000 L1 + 4 MB unified L2 + 64-entry TLB over 4 KB pages.
+    pub fn r10000_full() -> MachineModel {
+        MachineModel {
+            name: "r10000-full",
+            l1: CacheParams::r10000(),
+            l2: Some(CacheParams::new(2, 16 * 1024, 16)), // 512K words = 4 MB
+            tlb: Some(TlbParams::r10000()),
+            latency: Latency::r10000(),
+        }
+    }
+
+    /// A modern three-level geometry: 48 KB 12-way L1 with 64 B lines,
+    /// 1 MB 16-way L2, 1536-entry TLB over 4 KB pages, deeper memory.
+    pub fn modern() -> MachineModel {
+        MachineModel {
+            name: "modern",
+            l1: CacheParams::new(12, 64, 8),      // 6144 words = 48 KB
+            l2: Some(CacheParams::new(16, 1024, 8)), // 131072 words = 1 MB
+            tlb: Some(TlbParams { entries: 1536, page_words: 512 }),
+            latency: Latency { l2: 14, mem: 220, tlb: 30 },
+        }
+    }
+
+    /// Look up a named preset (see [`MachineModel::preset_names`]).
+    pub fn preset(name: &str) -> Option<MachineModel> {
+        match name {
+            "r10000" => Some(MachineModel::r10000()),
+            "r10000-full" => Some(MachineModel::r10000_full()),
+            "modern" => Some(MachineModel::modern()),
+            _ => None,
+        }
+    }
+
+    /// Names accepted by [`MachineModel::preset`] / the CLI `--machine=`.
+    pub fn preset_names() -> &'static [&'static str] {
+        &["r10000", "r10000-full", "modern"]
+    }
+
+    /// Does this machine simulate anything beyond the L1?
+    pub fn is_hierarchical(&self) -> bool {
+        self.l2.is_some() || self.tlb.is_some()
+    }
+
+    /// The TLB's reach in words (`entries · page_words`) — the modulus of
+    /// the **page interference lattice**, the TLB analog of
+    /// [`CacheParams::lattice_modulus`]: under the capacity-modulus
+    /// convention of Eq 8, grid strides congruent modulo the TLB span
+    /// contend for the same translation reach.
+    pub fn page_modulus(&self) -> Option<usize> {
+        self.tlb.map(|t| t.span_words())
+    }
+
+    /// Build the hierarchy simulator for this machine (requires at least
+    /// one level beyond L1 — single-level machines use [`CacheSim`]).
+    pub fn build_hierarchy(&self) -> Hierarchy {
+        assert!(self.is_hierarchical(), "single-level machine: use CacheSim::new(self.l1)");
+        Hierarchy::with_levels(self.l1, self.l2, self.tlb)
+    }
+
+    /// Build the memory model as a trait object — the generic composition
+    /// point. Hot paths that care about monomorphized access loops should
+    /// branch on [`MachineModel::is_hierarchical`] instead.
+    pub fn build_model(&self) -> Box<dyn MemoryModel + Send> {
+        if self.is_hierarchical() {
+            Box::new(self.build_hierarchy())
+        } else {
+            Box::new(CacheSim::new(self.l1))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_resolve_and_list() {
+        for &name in MachineModel::preset_names() {
+            let m = MachineModel::preset(name).unwrap();
+            assert_eq!(m.name, name);
+        }
+        assert!(MachineModel::preset("r20000").is_none());
+    }
+
+    #[test]
+    fn r10000_presets_match_paper_geometry() {
+        let single = MachineModel::r10000();
+        assert!(!single.is_hierarchical());
+        assert_eq!(single.l1.size_words(), 4096);
+        assert!(single.page_modulus().is_none());
+        let full = MachineModel::r10000_full();
+        assert!(full.is_hierarchical());
+        assert_eq!(full.l1, single.l1);
+        assert_eq!(full.l2.unwrap().size_words(), 512 * 1024);
+        assert_eq!(full.page_modulus(), Some(64 * 512)); // 256 KB reach
+    }
+
+    #[test]
+    fn modern_geometry_sane() {
+        let m = MachineModel::modern();
+        assert_eq!(m.l1.size_words(), 6144);
+        assert_eq!(m.l2.unwrap().size_words(), 131072);
+        assert!(m.l2.unwrap().size_words() > m.l1.size_words());
+        assert_eq!(m.page_modulus(), Some(1536 * 512));
+    }
+
+    #[test]
+    fn build_model_matches_levels() {
+        let mut single = MachineModel::r10000().build_model();
+        single.access(0);
+        assert_eq!(single.profile().levels().len(), 1);
+        let mut full = MachineModel::r10000_full().build_model();
+        full.access(0);
+        let p = full.profile();
+        assert_eq!(p.levels().len(), 3);
+        assert!(p.get(Level::L2).is_some());
+        assert!(p.get(Level::Tlb).is_some());
+    }
+
+    #[test]
+    fn cache_sim_profile_is_its_stats() {
+        let mut sim = CacheSim::new(CacheParams::new(1, 4, 1));
+        for a in [0u64, 4, 0, 1] {
+            MemoryModel::access(&mut sim, a);
+        }
+        let p = sim.profile();
+        assert_eq!(p.levels().len(), 1);
+        assert_eq!(p.get(Level::L1).unwrap(), sim.stats());
+        assert_eq!(sim.l1_stats(), sim.stats());
+    }
+
+    #[test]
+    fn profile_delta_and_merge_roundtrip() {
+        let machine = MachineModel::r10000_full();
+        let mut model = machine.build_model();
+        for a in 0..3000u64 {
+            model.access(a * 7 % 2048);
+        }
+        let mid = model.profile();
+        for a in 0..3000u64 {
+            model.access(a * 13 % 8192);
+        }
+        let end = model.profile();
+        let tail = LoadProfile::delta(&end, &mid);
+        let mut merged = mid;
+        merged.merge(&tail);
+        assert_eq!(merged, end);
+        // empty profile adopts the other side
+        let mut empty = LoadProfile::default();
+        empty.merge(&end);
+        assert_eq!(empty, end);
+    }
+
+    #[test]
+    fn stall_cycles_shapes() {
+        let lat = Latency { l2: 10, mem: 100, tlb: 50 };
+        let one = CacheStats { cold_misses: 2, ..CacheStats::default() };
+        // single level: misses go straight to memory
+        assert_eq!(LoadProfile::single(one).stall_cycles(lat), 200);
+        // three levels: L1 → l2 lat, L2 → mem, TLB → refill
+        let mut p = LoadProfile::default();
+        p.push(Level::L1, one);
+        p.push(Level::L2, CacheStats { replacement_misses: 1, ..CacheStats::default() });
+        p.push(Level::Tlb, CacheStats { cold_misses: 3, ..CacheStats::default() });
+        assert_eq!(p.stall_cycles(lat), 2 * 10 + 100 + 3 * 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "different models")]
+    fn delta_rejects_mismatched_levels() {
+        let a = LoadProfile::single(CacheStats::default());
+        let mut b = LoadProfile::default();
+        b.push(Level::L1, CacheStats::default());
+        b.push(Level::Tlb, CacheStats::default());
+        let _ = LoadProfile::delta(&b, &a);
+    }
+}

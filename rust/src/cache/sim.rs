@@ -58,6 +58,31 @@ impl CacheStats {
             self.misses() as f64 / self.accesses as f64
         }
     }
+
+    /// Counter-wise difference `post − pre` of two cumulative snapshots of
+    /// the same counter set (the building block for incremental reports).
+    pub fn delta(post: CacheStats, pre: CacheStats) -> CacheStats {
+        CacheStats {
+            accesses: post.accesses - pre.accesses,
+            hits: post.hits - pre.hits,
+            cold_misses: post.cold_misses - pre.cold_misses,
+            replacement_misses: post.replacement_misses - pre.replacement_misses,
+            cold_loads: post.cold_loads - pre.cold_loads,
+            replacement_loads: post.replacement_loads - pre.replacement_loads,
+            evictions: post.evictions - pre.evictions,
+        }
+    }
+
+    /// Counter-wise sum (shard merging).
+    pub fn accumulate(&mut self, other: &CacheStats) {
+        self.accesses += other.accesses;
+        self.hits += other.hits;
+        self.cold_misses += other.cold_misses;
+        self.replacement_misses += other.replacement_misses;
+        self.cold_loads += other.cold_loads;
+        self.replacement_loads += other.replacement_loads;
+        self.evictions += other.evictions;
+    }
 }
 
 /// Growable bitset over u64 indices.

@@ -15,6 +15,14 @@ pub struct Metrics {
     pub points_processed: AtomicU64,
     pub sim_accesses: AtomicU64,
     pub sim_misses: AtomicU64,
+    /// L2 misses simulated by hierarchical analyses (0 on single-level
+    /// machines).
+    pub sim_l2_misses: AtomicU64,
+    /// TLB misses (page walks) simulated by hierarchical analyses.
+    pub sim_tlb_misses: AtomicU64,
+    /// Additive stall-cycle estimate accumulated over analyses (the
+    /// machine's latency model applied to each job's per-level profile).
+    pub sim_stall_cycles: AtomicU64,
     /// Analyze jobs that fanned out across pencil shards.
     pub sharded_analyses: AtomicU64,
     /// Total pencil shards executed on the worker pool.
@@ -46,6 +54,9 @@ impl Metrics {
             .set("points_processed", self.points_processed.load(Ordering::Relaxed))
             .set("sim_accesses", self.sim_accesses.load(Ordering::Relaxed))
             .set("sim_misses", self.sim_misses.load(Ordering::Relaxed))
+            .set("sim_l2_misses", self.sim_l2_misses.load(Ordering::Relaxed))
+            .set("sim_tlb_misses", self.sim_tlb_misses.load(Ordering::Relaxed))
+            .set("sim_stall_cycles", self.sim_stall_cycles.load(Ordering::Relaxed))
             .set("sharded_analyses", self.sharded_analyses.load(Ordering::Relaxed))
             .set("shards_executed", self.shards_executed.load(Ordering::Relaxed))
             .set("pjrt_executions", self.pjrt_executions.load(Ordering::Relaxed))

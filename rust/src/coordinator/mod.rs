@@ -34,7 +34,7 @@ pub use planner::{build_traversal, plan, Plan, PlannerConfig, TraversalChoice, M
 
 pub use crate::solver::{deterministic_input, SolveStep};
 
-use crate::cache::CacheSim;
+use crate::cache::Level;
 use crate::engine::{self, MissReport};
 use crate::grid::{GridDesc, MultiArrayLayout};
 use crate::runtime::RuntimeHandle;
@@ -260,7 +260,7 @@ impl Coordinator {
         // is materialized, so Analyze scales to 512³+ grids whose packed
         // visit sequence would not fit in memory.
         let order = planner::build_traversal(&self.config, &grid, stencil, choice);
-        let layout = MultiArrayLayout::paper_offsets(&grid, req.rhs_arrays, self.config.cache.size_words());
+        let layout = MultiArrayLayout::paper_offsets(&grid, req.rhs_arrays, self.config.machine.l1.size_words());
         // Fan big jobs out across pencil shards. The budget is the
         // planner's recommendation clamped to this job's *share* of the
         // worker pool: `scope_map` spawns fresh scoped threads per call, so
@@ -270,19 +270,26 @@ impl Coordinator {
         // small jobs (or saturated pools) run the exact sequential sim.
         let (_guard, budget) = self.enter_fanout();
         let shards = plan.shards.min(budget);
+        let machine = &self.config.machine;
         let report = if shards > 1 && order.num_pencils() > 1 {
             let ran = traversal::shard_ranges(order.num_pencils(), shards).len() as u64;
             Metrics::bump(&self.metrics.sharded_analyses, 1);
             Metrics::bump(&self.metrics.shards_executed, ran);
-            engine::simulate_sharded(order.as_ref(), &layout, stencil, self.config.cache, &self.pool, shards)
+            engine::simulate_sharded(order.as_ref(), &layout, stencil, machine, &self.pool, shards)
         } else {
-            let mut sim = CacheSim::new(self.config.cache);
-            engine::simulate(order.as_ref(), &layout, stencil, &mut sim)
+            engine::simulate_on_machine(order.as_ref(), &layout, stencil, machine)
         };
         Metrics::bump(&self.metrics.analyzed, 1);
         Metrics::bump(&self.metrics.points_processed, report.points);
         Metrics::bump(&self.metrics.sim_accesses, report.total.accesses);
         Metrics::bump(&self.metrics.sim_misses, report.total.misses());
+        if let Some(l2) = report.levels.get(Level::L2) {
+            Metrics::bump(&self.metrics.sim_l2_misses, l2.misses());
+        }
+        if let Some(tlb) = report.levels.get(Level::Tlb) {
+            Metrics::bump(&self.metrics.sim_tlb_misses, tlb.misses());
+        }
+        Metrics::bump(&self.metrics.sim_stall_cycles, report.levels.stall_cycles(machine.latency));
         Ok(StencilResponse { plan, miss_report: Some(report), result_norm: None, solve_log: Vec::new(), wall_micros: 0 })
     }
 
@@ -407,7 +414,11 @@ mod tests {
     fn forced_traversals_differ_on_conflicting_grid() {
         // Grid engineered to conflict: storage rows collide every 4 columns
         // (n1·n2 = 2048·… use a small cache to keep runtime down).
-        let config = PlannerConfig { cache: crate::cache::CacheParams::new(1, 64, 1), max_pad: 0, auto_pad: false };
+        let config = PlannerConfig {
+            machine: crate::cache::MachineModel::l1_only(crate::cache::CacheParams::new(1, 64, 1)),
+            max_pad: 0,
+            auto_pad: false,
+        };
         let c = Coordinator::analysis_only(config);
         let mk = |kind| StencilRequest {
             dims: vec![60, 32],
@@ -422,6 +433,30 @@ mod tests {
             fit.miss_report.unwrap().total.replacement_misses,
         );
         assert!(fm < nm, "fitting {fm} !< natural {nm}");
+    }
+
+    #[test]
+    fn analyze_on_full_machine_reports_per_level_loads() {
+        use crate::cache::{Level, MachineModel};
+        let config = PlannerConfig { machine: MachineModel::r10000_full(), ..PlannerConfig::default() };
+        let c = Coordinator::analysis_only(config);
+        let resp = c.submit(&StencilRequest::analyze(&[20, 20, 20])).unwrap();
+        let rep = resp.miss_report.unwrap();
+        assert_eq!(rep.levels.levels().len(), 3);
+        let l1 = rep.levels.get(Level::L1).unwrap();
+        let l2 = rep.levels.get(Level::L2).unwrap();
+        let tlb = rep.levels.get(Level::Tlb).unwrap();
+        assert_eq!(l1, rep.total);
+        assert_eq!(l2.accesses, l1.misses());
+        assert_eq!(tlb.accesses, l1.accesses);
+        // the L1-level numbers are bit-identical to a single-level run
+        let single = coord().submit(&StencilRequest::analyze(&[20, 20, 20])).unwrap();
+        assert_eq!(single.miss_report.unwrap().total, rep.total);
+        // per-level metrics flow
+        assert!(c.metrics.sim_stall_cycles.load(Ordering::Relaxed) > 0);
+        assert!(c.metrics.sim_tlb_misses.load(Ordering::Relaxed) > 0);
+        let j = c.metrics_json();
+        assert!(j.contains("sim_tlb_misses"));
     }
 
     #[test]

@@ -2,9 +2,13 @@
 //!
 //! This is where the paper's results become *policy*:
 //!
-//! 1. build the interference lattice of the requested layout;
-//! 2. if the grid is unfavorable (§6 short-vector criterion), consult the
-//!    padding advisor and re-plan on the padded layout;
+//! 1. build the interference lattice(s) of the requested layout — the
+//!    cache-line lattice always, and the **page interference lattice**
+//!    when the machine has a TLB (a grid can be TLB-unfavorable while
+//!    L1-favorable, and vice versa);
+//! 2. if the grid is unfavorable (§6 short-vector criterion, on either
+//!    lattice), consult the padding advisor and re-plan on the padded
+//!    layout — the advisor resolves every lattice the machine exposes;
 //! 3. choose the traversal: cache-fitting (§4) by default, natural when
 //!    the whole working set already fits the cache (no replacement misses
 //!    possible — fitting buys nothing and costs order-generation time);
@@ -12,7 +16,7 @@
 //!    measured loads landed inside the sandwich.
 
 use crate::bounds::{lower_bound_loads_multi, upper_bound_loads_multi};
-use crate::cache::CacheParams;
+use crate::cache::MachineModel;
 use crate::grid::GridDesc;
 use crate::lattice::InterferenceLattice;
 use crate::padding::{self, PaddingAdvice};
@@ -42,11 +46,17 @@ pub struct Plan {
     /// volume so big jobs fan out across the pool. The coordinator clamps
     /// this to its worker count.
     pub shards: usize,
-    /// §6 verdict on the *unpadded* layout.
+    /// §6 verdict on the *unpadded* layout (cache-line lattice).
     pub was_unfavorable: bool,
+    /// §6 verdict on the *unpadded* layout's page interference lattice —
+    /// `None` when the machine has no TLB.
+    pub was_tlb_unfavorable: Option<bool>,
     /// Shortest lattice vector (L1, searched to the stencil diameter) of
     /// the final layout.
     pub min_l1: Option<i64>,
+    /// Shortest page-lattice vector of the final layout (`None` when the
+    /// machine has no TLB or no vector within the searched horizon).
+    pub page_min_l1: Option<i64>,
     /// Eccentricity of the final layout's reduced basis.
     pub eccentricity: f64,
     /// Eq 7 prediction (loads for the whole job).
@@ -58,7 +68,10 @@ pub struct Plan {
 /// Planner configuration.
 #[derive(Debug, Clone)]
 pub struct PlannerConfig {
-    pub cache: CacheParams,
+    /// The machine to plan for: L1 geometry (lattice/bounds) plus optional
+    /// L2/TLB levels the analysis pipeline simulates and the padding
+    /// advisor must also satisfy.
+    pub machine: MachineModel,
     /// Maximum per-dimension pad the advisor may spend.
     pub max_pad: usize,
     /// Allow the planner to pad unfavorable grids.
@@ -67,7 +80,7 @@ pub struct PlannerConfig {
 
 impl Default for PlannerConfig {
     fn default() -> Self {
-        PlannerConfig { cache: CacheParams::r10000(), max_pad: 8, auto_pad: true }
+        PlannerConfig { machine: MachineModel::r10000(), max_pad: 8, auto_pad: true }
     }
 }
 
@@ -93,18 +106,23 @@ pub fn build_traversal(
     match choice {
         TraversalChoice::Natural => Box::new(traversal::natural_stream(grid, stencil.radius())),
         // the planner's fitting path is the auto-tuned family
-        TraversalChoice::CacheFitting => crate::tuner::auto_fitting_traversal(grid, stencil, &config.cache).0,
+        TraversalChoice::CacheFitting => crate::tuner::auto_fitting_traversal(grid, stencil, &config.machine.l1).0,
     }
 }
 
 /// Produce a plan for evaluating `stencil` with `p` RHS arrays over `dims`.
 pub fn plan(config: &PlannerConfig, dims: &[usize], stencil: &Stencil, p: usize) -> Plan {
-    let cache = &config.cache;
+    let cache = &config.machine.l1;
     let grid = GridDesc::new(dims);
     let was_unfavorable = padding::is_unfavorable(&grid, stencil, cache);
+    // §6 verdict at page granularity: a short vector in the page
+    // interference lattice means one stencil application contends for the
+    // TLB's reach — unfavorable for translation no matter the traversal.
+    let was_tlb_unfavorable = config.machine.page_modulus().map(|m| padding::is_unfavorable_mod(&grid, stencil, m));
 
-    let (pad, storage_dims) = if was_unfavorable && config.auto_pad {
-        let advice: PaddingAdvice = padding::advise(&grid, stencil, cache, config.max_pad);
+    let needs_pad = was_unfavorable || was_tlb_unfavorable == Some(true);
+    let (pad, storage_dims) = if needs_pad && config.auto_pad {
+        let advice: PaddingAdvice = padding::advise_machine(&grid, stencil, &config.machine, config.max_pad);
         (advice.pad, advice.storage_dims)
     } else {
         (vec![0; dims.len()], dims.to_vec())
@@ -113,6 +131,10 @@ pub fn plan(config: &PlannerConfig, dims: &[usize], stencil: &Stencil, p: usize)
     let lattice = InterferenceLattice::new(padded.storage_dims(), cache.lattice_modulus());
     let min_l1 = lattice.min_l1(stencil.diameter() as i64);
     let eccentricity = lattice.eccentricity();
+    let page_min_l1 = match config.machine.page_modulus() {
+        Some(m) => InterferenceLattice::new(padded.storage_dims(), m).min_l1(stencil.diameter() as i64),
+        None => None,
+    };
 
     // Natural order is optimal when a full working slab (the K-extension of
     // one scanning face of the natural sweep: (2r+1) planes of the leading
@@ -148,7 +170,9 @@ pub fn plan(config: &PlannerConfig, dims: &[usize], stencil: &Stencil, p: usize)
         traversal,
         shards,
         was_unfavorable,
+        was_tlb_unfavorable,
         min_l1,
+        page_min_l1,
         eccentricity,
         lower_bound,
         upper_bound,
@@ -229,6 +253,54 @@ mod tests {
             assert_eq!(t.num_points(), grid.interior_points(2), "{choice:?}");
             assert_eq!(t.ndim(), 3);
         }
+    }
+
+    #[test]
+    fn single_level_plans_carry_no_tlb_verdict() {
+        let p = plan(&cfg(), &[45, 91, 100], &Stencil::star13(), 1);
+        assert_eq!(p.was_tlb_unfavorable, None);
+        assert_eq!(p.page_min_l1, None);
+    }
+
+    #[test]
+    fn hierarchical_machine_adds_page_lattice_verdict() {
+        let mut c = cfg();
+        c.machine = MachineModel::r10000_full();
+        // L1-unfavorable 45×91 (4095 ≡ −1 mod 4096) is page-favorable on
+        // the 32768-word TLB span — the two verdicts are independent.
+        c.auto_pad = false;
+        let p = plan(&c, &[45, 91, 100], &Stencil::star13(), 1);
+        assert!(p.was_unfavorable);
+        assert_eq!(p.was_tlb_unfavorable, Some(false));
+        // single-level planning on the same dims is unchanged by the
+        // machine's extra levels (L1 lattice, bounds, traversal policy)
+        let q = plan(&PlannerConfig { auto_pad: false, ..cfg() }, &[45, 91, 100], &Stencil::star13(), 1);
+        assert_eq!(p.pad, q.pad);
+        assert_eq!(p.traversal, q.traversal);
+        assert_eq!(p.lower_bound, q.lower_bound);
+        assert_eq!(p.upper_bound, q.upper_bound);
+    }
+
+    #[test]
+    fn tlb_only_unfavorability_triggers_padding() {
+        use crate::cache::{CacheParams, Latency, TlbParams};
+        // Machine from the padding test: L1 modulus 4096, TLB span 18432
+        // (not a multiple of 4096). 95×97 is L1-favorable but
+        // page-unfavorable ((2,0,2) hits the span); the planner must
+        // still pad it.
+        let machine = MachineModel {
+            name: "r10000+tlb36",
+            l1: CacheParams::r10000(),
+            l2: None,
+            tlb: Some(TlbParams { entries: 36, page_words: 512 }),
+            latency: Latency::r10000(),
+        };
+        let c = PlannerConfig { machine, max_pad: 8, auto_pad: true };
+        let p = plan(&c, &[95, 97, 40], &Stencil::star13(), 1);
+        assert!(!p.was_unfavorable);
+        assert_eq!(p.was_tlb_unfavorable, Some(true));
+        assert!(p.pad.iter().any(|&x| x > 0), "{p:?}");
+        assert!(p.page_min_l1.is_none() || p.page_min_l1.unwrap() >= 5, "{p:?}");
     }
 
     #[test]

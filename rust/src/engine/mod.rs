@@ -1,6 +1,8 @@
 //! The stencil execution engine: walks a [`Traversal`] stream and either
-//! feeds the induced address stream to a cache simulator (**analysis
-//! mode**) or computes the stencil numerically (**numeric mode**), or both.
+//! feeds the induced address stream to a memory-model simulator (**analysis
+//! mode** — any [`MemoryModel`], from the paper's single [`CacheSim`] to a
+//! full L1/L2/TLB [`crate::cache::Hierarchy`]) or computes the stencil
+//! numerically (**numeric mode**), or both.
 //!
 //! The engine is the moral equivalent of the measured Fortran loop nests in
 //! the paper's §6: per interior point it issues `|K|` reads of `u` (one per
@@ -14,7 +16,7 @@
 //! (single-pencil) `Traversal`. [`simulate_sharded`] splits the stream's
 //! pencils into disjoint ranges and fans them out across a worker pool.
 
-use crate::cache::{CacheParams, CacheSim, CacheStats};
+use crate::cache::{CacheSim, CacheStats, LoadProfile, MachineModel, MemoryModel};
 use crate::grid::{GridDesc, MultiArrayLayout};
 use crate::stencil::Stencil;
 use crate::traversal::{shard_ranges, Traversal};
@@ -22,16 +24,25 @@ use crate::util::threadpool::ThreadPool;
 use std::ops::Range;
 
 /// Result of an analysis-mode run.
+///
+/// `total`, `u_loads` and `u_misses` are **L1-level** quantities (the
+/// paper's §2 counters) regardless of the memory model, so single-level
+/// numbers are identical whether simulated on a bare [`CacheSim`] or as
+/// the first level of a hierarchy; `levels` carries the per-level profile
+/// (one row for a single-level model, L1/L2/TLB rows for a hierarchy).
 #[derive(Debug, Clone, Copy)]
 pub struct MissReport {
     /// Interior points visited.
     pub points: u64,
-    /// Combined counters over the whole address stream (u reads + q writes).
+    /// Combined L1 counters over the whole address stream (u reads + q
+    /// writes).
     pub total: CacheStats,
     /// Counters attributable to reads of the RHS array(s) only — the
     /// quantity the paper's bounds constrain (loads of `u`).
     pub u_loads: u64,
     pub u_misses: u64,
+    /// Per-level counters over the whole address stream.
+    pub levels: LoadProfile,
 }
 
 impl MissReport {
@@ -54,63 +65,56 @@ impl MissReport {
         }
     }
 
-    /// Merge shard reports by summing every counter (the shard union's
-    /// exact totals, given each shard ran on its own cache).
+    /// Merge shard reports by summing every counter, level-wise for the
+    /// per-level profile (the shard union's exact totals, given each shard
+    /// ran on its own memory model).
     pub fn merged(reports: &[MissReport]) -> MissReport {
-        let mut out = MissReport { points: 0, total: CacheStats::default(), u_loads: 0, u_misses: 0 };
+        let mut out = MissReport {
+            points: 0,
+            total: CacheStats::default(),
+            u_loads: 0,
+            u_misses: 0,
+            levels: LoadProfile::default(),
+        };
         for r in reports {
             out.points += r.points;
             out.u_loads += r.u_loads;
             out.u_misses += r.u_misses;
-            out.total.accesses += r.total.accesses;
-            out.total.hits += r.total.hits;
-            out.total.cold_misses += r.total.cold_misses;
-            out.total.replacement_misses += r.total.replacement_misses;
-            out.total.cold_loads += r.total.cold_loads;
-            out.total.replacement_loads += r.total.replacement_loads;
-            out.total.evictions += r.total.evictions;
+            out.total.accumulate(&r.total);
+            out.levels.merge(&r.levels);
         }
         out
     }
 }
 
-/// Simulate the cache behaviour of evaluating `stencil` over the full
+/// Simulate the memory behaviour of evaluating `stencil` over the full
 /// `traversal` stream, with `u` at `layout.base(i)` for each RHS array and
 /// `q` at `layout.q_base()`. Every RHS array is read at every stencil point
-/// (the §5 multi-array model); `p = layout.num_arrays()`.
-pub fn simulate<T: Traversal + ?Sized>(
+/// (the §5 multi-array model); `p = layout.num_arrays()`. Generic over the
+/// memory model: a bare [`CacheSim`] reproduces the paper's single-level
+/// numbers exactly; a [`crate::cache::Hierarchy`] additionally fills the
+/// report's per-level profile.
+pub fn simulate<T: Traversal + ?Sized, M: MemoryModel + ?Sized>(
     traversal: &T,
     layout: &MultiArrayLayout,
     stencil: &Stencil,
-    sim: &mut CacheSim,
+    sim: &mut M,
 ) -> MissReport {
     simulate_pencils(traversal, 0..traversal.num_pencils(), layout, stencil, sim)
 }
 
-/// Counter-wise difference `post − pre` of two cumulative snapshots.
-fn stats_delta(post: CacheStats, pre: CacheStats) -> CacheStats {
-    CacheStats {
-        accesses: post.accesses - pre.accesses,
-        hits: post.hits - pre.hits,
-        cold_misses: post.cold_misses - pre.cold_misses,
-        replacement_misses: post.replacement_misses - pre.replacement_misses,
-        cold_loads: post.cold_loads - pre.cold_loads,
-        replacement_loads: post.replacement_loads - pre.replacement_loads,
-        evictions: post.evictions - pre.evictions,
-    }
-}
-
 /// [`simulate`] restricted to a pencil range of the traversal — the shard
 /// body of [`simulate_sharded`], also usable directly for incremental
-/// analyses: every counter in the returned report (including `total`)
-/// covers only *this call's* accesses, so reports from successive ranges
-/// over one shared [`CacheSim`] sum cleanly via [`MissReport::merged`].
-pub fn simulate_pencils<T: Traversal + ?Sized>(
+/// analyses: every counter in the returned report (including `total` and
+/// `levels`) covers only *this call's* accesses, so reports from
+/// successive ranges over one shared memory model sum cleanly via
+/// [`MissReport::merged`].
+pub fn simulate_pencils<T: Traversal + ?Sized, M: MemoryModel + ?Sized>(
     traversal: &T,
     pencils: Range<usize>,
     layout: &MultiArrayLayout,
     stencil: &Stencil,
-    sim: &mut CacheSim,
+    sim: &mut M,
 ) -> MissReport {
     let grid = layout.grid().clone();
     let d = grid.ndim();
@@ -121,28 +125,55 @@ pub fn simulate_pencils<T: Traversal + ?Sized>(
     let bases: Vec<i64> = (0..p).map(|i| layout.base(i) as i64).collect();
     let q_base = layout.q_base() as i64;
 
-    let entry_stats = sim.stats();
+    let entry_stats = sim.l1_stats();
+    let entry_profile = sim.profile();
     let mut u_loads = 0u64;
     let mut u_misses = 0u64;
     let mut points = 0u64;
 
     traversal.stream_pencils(pencils, &mut |x| {
         let off = grid.offset_of(x) as i64;
-        let pre = sim.stats();
+        let pre = sim.l1_stats();
         for &b in &bases {
             let base = b + off;
             for &dl in &deltas {
                 sim.access((base + dl) as u64);
             }
         }
-        let post = sim.stats();
+        let post = sim.l1_stats();
         u_loads += post.loads() - pre.loads();
         u_misses += post.misses() - pre.misses();
         // write q(x): one access (write-allocate).
         sim.access((q_base + off) as u64);
         points += 1;
     });
-    MissReport { points, total: stats_delta(sim.stats(), entry_stats), u_loads, u_misses }
+    MissReport {
+        points,
+        total: CacheStats::delta(sim.l1_stats(), entry_stats),
+        u_loads,
+        u_misses,
+        levels: LoadProfile::delta(&sim.profile(), &entry_profile),
+    }
+}
+
+/// [`simulate`] against a [`MachineModel`]: builds the machine's memory
+/// model and dispatches once on its shape, so the per-access loop is
+/// monomorphized for both the single-level and the hierarchical case (no
+/// per-access virtual calls). The shared sequential entry point for the
+/// coordinator, the experiment drivers and the tuner's stall metric.
+pub fn simulate_on_machine<T: Traversal + ?Sized>(
+    traversal: &T,
+    layout: &MultiArrayLayout,
+    stencil: &Stencil,
+    machine: &MachineModel,
+) -> MissReport {
+    if machine.is_hierarchical() {
+        let mut hier = machine.build_hierarchy();
+        simulate(traversal, layout, stencil, &mut hier)
+    } else {
+        let mut sim = CacheSim::new(machine.l1);
+        simulate(traversal, layout, stencil, &mut sim)
+    }
 }
 
 /// Sharded analysis: partition the traversal's pencils into at most
@@ -161,17 +192,41 @@ pub fn simulate_sharded<T: Traversal + ?Sized>(
     traversal: &T,
     layout: &MultiArrayLayout,
     stencil: &Stencil,
-    cache: CacheParams,
+    machine: &MachineModel,
     pool: &ThreadPool,
     shards: usize,
 ) -> MissReport {
+    // Branch once on the machine shape so each shard's access loop is
+    // monomorphized (no per-access virtual dispatch on the hot path).
+    if machine.is_hierarchical() {
+        simulate_sharded_with(traversal, layout, stencil, || machine.build_hierarchy(), pool, shards)
+    } else {
+        simulate_sharded_with(traversal, layout, stencil, || CacheSim::new(machine.l1), pool, shards)
+    }
+}
+
+/// The sharding engine behind [`simulate_sharded`], parameterized by a
+/// per-shard memory-model builder.
+fn simulate_sharded_with<T, M, F>(
+    traversal: &T,
+    layout: &MultiArrayLayout,
+    stencil: &Stencil,
+    build: F,
+    pool: &ThreadPool,
+    shards: usize,
+) -> MissReport
+where
+    T: Traversal + ?Sized,
+    M: MemoryModel,
+    F: Fn() -> M + Sync,
+{
     let ranges = shard_ranges(traversal.num_pencils(), shards);
     if ranges.len() <= 1 {
-        let mut sim = CacheSim::new(cache);
+        let mut sim = build();
         return simulate(traversal, layout, stencil, &mut sim);
     }
     let reports = pool.scope_map(ranges.len(), |i| {
-        let mut sim = CacheSim::new(cache);
+        let mut sim = build();
         simulate_pencils(traversal, ranges[i].clone(), layout, stencil, &mut sim)
     });
     MissReport::merged(&reports)
@@ -271,13 +326,13 @@ pub fn apply_sharded<T: Traversal + ?Sized>(
 
 /// Combined mode used by tests: numeric result plus miss report in one
 /// sweep (numbers must be identical to running the two modes separately).
-pub fn apply_and_simulate<T: Traversal + ?Sized>(
+pub fn apply_and_simulate<T: Traversal + ?Sized, M: MemoryModel + ?Sized>(
     traversal: &T,
     layout: &MultiArrayLayout,
     stencil: &Stencil,
     u: &[f64],
     q: &mut [f64],
-    sim: &mut CacheSim,
+    sim: &mut M,
 ) -> MissReport {
     let report = simulate(traversal, layout, stencil, sim);
     apply(traversal, layout.grid(), stencil, u, q);
@@ -330,7 +385,7 @@ mod tests {
         let cache = CacheParams::new(2, 16, 2);
         let t = natural_stream(&g, 1);
         let pool = ThreadPool::new(3);
-        let rep = simulate_sharded(&t, &l, &s, cache, &pool, 4);
+        let rep = simulate_sharded(&t, &l, &s, &MachineModel::l1_only(cache), &pool, 4);
         let pts = g.interior_points(1);
         assert_eq!(rep.points, pts);
         assert_eq!(rep.total.accesses, pts * (s.size() as u64 + 1));
@@ -348,7 +403,7 @@ mod tests {
         let cache = CacheParams::new(2, 16, 2);
         let t = natural_stream(&g, 1);
         let pool = ThreadPool::new(2);
-        let sharded = simulate_sharded(&t, &l, &s, cache, &pool, 1);
+        let sharded = simulate_sharded(&t, &l, &s, &MachineModel::l1_only(cache), &pool, 1);
         let mut sim = CacheSim::new(cache);
         let seq = simulate(&t, &l, &s, &mut sim);
         assert_eq!(sharded.total, seq.total);
@@ -518,7 +573,7 @@ mod tests {
         for t in [natural_stream(&g, 1)] {
             let mut sim = CacheSim::new(cache);
             let seq = simulate(&t, &l, &s, &mut sim);
-            let shd = simulate_sharded(&t, &l, &s, cache, &pool, 5);
+            let shd = simulate_sharded(&t, &l, &s, &MachineModel::l1_only(cache), &pool, 5);
             for rep in [&seq, &shd] {
                 assert_eq!(rep.total.hits + rep.total.misses(), rep.total.accesses);
                 assert!(rep.u_misses <= rep.u_loads + rep.total.misses());
@@ -558,16 +613,117 @@ mod tests {
 
     #[test]
     fn merged_report_sums_counters() {
-        let a = MissReport {
-            points: 3,
-            total: CacheStats { accesses: 10, hits: 4, cold_misses: 6, ..CacheStats::default() },
-            u_loads: 5,
-            u_misses: 2,
-        };
+        let stats = CacheStats { accesses: 10, hits: 4, cold_misses: 6, ..CacheStats::default() };
+        let a = MissReport { points: 3, total: stats, u_loads: 5, u_misses: 2, levels: LoadProfile::single(stats) };
         let m = MissReport::merged(&[a, a]);
         assert_eq!(m.points, 6);
         assert_eq!(m.total.accesses, 20);
         assert_eq!(m.total.misses(), 12);
         assert_eq!(m.u_loads, 10);
+        assert_eq!(m.levels.get(crate::cache::Level::L1).unwrap(), m.total);
+    }
+
+    /// A tiny hierarchical machine small enough that every level sees
+    /// replacement traffic on test-sized grids.
+    fn tiny_machine() -> MachineModel {
+        MachineModel {
+            name: "tiny-full",
+            l1: CacheParams::new(1, 8, 2),
+            l2: Some(CacheParams::new(2, 16, 2)),
+            tlb: Some(crate::cache::TlbParams { entries: 4, page_words: 16 }),
+            latency: crate::cache::Latency::r10000(),
+        }
+    }
+
+    #[test]
+    fn hierarchy_report_l1_matches_single_level_run() {
+        // The single-level §2 numbers must be bit-identical whether the
+        // stream runs on a bare CacheSim or as the L1 of a hierarchy.
+        let (g, s, l) = setup(&[10, 9]);
+        let machine = tiny_machine();
+        let t = natural_stream(&g, 1);
+        let mut solo = CacheSim::new(machine.l1);
+        let single = simulate(&t, &l, &s, &mut solo);
+        let mut hier = machine.build_hierarchy();
+        let multi = simulate(&t, &l, &s, &mut hier);
+        assert_eq!(single.total, multi.total);
+        assert_eq!(single.u_loads, multi.u_loads);
+        assert_eq!(single.u_misses, multi.u_misses);
+        assert_eq!(multi.levels.levels().len(), 3);
+        assert_eq!(multi.levels.get(crate::cache::Level::L1).unwrap(), single.total);
+    }
+
+    #[test]
+    fn apply_and_simulate_accepts_any_memory_model() {
+        let (g, s, l) = setup(&[8, 7]);
+        let words = g.storage_words() as usize;
+        let mut rng = crate::util::rng::Rng::new(5);
+        let u: Vec<f64> = (0..words).map(|_| rng.f64()).collect();
+        let t = natural_stream(&g, 1);
+        let mut q1 = vec![0.0; words];
+        let mut hier = tiny_machine().build_hierarchy();
+        let rep = apply_and_simulate(&t, &l, &s, &u, &mut q1, &mut hier);
+        assert_eq!(rep.levels.levels().len(), 3);
+        let mut q2 = vec![0.0; words];
+        apply(&t, &g, &s, &u, &mut q2);
+        assert_eq!(q1, q2);
+    }
+
+    #[test]
+    fn sharded_hierarchy_merges_per_level_stats_consistently() {
+        // The acceptance property: simulate_sharded with a Hierarchy must
+        // merge per-level stats consistently with the sequential run — one
+        // shard is exactly sequential (levels included); many shards keep
+        // per-level accesses conserved where sharding cannot change them
+        // (L1 and TLB see every word access) and only add boundary misses.
+        use crate::cache::Level;
+        let (g, s, l) = setup(&[14, 13]);
+        let machine = tiny_machine();
+        let t = natural_stream(&g, 1);
+        let pool = ThreadPool::new(3);
+        let mut hier = machine.build_hierarchy();
+        let seq = simulate(&t, &l, &s, &mut hier);
+
+        let one = simulate_sharded(&t, &l, &s, &machine, &pool, 1);
+        assert_eq!(one.total, seq.total);
+        assert_eq!(one.levels, seq.levels);
+
+        for shards in [2usize, 5] {
+            let shd = simulate_sharded(&t, &l, &s, &machine, &pool, shards);
+            assert_eq!(shd.points, seq.points);
+            let (sl, ql) = (seq.levels, shd.levels);
+            for level in [Level::L1, Level::Tlb] {
+                assert_eq!(ql.get(level).unwrap().accesses, sl.get(level).unwrap().accesses, "{shards} shards");
+            }
+            for lv in ql.levels() {
+                assert_eq!(lv.stats.hits + lv.stats.misses(), lv.stats.accesses, "{:?}", lv.level);
+            }
+            // per-shard cold boundaries only add misses at every level
+            // relative to the warm sequential run
+            for level in [Level::L1, Level::Tlb] {
+                assert!(ql.get(level).unwrap().misses() >= sl.get(level).unwrap().misses(), "{shards} shards");
+            }
+            // L2 sees exactly the L1 misses
+            assert_eq!(ql.get(Level::L2).unwrap().accesses, ql.get(Level::L1).unwrap().misses());
+        }
+    }
+
+    #[test]
+    fn incremental_hierarchy_ranges_sum_cleanly() {
+        // LoadProfile::delta correctness: successive ranges over one warm
+        // hierarchy must merge (levels included) to the one-shot run.
+        let (g, s, l) = setup(&[11, 10]);
+        let machine = tiny_machine();
+        let t = natural_stream(&g, 1);
+        let np = t.num_pencils();
+        let mut hier = machine.build_hierarchy();
+        let r1 = simulate_pencils(&t, 0..np / 2, &l, &s, &mut hier);
+        let r2 = simulate_pencils(&t, np / 2..np, &l, &s, &mut hier);
+        let merged = MissReport::merged(&[r1, r2]);
+        let mut hier2 = machine.build_hierarchy();
+        let whole = simulate(&t, &l, &s, &mut hier2);
+        assert_eq!(merged.total, whole.total);
+        assert_eq!(merged.levels, whole.levels);
+        assert_eq!(merged.u_loads, whole.u_loads);
     }
 }

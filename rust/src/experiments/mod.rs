@@ -21,7 +21,7 @@ pub mod fig5;
 pub mod multirhs;
 pub mod sec3;
 
-use crate::cache::{CacheParams, CacheSim};
+use crate::cache::{CacheParams, CacheSim, MachineModel};
 use crate::engine::{self, MissReport};
 use crate::grid::{GridDesc, MultiArrayLayout};
 use crate::report::Table;
@@ -86,6 +86,23 @@ pub fn measure_with_offsets(
     let layout = MultiArrayLayout::paper_offsets(grid, p, cache.size_words());
     let mut sim = CacheSim::new(cache);
     engine::simulate(&order, &layout, stencil, &mut sim)
+}
+
+/// [`measure`] against a full [`MachineModel`]: the same §5 offset layout
+/// and traversal construction (both keyed to the L1 geometry, like the
+/// paper's), but simulated through every level the machine exposes, so
+/// the report's per-level profile carries L2/TLB counters. Single-level
+/// machines reproduce [`measure`] exactly.
+pub fn measure_machine(
+    grid: &GridDesc,
+    stencil: &Stencil,
+    machine: &MachineModel,
+    kind: OrderKind,
+    p: usize,
+) -> MissReport {
+    let order = build_order(grid, stencil, &machine.l1, kind);
+    let layout = MultiArrayLayout::paper_offsets(grid, p, machine.l1.size_words());
+    engine::simulate_on_machine(&order, &layout, stencil, machine)
 }
 
 /// Save a table as CSV under `results/` (best effort — failures logged).

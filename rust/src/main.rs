@@ -3,8 +3,11 @@
 //! Subcommands:
 //!
 //! ```text
-//! stencilcache analyze --dims 45,91,100 [--cache 2,512,4] [--rhs 1]
-//!     lattice analysis + padding advice + simulated misses per traversal
+//! stencilcache analyze --dims 45,91,100 [--machine r10000|r10000-full|modern]
+//!                      [--cache 2,512,4] [--rhs 1]
+//!     lattice analysis (cache-line + page lattices) + padding advice +
+//!     simulated misses per traversal; hierarchical machines additionally
+//!     report per-level loads and a stall-cycle estimate
 //! stencilcache experiment <fig4|fig5a|fig5b|fig5corr|sec3|bounds|multirhs|appb|all> [--quick]
 //!     regenerate a paper figure/table
 //! stencilcache solve --n 64 --steps 100
@@ -15,8 +18,9 @@
 //!     artifact + platform report
 //! ```
 
-use stencilcache::cache::CacheParams;
+use stencilcache::cache::{CacheParams, MachineModel};
 use stencilcache::coordinator::{Coordinator, JobKind, PlannerConfig, StencilRequest, StencilSpec, TraversalChoice};
+use stencilcache::report;
 use stencilcache::runtime::RuntimeService;
 use stencilcache::util::cli::Args;
 use stencilcache::util::logger;
@@ -56,16 +60,36 @@ fn parse_cache(args: &Args) -> Result<CacheParams, String> {
     Ok(CacheParams::new(spec[0], spec[1], spec[2]))
 }
 
+/// Resolve `--machine <preset>` / `--cache a,z,w` into a machine
+/// descriptor: a named preset when `--machine` is given (validated against
+/// [`MachineModel::preset_names`]), a single-level machine around
+/// `--cache` otherwise.
+fn parse_machine(args: &Args) -> Result<MachineModel, String> {
+    if args.get("machine").is_some() {
+        if args.get("cache").is_some() {
+            return Err("--machine and --cache are mutually exclusive (a preset fixes the L1 geometry)".into());
+        }
+        let name = args.get_choice("machine", MachineModel::preset_names(), "r10000")?;
+        Ok(MachineModel::preset(name).expect("validated preset"))
+    } else {
+        Ok(MachineModel::l1_only(parse_cache(args)?))
+    }
+}
+
 fn cmd_analyze(args: &Args) -> i32 {
     let run = || -> Result<(), String> {
         let dims = args.get_dims("dims", &[45, 91, 100])?;
-        let cache = parse_cache(args)?;
+        let machine = parse_machine(args)?;
         let rhs = args.get_usize("rhs", 1)?;
-        let config = PlannerConfig { cache, max_pad: args.get_usize("max-pad", 8)?, auto_pad: !args.flag("no-auto-pad") };
+        let config = PlannerConfig {
+            machine: machine.clone(),
+            max_pad: args.get_usize("max-pad", 8)?,
+            auto_pad: !args.flag("no-auto-pad"),
+        };
         let coord = Coordinator::analysis_only(config);
         let stencil = if dims.len() == 3 { StencilSpec::Star13 } else { StencilSpec::Star { r: 1 } };
 
-        println!("== plan ==");
+        println!("== plan ({}) ==", machine.name);
         let plan_resp = coord
             .submit(&StencilRequest { dims: dims.clone(), stencil: stencil.clone(), rhs_arrays: rhs, kind: JobKind::Plan })
             .map_err(|e| e.to_string())?;
@@ -87,6 +111,20 @@ fn cmd_analyze(args: &Args) -> i32 {
                 rep.u_loads_per_point(),
                 resp.wall_micros
             );
+            if machine.is_hierarchical() {
+                let t = report::load_profile_table(
+                    &format!("per-level loads ({label})"),
+                    &rep.levels,
+                    rep.points,
+                    machine.latency,
+                );
+                println!("{}", t.to_text());
+                let stall = rep.levels.stall_cycles(machine.latency);
+                println!(
+                    "{label:>14}: stall estimate ≈ {stall} cycles ({:.2}/pt)\n",
+                    stall as f64 / rep.points.max(1) as f64
+                );
+            }
         }
         println!("\n== metrics ==\n{}", coord.metrics_json());
         Ok(())

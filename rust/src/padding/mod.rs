@@ -14,8 +14,15 @@
 //! minimizing memory overhead and then basis eccentricity ("the shortest
 //! vector ... not too short, though short enough to minimize the number of
 //! pencils").
+//!
+//! With a hierarchical [`MachineModel`] the same criterion applies **per
+//! level**: the TLB induces a *page interference lattice* (modulus = the
+//! TLB's word reach, [`MachineModel::page_modulus`]) and
+//! [`advise_machine`] demands the pad clear the short-vector bar on every
+//! lattice the machine exposes — a grid can be TLB-unfavorable while
+//! L1-favorable whenever the two moduli are not nested.
 
-use crate::cache::CacheParams;
+use crate::cache::{CacheParams, MachineModel};
 use crate::grid::GridDesc;
 use crate::lattice::InterferenceLattice;
 use crate::stencil::Stencil;
@@ -49,7 +56,14 @@ pub fn short_vector_bar(stencil: &Stencil, _cache: &CacheParams) -> i64 {
 
 /// Is this grid unfavorable for the given stencil and cache (§6 criterion)?
 pub fn is_unfavorable(grid: &GridDesc, stencil: &Stencil, cache: &CacheParams) -> bool {
-    let lat = InterferenceLattice::new(grid.storage_dims(), cache.lattice_modulus());
+    is_unfavorable_mod(grid, stencil, cache.lattice_modulus())
+}
+
+/// The §6 criterion against an explicit lattice modulus — used for the
+/// page interference lattice (`modulus =`
+/// [`MachineModel::page_modulus`]) as well as the cache-line one.
+pub fn is_unfavorable_mod(grid: &GridDesc, stencil: &Stencil, modulus: usize) -> bool {
+    let lat = InterferenceLattice::new(grid.storage_dims(), modulus);
     lat.is_unfavorable(stencil.diameter() as i64)
 }
 
@@ -73,10 +87,36 @@ pub fn near_half_cache_multiple(grid: &GridDesc, cache: &CacheParams, tol: f64) 
 /// Search pads `0..=max_pad` for the first d−1 dims; return the best
 /// advice per the ordering described in the module docs.
 pub fn advise(grid: &GridDesc, stencil: &Stencil, cache: &CacheParams, max_pad: usize) -> PaddingAdvice {
+    advise_moduli(grid, &[cache.lattice_modulus()], short_vector_bar(stencil, cache), max_pad)
+}
+
+/// [`advise`] against every lattice a machine exposes: the cache-line
+/// lattice plus, when the machine has a TLB, the page interference
+/// lattice. A pad is favorable only when it clears the short-vector bar
+/// on **all** of them; the reported `min_l1`/`eccentricity` describe the
+/// cache-line lattice (the one the traversal machinery consumes).
+pub fn advise_machine(grid: &GridDesc, stencil: &Stencil, machine: &MachineModel, max_pad: usize) -> PaddingAdvice {
+    let mut moduli = vec![machine.l1.lattice_modulus()];
+    if let Some(m) = machine.page_modulus() {
+        moduli.push(m);
+    }
+    advise_moduli(grid, &moduli, short_vector_bar(stencil, &machine.l1), max_pad)
+}
+
+/// Does `storage`'s lattice mod `modulus` clear the advisor's strict bar
+/// (shortest vector within the search horizon strictly longer than the
+/// stencil diameter)?
+fn clears_bar(storage: &[usize], modulus: usize, bar: i64) -> bool {
+    InterferenceLattice::new(storage, modulus).min_l1(bar.max(8)).map(|m| m > bar).unwrap_or(true)
+}
+
+/// The pad search over an explicit modulus list (first entry = the
+/// cache-line lattice, which supplies the reported diagnostics) and
+/// short-vector bar (the stencil diameter).
+fn advise_moduli(grid: &GridDesc, moduli: &[usize], bar: i64, max_pad: usize) -> PaddingAdvice {
+    assert!(!moduli.is_empty());
     let d = grid.ndim();
     let dims = grid.dims();
-    let bar = short_vector_bar(stencil, cache);
-    let modulus = cache.lattice_modulus();
     let base_words: f64 = dims.iter().map(|&n| n as f64).product();
 
     let mut best: Option<(PaddingAdvice, (u8, u64, u64))> = None; // (advice, sort key)
@@ -84,12 +124,15 @@ pub fn advise(grid: &GridDesc, stencil: &Stencil, cache: &CacheParams, max_pad: 
     // odometer over pads of dims 0..d-1 (last dim fixed at 0)
     loop {
         let storage: Vec<usize> = dims.iter().zip(&pad).map(|(&n, &p)| n + p).collect();
-        let lat = InterferenceLattice::new(&storage, modulus);
+        let lat = InterferenceLattice::new(&storage, moduli[0]);
         let min_l1 = lat.min_l1(bar.max(8));
         // Advice is stricter than classification: borderline layouts with
         // min_l1 == diameter (e.g. 46×91's (2,−2,1)) measurably thrash, so
-        // the advisor demands strictly longer shortest vectors.
-        let favorable = min_l1.map(|m| m > bar).unwrap_or(true);
+        // the advisor demands strictly longer shortest vectors — on every
+        // lattice the machine exposes. (The primary lattice reuses the
+        // min_l1 already computed above instead of re-reducing.)
+        let primary_ok = min_l1.map(|m| m > bar).unwrap_or(true);
+        let favorable = primary_ok && moduli[1..].iter().all(|&m| clears_bar(&storage, m, bar));
         let ecc = lat.eccentricity();
         let padded_words: f64 = storage.iter().map(|&n| n as f64).product();
         let overhead = padded_words / base_words - 1.0;
@@ -204,6 +247,47 @@ mod tests {
         assert!(adv.favorable, "{adv:?}");
         let padded = GridDesc::with_padding(g.dims(), &adv.pad);
         assert!(!is_unfavorable(&padded, &s, &c));
+    }
+
+    #[test]
+    fn tlb_unfavorable_while_l1_favorable_and_advisor_resolves_both() {
+        use crate::cache::{Latency, MachineModel, TlbParams};
+        // A TLB span (36·512 = 18432) that is not a multiple of the L1
+        // modulus (4096): the page lattice can then hold a short vector
+        // the cache-line lattice lacks. 95×97 has n1·n2 = 9215, so
+        // (2,0,2) lies in the page lattice (2·9215 + 2 = span) while the
+        // shortest vector mod 4096 has L1 norm > 5.
+        let machine = MachineModel {
+            name: "r10000+tlb36",
+            l1: CacheParams::r10000(),
+            l2: None,
+            tlb: Some(TlbParams { entries: 36, page_words: 512 }),
+            latency: Latency::r10000(),
+        };
+        let g = GridDesc::new(&[95, 97, 40]);
+        let s = Stencil::star13();
+        assert!(!is_unfavorable(&g, &s, &machine.l1), "grid must be L1-favorable");
+        assert!(is_unfavorable_mod(&g, &s, machine.page_modulus().unwrap()), "grid must be TLB-unfavorable");
+        let adv = advise_machine(&g, &s, &machine, 8);
+        assert!(adv.favorable, "{adv:?}");
+        let padded = GridDesc::with_padding(g.dims(), &adv.pad);
+        assert!(!is_unfavorable(&padded, &s, &machine.l1));
+        assert!(!is_unfavorable_mod(&padded, &s, machine.page_modulus().unwrap()));
+    }
+
+    #[test]
+    fn advise_machine_single_level_equals_advise() {
+        use crate::cache::MachineModel;
+        // With no TLB the machine search must degenerate to the classic
+        // single-lattice advisor, pad for pad.
+        for dims in [[45usize, 91, 100], [67, 89, 100], [90, 91, 100]] {
+            let g = GridDesc::new(&dims);
+            let a = advise(&g, &Stencil::star13(), &r10k(), 8);
+            let b = advise_machine(&g, &Stencil::star13(), &MachineModel::r10000(), 8);
+            assert_eq!(a.pad, b.pad, "{dims:?}");
+            assert_eq!(a.favorable, b.favorable);
+            assert_eq!(a.min_l1, b.min_l1);
+        }
     }
 
     #[test]

@@ -8,10 +8,68 @@ mod table;
 pub use plot::AsciiPlot;
 pub use table::Table;
 
+use crate::cache::{Latency, LoadProfile};
+
+/// Render a per-level [`LoadProfile`] as a table: one row per memory
+/// level with the §2 counters, per-point rates, and that level's share of
+/// the stall estimate — what `stencilcache analyze --machine=<preset>`
+/// prints for hierarchical machines.
+pub fn load_profile_table(title: &str, profile: &LoadProfile, points: u64, latency: Latency) -> Table {
+    let mut t = Table::new(title, &["level", "accesses", "misses", "misses/pt", "cold", "replacement", "stall-cycles"]);
+    let pts = points.max(1) as f64;
+    for lv in profile.levels() {
+        // isolate this level's stall contribution by zeroing the others
+        let solo = {
+            let mut p = LoadProfile::default();
+            for other in profile.levels() {
+                p.push(other.level, if other.level == lv.level { other.stats } else { Default::default() });
+            }
+            p.stall_cycles(latency)
+        };
+        t.add_row(vec![
+            lv.level.name().into(),
+            lv.stats.accesses.to_string(),
+            lv.stats.misses().to_string(),
+            format!("{:.4}", lv.stats.misses() as f64 / pts),
+            lv.stats.cold_misses.to_string(),
+            lv.stats.replacement_misses.to_string(),
+            solo.to_string(),
+        ]);
+    }
+    t
+}
+
 /// Write string content to a file, creating parent directories.
 pub fn write_file(path: &std::path::Path, content: &str) -> std::io::Result<()> {
     if let Some(parent) = path.parent() {
         std::fs::create_dir_all(parent)?;
     }
     std::fs::write(path, content)
+}
+
+#[cfg(test)]
+mod profile_tests {
+    use super::*;
+    use crate::cache::{CacheStats, Level};
+
+    #[test]
+    fn per_level_rows_and_stall_shares_sum() {
+        let mut p = LoadProfile::default();
+        let mk = |cold: u64, repl: u64| CacheStats {
+            accesses: 100,
+            hits: 100 - cold - repl,
+            cold_misses: cold,
+            replacement_misses: repl,
+            ..CacheStats::default()
+        };
+        p.push(Level::L1, mk(10, 5));
+        p.push(Level::L2, mk(3, 1));
+        p.push(Level::Tlb, mk(2, 0));
+        let lat = Latency { l2: 10, mem: 100, tlb: 50 };
+        let t = load_profile_table("profile", &p, 50, lat);
+        assert_eq!(t.num_rows(), 3);
+        assert_eq!(t.rows()[0][0], "L1");
+        let share_sum: u64 = t.rows().iter().map(|r| r[6].parse::<u64>().unwrap()).sum();
+        assert_eq!(share_sum, p.stall_cycles(lat));
+    }
 }

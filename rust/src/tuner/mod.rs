@@ -10,7 +10,7 @@
 //! interference phenomenon — the lattice only involves n_1…n_{d−1}) and
 //! pick the argmin before committing to the full sweep.
 
-use crate::cache::{CacheParams, CacheSim};
+use crate::cache::{CacheParams, CacheSim, MachineModel};
 use crate::engine;
 use crate::grid::{GridDesc, MultiArrayLayout};
 use crate::stencil::Stencil;
@@ -100,24 +100,34 @@ pub fn fitting_candidates(d: usize) -> Vec<Candidate> {
 /// What the tuner minimizes on the calibration slice.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum TuneMetric {
-    /// Simulated cache misses — deterministic, machine-independent; what
-    /// the paper's analysis predicts (default).
+    /// Simulated L1 cache misses — deterministic, machine-independent;
+    /// what the paper's analysis predicts (default).
     SimulatedMisses,
     /// Wall-clock of a real numeric `engine::apply` sweep — what a serving
     /// system actually pays. Noisy, so each candidate is timed best-of-3;
     /// use when calibrating the native numeric backend on live hardware.
     WallClock,
+    /// Estimated stall cycles over the machine's **full** memory model
+    /// (L1 + L2 + TLB where present, weighted by the machine's latency
+    /// model) — deterministic like `SimulatedMisses`, but it can rank
+    /// candidates differently when TLB or L2 traffic dominates. On a
+    /// single-level machine it is `misses × mem_latency`, so it agrees
+    /// with `SimulatedMisses` exactly.
+    StallCycles,
 }
 
 /// Outcome of tuning: the winning candidate and its calibration score
-/// (misses and/or nanoseconds, depending on the metric).
+/// (misses, nanoseconds and/or stall cycles, depending on the metric).
 #[derive(Debug)]
 pub struct Tuned {
     pub candidate: Candidate,
-    /// Simulated misses on the calibration slice (0 under `WallClock`).
+    /// Simulated misses on the calibration slice (0 unless
+    /// `SimulatedMisses`).
     pub calib_misses: u64,
-    /// Best-of-3 apply wall time on the slice (0 under `SimulatedMisses`).
+    /// Best-of-3 apply wall time on the slice (0 unless `WallClock`).
     pub calib_nanos: u64,
+    /// Estimated stall cycles on the slice (0 unless `StallCycles`).
+    pub calib_stall: u64,
 }
 
 /// The z-thinned calibration grid for `grid` (last dim clamped to
@@ -135,24 +145,32 @@ fn calibration_grid(grid: &GridDesc, stencil: &Stencil, calib_z: usize) -> GridD
 /// Pick the best candidate for (grid, stencil, cache) by simulating each
 /// on a z-thinned calibration grid (last dim clamped to `calib_z`).
 pub fn tune(grid: &GridDesc, stencil: &Stencil, cache: &CacheParams, candidates: &[Candidate], calib_z: usize) -> Tuned {
-    tune_with_metric(grid, stencil, cache, candidates, calib_z, TuneMetric::SimulatedMisses)
+    tune_with_metric(grid, stencil, &MachineModel::l1_only(*cache), candidates, calib_z, TuneMetric::SimulatedMisses)
 }
 
-/// [`tune`] with an explicit calibration metric: simulated misses (the
-/// paper's model) or measured wall-clock of the numeric sweep (what the
-/// native backend cares about on real hardware).
+/// [`tune`] with an explicit machine and calibration metric: simulated L1
+/// misses (the paper's model), measured wall-clock of the numeric sweep
+/// (what the native backend cares about on real hardware), or estimated
+/// stall cycles over the machine's full memory hierarchy.
 pub fn tune_with_metric(
     grid: &GridDesc,
     stencil: &Stencil,
-    cache: &CacheParams,
+    machine: &MachineModel,
     candidates: &[Candidate],
     calib_z: usize,
     metric: TuneMetric,
 ) -> Tuned {
     assert!(!candidates.is_empty());
+    let cache = &machine.l1;
     let calib = calibration_grid(grid, stencil, calib_z);
     let r = stencil.radius();
     let mut best: Option<Tuned> = None;
+    let win = |cand: &Candidate, misses: u64, nanos: u64, stall: u64| Tuned {
+        candidate: cand.clone(),
+        calib_misses: misses,
+        calib_nanos: nanos,
+        calib_stall: stall,
+    };
     match metric {
         TuneMetric::SimulatedMisses => {
             let layout = MultiArrayLayout::paper_offsets(&calib, 1, cache.size_words());
@@ -162,7 +180,7 @@ pub fn tune_with_metric(
                 let rep = engine::simulate(&order, &layout, stencil, &mut sim);
                 let misses = rep.total.misses();
                 if best.as_ref().map(|b| misses < b.calib_misses).unwrap_or(true) {
-                    best = Some(Tuned { candidate: cand.clone(), calib_misses: misses, calib_nanos: 0 });
+                    best = Some(win(cand, misses, 0, 0));
                 }
             }
         }
@@ -180,7 +198,18 @@ pub fn tune_with_metric(
                     best_ns = best_ns.min(t0.elapsed().as_nanos() as u64);
                 }
                 if best.as_ref().map(|b| best_ns < b.calib_nanos).unwrap_or(true) {
-                    best = Some(Tuned { candidate: cand.clone(), calib_misses: 0, calib_nanos: best_ns });
+                    best = Some(win(cand, 0, best_ns, 0));
+                }
+            }
+        }
+        TuneMetric::StallCycles => {
+            let layout = MultiArrayLayout::paper_offsets(&calib, 1, cache.size_words());
+            for cand in candidates {
+                let order = cand.build(&calib, r, cache);
+                let rep = engine::simulate_on_machine(&order, &layout, stencil, machine);
+                let stall = rep.levels.stall_cycles(machine.latency);
+                if best.as_ref().map(|b| stall < b.calib_stall).unwrap_or(true) {
+                    best = Some(win(cand, 0, 0, stall));
                 }
             }
         }
@@ -228,8 +257,35 @@ mod tests {
         let stencil = Stencil::star(3, 1);
         let cache = CacheParams::new(2, 64, 2);
         let cands = fitting_candidates(3);
-        let tuned = tune_with_metric(&grid, &stencil, &cache, &cands, 16, TuneMetric::WallClock);
+        let tuned = tune_with_metric(&grid, &stencil, &MachineModel::l1_only(cache), &cands, 16, TuneMetric::WallClock);
         assert!(tuned.calib_nanos > 0, "wall-clock calibration must measure something");
+        assert_eq!(tuned.calib_misses, 0);
+        assert!(cands.contains(&tuned.candidate));
+    }
+
+    #[test]
+    fn stall_metric_on_single_level_machine_agrees_with_misses() {
+        // Single level: stall = misses × mem latency, so the argmin must
+        // coincide with the SimulatedMisses pick and the scores must be
+        // proportional.
+        let grid = GridDesc::new(&[44, 91, 30]);
+        let stencil = Stencil::star13();
+        let machine = MachineModel::r10000();
+        let cands = fitting_candidates(3);
+        let by_misses = tune(&grid, &stencil, &machine.l1, &cands, 16);
+        let by_stall = tune_with_metric(&grid, &stencil, &machine, &cands, 16, TuneMetric::StallCycles);
+        assert_eq!(by_misses.candidate, by_stall.candidate);
+        assert_eq!(by_stall.calib_stall, by_misses.calib_misses * machine.latency.mem);
+    }
+
+    #[test]
+    fn stall_metric_runs_on_full_hierarchy() {
+        let grid = GridDesc::new(&[40, 36, 30]);
+        let stencil = Stencil::star(3, 1);
+        let machine = MachineModel::r10000_full();
+        let cands = fitting_candidates(3);
+        let tuned = tune_with_metric(&grid, &stencil, &machine, &cands, 16, TuneMetric::StallCycles);
+        assert!(tuned.calib_stall > 0);
         assert_eq!(tuned.calib_misses, 0);
         assert!(cands.contains(&tuned.candidate));
     }

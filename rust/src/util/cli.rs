@@ -89,6 +89,17 @@ impl Args {
         }
     }
 
+    /// Enumerated option: the value (or `default` when absent) must be one
+    /// of `allowed`; unknown values error listing the alternatives — used
+    /// by `--machine=<preset>`.
+    pub fn get_choice<'a>(&'a self, name: &str, allowed: &[&'a str], default: &'a str) -> Result<&'a str, String> {
+        let v = self.get_or(name, default);
+        match allowed.iter().find(|&&a| a == v) {
+            Some(&a) => Ok(a),
+            None => Err(format!("--{name}: unknown value {v:?}; expected one of {}", allowed.join(", "))),
+        }
+    }
+
     /// Parse a comma-separated dimension list such as "64,91,100".
     pub fn get_dims(&self, name: &str, default: &[usize]) -> Result<Vec<usize>, String> {
         match self.get(name) {
@@ -168,6 +179,17 @@ mod tests {
         assert_eq!(a.get_dims("other", &[2, 3]).unwrap(), vec![2, 3]);
         let bad = parse(&["--dims", "64,x"], &[]);
         assert!(bad.get_dims("dims", &[]).is_err());
+    }
+
+    #[test]
+    fn choice_validates_against_list() {
+        let a = parse(&["--machine", "r10000-full"], &[]);
+        assert_eq!(a.get_choice("machine", &["r10000", "r10000-full"], "r10000").unwrap(), "r10000-full");
+        // absent → default; invalid → error naming alternatives
+        assert_eq!(a.get_choice("other", &["x", "y"], "y").unwrap(), "y");
+        let bad = parse(&["--machine", "r9000"], &[]);
+        let err = bad.get_choice("machine", &["r10000"], "r10000").unwrap_err();
+        assert!(err.contains("r9000") && err.contains("r10000"));
     }
 
     #[test]

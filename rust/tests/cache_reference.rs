@@ -9,7 +9,7 @@
 //! associative geometries, including the cold/replacement *load*
 //! classification the paper's bounds constrain.
 
-use stencilcache::cache::{AccessKind, CacheParams, CacheSim, CacheStats};
+use stencilcache::cache::{AccessKind, CacheParams, CacheSim, CacheStats, Hierarchy, TlbParams};
 use stencilcache::util::rng::Rng;
 use std::collections::HashSet;
 
@@ -174,6 +174,56 @@ fn residency_tracks_lru_rotation() {
         assert!(c.is_resident(a), "addr {a} must remain resident");
     }
     assert_eq!(c.access(1), AccessKind::ReplacementMiss);
+}
+
+/// Hierarchy reference property 1: a stream pushed through a full
+/// hierarchy must leave the **L1** in exactly the state a standalone
+/// [`CacheSim`] reaches on the same stream — level composition must not
+/// perturb the paper's single-level numbers, per access and per counter.
+#[test]
+fn hierarchy_l1_equals_standalone_cache_sim() {
+    let l1 = CacheParams::new(2, 8, 2);
+    let mut hier = Hierarchy::new(l1, CacheParams::new(2, 64, 4), TlbParams { entries: 4, page_words: 32 });
+    let mut solo = CacheSim::new(l1);
+    let mut rng = Rng::new(42);
+    for i in 0..20_000 {
+        let addr = rng.below(4096);
+        let a = hier.access(addr);
+        let b = solo.access(addr);
+        assert_eq!(a, b, "access #{i} (addr {addr}) diverged: hierarchy {a:?} vs standalone {b:?}");
+    }
+    assert_eq!(hier.l1_stats(), solo.stats(), "final L1 counters diverged");
+    assert_eq!(hier.stats().l1_misses, solo.stats().misses());
+}
+
+/// Hierarchy reference property 2: the TLB miss count must equal a
+/// brute-force fully-associative LRU simulated directly over the
+/// *page-number* stream (recency `Vec`, no cache machinery).
+#[test]
+fn hierarchy_tlb_equals_bruteforce_page_lru() {
+    let tlb = TlbParams { entries: 8, page_words: 64 };
+    let mut hier = Hierarchy::new(CacheParams::new(2, 8, 2), CacheParams::new(2, 64, 4), tlb);
+    let mut lru: Vec<u64> = Vec::new(); // most-recent first
+    let mut brute_misses = 0u64;
+    let mut rng = Rng::new(7);
+    for _ in 0..30_000 {
+        let addr = rng.below(1 << 14);
+        hier.access(addr);
+        let page = addr / tlb.page_words as u64;
+        if let Some(pos) = lru.iter().position(|&p| p == page) {
+            lru.remove(pos);
+        } else {
+            brute_misses += 1;
+            if lru.len() == tlb.entries {
+                lru.pop();
+            }
+        }
+        lru.insert(0, page);
+    }
+    assert_eq!(hier.stats().tlb_misses, brute_misses);
+    assert_eq!(hier.tlb_stats().misses(), brute_misses);
+    // every word access probes the TLB exactly once
+    assert_eq!(hier.tlb_stats().accesses, hier.stats().accesses);
 }
 
 #[test]

@@ -16,8 +16,13 @@
 //! git diff rust/tests/fixtures/   # review, then commit
 //! ```
 
+use stencilcache::cache::MachineModel;
+use stencilcache::engine;
 use stencilcache::experiments::{bounds_table, sec3};
+use stencilcache::grid::{GridDesc, MultiArrayLayout};
 use stencilcache::report::Table;
+use stencilcache::stencil::Stencil;
+use stencilcache::traversal;
 use std::path::PathBuf;
 
 fn fixture_path(name: &str) -> PathBuf {
@@ -68,4 +73,39 @@ fn bounds_table_numbers_match_fixture() {
     let t = bounds_table::run(true);
     assert!(t.num_rows() >= 4, "quick bounds table lost rows");
     check_golden("bounds_quick.golden", &project(&t, &[0, 1, 2, 4, 6, 7]));
+}
+
+/// Per-level profile of a 90×91×8 star13 analysis (natural order, §5
+/// offset layout) on the full `r10000-full` machine — one line per level
+/// with every §2 counter, plus the stall estimate. 90×91 is a Figure-4
+/// L1 spike grid *and* its 5-plane page window (~80 pages) overflows the
+/// 64-entry TLB, so every level shows cold and replacement traffic. The
+/// fixture pins the L1/L2/TLB composition exactly; the L1 row doubles as
+/// the single-level regression (it must equal what a bare `CacheSim`
+/// produced before the memory-model refactor).
+#[test]
+fn hierarchy_profile_matches_fixture() {
+    let machine = MachineModel::r10000_full();
+    let grid = GridDesc::new(&[90, 91, 8]);
+    let stencil = Stencil::star13();
+    let layout = MultiArrayLayout::paper_offsets(&grid, 1, machine.l1.size_words());
+    let mut hier = machine.build_hierarchy();
+    let rep = engine::simulate(&traversal::natural_stream(&grid, 2), &layout, &stencil, &mut hier);
+    let mut got = String::new();
+    for lv in rep.levels.levels() {
+        let s = lv.stats;
+        got.push_str(&format!(
+            "{} {} {} {} {} {} {} {}\n",
+            lv.level.name(),
+            s.accesses,
+            s.hits,
+            s.cold_misses,
+            s.replacement_misses,
+            s.cold_loads,
+            s.replacement_loads,
+            s.evictions
+        ));
+    }
+    got.push_str(&format!("stall {}\n", rep.levels.stall_cycles(machine.latency)));
+    check_golden("hierarchy_quick.golden", &got);
 }

@@ -4,7 +4,7 @@
 //! and the engine's sharded analysis must agree with the sequential one on
 //! points and accesses.
 
-use stencilcache::cache::{CacheParams, CacheSim};
+use stencilcache::cache::{CacheParams, CacheSim, MachineModel};
 use stencilcache::coordinator::{Coordinator, JobKind, PlannerConfig, StencilRequest, StencilSpec};
 use stencilcache::engine;
 use stencilcache::grid::{GridDesc, MultiArrayLayout};
@@ -112,7 +112,7 @@ fn sharded_engine_agrees_with_sequential_on_totals() {
     for (name, t) in streaming_family(&g, 1, cache.lattice_modulus()) {
         let mut sim = CacheSim::new(cache);
         let seq = engine::simulate(t.as_ref(), &layout, &stencil, &mut sim);
-        let shd = engine::simulate_sharded(t.as_ref(), &layout, &stencil, cache, &pool, 4);
+        let shd = engine::simulate_sharded(t.as_ref(), &layout, &stencil, &MachineModel::l1_only(cache), &pool, 4);
         assert_eq!(seq.points, shd.points, "{name}");
         assert_eq!(seq.total.accesses, shd.total.accesses, "{name}");
         // per-shard cold caches can only add misses relative to the warm
