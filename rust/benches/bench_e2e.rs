@@ -34,8 +34,11 @@ fn main() {
         engine::simulate_sharded(&t, &layout, &stencil, &MachineModel::l1_only(cache), &pool, shards)
     });
 
-    // analysis-only serving (no PJRT dependency)
-    let coord = Coordinator::analysis_only(PlannerConfig::default());
+    // analysis-only serving (no PJRT dependency). Memoization is disabled
+    // so this stays a *simulation throughput* number — the memoized
+    // serving path is bench_serving's subject.
+    let mut coord = Coordinator::analysis_only(PlannerConfig::default());
+    coord.configure_memo(None);
     let reqs: Vec<StencilRequest> = (0..16)
         .map(|i| {
             let n = [16usize, 20, 24][i % 3];

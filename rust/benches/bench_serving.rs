@@ -1,0 +1,64 @@
+//! Serving-layer bench: cold vs memoized vs memoized-under-scan
+//! throughput for the Zipf-over-hot-shapes workload the replay driver
+//! models.
+//!
+//! - `cold`: memo tier disabled — every request pays the full lattice
+//!   reduction + cache simulation.
+//! - `memoized`: warm S3-FIFO tier — repeat requests cost an index probe.
+//! - `memoized_under_scan`: the same hot traffic with a fresh (never
+//!   cached) scan shape injected every iteration — measures that a
+//!   one-pass sweep neither evicts the hot set nor drags hot throughput
+//!   down (S3-FIFO's scan resistance on the serving path).
+
+use stencilcache::coordinator::{Coordinator, JobKind, PlannerConfig, StencilRequest, StencilSpec};
+use stencilcache::experiments::replay;
+use stencilcache::util::bench::Bencher;
+use stencilcache::util::rng::Rng;
+use std::cell::Cell;
+
+fn main() {
+    let mut b = Bencher::from_env();
+
+    let hot = replay::hot_shapes(8);
+    let mut rng = Rng::new(7);
+    let wave: Vec<StencilRequest> = replay::zipf_requests(&hot, 1.1, 32, &mut rng);
+    let n = wave.len() as f64;
+
+    let mut cold = Coordinator::analysis_only(PlannerConfig::default());
+    cold.configure_memo(None);
+    b.bench_items("serving/cold_32_reqs", n, || cold.serve(&wave));
+
+    // 64 KiB memo: the hot set fits with room to spare, but a scan
+    // one-hit-wonder from ≳ 60 iterations back is long evicted *and* out
+    // of the (resident-sized) ghost history — so the wrapped scan-shape
+    // window below stays genuinely cold for any iteration count, instead
+    // of silently warming once the shape family's 729-entry period wraps.
+    let mut warm = Coordinator::analysis_only(PlannerConfig::default());
+    warm.configure_memo(Some(64 * 1024));
+    let _ = warm.serve(&wave); // prime the memo tier
+    b.bench_items("serving/memoized_32_reqs", n, || warm.serve(&wave));
+
+    // Each iteration appends one cold scan shape, so the memo tier keeps
+    // absorbing one-hit-wonders while serving the hot wave.
+    let scan_cursor = Cell::new(0usize);
+    b.bench_items("serving/memoized_under_scan_32+1_reqs", n + 1.0, || {
+        let i = scan_cursor.get();
+        scan_cursor.set(i + 1);
+        let mut reqs = wave.clone();
+        // offset 100 keeps bench scan shapes clear of any replay-test use
+        let dims = replay::scan_shapes(100 + (i % 600), 1).pop().unwrap();
+        reqs.push(StencilRequest { dims, stencil: StencilSpec::Star13, rhs_arrays: 1, kind: JobKind::Analyze });
+        warm.serve(&reqs)
+    });
+
+    if let Some(s) = warm.memo_snapshot() {
+        println!(
+            "memo tier after bench: {} entries, {}/{} bytes, hit rate {:.1}%, {} ghost readmits",
+            s.entries,
+            s.weight,
+            s.capacity,
+            100.0 * s.counters.hit_rate(),
+            s.counters.ghost_readmits
+        );
+    }
+}

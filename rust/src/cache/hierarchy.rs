@@ -13,7 +13,7 @@ use super::{AccessKind, CacheParams, CacheSim, LoadProfile};
 /// TLB geometry: `entries` fully-associative entries over pages of
 /// `page_words` words (R10000: 64 dual entries over 4 KB pages ⇒ model as
 /// 64 entries × 512 words).
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct TlbParams {
     pub entries: usize,
     pub page_words: usize,

@@ -158,7 +158,7 @@ impl LoadProfile {
 /// Miss latencies in cycles for the stall estimate. The numbers are coarse
 /// machine constants, not measurements — the estimate ranks traversals and
 /// machines, it does not predict wall time.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct Latency {
     /// L1 miss serviced by L2.
     pub l2: u64,
@@ -246,7 +246,7 @@ impl MemoryModel for Hierarchy {
 /// place of a raw [`CacheParams`] — one request can be analyzed against
 /// the paper's L1-only R10000, the full R10000, or a modern geometry by
 /// swapping the descriptor.
-#[derive(Debug, Clone, PartialEq, Eq)]
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
 pub struct MachineModel {
     /// Preset (or caller-supplied) name, for logs and tables.
     pub name: &'static str,

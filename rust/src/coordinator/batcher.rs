@@ -6,6 +6,8 @@
 //! (dims, stencil, cache) can share one traversal order — generating the
 //! cache-fitting order is O(N log N) and dominates small analyses.
 
+use super::StencilSpec;
+use crate::cache::MachineModel;
 use std::collections::HashMap;
 
 /// A batch: the shared shape key plus the indices of the member requests
@@ -16,11 +18,19 @@ pub struct Batch {
     pub members: Vec<usize>,
 }
 
-/// Requests batch together iff dims and kind agree.
+/// Requests batch together iff kind, dims, stencil, **and** the machine
+/// they are analyzed against all agree — the sharing contract stated
+/// above: analysis jobs may share a traversal only when
+/// `(dims, stencil, cache)` agree, and numeric jobs may share an
+/// executable only for the same stencil shape. (An earlier version keyed
+/// on `(kind, dims)` alone, wrongly batching star13 with star(r=1)
+/// requests on the same grid.)
 #[derive(Debug, Clone, PartialEq, Eq, Hash)]
 pub struct BatchKey {
     pub kind: &'static str,
     pub dims: Vec<usize>,
+    pub stencil: StencilSpec,
+    pub machine: MachineModel,
 }
 
 /// Group request indices by key, preserving first-seen batch order and
@@ -63,7 +73,11 @@ mod tests {
     use super::*;
 
     fn key(kind: &'static str, dims: &[usize]) -> BatchKey {
-        BatchKey { kind, dims: dims.to_vec() }
+        key_with(kind, dims, StencilSpec::Star13, MachineModel::r10000())
+    }
+
+    fn key_with(kind: &'static str, dims: &[usize], stencil: StencilSpec, machine: MachineModel) -> BatchKey {
+        BatchKey { kind, dims: dims.to_vec(), stencil, machine }
     }
 
     #[test]
@@ -106,6 +120,33 @@ mod tests {
         assert_eq!(&order[..2], &[1, 3]);
         // submission order preserved within each batch
         assert_eq!(&order[2..], &[0, 2, 4]);
+    }
+
+    #[test]
+    fn different_stencils_on_same_dims_do_not_batch() {
+        // Regression: the key used to be (kind, dims) only, so a star13
+        // analysis and a star(r=1) analysis on the same grid would share a
+        // batch (and, per the sharing contract, a traversal) despite
+        // walking different interiors.
+        let m = MachineModel::r10000;
+        let keys = vec![
+            key_with("analyze", &[32, 32, 32], StencilSpec::Star13, m()),
+            key_with("analyze", &[32, 32, 32], StencilSpec::Star { r: 1 }, m()),
+            key_with("analyze", &[32, 32, 32], StencilSpec::Star13, m()),
+        ];
+        let batches = group_by_shape(&keys);
+        assert_eq!(batches.len(), 2);
+        assert_eq!(batches[0].members, vec![0, 2]);
+        assert_eq!(batches[1].members, vec![1]);
+    }
+
+    #[test]
+    fn different_machines_on_same_shape_do_not_batch() {
+        let keys = vec![
+            key_with("analyze", &[24, 24, 24], StencilSpec::Star13, MachineModel::r10000()),
+            key_with("analyze", &[24, 24, 24], StencilSpec::Star13, MachineModel::r10000_full()),
+        ];
+        assert_eq!(group_by_shape(&keys).len(), 2);
     }
 
     #[test]

@@ -1,0 +1,689 @@
+//! The memoization tier of the serving layer: an **S3-FIFO** cache over
+//! canonical request keys.
+//!
+//! Everything the analysis pipeline produces — lattice reduction, §6
+//! short-vector verdicts, padding advice, Eq 7/12 bounds, and the cache
+//! simulation itself — is a pure function of
+//! `(dims, stencil, rhs arrays, machine, planner knobs)` (sharded
+//! analyses additionally of the worker-pool size: the coordinator admits
+//! a report only when it was computed at the quiet-coordinator shard
+//! count, so a hit always serves what a quiet recompute would produce).
+//! Real serving
+//! traffic is Zipf-skewed over a small set of hot grid shapes punctuated
+//! by one-off sweep scans, so the coordinator memoizes [`Plan`]s and
+//! analysis [`MissReport`]s behind an S3-FIFO admission/eviction policy
+//! (Yang et al., *FIFO queues are all you need for cache eviction*):
+//!
+//! - a **small** probationary FIFO (~10% of the budget, clamped to ≥ 1 so
+//!   tiny capacities still admit — the reference design's `capacity / 10`
+//!   rounds to 0 below 10) absorbs one-hit-wonder scan traffic;
+//! - a **main** FIFO (the rest of the budget) holds objects that proved
+//!   reuse while probationary; eviction is lazy-promotion (freq > 0 →
+//!   decrement and reinsert);
+//! - a **ghost** FIFO of recently demoted *keys* (no values) readmits
+//!   comeback shapes straight into main.
+//!
+//! Unlike the related-repo reference (`/root/related/djc__s3-fifo`), which
+//! scans its `VecDeque`s linearly on every `get`, this implementation
+//! keeps a `HashMap` index beside the queues: lookups are O(1) and the
+//! queues hold only keys. Capacity is **weight-budgeted**: the coordinator
+//! charges approximate entry bytes, unit tests charge 1 per entry to get
+//! entry-count semantics.
+
+use super::planner::{Plan, PlannerConfig, TraversalChoice};
+use super::{StencilRequest, StencilSpec};
+use crate::engine::MissReport;
+use std::collections::{HashMap, VecDeque};
+use std::hash::Hash;
+use std::sync::Arc;
+
+/// Access-frequency saturation (2 bits in the original design).
+pub const MAX_FREQ: u8 = 3;
+
+/// Default byte budget for a coordinator's memo tier.
+pub const DEFAULT_MEMO_BYTES: usize = 1 << 20;
+
+// ---------------------------------------------------------------------------
+// Canonical request keys
+// ---------------------------------------------------------------------------
+
+/// Which memoized artifact a key addresses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Facet {
+    /// The planner output alone (`JobKind::Plan`, and the plan lookup that
+    /// Execute/Solve reuse before running numerics).
+    Plan,
+    /// A full analysis under the given traversal. `JobKind::Analyze` is
+    /// canonicalized to `Analysis(plan.traversal)`, so an explicit
+    /// `AnalyzeWith` that names the planner's own choice shares the entry.
+    Analysis(TraversalChoice),
+}
+
+/// Canonical cache identity of a request against one planner
+/// configuration.
+///
+/// Canonicalization rules (see DESIGN.md §2.8):
+/// 1. `StencilSpec::Star13` ≡ `StencilSpec::Star { r: 2 }` (they build the
+///    identical 3-D stencil);
+/// 2. `JobKind::Analyze` ≡ `JobKind::AnalyzeWith(plan.traversal)`;
+/// 3. Execute/Solve share the `Facet::Plan` entry — numerics always run.
+///
+/// The machine model and planner knobs are part of the key, so one shared
+/// cache can never serve a plan computed for a different machine.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct RequestKey {
+    pub dims: Vec<usize>,
+    pub stencil: StencilSpec,
+    pub rhs_arrays: usize,
+    pub machine: crate::cache::MachineModel,
+    pub max_pad: usize,
+    pub auto_pad: bool,
+    pub facet: Facet,
+}
+
+impl RequestKey {
+    fn canonical_stencil(spec: &StencilSpec) -> StencilSpec {
+        match spec {
+            // Star13 *is* star(3, 2); the two specs build bit-identical
+            // stencils, so they must share cache entries.
+            StencilSpec::Star13 => StencilSpec::Star { r: 2 },
+            s => s.clone(),
+        }
+    }
+
+    fn new(config: &PlannerConfig, req: &StencilRequest, facet: Facet) -> RequestKey {
+        RequestKey {
+            dims: req.dims.clone(),
+            stencil: RequestKey::canonical_stencil(&req.stencil),
+            rhs_arrays: req.rhs_arrays,
+            machine: config.machine.clone(),
+            max_pad: config.max_pad,
+            auto_pad: config.auto_pad,
+            facet,
+        }
+    }
+
+    /// Key for the plan artifact of `req`.
+    pub fn plan_facet(config: &PlannerConfig, req: &StencilRequest) -> RequestKey {
+        RequestKey::new(config, req, Facet::Plan)
+    }
+
+    /// Key for an analysis under the *resolved* traversal choice.
+    pub fn analysis_facet(config: &PlannerConfig, req: &StencilRequest, choice: TraversalChoice) -> RequestKey {
+        RequestKey::new(config, req, Facet::Analysis(choice))
+    }
+
+    /// Approximate heap + inline bytes of this key (budget charging).
+    pub fn approx_bytes(&self) -> usize {
+        std::mem::size_of::<RequestKey>() + self.dims.len() * std::mem::size_of::<usize>()
+    }
+}
+
+/// A memoized artifact. Plans are `Arc`-shared: a cache hit clones the
+/// `Arc`, never the `Plan`.
+#[derive(Debug, Clone)]
+pub enum CachedValue {
+    Plan(Arc<Plan>),
+    Analysis { plan: Arc<Plan>, report: MissReport },
+}
+
+impl CachedValue {
+    pub fn plan(&self) -> &Arc<Plan> {
+        match self {
+            CachedValue::Plan(p) => p,
+            CachedValue::Analysis { plan, .. } => plan,
+        }
+    }
+
+    /// Approximate bytes held alive by this value (the shared `Plan` is
+    /// charged once per entry — an overestimate that keeps the budget
+    /// conservative).
+    pub fn approx_bytes(&self) -> usize {
+        let p = self.plan();
+        let plan_bytes = std::mem::size_of::<Plan>()
+            + (p.dims.len() + p.storage_dims.len() + p.pad.len()) * std::mem::size_of::<usize>();
+        match self {
+            CachedValue::Plan(_) => plan_bytes,
+            CachedValue::Analysis { .. } => plan_bytes + std::mem::size_of::<MissReport>(),
+        }
+    }
+}
+
+/// Budget charge for one memo entry (key + value).
+pub fn entry_bytes(key: &RequestKey, value: &CachedValue) -> usize {
+    key.approx_bytes() + value.approx_bytes()
+}
+
+// ---------------------------------------------------------------------------
+// The generic S3-FIFO structure
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Queue {
+    Small,
+    Main,
+}
+
+#[derive(Debug)]
+struct Entry<V> {
+    value: V,
+    weight: usize,
+    freq: u8,
+    queue: Queue,
+}
+
+/// Cumulative per-queue counters of an [`S3Fifo`].
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct MemoCounters {
+    /// Hits served while the entry was probationary (small queue).
+    pub small_hits: u64,
+    /// Hits served from the main queue.
+    pub main_hits: u64,
+    pub misses: u64,
+    /// New entries admitted (overwrites of a resident key not included).
+    pub insertions: u64,
+    /// Entries evicted from the small queue (demoted to ghost history).
+    pub small_evictions: u64,
+    /// Entries evicted from the main queue (dropped entirely).
+    pub main_evictions: u64,
+    /// Insertions whose key was found in the ghost history and therefore
+    /// admitted straight into the main queue.
+    pub ghost_readmits: u64,
+}
+
+impl MemoCounters {
+    pub fn hits(&self) -> u64 {
+        self.small_hits + self.main_hits
+    }
+
+    pub fn evictions(&self) -> u64 {
+        self.small_evictions + self.main_evictions
+    }
+
+    pub fn lookups(&self) -> u64 {
+        self.hits() + self.misses
+    }
+
+    pub fn hit_rate(&self) -> f64 {
+        if self.lookups() == 0 {
+            0.0
+        } else {
+            self.hits() as f64 / self.lookups() as f64
+        }
+    }
+}
+
+/// Point-in-time usage snapshot of an [`S3Fifo`] (for `metrics_json`).
+#[derive(Debug, Clone, Copy)]
+pub struct MemoSnapshot {
+    /// Resident entries (small + main).
+    pub entries: usize,
+    /// Resident weight (bytes under the coordinator's charging).
+    pub weight: usize,
+    pub capacity: usize,
+    pub ghost_keys: usize,
+    pub counters: MemoCounters,
+}
+
+/// A weight-budgeted S3-FIFO cache with an O(1) `HashMap` index.
+///
+/// `capacity` and per-entry weights share one unit: the coordinator passes
+/// bytes, tests pass 1 per entry for entry-count semantics. The small
+/// (probationary) queue targets 10% of the budget, **clamped to ≥ 1** so
+/// capacities below 10 still admit through it.
+#[derive(Debug)]
+pub struct S3Fifo<K, V> {
+    capacity: usize,
+    small_budget: usize,
+    entries: HashMap<K, Entry<V>>,
+    small: VecDeque<K>,
+    main: VecDeque<K>,
+    /// Ghost history: FIFO of demoted keys + membership index. Deque
+    /// removal is lazy — readmitted keys leave a stale deque slot — so
+    /// every slot carries the generation of its demotion and trimming
+    /// only honors a slot whose generation matches the index entry (a
+    /// stale slot can never expire a key's *later* re-demotion).
+    ghost: VecDeque<(K, u64)>,
+    ghost_index: HashMap<K, u64>,
+    ghost_gen: u64,
+    weight: usize,
+    small_weight: usize,
+    counters: MemoCounters,
+}
+
+impl<K: Hash + Eq + Clone, V> S3Fifo<K, V> {
+    /// Create a cache with the given weight budget (≥ 1 enforced).
+    pub fn with_capacity(capacity: usize) -> S3Fifo<K, V> {
+        let capacity = capacity.max(1);
+        S3Fifo {
+            capacity,
+            small_budget: (capacity / 10).max(1),
+            entries: HashMap::new(),
+            small: VecDeque::new(),
+            main: VecDeque::new(),
+            ghost: VecDeque::new(),
+            ghost_index: HashMap::new(),
+            ghost_gen: 0,
+            weight: 0,
+            small_weight: 0,
+            counters: MemoCounters::default(),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Probationary-queue share of the budget (≥ 1 by construction).
+    pub fn small_budget(&self) -> usize {
+        self.small_budget
+    }
+
+    /// Resident entries.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Resident weight (same unit as the capacity).
+    pub fn weight(&self) -> usize {
+        self.weight
+    }
+
+    pub fn contains(&self, key: &K) -> bool {
+        self.entries.contains_key(key)
+    }
+
+    pub fn counters(&self) -> MemoCounters {
+        self.counters
+    }
+
+    pub fn snapshot(&self) -> MemoSnapshot {
+        MemoSnapshot {
+            entries: self.entries.len(),
+            weight: self.weight,
+            capacity: self.capacity,
+            ghost_keys: self.ghost_index.len(),
+            counters: self.counters,
+        }
+    }
+
+    /// Look up `key`, bumping its frequency (saturating at [`MAX_FREQ`])
+    /// and the per-queue hit counters.
+    pub fn get(&mut self, key: &K) -> Option<&V> {
+        match self.entries.get_mut(key) {
+            Some(e) => {
+                e.freq = e.freq.saturating_add(1).min(MAX_FREQ);
+                match e.queue {
+                    Queue::Small => self.counters.small_hits += 1,
+                    Queue::Main => self.counters.main_hits += 1,
+                }
+                Some(&e.value)
+            }
+            None => {
+                self.counters.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Insert (or overwrite) `key` with the given budget weight, evicting
+    /// until the budget fits. Returns the number of resident entries fully
+    /// evicted by this call. Entries heavier than the whole budget are
+    /// refused (admitting one would flush the entire cache for an object
+    /// that cannot stay).
+    pub fn insert(&mut self, key: K, value: V, weight: usize) -> u64 {
+        let weight = weight.max(1);
+        if weight > self.capacity {
+            return 0;
+        }
+        if let Some(e) = self.entries.get_mut(&key) {
+            // Overwrite in place (e.g. two workers raced on a cold key):
+            // queue position and frequency survive, the budget adjusts.
+            self.weight = self.weight - e.weight + weight;
+            if e.queue == Queue::Small {
+                self.small_weight = self.small_weight - e.weight + weight;
+            }
+            e.weight = weight;
+            e.value = value;
+            return self.evict_to_fit();
+        }
+        self.counters.insertions += 1;
+        let queue = if self.ghost_index.remove(&key).is_some() {
+            // The key proved reuse before being demoted: readmit straight
+            // into main (its stale ghost-deque slot is skipped on trim).
+            self.counters.ghost_readmits += 1;
+            Queue::Main
+        } else {
+            Queue::Small
+        };
+        match queue {
+            Queue::Small => {
+                self.small.push_back(key.clone());
+                self.small_weight += weight;
+            }
+            Queue::Main => self.main.push_back(key.clone()),
+        }
+        self.entries.insert(key, Entry { value, weight, freq: 0, queue });
+        self.weight += weight;
+        self.evict_to_fit()
+    }
+
+    fn evict_to_fit(&mut self) -> u64 {
+        let mut evicted = 0;
+        while self.weight > self.capacity && !self.entries.is_empty() {
+            if self.small_weight > self.small_budget || self.main.is_empty() {
+                evicted += self.evict_small();
+            } else {
+                evicted += self.evict_main();
+            }
+        }
+        // every eviction path runs through here (fresh inserts *and*
+        // overwrites), so the ghost bound holds after any mutation
+        self.trim_ghost();
+        evicted
+    }
+
+    /// Pop the oldest probationary entry: promote it to main if it was hit
+    /// while probationary, demote its key to the ghost history otherwise.
+    /// Returns 1 iff an entry left the cache.
+    fn evict_small(&mut self) -> u64 {
+        let Some(key) = self.small.pop_front() else { return 0 };
+        let e = self.entries.get_mut(&key).expect("small-queue key must be resident");
+        self.small_weight -= e.weight;
+        if e.freq > 1 {
+            e.queue = Queue::Main;
+            self.main.push_back(key);
+            0
+        } else {
+            let w = e.weight;
+            self.entries.remove(&key);
+            self.weight -= w;
+            self.counters.small_evictions += 1;
+            self.ghost_gen += 1;
+            self.ghost_index.insert(key.clone(), self.ghost_gen);
+            self.ghost.push_back((key, self.ghost_gen));
+            1
+        }
+    }
+
+    /// Pop the oldest main entry: lazy promotion reinserts it with
+    /// decremented frequency; a zero-frequency entry is dropped for good
+    /// (main evictees do not enter the ghost history).
+    fn evict_main(&mut self) -> u64 {
+        let Some(key) = self.main.pop_front() else { return 0 };
+        let e = self.entries.get_mut(&key).expect("main-queue key must be resident");
+        if e.freq > 0 {
+            e.freq -= 1;
+            self.main.push_back(key);
+            0
+        } else {
+            let w = e.weight;
+            self.entries.remove(&key);
+            self.weight -= w;
+            self.counters.main_evictions += 1;
+            1
+        }
+    }
+
+    /// Bound the ghost history to roughly the resident entry count (≥ 8 so
+    /// tiny caches keep a useful comeback window). The deque is hard-capped
+    /// at twice that, so stale (readmitted) slots cannot accumulate under
+    /// demote/readmit-heavy traffic.
+    fn trim_ghost(&mut self) {
+        let cap = self.entries.len().max(8);
+        while self.ghost.len() > 2 * cap && self.pop_ghost_slot() {}
+        while self.ghost_index.len() > cap && self.pop_ghost_slot() {}
+    }
+
+    /// Pop one ghost-deque slot, removing its index entry only when the
+    /// generations match (a stale slot left by a readmission is simply
+    /// discarded). Returns false once the deque is empty.
+    fn pop_ghost_slot(&mut self) -> bool {
+        match self.ghost.pop_front() {
+            Some((k, gen)) => {
+                if self.ghost_index.get(&k) == Some(&gen) {
+                    self.ghost_index.remove(&k);
+                }
+                true
+            }
+            None => false,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn unit_cache(capacity: usize) -> S3Fifo<u64, u64> {
+        S3Fifo::with_capacity(capacity)
+    }
+
+    /// Insert with weight 1 → the capacity behaves as an entry count.
+    fn put(c: &mut S3Fifo<u64, u64>, k: u64) -> u64 {
+        c.insert(k, k * 10, 1)
+    }
+
+    #[test]
+    fn get_and_insert_roundtrip() {
+        let mut c = unit_cache(8);
+        assert_eq!(c.get(&1), None);
+        put(&mut c, 1);
+        assert_eq!(c.get(&1), Some(&10));
+        assert_eq!(c.counters().misses, 1);
+        assert_eq!(c.counters().small_hits, 1);
+        assert_eq!(c.len(), 1);
+        assert_eq!(c.weight(), 1);
+    }
+
+    #[test]
+    fn small_budget_clamped_for_tiny_capacities() {
+        // The reference design sizes small as capacity/10, which rounds to
+        // 0 for capacities < 10 and makes the probationary queue useless.
+        for cap in [1usize, 2, 9] {
+            let c: S3Fifo<u64, u64> = S3Fifo::with_capacity(cap);
+            assert_eq!(c.small_budget(), 1, "capacity {cap}");
+        }
+        assert_eq!(unit_cache(100).small_budget(), 10);
+    }
+
+    #[test]
+    fn capacity_one_still_serves() {
+        let mut c = unit_cache(1);
+        put(&mut c, 1);
+        assert_eq!(c.get(&1), Some(&10));
+        let evicted = put(&mut c, 2);
+        assert_eq!(evicted, 1, "capacity 1: admitting 2 must evict 1");
+        assert_eq!(c.len(), 1);
+        assert!(c.contains(&2));
+        assert_eq!(c.get(&2), Some(&20));
+    }
+
+    #[test]
+    fn capacity_two_keeps_latest_pair_bounded() {
+        let mut c = unit_cache(2);
+        for k in 0..20 {
+            put(&mut c, k);
+            assert!(c.len() <= 2, "k={k}: len {}", c.len());
+            assert!(c.weight() <= 2);
+        }
+        assert!(c.counters().evictions() >= 18);
+    }
+
+    #[test]
+    fn capacity_nine_never_overflows_and_hits_hot_key() {
+        let mut c = unit_cache(9);
+        for k in 0..50 {
+            put(&mut c, k % 12);
+            let _ = c.get(&0); // keep key 0 hot
+            assert!(c.weight() <= 9, "k={k}");
+        }
+        assert!(c.contains(&0), "hot key must survive a working set of 12 > 9");
+    }
+
+    #[test]
+    fn ghost_readmits_go_straight_to_main() {
+        let mut c = unit_cache(4);
+        // fill + overflow: 0 is the oldest probationary entry with no hits
+        for k in 0..5 {
+            put(&mut c, k);
+        }
+        assert!(!c.contains(&0), "0 must be demoted to ghost");
+        let demotions = c.counters().small_evictions;
+        assert!(demotions >= 1);
+        // comeback: 0 readmits into main
+        put(&mut c, 0);
+        assert_eq!(c.counters().ghost_readmits, 1);
+        assert!(c.contains(&0));
+        // a scan of fresh keys flows through small; the readmitted 0 stays
+        for k in 100..120 {
+            put(&mut c, k);
+        }
+        assert!(c.contains(&0), "main-resident comeback key must survive the scan");
+    }
+
+    #[test]
+    fn one_pass_scan_does_not_evict_hot_main_entries() {
+        let mut c = unit_cache(20);
+        // warm 4 hot keys well past the promotion bar
+        for k in 0..4 {
+            put(&mut c, k);
+        }
+        for _ in 0..3 {
+            for k in 0..4 {
+                let _ = c.get(&k);
+            }
+        }
+        // one-pass scan of 100 cold keys
+        for k in 1000..1100 {
+            put(&mut c, k);
+        }
+        for k in 0..4u64 {
+            assert!(c.contains(&k), "hot key {k} evicted by the scan");
+        }
+        assert!(c.counters().evictions() > 0, "the scan must have overflowed the budget");
+    }
+
+    #[test]
+    fn stale_ghost_slot_does_not_expire_a_re_demotion() {
+        // Lifecycle that leaves a stale ghost-deque slot for key 0 aliasing
+        // a later, live re-demotion: demote → readmit (stale slot) →
+        // evict from main → demote again. Trimming must discard the stale
+        // slot instead of erasing the fresh membership.
+        let mut c = unit_cache(4);
+        for k in 0..5 {
+            put(&mut c, k); // 0 demoted to ghost
+        }
+        put(&mut c, 0); // readmits to main, leaving its deque slot stale
+        assert_eq!(c.counters().ghost_readmits, 1);
+        // readmit 1..=4 into main too; with small empty, admitting 5 must
+        // evict main's oldest zero-frequency entry — key 0 — outright
+        for k in [1u64, 2, 3, 4, 5] {
+            put(&mut c, k);
+        }
+        assert!(!c.contains(&0), "0 should fall out of main (freq 0)");
+        assert_eq!(c.counters().main_evictions, 1);
+        // demote 0 a second time: a *fresh* ghost membership
+        put(&mut c, 0);
+        put(&mut c, 6);
+        assert!(!c.contains(&0));
+        // push the ghost index past its cap so trimming walks the deque —
+        // the stale slot for 0 sits at the very front
+        for k in 100..107 {
+            put(&mut c, k);
+        }
+        let readmits = c.counters().ghost_readmits;
+        put(&mut c, 0);
+        assert_eq!(c.counters().ghost_readmits, readmits + 1, "stale slot expired the fresh re-demotion of 0");
+    }
+
+    #[test]
+    fn ghost_history_stays_bounded_under_readmit_churn() {
+        let mut c = unit_cache(4);
+        for round in 0..100u64 {
+            for k in 0..6 {
+                put(&mut c, k + (round % 2) * 3); // overlapping working sets
+            }
+            let s = c.snapshot();
+            assert!(s.ghost_keys <= s.entries.max(8), "round {round}: ghost {0} entries {1}", s.ghost_keys, s.entries);
+        }
+        assert!(c.counters().ghost_readmits > 0);
+    }
+
+    #[test]
+    fn byte_weights_bound_total_weight() {
+        let mut c: S3Fifo<u64, Vec<u8>> = S3Fifo::with_capacity(1000);
+        for k in 0..30 {
+            c.insert(k, vec![0u8; 64], 64);
+            assert!(c.weight() <= 1000);
+        }
+        assert!(c.len() <= 1000 / 64);
+        // an entry heavier than the whole budget is refused
+        let evicted = c.insert(999, vec![0u8; 4096], 4096);
+        assert_eq!(evicted, 0);
+        assert!(!c.contains(&999));
+    }
+
+    #[test]
+    fn overwrite_adjusts_weight_without_reinsertion() {
+        let mut c: S3Fifo<u64, u64> = S3Fifo::with_capacity(10);
+        c.insert(1, 10, 2);
+        c.insert(1, 11, 5);
+        assert_eq!(c.len(), 1);
+        assert_eq!(c.weight(), 5);
+        assert_eq!(c.counters().insertions, 1, "overwrite is not a new admission");
+        assert_eq!(c.get(&1), Some(&11));
+    }
+
+    #[test]
+    fn counters_account_every_lookup() {
+        let mut c = unit_cache(4);
+        for k in 0..3 {
+            put(&mut c, k);
+        }
+        for _ in 0..5 {
+            let _ = c.get(&1);
+        }
+        let _ = c.get(&99);
+        let snap = c.counters();
+        assert_eq!(snap.hits(), 5);
+        assert_eq!(snap.misses, 1);
+        assert_eq!(snap.lookups(), 6);
+        assert!((snap.hit_rate() - 5.0 / 6.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn eviction_loop_terminates_when_everything_is_hot() {
+        // every resident entry has saturated freq: eviction must still
+        // make progress (lazy promotion decrements, then drops)
+        let mut c = unit_cache(3);
+        for k in 0..3 {
+            put(&mut c, k);
+            for _ in 0..4 {
+                let _ = c.get(&k);
+            }
+        }
+        for k in 10..30 {
+            put(&mut c, k);
+            assert!(c.weight() <= 3);
+        }
+    }
+
+    #[test]
+    fn snapshot_reflects_state() {
+        let mut c = unit_cache(6);
+        for k in 0..9 {
+            put(&mut c, k);
+        }
+        let s = c.snapshot();
+        assert_eq!(s.entries, c.len());
+        assert_eq!(s.weight, c.weight());
+        assert_eq!(s.capacity, 6);
+        assert_eq!(s.counters, c.counters());
+        assert!(s.ghost_keys >= 1);
+    }
+}

@@ -23,6 +23,16 @@ pub struct Metrics {
     /// Additive stall-cycle estimate accumulated over analyses (the
     /// machine's latency model applied to each job's per-level profile).
     pub sim_stall_cycles: AtomicU64,
+    /// Requests whose primary artifact (plan for Plan/Execute/Solve,
+    /// analysis report for Analyze/AnalyzeWith) was served from the memo
+    /// tier without recomputation.
+    pub sim_memo_hits: AtomicU64,
+    /// Requests whose primary artifact had to be computed (and was then
+    /// admitted to the memo tier). Zero-sum with `sim_memo_hits` over all
+    /// successful requests on a memoizing coordinator.
+    pub sim_memo_misses: AtomicU64,
+    /// Entries the memo tier evicted to stay inside its byte budget.
+    pub memo_evictions: AtomicU64,
     /// Analyze jobs that fanned out across pencil shards.
     pub sharded_analyses: AtomicU64,
     /// Total pencil shards executed on the worker pool.
@@ -57,6 +67,9 @@ impl Metrics {
             .set("sim_l2_misses", self.sim_l2_misses.load(Ordering::Relaxed))
             .set("sim_tlb_misses", self.sim_tlb_misses.load(Ordering::Relaxed))
             .set("sim_stall_cycles", self.sim_stall_cycles.load(Ordering::Relaxed))
+            .set("sim_memo_hits", self.sim_memo_hits.load(Ordering::Relaxed))
+            .set("sim_memo_misses", self.sim_memo_misses.load(Ordering::Relaxed))
+            .set("memo_evictions", self.memo_evictions.load(Ordering::Relaxed))
             .set("sharded_analyses", self.sharded_analyses.load(Ordering::Relaxed))
             .set("shards_executed", self.shards_executed.load(Ordering::Relaxed))
             .set("pjrt_executions", self.pjrt_executions.load(Ordering::Relaxed))
@@ -86,6 +99,9 @@ mod tests {
         let s = m.snapshot().to_string();
         assert!(s.contains("\"executed\":1"));
         assert!(s.contains("\"requests\":0"));
+        assert!(s.contains("\"sim_memo_hits\":0"));
+        assert!(s.contains("\"sim_memo_misses\":0"));
+        assert!(s.contains("\"memo_evictions\":0"));
     }
 
     #[test]

@@ -23,14 +23,27 @@
 //! [`crate::solver::NativeBackend`], which applies the stencil over the
 //! planner-chosen traversal, sharded across the worker pool. Analysis work
 //! runs on the cache simulator. All paths are pure rust at request time.
+//!
+//! Since the serving-layer refactor the coordinator is **memoizing**: the
+//! plan and the analysis report are pure functions of the request key, so
+//! they are cached in an [`S3Fifo`] tier and `Plan` /
+//! `Analyze` / `AnalyzeWith` responses whose canonical [`RequestKey`]
+//! matches a cached entry are served without recomputation
+//! (`Execute`/`Solve` reuse the cached *plan* but always run numerics).
+//! [`Service`] wraps a coordinator into the long-lived serving front end
+//! (`submit`/`serve`/`drain` + `prefill` warm-up).
 
 mod batcher;
+mod memo;
 mod metrics;
 mod planner;
+mod service;
 
 pub use batcher::{group_by_shape, schedule, Batch, BatchKey};
+pub use memo::{entry_bytes, CachedValue, Facet, MemoCounters, MemoSnapshot, RequestKey, S3Fifo, DEFAULT_MEMO_BYTES};
 pub use metrics::Metrics;
 pub use planner::{build_traversal, plan, Plan, PlannerConfig, TraversalChoice, MAX_SHARDS, SHARD_GRAIN_POINTS};
+pub use service::{Service, Ticket};
 
 pub use crate::solver::{deterministic_input, SolveStep};
 
@@ -44,11 +57,11 @@ use crate::traversal::{self, Traversal};
 use crate::util::threadpool::ThreadPool;
 use anyhow::{bail, Result};
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 /// Stencil shape specification in requests.
-#[derive(Debug, Clone, PartialEq, Eq)]
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
 pub enum StencilSpec {
     /// Star of radius r in the dims' dimensionality.
     Star { r: usize },
@@ -100,7 +113,7 @@ impl StencilRequest {
         StencilRequest { dims: dims.to_vec(), stencil: StencilSpec::Star13, rhs_arrays: 1, kind: JobKind::Analyze }
     }
 
-    fn batch_key(&self) -> BatchKey {
+    fn batch_key(&self, config: &PlannerConfig) -> BatchKey {
         let kind = match self.kind {
             JobKind::Plan => "plan",
             JobKind::Analyze => "analyze",
@@ -109,14 +122,18 @@ impl StencilRequest {
             JobKind::Execute => "execute",
             JobKind::Solve { .. } => "solve",
         };
-        BatchKey { kind, dims: self.dims.clone() }
+        BatchKey { kind, dims: self.dims.clone(), stencil: self.stencil.clone(), machine: config.machine.clone() }
     }
 }
 
 /// The coordinator's answer.
+///
+/// The plan is `Arc`-shared with the memo tier (and with every other
+/// response for the same request key): a cache hit costs one refcount
+/// bump, not a `Plan` clone.
 #[derive(Debug)]
 pub struct StencilResponse {
-    pub plan: Plan,
+    pub plan: Arc<Plan>,
     pub miss_report: Option<MissReport>,
     /// Final tensor norm for numeric jobs.
     pub result_norm: Option<f64>,
@@ -142,6 +159,12 @@ pub struct Coordinator {
     runtime: Option<Arc<RuntimeHandle>>,
     pool: ThreadPool,
     metrics: Arc<Metrics>,
+    /// Memoization tier (S3-FIFO over canonical request keys), on by
+    /// default with [`DEFAULT_MEMO_BYTES`]; `None` disables memoization
+    /// entirely (cold baselines, benches). The mutex is held only for the
+    /// O(1) index operation — a hit copies an `Arc<Plan>` pointer plus a
+    /// small inline `Copy` report, never a `Plan`.
+    memo: Option<Mutex<S3Fifo<RequestKey, CachedValue>>>,
     /// Fan-out jobs (analyses + native numeric sweeps) currently executing —
     /// divides the shard budget so that concurrent jobs inside `serve`
     /// share the machine instead of each fanning out to the full worker
@@ -150,30 +173,96 @@ pub struct Coordinator {
 }
 
 impl Coordinator {
+    fn new_inner(config: PlannerConfig, runtime: Option<Arc<RuntimeHandle>>) -> Coordinator {
+        Coordinator {
+            config,
+            runtime,
+            pool: ThreadPool::with_default_parallelism(),
+            metrics: Arc::new(Metrics::new()),
+            memo: Some(Mutex::new(S3Fifo::with_capacity(DEFAULT_MEMO_BYTES))),
+            active_fanout: AtomicUsize::new(0),
+        }
+    }
+
     /// Standalone coordinator (no PJRT runtime attached): plans and
     /// simulations run as always, and Execute/Solve requests are served by
     /// the native numeric backend.
     pub fn analysis_only(config: PlannerConfig) -> Coordinator {
-        Coordinator {
-            config,
-            runtime: None,
-            pool: ThreadPool::with_default_parallelism(),
-            metrics: Arc::new(Metrics::new()),
-            active_fanout: AtomicUsize::new(0),
-        }
+        Coordinator::new_inner(config, None)
     }
 
     /// Full coordinator with the PJRT runtime service attached; numeric
     /// requests whose shape has no artifact still fall back to the native
     /// backend.
     pub fn with_runtime(config: PlannerConfig, runtime: Arc<RuntimeHandle>) -> Coordinator {
-        Coordinator {
-            config,
-            runtime: Some(runtime),
-            pool: ThreadPool::with_default_parallelism(),
-            metrics: Arc::new(Metrics::new()),
-            active_fanout: AtomicUsize::new(0),
+        Coordinator::new_inner(config, Some(runtime))
+    }
+
+    /// Replace the memo tier: `Some(bytes)` installs a fresh S3-FIFO with
+    /// that byte budget, `None` disables memoization. Existing cached
+    /// entries are dropped either way.
+    pub fn configure_memo(&mut self, capacity_bytes: Option<usize>) {
+        self.memo = capacity_bytes.map(|b| Mutex::new(S3Fifo::with_capacity(b)));
+    }
+
+    /// Usage + counters of the memo tier (`None` when disabled).
+    pub fn memo_snapshot(&self) -> Option<MemoSnapshot> {
+        self.memo.as_ref().map(|m| m.lock().unwrap().snapshot())
+    }
+
+    fn memo_get(&self, key: &RequestKey) -> Option<CachedValue> {
+        self.memo.as_ref().and_then(|m| m.lock().unwrap().get(key).cloned())
+    }
+
+    fn memo_put(&self, key: RequestKey, value: CachedValue) {
+        if let Some(m) = &self.memo {
+            let weight = entry_bytes(&key, &value);
+            let evicted = m.lock().unwrap().insert(key, value, weight);
+            if evicted > 0 {
+                Metrics::bump(&self.metrics.memo_evictions, evicted);
+            }
         }
+    }
+
+    /// Build the response for a memoized analysis entry, if resident.
+    fn analysis_from_memo(&self, key: &RequestKey) -> Option<StencilResponse> {
+        match self.memo_get(key) {
+            Some(CachedValue::Analysis { plan, report }) => Some(StencilResponse {
+                plan,
+                miss_report: Some(report),
+                result_norm: None,
+                solve_log: Vec::new(),
+                wall_micros: 0,
+            }),
+            _ => None,
+        }
+    }
+
+    /// Record the request-level memo outcome for the *primary* artifact of
+    /// a request (no-op on a non-memoizing coordinator).
+    fn note_memo(&self, hit: bool) {
+        if self.memo.is_none() {
+            return;
+        }
+        if hit {
+            Metrics::bump(&self.metrics.sim_memo_hits, 1);
+        } else {
+            Metrics::bump(&self.metrics.sim_memo_misses, 1);
+        }
+    }
+
+    /// Resolve the plan for `req` through the memo tier. Returns the
+    /// `Arc`-shared plan and whether it was a cache hit; on a miss the
+    /// freshly computed plan is admitted under its canonical key.
+    fn plan_for(&self, req: &StencilRequest, stencil: &Stencil) -> (Arc<Plan>, bool) {
+        let key = RequestKey::plan_facet(&self.config, req);
+        if let Some(CachedValue::Plan(p)) = self.memo_get(&key) {
+            return (p, true);
+        }
+        let plan = Arc::new(plan(&self.config, &req.dims, stencil, req.rhs_arrays));
+        Metrics::bump(&self.metrics.planned, 1);
+        self.memo_put(key, CachedValue::Plan(plan.clone()));
+        (plan, false)
     }
 
     /// Register an in-flight fan-out job; returns the drop guard and this
@@ -209,7 +298,7 @@ impl Coordinator {
     /// Handle a slice of requests: batch by shape, run batches across the
     /// worker pool, return responses in submission order.
     pub fn serve(&self, reqs: &[StencilRequest]) -> Vec<Result<StencilResponse>> {
-        let keys: Vec<BatchKey> = reqs.iter().map(|r| r.batch_key()).collect();
+        let keys: Vec<BatchKey> = reqs.iter().map(|r| r.batch_key(&self.config)).collect();
         let batches = group_by_shape(&keys);
         // flatten batches into a worklist of request indices, batch-major
         // and heaviest-batch-first (see batcher::schedule): same-shape
@@ -234,16 +323,52 @@ impl Coordinator {
         if req.rhs_arrays == 0 {
             bail!("rhs_arrays must be >= 1");
         }
+        // `StencilSpec::build` asserts this; on the long-lived serving path
+        // a malformed request must be a per-request Err, not a panic that
+        // poisons the whole serve/drain wave.
+        if req.stencil == StencilSpec::Star13 && req.dims.len() != 3 {
+            bail!("star13 stencil requires 3-D dims, got {:?}", req.dims);
+        }
         let stencil = req.stencil.build(req.dims.len());
-        let plan = plan(&self.config, &req.dims, &stencil, req.rhs_arrays);
-        Metrics::bump(&self.metrics.planned, 1);
+        // An explicit traversal request needs no plan to form its analysis
+        // key, so a resident entry skips the planner entirely (the plan
+        // facet may have been evicted independently of the analysis). The
+        // cold path below re-probes the same key once more — a duplicate
+        // structural miss in the S3-FIFO counters, never in the
+        // request-level sim_memo_* metrics.
+        if let JobKind::AnalyzeWith(choice) = &req.kind {
+            let key = RequestKey::analysis_facet(&self.config, req, *choice);
+            if let Some(resp) = self.analysis_from_memo(&key) {
+                self.note_memo(true);
+                return Ok(resp);
+            }
+        }
+        // The plan is always resolved through the memo tier: Plan requests
+        // serve it directly, analyses embed it, numeric jobs reuse it for
+        // traversal/shard choices (but always run the numerics).
+        let (plan, plan_hit) = self.plan_for(req, &stencil);
 
         match &req.kind {
-            JobKind::Plan => Ok(StencilResponse { plan, miss_report: None, result_norm: None, solve_log: Vec::new(), wall_micros: 0 }),
+            JobKind::Plan => {
+                self.note_memo(plan_hit);
+                Ok(StencilResponse {
+                    plan,
+                    miss_report: None,
+                    result_norm: None,
+                    solve_log: Vec::new(),
+                    wall_micros: 0,
+                })
+            }
             JobKind::Analyze => self.run_analysis(req, &stencil, plan, None),
             JobKind::AnalyzeWith(choice) => self.run_analysis(req, &stencil, plan, Some(*choice)),
-            JobKind::Execute => self.run_numeric(req, &stencil, plan, None),
-            JobKind::Solve { steps } => self.run_numeric(req, &stencil, plan, Some(*steps)),
+            JobKind::Execute => {
+                self.note_memo(plan_hit);
+                self.run_numeric(req, &stencil, plan, None)
+            }
+            JobKind::Solve { steps } => {
+                self.note_memo(plan_hit);
+                self.run_numeric(req, &stencil, plan, Some(*steps))
+            }
         }
     }
 
@@ -251,11 +376,20 @@ impl Coordinator {
         &self,
         req: &StencilRequest,
         stencil: &Stencil,
-        plan: Plan,
+        plan: Arc<Plan>,
         force: Option<TraversalChoice>,
     ) -> Result<StencilResponse> {
-        let grid = GridDesc::with_padding(&plan.dims, &plan.pad);
         let choice = force.unwrap_or(plan.traversal);
+        // Canonical analysis key: `Analyze` ≡ `AnalyzeWith(plan.traversal)`,
+        // so the default analysis and an explicit request for the
+        // planner's own choice share one cache entry.
+        let key = RequestKey::analysis_facet(&self.config, req, choice);
+        if let Some(resp) = self.analysis_from_memo(&key) {
+            self.note_memo(true);
+            return Ok(resp);
+        }
+        self.note_memo(false);
+        let grid = GridDesc::with_padding(&plan.dims, &plan.pad);
         // The hot path is a lazy stream: nothing proportional to the grid
         // is materialized, so Analyze scales to 512³+ grids whose packed
         // visit sequence would not fit in memory.
@@ -270,6 +404,12 @@ impl Coordinator {
         // small jobs (or saturated pools) run the exact sequential sim.
         let (_guard, budget) = self.enter_fanout();
         let shards = plan.shards.min(budget);
+        // Shard-boundary cold misses make a merged sharded report a
+        // function of the *effective* shard count, which concurrent
+        // fan-out load can clamp below the plan's recommendation. The memo
+        // must serve what a quiet recompute would produce, so reports are
+        // admitted only when computed at the quiet-coordinator count.
+        let quiet_shards = plan.shards.min(self.pool.workers());
         let machine = &self.config.machine;
         let report = if shards > 1 && order.num_pencils() > 1 {
             let ran = traversal::shard_ranges(order.num_pencils(), shards).len() as u64;
@@ -290,7 +430,16 @@ impl Coordinator {
             Metrics::bump(&self.metrics.sim_tlb_misses, tlb.misses());
         }
         Metrics::bump(&self.metrics.sim_stall_cycles, report.levels.stall_cycles(machine.latency));
-        Ok(StencilResponse { plan, miss_report: Some(report), result_norm: None, solve_log: Vec::new(), wall_micros: 0 })
+        if shards == quiet_shards {
+            self.memo_put(key, CachedValue::Analysis { plan: plan.clone(), report });
+        }
+        Ok(StencilResponse {
+            plan,
+            miss_report: Some(report),
+            result_norm: None,
+            solve_log: Vec::new(),
+            wall_micros: 0,
+        })
     }
 
     /// Serve a numeric job (`Execute` when `steps` is None, `Solve`
@@ -310,7 +459,7 @@ impl Coordinator {
         &self,
         req: &StencilRequest,
         stencil: &Stencil,
-        plan: Plan,
+        plan: Arc<Plan>,
         steps: Option<usize>,
     ) -> Result<StencilResponse> {
         let grid = GridDesc::with_padding(&plan.dims, &plan.pad);
@@ -364,10 +513,20 @@ impl Coordinator {
         })
     }
 
-    /// Snapshot the metrics as JSON text.
+    /// Snapshot the metrics as JSON text (memo-tier usage included when
+    /// memoization is enabled).
     pub fn metrics_json(&self) -> String {
         let mut j = self.metrics.snapshot();
         j.set("pool_workers", self.pool.workers());
+        if let Some(s) = self.memo_snapshot() {
+            j.set("memo_entries", s.entries as u64)
+                .set("memo_bytes", s.weight as u64)
+                .set("memo_capacity_bytes", s.capacity as u64)
+                .set("memo_ghost_keys", s.ghost_keys as u64)
+                .set("memo_small_hits", s.counters.small_hits)
+                .set("memo_main_hits", s.counters.main_hits)
+                .set("memo_ghost_readmits", s.counters.ghost_readmits);
+        }
         if let Some(rt) = &self.runtime {
             j.set("cached_executables", rt.cached_executables());
             j.set("platform", rt.platform());
@@ -468,7 +627,12 @@ mod tests {
         assert!(c.submit(&zero_dim).is_err());
         let no_rhs = StencilRequest { dims: vec![8, 8], stencil: StencilSpec::Star { r: 1 }, rhs_arrays: 0, kind: JobKind::Plan };
         assert!(c.submit(&no_rhs).is_err());
-        assert_eq!(c.metrics.failed.load(Ordering::Relaxed), 3);
+        // star13 off its 3-D home must be a per-request error, not a panic
+        // that would poison a whole serve wave on the long-lived service
+        let star13_2d =
+            StencilRequest { dims: vec![16, 16], stencil: StencilSpec::Star13, rhs_arrays: 1, kind: JobKind::Plan };
+        assert!(c.submit(&star13_2d).is_err());
+        assert_eq!(c.metrics.failed.load(Ordering::Relaxed), 4);
     }
 
     #[test]
@@ -547,6 +711,122 @@ mod tests {
         assert!(j.contains("sim_accesses"));
         assert!(j.contains("sharded_analyses"));
         assert!(j.contains("pool_workers"));
+        // memo tier counters are part of the snapshot
+        assert!(j.contains("sim_memo_hits"));
+        assert!(j.contains("sim_memo_misses"));
+        assert!(j.contains("memo_evictions"));
+        assert!(j.contains("memo_entries"));
+    }
+
+    #[test]
+    fn repeated_analyze_served_from_memo() {
+        let c = coord();
+        let req = StencilRequest::analyze(&[20, 20, 20]);
+        let cold = c.submit(&req).unwrap();
+        let accesses_after_cold = c.metrics.sim_accesses.load(Ordering::Relaxed);
+        let warm = c.submit(&req).unwrap();
+        // second submission recomputed nothing...
+        assert_eq!(c.metrics.analyzed.load(Ordering::Relaxed), 1);
+        assert_eq!(c.metrics.sim_accesses.load(Ordering::Relaxed), accesses_after_cold);
+        assert_eq!(c.metrics.sim_memo_hits.load(Ordering::Relaxed), 1);
+        assert_eq!(c.metrics.sim_memo_misses.load(Ordering::Relaxed), 1);
+        // ...and the served report is the cold one, bit for bit
+        let (a, b) = (cold.miss_report.unwrap(), warm.miss_report.unwrap());
+        assert_eq!(a.points, b.points);
+        assert_eq!(a.total, b.total);
+        assert_eq!((a.u_loads, a.u_misses), (b.u_loads, b.u_misses));
+        assert_eq!(a.levels, b.levels);
+        // the plan is Arc-shared between the cached entry and the response
+        assert!(Arc::ptr_eq(&cold.plan, &warm.plan));
+    }
+
+    #[test]
+    fn solve_reuses_cached_plan_but_reruns_numerics() {
+        let c = coord();
+        let mk = || StencilRequest {
+            dims: vec![16, 16, 16],
+            stencil: StencilSpec::Star13,
+            rhs_arrays: 1,
+            kind: JobKind::Solve { steps: 3 },
+        };
+        let a = c.submit(&mk()).unwrap();
+        let b = c.submit(&mk()).unwrap();
+        // one plan computation, two full numeric runs
+        assert_eq!(c.metrics.planned.load(Ordering::Relaxed), 1);
+        assert_eq!(c.metrics.sim_memo_hits.load(Ordering::Relaxed), 1);
+        assert_eq!(c.metrics.native_executions.load(Ordering::Relaxed), 6);
+        assert_eq!(a.result_norm.unwrap(), b.result_norm.unwrap());
+    }
+
+    #[test]
+    fn analyze_canonicalizes_to_planner_choice() {
+        let c = coord();
+        let dims = vec![20, 20, 20];
+        let plan_resp = c
+            .submit(&StencilRequest { dims: dims.clone(), stencil: StencilSpec::Star13, rhs_arrays: 1, kind: JobKind::Plan })
+            .unwrap();
+        // default Analyze, then an explicit request for the planner's own
+        // choice: one computation, one hit
+        let _ = c.submit(&StencilRequest::analyze(&dims)).unwrap();
+        let _ = c
+            .submit(&StencilRequest {
+                dims: dims.clone(),
+                stencil: StencilSpec::Star13,
+                rhs_arrays: 1,
+                kind: JobKind::AnalyzeWith(plan_resp.plan.traversal),
+            })
+            .unwrap();
+        assert_eq!(c.metrics.analyzed.load(Ordering::Relaxed), 1);
+        // star13 ≡ star(r = 2): same canonical key, so this hits too
+        let star2 = StencilRequest { dims, stencil: StencilSpec::Star { r: 2 }, rhs_arrays: 1, kind: JobKind::Analyze };
+        let _ = c.submit(&star2).unwrap();
+        assert_eq!(c.metrics.analyzed.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn forced_off_planner_traversal_is_a_distinct_entry() {
+        let c = coord();
+        let dims = vec![20, 20, 20]; // planner picks Natural here
+        let _ = c.submit(&StencilRequest::analyze(&dims)).unwrap();
+        let _ = c
+            .submit(&StencilRequest {
+                dims,
+                stencil: StencilSpec::Star13,
+                rhs_arrays: 1,
+                kind: JobKind::AnalyzeWith(TraversalChoice::CacheFitting),
+            })
+            .unwrap();
+        assert_eq!(c.metrics.analyzed.load(Ordering::Relaxed), 2, "different traversal ⇒ different analysis");
+    }
+
+    #[test]
+    fn memo_can_be_disabled() {
+        let mut c = coord();
+        c.configure_memo(None);
+        let req = StencilRequest::analyze(&[16, 16, 16]);
+        let _ = c.submit(&req).unwrap();
+        let _ = c.submit(&req).unwrap();
+        assert_eq!(c.metrics.analyzed.load(Ordering::Relaxed), 2);
+        assert_eq!(c.metrics.sim_memo_hits.load(Ordering::Relaxed), 0);
+        assert_eq!(c.metrics.sim_memo_misses.load(Ordering::Relaxed), 0);
+        assert!(c.memo_snapshot().is_none());
+        assert!(!c.metrics_json().contains("memo_entries"));
+    }
+
+    #[test]
+    fn different_rhs_counts_do_not_share_entries() {
+        let c = coord();
+        let mk = |rhs| StencilRequest {
+            dims: vec![16, 16, 16],
+            stencil: StencilSpec::Star13,
+            rhs_arrays: rhs,
+            kind: JobKind::Plan,
+        };
+        let one = c.submit(&mk(1)).unwrap();
+        let four = c.submit(&mk(4)).unwrap();
+        assert_eq!(c.metrics.planned.load(Ordering::Relaxed), 2);
+        // p = 4 shrinks the natural-order window (see planner tests)
+        assert_ne!(one.plan.traversal, four.plan.traversal);
     }
 
     #[test]

@@ -24,7 +24,7 @@ use crate::stencil::Stencil;
 use crate::traversal::{self, Traversal};
 
 /// Traversal policy chosen by the planner.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum TraversalChoice {
     /// Lexicographic sweep — optimal when the working set fits the cache.
     Natural,

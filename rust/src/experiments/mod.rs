@@ -13,12 +13,14 @@
 //! | `bounds`  | Eq 7/12 sandwich | [`bounds_table::run`] |
 //! | `multirhs`| §5 Eq 13/14    | [`multirhs::run`] |
 //! | `appb`    | Appendix B     | [`appb::run`] |
+//! | `replay`  | serving-layer memo hit rates (not in the paper) | [`replay::run`] |
 
 pub mod appb;
 pub mod bounds_table;
 pub mod fig4;
 pub mod fig5;
 pub mod multirhs;
+pub mod replay;
 pub mod sec3;
 
 use crate::cache::{CacheParams, CacheSim, MachineModel};
@@ -125,6 +127,9 @@ pub fn run(id: &str, quick: bool) -> Result<Vec<Table>, String> {
         "bounds" => Ok(vec![bounds_table::run(quick)]),
         "multirhs" => Ok(vec![multirhs::run(quick)]),
         "appb" => Ok(vec![appb::run()]),
+        // serving-layer replay (not a paper artifact, so not part of "all";
+        // the `stencilcache replay` subcommand exposes the full knob set)
+        "replay" => Ok(vec![replay::run(&replay::ReplayConfig::paper(quick)).table]),
         "all" => {
             let mut out = Vec::new();
             for id in ["fig4", "fig5a", "fig5b", "fig5corr", "sec3", "bounds", "multirhs", "appb"] {
@@ -133,7 +138,7 @@ pub fn run(id: &str, quick: bool) -> Result<Vec<Table>, String> {
             Ok(out)
         }
         other => Err(format!(
-            "unknown experiment {other:?}; available: fig4 fig5a fig5b fig5corr sec3 bounds multirhs appb all"
+            "unknown experiment {other:?}; available: fig4 fig5a fig5b fig5corr sec3 bounds multirhs appb replay all"
         )),
     }
 }

@@ -1,0 +1,316 @@
+//! Workload replay: deterministic serving traces for the memo tier.
+//!
+//! The ROADMAP's target traffic is Zipf-skewed over a small set of hot
+//! grid shapes, punctuated by one-off sweep scans (parameter studies
+//! walking a line of shapes exactly once). This driver generates that
+//! trace deterministically from [`crate::util::rng`], replays it through a
+//! warm [`Service`], and reports per-phase memo hit rates and request
+//! latencies — the serving-layer analog of the paper-figure drivers.
+//!
+//! Trace structure (all sizes from [`ReplayConfig`]):
+//!
+//! ```text
+//! prefill (×3)  — warm every hot facet past the S3-FIFO promotion bar
+//! hot/pre-scan  — Zipf(s) draws over the hot shapes, Plan/Analyze mixed
+//! scan          — one-pass sweep of `scan` never-seen shapes (Analyze)
+//! hot/post-scan — Zipf draws again: the hot set must still be resident
+//! ```
+//!
+//! The replay is sequential (one request at a time) so latencies and hit
+//! counts are exactly reproducible for a given seed.
+
+use crate::coordinator::{Coordinator, JobKind, PlannerConfig, Service, StencilRequest, StencilSpec};
+use crate::report::Table;
+use crate::util::rng::Rng;
+use crate::util::stats::Summary;
+use std::sync::atomic::Ordering;
+
+/// Configuration of a replay run.
+#[derive(Debug, Clone)]
+pub struct ReplayConfig {
+    /// Total replayed requests (prefill not counted).
+    pub requests: usize,
+    /// Number of hot shapes.
+    pub hot: usize,
+    /// Number of one-off shapes in the mid-trace scan sweep.
+    pub scan: usize,
+    /// Zipf exponent over the hot shapes.
+    pub zipf_s: f64,
+    pub seed: u64,
+    /// Memo-tier byte budget for the replayed service. The default is
+    /// sized so the scan overflows it (exercising S3-FIFO eviction) while
+    /// the hot set fits comfortably in the main queue.
+    pub memo_bytes: usize,
+}
+
+impl ReplayConfig {
+    /// The EXPERIMENTS.md configuration: ≥ 500 requests over 8 hot shapes
+    /// with a 48-shape scan. `quick` shrinks the trace for smoke runs.
+    pub fn paper(quick: bool) -> ReplayConfig {
+        ReplayConfig {
+            requests: if quick { 160 } else { 600 },
+            hot: 8,
+            scan: if quick { 16 } else { 48 },
+            zipf_s: 1.1,
+            seed: 0x5EED,
+            memo_bytes: 32 * 1024,
+        }
+    }
+}
+
+/// The deterministic hot-shape list: distinct small 3-D grids with even
+/// extents (disjoint by construction from [`scan_shapes`], which uses odd
+/// extents). Unique for `n ≤ 343`.
+pub fn hot_shapes(n: usize) -> Vec<Vec<usize>> {
+    (0..n).map(|i| vec![12 + 2 * (i % 7), 14 + 2 * ((i / 7) % 7), 16 + 2 * ((i / 49) % 7)]).collect()
+}
+
+/// `n` one-off scan shapes starting at logical offset `offset` — odd
+/// extents, so never colliding with [`hot_shapes`]. Unique for
+/// `offset + n ≤ 729`.
+pub fn scan_shapes(offset: usize, n: usize) -> Vec<Vec<usize>> {
+    (offset..offset + n).map(|i| vec![11 + 2 * (i % 9), 13 + 2 * ((i / 9) % 9), 9 + 2 * ((i / 81) % 9)]).collect()
+}
+
+/// Discrete Zipf sampler over ranks `0..n` (weight `1/(k+1)^s`).
+struct Zipf {
+    cum: Vec<f64>,
+}
+
+impl Zipf {
+    fn new(n: usize, s: f64) -> Zipf {
+        assert!(n >= 1);
+        let mut cum = Vec::with_capacity(n);
+        let mut total = 0.0;
+        for k in 0..n {
+            total += 1.0 / ((k + 1) as f64).powf(s);
+            cum.push(total);
+        }
+        Zipf { cum }
+    }
+
+    fn sample(&self, rng: &mut Rng) -> usize {
+        let u = rng.f64() * self.cum.last().copied().unwrap();
+        self.cum.iter().position(|&c| u < c).unwrap_or(self.cum.len() - 1)
+    }
+}
+
+/// `n` Zipf-distributed requests over `shapes`, kinds alternating
+/// Plan/Analyze by coin flip. Public so `bench_serving` replays the same
+/// traffic shape the experiment does.
+pub fn zipf_requests(shapes: &[Vec<usize>], zipf_s: f64, n: usize, rng: &mut Rng) -> Vec<StencilRequest> {
+    let zipf = Zipf::new(shapes.len(), zipf_s);
+    (0..n)
+        .map(|_| {
+            let dims = shapes[zipf.sample(rng)].clone();
+            let kind = if rng.below(2) == 0 { JobKind::Plan } else { JobKind::Analyze };
+            StencilRequest { dims, stencil: StencilSpec::Star13, rhs_arrays: 1, kind }
+        })
+        .collect()
+}
+
+fn scan_requests(shapes: &[Vec<usize>]) -> Vec<StencilRequest> {
+    shapes
+        .iter()
+        .map(|dims| StencilRequest {
+            dims: dims.clone(),
+            stencil: StencilSpec::Star13,
+            rhs_arrays: 1,
+            kind: JobKind::Analyze,
+        })
+        .collect()
+}
+
+/// The three trace phases (pre-scan hot, scan, post-scan hot), generated
+/// deterministically from the config.
+pub fn generate_trace(cfg: &ReplayConfig) -> [Vec<StencilRequest>; 3] {
+    let hot = hot_shapes(cfg.hot);
+    let mut rng = Rng::new(cfg.seed);
+    let scan_n = cfg.scan.min(cfg.requests / 2);
+    let hot_total = cfg.requests - scan_n;
+    let pre = hot_total / 2;
+    [
+        zipf_requests(&hot, cfg.zipf_s, pre, &mut rng),
+        scan_requests(&scan_shapes(0, scan_n)),
+        zipf_requests(&hot, cfg.zipf_s, hot_total - pre, &mut rng),
+    ]
+}
+
+/// Per-phase replay measurements.
+#[derive(Debug, Clone)]
+pub struct Phase {
+    pub name: &'static str,
+    pub requests: u64,
+    pub hits: u64,
+    pub p50_us: f64,
+    pub p90_us: f64,
+}
+
+impl Phase {
+    pub fn hit_rate(&self) -> f64 {
+        if self.requests == 0 {
+            0.0
+        } else {
+            self.hits as f64 / self.requests as f64
+        }
+    }
+}
+
+/// Outcome of a replay run.
+#[derive(Debug, Clone)]
+pub struct ReplayOutcome {
+    pub table: Table,
+    pub phases: Vec<Phase>,
+    pub total_requests: u64,
+    pub total_hits: u64,
+    /// Memo misses on hot-shape requests *after* the scan — 0 iff the hot
+    /// set survived the sweep (the scan-resistance claim).
+    pub hot_misses_after_scan: u64,
+    pub memo_evictions: u64,
+    /// The serving coordinator's final metrics snapshot.
+    pub metrics_json: String,
+}
+
+impl ReplayOutcome {
+    pub fn hit_rate(&self) -> f64 {
+        if self.total_requests == 0 {
+            0.0
+        } else {
+            self.total_hits as f64 / self.total_requests as f64
+        }
+    }
+
+    pub fn hot_set_retained(&self) -> bool {
+        self.hot_misses_after_scan == 0
+    }
+}
+
+/// Replay the configured trace through a fresh memoizing service and
+/// measure per-phase hit rates and latencies.
+pub fn run(cfg: &ReplayConfig) -> ReplayOutcome {
+    let mut coord = Coordinator::analysis_only(PlannerConfig::default());
+    coord.configure_memo(Some(cfg.memo_bytes));
+    let svc = Service::over(coord);
+
+    // Warm-up: three prefill passes leave every hot facet with frequency
+    // ≥ 2, past the S3-FIFO promotion bar — so when the scan later forces
+    // evictions, the hot entries are promoted into the main queue instead
+    // of demoted to ghost history. (Pass 1 inserts, passes 2–3 hit.)
+    let hot = hot_shapes(cfg.hot);
+    for _ in 0..3 {
+        svc.prefill(&hot, 1);
+    }
+
+    let trace = generate_trace(cfg);
+    let metrics = svc.coordinator().metrics();
+    let mut phases = Vec::new();
+    for (name, reqs) in ["hot/pre-scan", "scan", "hot/post-scan"].into_iter().zip(trace.iter()) {
+        let hits0 = metrics.sim_memo_hits.load(Ordering::Relaxed);
+        let mut lat_us: Vec<f64> = Vec::with_capacity(reqs.len());
+        for req in reqs {
+            // sequential replay: deterministic hits and honest per-request
+            // latency (no queueing delay folded in)
+            let resp = svc.coordinator().submit(req).expect("replay requests are valid");
+            lat_us.push(resp.wall_micros as f64);
+        }
+        let s = Summary::of(&lat_us);
+        phases.push(Phase {
+            name,
+            requests: reqs.len() as u64,
+            hits: metrics.sim_memo_hits.load(Ordering::Relaxed) - hits0,
+            p50_us: s.p50,
+            p90_us: s.p90,
+        });
+    }
+
+    let title = format!(
+        "workload replay: Zipf(s={}) over {} hot shapes + {}-shape scan, seed {:#x}",
+        cfg.zipf_s, cfg.hot, phases[1].requests, cfg.seed
+    );
+    let mut table = Table::new(&title, &["phase", "requests", "memo hits", "hit rate", "p50 µs", "p90 µs"]);
+    for p in &phases {
+        table.add_row(vec![
+            p.name.to_string(),
+            p.requests.to_string(),
+            p.hits.to_string(),
+            format!("{:5.1}%", 100.0 * p.hit_rate()),
+            format!("{:.0}", p.p50_us),
+            format!("{:.0}", p.p90_us),
+        ]);
+    }
+    let total_requests: u64 = phases.iter().map(|p| p.requests).sum();
+    let total_hits: u64 = phases.iter().map(|p| p.hits).sum();
+    table.add_row(vec![
+        "total".to_string(),
+        total_requests.to_string(),
+        total_hits.to_string(),
+        format!("{:5.1}%", if total_requests == 0 { 0.0 } else { 100.0 * total_hits as f64 / total_requests as f64 }),
+        String::new(),
+        String::new(),
+    ]);
+
+    let post = &phases[2];
+    let hot_misses_after_scan = post.requests - post.hits;
+    ReplayOutcome {
+        table,
+        total_requests,
+        total_hits,
+        hot_misses_after_scan,
+        memo_evictions: metrics.memo_evictions.load(Ordering::Relaxed),
+        metrics_json: svc.metrics_json(),
+        phases,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_families_are_distinct_and_disjoint() {
+        let hot = hot_shapes(40);
+        let scan = scan_shapes(0, 80);
+        let mut all: Vec<&Vec<usize>> = hot.iter().chain(scan.iter()).collect();
+        let n = all.len();
+        all.sort();
+        all.dedup();
+        assert_eq!(all.len(), n, "hot/scan shapes must be pairwise distinct");
+    }
+
+    #[test]
+    fn zipf_prefers_low_ranks() {
+        let z = Zipf::new(8, 1.1);
+        let mut rng = Rng::new(9);
+        let mut counts = [0usize; 8];
+        for _ in 0..4000 {
+            counts[z.sample(&mut rng)] += 1;
+        }
+        assert!(counts[0] > counts[3], "{counts:?}");
+        assert!(counts[0] > counts[7] * 3, "{counts:?}");
+        assert!(counts.iter().all(|&c| c > 0), "all ranks must appear: {counts:?}");
+    }
+
+    #[test]
+    fn trace_is_deterministic_and_sized() {
+        let cfg = ReplayConfig::paper(true);
+        let a = generate_trace(&cfg);
+        let b = generate_trace(&cfg);
+        let total: usize = a.iter().map(|p| p.len()).sum();
+        assert_eq!(total, cfg.requests);
+        assert_eq!(a[1].len(), cfg.scan);
+        for (x, y) in a.iter().flatten().zip(b.iter().flatten()) {
+            assert_eq!(x.dims, y.dims);
+            assert_eq!(format!("{:?}", x.kind), format!("{:?}", y.kind));
+        }
+    }
+
+    #[test]
+    fn quick_replay_hits_and_reports() {
+        let out = run(&ReplayConfig::paper(true));
+        assert_eq!(out.total_requests, 160);
+        assert!(out.hit_rate() > 0.5, "hit rate {}", out.hit_rate());
+        assert!(out.hot_set_retained());
+        assert_eq!(out.table.num_rows(), 4);
+        assert!(out.metrics_json.contains("sim_memo_hits"));
+    }
+}

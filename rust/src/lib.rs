@@ -16,8 +16,11 @@
 //! - **L3 (this crate)**: cache model + simulator, interference-lattice
 //!   machinery, **streaming traversal engine** (lazy pencil-at-a-time visit
 //!   orders — see [`traversal::Traversal`] — sharded across the worker pool
-//!   for large grids), bounds, padding advisor, the serving coordinator,
-//!   the **native numeric backend** ([`solver`]: real stencil FLOPs over
+//!   for large grids), bounds, padding advisor, the **memoizing serving
+//!   layer** (an S3-FIFO plan/analysis cache behind the coordinator plus
+//!   the long-lived [`coordinator::Service`] — see DESIGN.md §2.8 and
+//!   `experiments::replay`), the **native numeric backend** ([`solver`]:
+//!   real stencil FLOPs over
 //!   the planner's traversal, no XLA required), and the PJRT runtime that
 //!   executes AOT-compiled artifacts (behind the `pjrt` cargo feature; the
 //!   coordinator falls back to the native backend without it).

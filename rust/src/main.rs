@@ -13,13 +13,18 @@
 //! stencilcache solve --n 64 --steps 100
 //!     run the heat solver (PJRT when artifacts exist, native otherwise)
 //! stencilcache serve-demo [--requests 64]
-//!     demo of the batching coordinator over a mixed workload
+//!     demo of the serving layer (submit/drain) over a mixed workload
+//! stencilcache replay [--requests 600] [--hot 8] [--scan 48] [--zipf 1.1]
+//!                     [--seed N] [--memo-bytes 32768] [--quick]
+//!     replay a deterministic Zipf+scan trace through the memoizing
+//!     service; prints per-phase memo hit rates and latencies. Exits
+//!     non-zero if the memo tier never hits (CI smoke gate).
 //! stencilcache info
 //!     artifact + platform report
 //! ```
 
 use stencilcache::cache::{CacheParams, MachineModel};
-use stencilcache::coordinator::{Coordinator, JobKind, PlannerConfig, StencilRequest, StencilSpec, TraversalChoice};
+use stencilcache::coordinator::{Coordinator, JobKind, PlannerConfig, Service, StencilRequest, StencilSpec, TraversalChoice};
 use stencilcache::report;
 use stencilcache::runtime::RuntimeService;
 use stencilcache::util::cli::Args;
@@ -42,9 +47,10 @@ fn main() {
         Some("experiment") => cmd_experiment(&args),
         Some("solve") => cmd_solve(&args),
         Some("serve-demo") => cmd_serve_demo(&args),
+        Some("replay") => cmd_replay(&args),
         Some("info") => cmd_info(),
         _ => {
-            eprintln!("usage: stencilcache <analyze|experiment|solve|serve-demo|info> [options]");
+            eprintln!("usage: stencilcache <analyze|experiment|solve|serve-demo|replay|info> [options]");
             eprintln!("       see rust/src/main.rs docs for options");
             2
         }
@@ -203,39 +209,75 @@ fn cmd_solve(args: &Args) -> i32 {
 fn cmd_serve_demo(args: &Args) -> i32 {
     let run = || -> Result<(), String> {
         let n_req = args.get_usize("requests", 24)?;
-        let svc = RuntimeService::start(None).ok();
-        let coord = match &svc {
+        let rt = RuntimeService::start(None).ok();
+        let coord = match &rt {
             Some(s) => Coordinator::with_runtime(PlannerConfig::default(), s.handle()),
             None => {
                 println!("(no artifacts — serving analysis-only workload)");
                 Coordinator::analysis_only(PlannerConfig::default())
             }
         };
-        // mixed workload: plans, analyses, executes over a few shapes
-        let mut reqs = Vec::new();
+        let service = Service::over(coord);
+        // mixed workload: plans, analyses, executes over a few shapes,
+        // queued through the long-lived service and drained as one wave
         let mut rng = stencilcache::util::rng::Rng::new(1);
         for i in 0..n_req {
             let dims = *rng.choose(&[[24usize, 24, 24], [16, 16, 16], [45, 91, 20], [32, 32, 32]]);
             let kind = match i % 3 {
                 0 => JobKind::Plan,
                 1 => JobKind::Analyze,
-                _ if svc.is_some() && dims[0] == dims[1] && dims[1] == dims[2] && [16usize, 32].contains(&dims[0]) => JobKind::Execute,
+                _ if rt.is_some() && dims[0] == dims[1] && dims[1] == dims[2] && [16usize, 32].contains(&dims[0]) => JobKind::Execute,
                 _ => JobKind::Analyze,
             };
-            reqs.push(StencilRequest { dims: dims.to_vec(), stencil: StencilSpec::Star13, rhs_arrays: 1, kind });
+            service.submit(StencilRequest { dims: dims.to_vec(), stencil: StencilSpec::Star13, rhs_arrays: 1, kind });
         }
         let t0 = std::time::Instant::now();
-        let resps = coord.serve(&reqs);
+        let resps = service.drain();
         let wall = t0.elapsed();
-        let ok = resps.iter().filter(|r| r.is_ok()).count();
+        let ok = resps.iter().filter(|(_, r)| r.is_ok()).count();
         println!("served {ok}/{} requests in {:.1} ms", resps.len(), wall.as_secs_f64() * 1e3);
-        println!("{}", coord.metrics_json());
+        println!("{}", service.metrics_json());
         Ok(())
     };
     match run() {
         Ok(()) => 0,
         Err(e) => {
             eprintln!("serve-demo: {e}");
+            1
+        }
+    }
+}
+
+fn cmd_replay(args: &Args) -> i32 {
+    use stencilcache::experiments::replay::{self, ReplayConfig};
+    let run = || -> Result<(), String> {
+        let mut cfg = ReplayConfig::paper(args.flag("quick"));
+        cfg.requests = args.get_usize("requests", cfg.requests)?.max(1);
+        cfg.hot = args.get_usize("hot", cfg.hot)?.max(1);
+        cfg.scan = args.get_usize("scan", cfg.scan)?;
+        cfg.zipf_s = args.get_f64("zipf", cfg.zipf_s)?;
+        cfg.seed = args.get_usize("seed", cfg.seed as usize)? as u64;
+        cfg.memo_bytes = args.get_usize("memo-bytes", cfg.memo_bytes)?;
+        let out = replay::run(&cfg);
+        println!("{}", out.table.to_text());
+        println!(
+            "overall memo hit rate: {:.1}% ({}/{} requests); hot set retained across scan: {}; evictions: {}",
+            100.0 * out.hit_rate(),
+            out.total_hits,
+            out.total_requests,
+            if out.hot_set_retained() { "yes" } else { "NO" },
+            out.memo_evictions,
+        );
+        println!("\n== metrics ==\n{}", out.metrics_json);
+        if out.total_hits == 0 {
+            return Err("memo hit rate was zero — the memoization tier is not engaging".into());
+        }
+        Ok(())
+    };
+    match run() {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("replay: {e}");
             1
         }
     }

@@ -1,0 +1,175 @@
+//! Serving-layer integration tests: memoized responses must be
+//! **bit-identical** to cold-computed ones, the S3-FIFO tier must be
+//! scan-resistant on real coordinator traffic, and the replay driver must
+//! meet the acceptance bar (≥ 80% hit rate over a ≥ 500-request
+//! Zipf+scan trace with the hot set retained across the scan).
+
+use stencilcache::coordinator::{
+    Coordinator, JobKind, PlannerConfig, Service, StencilRequest, StencilResponse, StencilSpec, TraversalChoice,
+};
+use stencilcache::experiments::replay::{self, ReplayConfig};
+use std::sync::atomic::Ordering;
+
+/// Everything observable about a response except `wall_micros` (timing is
+/// not part of the memoized value). Rust's float `Debug` prints the
+/// shortest representation that round-trips, so string equality here *is*
+/// bit equality for every f64 in the plan, the per-level profiles, and
+/// the solve log.
+fn fingerprint(r: &StencilResponse) -> String {
+    let report = r
+        .miss_report
+        .as_ref()
+        .map(|m| format!("{} {:?} {} {} {:?}", m.points, m.total, m.u_loads, m.u_misses, m.levels));
+    format!("plan={:?} report={report:?} norm={:?} log={:?}", r.plan, r.result_norm, r.solve_log)
+}
+
+fn star13(dims: &[usize], kind: JobKind) -> StencilRequest {
+    StencilRequest { dims: dims.to_vec(), stencil: StencilSpec::Star13, rhs_arrays: 1, kind }
+}
+
+fn cold_coordinator() -> Coordinator {
+    let mut c = Coordinator::analysis_only(PlannerConfig::default());
+    c.configure_memo(None);
+    c
+}
+
+/// Property: serve the same request stream through a fresh (memo-less)
+/// service and a warm (pre-primed) service — every warm response must be
+/// bit-identical to the cold recomputation, for every job kind that
+/// produces memoized artifacts.
+#[test]
+fn memoized_responses_bit_identical_to_cold() {
+    use stencilcache::util::proptest::{forall, DimsGen};
+    let cold = cold_coordinator();
+    let warm = Coordinator::analysis_only(PlannerConfig::default());
+    forall(41, 10, &DimsGen { d: 3, lo: 10, hi: 26 }, |dims| {
+        for kind in [
+            JobKind::Plan,
+            JobKind::Analyze,
+            JobKind::AnalyzeWith(TraversalChoice::Natural),
+            JobKind::AnalyzeWith(TraversalChoice::CacheFitting),
+        ] {
+            let req = star13(dims, kind);
+            let _ = warm.submit(&req).unwrap(); // prime
+            let memoized = warm.submit(&req).unwrap(); // served from cache
+            let recomputed = cold.submit(&req).unwrap();
+            if fingerprint(&memoized) != fingerprint(&recomputed) {
+                let (w, c) = (fingerprint(&memoized), fingerprint(&recomputed));
+                eprintln!("mismatch for {dims:?}:\n  warm {w}\n  cold {c}");
+                return false;
+            }
+        }
+        true
+    });
+    // the warm side really served from cache (one hit per kind per case)
+    assert!(warm.metrics().sim_memo_hits.load(Ordering::Relaxed) >= 40);
+}
+
+/// The same stream twice through one service: second pass all hits, and
+/// the full response set (including hierarchical per-level LoadProfiles)
+/// matches the first pass bit for bit.
+#[test]
+fn warm_pass_matches_cold_pass_on_hierarchical_machine() {
+    use stencilcache::cache::MachineModel;
+    let config = PlannerConfig { machine: MachineModel::r10000_full(), ..PlannerConfig::default() };
+    let svc = Service::new(config);
+    let stream: Vec<StencilRequest> = [[20usize, 20, 20], [16, 18, 22], [45, 91, 20]]
+        .iter()
+        .flat_map(|d| [star13(d, JobKind::Plan), star13(d, JobKind::Analyze)])
+        .collect();
+    // sequential passes: deterministic shard counts, quiet coordinator
+    let cold: Vec<String> = stream.iter().map(|r| fingerprint(&svc.coordinator().submit(r).unwrap())).collect();
+    let warm: Vec<String> = stream.iter().map(|r| fingerprint(&svc.coordinator().submit(r).unwrap())).collect();
+    assert_eq!(cold, warm);
+    let m = svc.coordinator().metrics();
+    assert_eq!(m.sim_memo_hits.load(Ordering::Relaxed), stream.len() as u64, "second pass must be all hits");
+    // the per-level profile really is present in the memoized reports
+    let resp = svc.coordinator().submit(&star13(&[20, 20, 20], JobKind::Analyze)).unwrap();
+    assert_eq!(resp.miss_report.unwrap().levels.levels().len(), 3);
+}
+
+/// Scan-resistance property: after a one-pass sweep of N cold shapes
+/// overflows the memo budget, every pre-sweep hot facet still hits.
+#[test]
+fn hot_set_survives_one_pass_scan() {
+    let mut c = Coordinator::analysis_only(PlannerConfig::default());
+    c.configure_memo(Some(16 * 1024));
+    let svc = Service::over(c);
+    let hot = replay::hot_shapes(6);
+    // three warm passes: every hot facet ends with freq ≥ 2, past the
+    // S3-FIFO promotion bar
+    for _ in 0..3 {
+        svc.prefill(&hot, 1);
+    }
+    let m = svc.coordinator().metrics();
+
+    // one-pass sweep of 40 never-seen shapes (sequential: a real sweep)
+    for dims in replay::scan_shapes(200, 40) {
+        svc.coordinator().submit(&star13(&dims, JobKind::Analyze)).unwrap();
+    }
+    assert!(m.memo_evictions.load(Ordering::Relaxed) > 0, "the sweep must overflow the 16 KiB budget");
+
+    // every pre-sweep hot shape still hits, on both facets
+    let misses_before = m.sim_memo_misses.load(Ordering::Relaxed);
+    let hits_before = m.sim_memo_hits.load(Ordering::Relaxed);
+    for dims in &hot {
+        svc.coordinator().submit(&star13(dims, JobKind::Plan)).unwrap();
+        svc.coordinator().submit(&star13(dims, JobKind::Analyze)).unwrap();
+    }
+    assert_eq!(m.sim_memo_misses.load(Ordering::Relaxed), misses_before, "scan evicted part of the hot set");
+    assert_eq!(m.sim_memo_hits.load(Ordering::Relaxed), hits_before + 2 * hot.len() as u64);
+}
+
+/// The ISSUE acceptance bar: a deterministic Zipf(8 hot shapes)+scan
+/// trace of ≥ 500 Plan/Analyze requests reaches ≥ 80% memo hit rate and
+/// keeps the hot set resident across the scan.
+#[test]
+fn replay_acceptance_hit_rate_and_retention() {
+    let out = replay::run(&ReplayConfig::paper(false));
+    assert!(out.total_requests >= 500, "trace too short: {}", out.total_requests);
+    assert!(out.hit_rate() >= 0.8, "hit rate {:.3} < 0.8\n{}", out.hit_rate(), out.table.to_text());
+    assert!(out.hot_set_retained(), "{} hot misses after the scan\n{}", out.hot_misses_after_scan, out.table.to_text());
+    // phases: pre-scan hot traffic is all hits, the scan is all misses
+    assert_eq!(out.phases[0].hits, out.phases[0].requests);
+    assert_eq!(out.phases[1].hits, 0);
+    assert_eq!(out.phases[2].hits, out.phases[2].requests);
+}
+
+/// Execute reuses the memoized plan but always recomputes numerics — and
+/// the numeric result is unchanged by the cache hit.
+#[test]
+fn execute_after_analyze_reuses_plan_and_recomputes() {
+    let warm = Coordinator::analysis_only(PlannerConfig::default());
+    let cold = cold_coordinator();
+    let dims = [16usize, 16, 16];
+    let _ = warm.submit(&star13(&dims, JobKind::Analyze)).unwrap();
+    let warm_exec = warm.submit(&star13(&dims, JobKind::Execute)).unwrap();
+    let cold_exec = cold.submit(&star13(&dims, JobKind::Execute)).unwrap();
+    assert_eq!(warm.metrics().planned.load(Ordering::Relaxed), 1, "Execute must reuse the cached plan");
+    assert_eq!(warm.metrics().native_executions.load(Ordering::Relaxed), 1, "Execute must still run numerics");
+    assert_eq!(fingerprint(&warm_exec), fingerprint(&cold_exec));
+}
+
+/// Mixed batched traffic through Service::serve: memoization must not
+/// perturb responses vs a memo-less coordinator (order-preserving,
+/// failure-isolating serve contract unchanged).
+#[test]
+fn batched_serve_with_memo_matches_cold_responses() {
+    let warm_svc = Service::new(PlannerConfig::default());
+    let cold = cold_coordinator();
+    let mut reqs: Vec<StencilRequest> = Vec::new();
+    for n in [14usize, 18, 14, 22, 18, 14] {
+        reqs.push(star13(&[n, n, n], JobKind::Analyze));
+        reqs.push(star13(&[n, n, n], JobKind::Plan));
+    }
+    let invalid =
+        StencilRequest { dims: vec![0, 4], stencil: StencilSpec::Star { r: 1 }, rhs_arrays: 1, kind: JobKind::Plan };
+    reqs.push(invalid);
+    let batch = warm_svc.serve(&reqs);
+    assert_eq!(batch.len(), reqs.len());
+    assert!(batch.last().unwrap().is_err(), "invalid request must still fail cleanly");
+    for (req, resp) in reqs.iter().zip(&batch).take(reqs.len() - 1) {
+        let resp = resp.as_ref().unwrap();
+        assert_eq!(fingerprint(resp), fingerprint(&cold.submit(req).unwrap()));
+    }
+}
