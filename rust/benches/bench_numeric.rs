@@ -4,17 +4,25 @@
 //! on whatever this machine is). Also times the sharded apply and the
 //! coordinator's native solve path end-to-end.
 //!
-//! Set STENCILCACHE_BENCH_QUICK=1 for a smoke run.
+//! Set STENCILCACHE_BENCH_QUICK=1 for a smoke run. Set
+//! STENCILCACHE_BENCH_JSON=<path> to also write a machine-readable snapshot
+//! (the file CI's perf-smoke job diffs against the committed
+//! BENCH_NUMERIC.json); add STENCILCACHE_BENCH_PROVISIONAL=1 to tag the
+//! wall-clock entries report-only for cross-machine baselines.
 
-use stencilcache::cache::CacheParams;
-use stencilcache::coordinator::{Coordinator, JobKind, PlannerConfig, StencilRequest, StencilSpec};
+use stencilcache::cache::{CacheParams, MachineModel};
+use stencilcache::coordinator::{
+    choose_time_tile, temporal_solve_traffic_wpp, Coordinator, JobKind, PlannerConfig, StencilRequest, StencilSpec,
+    CLASSIC_SOLVE_TRAFFIC_WPP,
+};
 use stencilcache::engine;
 use stencilcache::grid::GridDesc;
 use stencilcache::lattice::InterferenceLattice;
-use stencilcache::solver;
+use stencilcache::solver::{self, NativeBackend, NumericBackend, NumericJob};
 use stencilcache::stencil::Stencil;
 use stencilcache::traversal;
-use stencilcache::util::bench::Bencher;
+use stencilcache::util::bench::{self, Bencher};
+use stencilcache::util::json::Json;
 use stencilcache::util::threadpool::ThreadPool;
 
 fn main() {
@@ -70,4 +78,91 @@ fn main() {
     b.bench_items("coordinator/native_solve_64^3_x3steps", 3.0 * 64.0 * 64.0 * 64.0, || {
         coord.submit(&solve).unwrap()
     });
+
+    // Multi-step solve at the pinned 128³ size: the classic two-sweep loop
+    // (apply into q, then axpy) vs the temporal path — fused k=1 (one pass
+    // over memory per step, no q array) and the halo-deep depth the
+    // r10000-full planner picks. Wall-clock face of the §6 temporal story.
+    let steps = 5usize;
+    let solve_items = steps as f64 * points;
+    let backend = NativeBackend::new(&pool);
+    let dims = [n, n, n];
+    let job_classic = NumericJob {
+        dims: &dims,
+        grid: &grid,
+        stencil: &stencil,
+        traversal: &natural,
+        shards,
+        seed: 1,
+        temporal: None,
+    };
+    b.bench_items(&format!("solve_{n}^3_star13_x{steps}/classic_single_step"), solve_items, || {
+        backend.solve(&job_classic, steps).unwrap().result_norm
+    });
+
+    // fused k=1: whole interior, last dim split across shards (the tile the
+    // coordinator builds when the planner degrades the depth to 1)
+    let interior: Vec<usize> = grid.dims().iter().map(|&d| d.saturating_sub(2 * r).max(1)).collect();
+    let mut fused_tile = interior.clone();
+    let last = fused_tile.len() - 1;
+    fused_tile[last] = fused_tile[last].div_ceil(shards.max(1));
+    let fused = traversal::temporal_stream(&grid, r, &fused_tile, 1);
+    let job_fused = NumericJob {
+        dims: &dims,
+        grid: &grid,
+        stencil: &stencil,
+        traversal: &natural,
+        shards,
+        seed: 1,
+        temporal: Some(&fused),
+    };
+    b.bench_items(&format!("solve_{n}^3_star13_x{steps}/temporal_fused_k1"), solve_items, || {
+        backend.solve(&job_fused, steps).unwrap().result_norm
+    });
+
+    // halo-deep depth from the r10000-full machine model (k=5 at 128³)
+    let machine = MachineModel::preset("r10000-full").expect("known preset");
+    let (k_deep, deep_tile) = choose_time_tile(&machine, &grid, r);
+    assert!(k_deep > 1, "r10000-full must pick a halo-deep tile at 128^3");
+    let deep = traversal::temporal_stream(&grid, r, &deep_tile, k_deep);
+    let job_deep = NumericJob {
+        dims: &dims,
+        grid: &grid,
+        stencil: &stencil,
+        traversal: &natural,
+        shards,
+        seed: 1,
+        temporal: Some(&deep),
+    };
+    b.bench_items(&format!("solve_{n}^3_star13_x{steps}/temporal_k{k_deep}_r10000full"), solve_items, || {
+        backend.solve(&job_deep, steps).unwrap().result_norm
+    });
+
+    // Deterministic traffic-model entries (words moved between cache and
+    // memory per point per step). Machine-independent by construction —
+    // canonical tiles, not the shard-split ones — so CI hard-gates them:
+    // any increase is a planner/model regression, never noise.
+    let wpp_fused = temporal_solve_traffic_wpp(&grid, r, 1, &interior);
+    let wpp_deep = temporal_solve_traffic_wpp(&grid, r, k_deep, &deep_tile);
+    let model_entry = |name: String, wpp: f64| {
+        let mut o = Json::obj();
+        o.set("name", name).set("words_per_point", wpp);
+        o
+    };
+    let extra = vec![
+        model_entry(format!("model/solve_traffic_wpp_{n}^3_star13/classic"), CLASSIC_SOLVE_TRAFFIC_WPP),
+        model_entry(format!("model/solve_traffic_wpp_{n}^3_star13/temporal_fused_k1"), wpp_fused),
+        model_entry(format!("model/solve_traffic_wpp_{n}^3_star13/temporal_k{k_deep}_r10000full"), wpp_deep),
+    ];
+    println!(
+        "modelled solve traffic (words/pt/step): classic {CLASSIC_SOLVE_TRAFFIC_WPP:.3}, \
+         fused k=1 {wpp_fused:.3}, k={k_deep} halo-deep {wpp_deep:.3}"
+    );
+
+    if let Some(path) = bench::snapshot_path_from_env() {
+        let provisional = std::env::var("STENCILCACHE_BENCH_PROVISIONAL").is_ok();
+        let snap = b.snapshot(provisional, extra);
+        bench::write_snapshot(&path, &snap).expect("write bench snapshot");
+        println!("wrote bench snapshot to {path}");
+    }
 }

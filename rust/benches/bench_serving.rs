@@ -10,9 +10,14 @@
 //!   one-pass sweep neither evicts the hot set nor drags hot throughput
 //!   down (S3-FIFO's scan resistance on the serving path).
 
+//!
+//! Set STENCILCACHE_BENCH_JSON=<path> to write a machine-readable snapshot
+//! (diffed against the committed BENCH_SERVING.json by CI's perf-smoke job);
+//! STENCILCACHE_BENCH_PROVISIONAL=1 tags wall-clock entries report-only.
+
 use stencilcache::coordinator::{Coordinator, JobKind, PlannerConfig, StencilRequest, StencilSpec};
 use stencilcache::experiments::replay;
-use stencilcache::util::bench::Bencher;
+use stencilcache::util::bench::{self, Bencher};
 use stencilcache::util::rng::Rng;
 use std::cell::Cell;
 
@@ -60,5 +65,12 @@ fn main() {
             100.0 * s.counters.hit_rate(),
             s.counters.ghost_readmits
         );
+    }
+
+    if let Some(path) = bench::snapshot_path_from_env() {
+        let provisional = std::env::var("STENCILCACHE_BENCH_PROVISIONAL").is_ok();
+        let snap = b.snapshot(provisional, Vec::new());
+        bench::write_snapshot(&path, &snap).expect("write bench snapshot");
+        println!("wrote bench snapshot to {path}");
     }
 }

@@ -42,7 +42,10 @@ mod service;
 pub use batcher::{group_by_shape, schedule, Batch, BatchKey};
 pub use memo::{entry_bytes, CachedValue, Facet, MemoCounters, MemoSnapshot, RequestKey, S3Fifo, DEFAULT_MEMO_BYTES};
 pub use metrics::Metrics;
-pub use planner::{build_traversal, plan, Plan, PlannerConfig, TraversalChoice, MAX_SHARDS, SHARD_GRAIN_POINTS};
+pub use planner::{
+    build_traversal, choose_time_tile, plan, temporal_solve_traffic_wpp, Plan, PlannerConfig, TraversalChoice,
+    CLASSIC_SOLVE_TRAFFIC_WPP, MAX_SHARDS, MAX_TIME_TILE, SHARD_GRAIN_POINTS,
+};
 pub use service::{Service, Ticket};
 
 pub use crate::solver::{deterministic_input, SolveStep};
@@ -486,7 +489,34 @@ impl Coordinator {
             Some(rt) => Box::new(PjrtBackend::new(rt)),
             None => Box::new(NativeBackend::new(&self.pool)),
         };
-        let job = NumericJob { dims: &req.dims, grid: &grid, stencil, traversal: order.as_ref(), shards, seed };
+        // Temporal traversal for native Solve jobs (DESIGN.md §2.6): tile
+        // depth and shape from the plan. With k = 1 the *fused* single-pass
+        // update still replaces the classic apply + axpy two-sweep loop
+        // (no q traffic, one sweep), tiled along the last dim so shards
+        // keep their parallelism; Execute and PJRT jobs stay classic.
+        let temporal = if steps.is_some() && pjrt.is_none() && grid.ndim() <= traversal::MAX_STREAM_DIMS {
+            let r = stencil.radius();
+            let tile = if plan.time_tile > 1 {
+                plan.time_tile_dims.clone()
+            } else {
+                let mut t: Vec<usize> = grid.dims().iter().map(|&n| n.saturating_sub(2 * r).max(1)).collect();
+                let last = t.len() - 1;
+                t[last] = t[last].div_ceil(shards.max(1));
+                t
+            };
+            Some(traversal::temporal_stream(&grid, r, &tile, plan.time_tile))
+        } else {
+            None
+        };
+        let job = NumericJob {
+            dims: &req.dims,
+            grid: &grid,
+            stencil,
+            traversal: order.as_ref(),
+            shards,
+            seed,
+            temporal: temporal.as_ref(),
+        };
         let out = match steps {
             Some(n) => backend.solve(&job, n)?,
             None => backend.execute(&job)?,

@@ -63,6 +63,15 @@ pub struct Plan {
     pub lower_bound: f64,
     /// Eq 12 prediction.
     pub upper_bound: f64,
+    /// Timesteps per tile visit for multi-step Solve jobs (temporal
+    /// blocking, DESIGN.md §2.6): `1` when a halo-deep tile cannot fit the
+    /// machine's scratch budget — then the solve falls back to the fused
+    /// single-step pass, which has no redundancy.
+    pub time_tile: usize,
+    /// Owned tile extents backing `time_tile` (empty when `time_tile == 1`:
+    /// the fused pass needs no fixed tile shape and the coordinator picks
+    /// shard-parallel tiles instead).
+    pub time_tile_dims: Vec<usize>,
 }
 
 /// Planner configuration.
@@ -92,6 +101,141 @@ pub const SHARD_GRAIN_POINTS: u64 = 1 << 21;
 /// Hard cap on recommended shards (the coordinator further clamps to its
 /// worker count).
 pub const MAX_SHARDS: usize = 64;
+
+/// Deepest time tile the planner will consider. Past this the halo
+/// redundancy (`2kr` extra layers per axis) erodes the traffic win faster
+/// than the amortization grows it.
+pub const MAX_TIME_TILE: usize = 8;
+
+/// Modelled main-memory traffic of one *classic* solve step, in words per
+/// interior point: the apply sweep reads `u` and writes `q` (2 words), the
+/// axpy/norm sweep reads both and rewrites `u` (3 words).
+pub const CLASSIC_SOLVE_TRAFFIC_WPP: f64 = 5.0;
+
+/// Choose the time-tile depth `k` and owned tile extents for a multi-step
+/// solve over `grid`, from the machine's cache capacities (the §6 criterion
+/// extended in time; DESIGN.md §2.6).
+///
+/// A depth-`k` tile needs a scratch box of `tile + 2kr` per axis to be
+/// cache-resident — two of them (ping-pong), so the budget is half the
+/// effective capacity (L2 when the machine has one, else L1). Dim 0 is
+/// never cut (lines stay contiguous); outer dims get uniform box extents
+/// `⌊rem^(1/left)⌋`, each either uncut (when the full extent fits) or cut
+/// with the owned part at least as large as the halo (`target ≥ 2·2kr`) so
+/// redundant halo work cannot exceed useful work. The deepest feasible
+/// `k ≤ MAX_TIME_TILE` wins; `(1, [])` means temporal blocking does not
+/// pay and the solver should use the fused single-step pass.
+pub fn choose_time_tile(machine: &MachineModel, grid: &GridDesc, r: usize) -> (usize, Vec<usize>) {
+    let dims = grid.dims();
+    let d = dims.len();
+    if d < 2 || r == 0 {
+        return (1, Vec::new());
+    }
+    let e: Vec<usize> = dims.iter().map(|&n| n.saturating_sub(2 * r)).collect();
+    if e.iter().any(|&x| x == 0) {
+        return (1, Vec::new());
+    }
+    let capacity = machine.l2.as_ref().map_or(machine.l1.size_words(), |c| c.size_words());
+    let budget = capacity / 2; // two ping-pong scratch buffers
+    for k in (2..=MAX_TIME_TILE).rev() {
+        let halo = 2 * k * r;
+        let box0 = dims[0].min(e[0] + halo);
+        if box0 == 0 || budget < box0 {
+            continue;
+        }
+        let mut rem = budget / box0;
+        let mut tiles = vec![e[0]];
+        let mut left = d - 1;
+        let mut ok = true;
+        for i in 1..d {
+            if rem == 0 {
+                ok = false;
+                break;
+            }
+            let target = iroot(rem, left);
+            let full = dims[i].min(e[i] + halo);
+            if target >= full {
+                tiles.push(e[i]);
+                rem /= full;
+            } else if target >= 2 * halo {
+                tiles.push(target - halo);
+                rem /= target;
+            } else {
+                ok = false;
+                break;
+            }
+            left -= 1;
+        }
+        if ok {
+            return (k, tiles);
+        }
+    }
+    (1, Vec::new())
+}
+
+/// Largest `t` with `tⁿ ≤ x` (exact integer root; the float seed is only a
+/// starting guess).
+fn iroot(x: usize, n: usize) -> usize {
+    if n <= 1 {
+        return x;
+    }
+    let fits = |t: usize| (t as u128).pow(n as u32) <= x as u128;
+    let mut t = (x as f64).powf(1.0 / n as f64).floor() as usize;
+    while fits(t + 1) {
+        t += 1;
+    }
+    while t > 0 && !fits(t) {
+        t -= 1;
+    }
+    t
+}
+
+/// Modelled main-memory traffic of one *time-tiled* solve step, in words
+/// per interior point per timestep — the deterministic counterpart of
+/// [`CLASSIC_SOLVE_TRAFFIC_WPP`], and the metric the committed
+/// `BENCH_NUMERIC.json` snapshot gates on (machine-independent, so CI can
+/// enforce it exactly).
+///
+/// Per tile and superstep the words crossing main memory are: the halo-deep
+/// box read once (step 1 reads `u_in` directly), the owned words written
+/// once into `u_out`, and — for `k > 1` — the box's Dirichlet shell seeded
+/// into both scratch buffers. Everything else lives in cache-resident
+/// scratch. Summed over tiles, divided by `k` timesteps of interior points.
+pub fn temporal_solve_traffic_wpp(grid: &GridDesc, r: usize, k: usize, tile: &[usize]) -> f64 {
+    let dims = grid.dims();
+    let d = dims.len();
+    assert_eq!(tile.len(), d);
+    assert!(k >= 1);
+    let lo: Vec<i64> = vec![r as i64; d];
+    let hi: Vec<i64> = dims.iter().map(|&n| n as i64 - r as i64).collect();
+    let interior: f64 = (0..d).map(|i| (hi[i] - lo[i]).max(0) as f64).product();
+    if interior == 0.0 {
+        return 0.0;
+    }
+    let tiles_along: Vec<usize> = (0..d).map(|i| ((hi[i] - lo[i]) as usize).div_ceil(tile[i])).collect();
+    let h = (k * r) as i64;
+    let mut traffic = 0.0;
+    for t in 0..tiles_along.iter().product::<usize>() {
+        let mut idx = t;
+        let (mut box_w, mut owned_w, mut inner_w) = (1.0, 1.0, 1.0);
+        for i in 0..d {
+            let ti = (idx % tiles_along[i]) as i64;
+            idx /= tiles_along[i];
+            let o_lo = lo[i] + ti * tile[i] as i64;
+            let o_hi = (o_lo + tile[i] as i64).min(hi[i]);
+            let b_lo = (o_lo - h).max(0);
+            let b_hi = (o_hi + h).min(dims[i] as i64);
+            owned_w *= (o_hi - o_lo) as f64;
+            box_w *= (b_hi - b_lo) as f64;
+            inner_w *= (b_hi.min(hi[i]) - b_lo.max(lo[i])).max(0) as f64;
+        }
+        traffic += box_w + owned_w;
+        if k > 1 {
+            traffic += 2.0 * (box_w - inner_w); // Dirichlet shell, seeded into both scratch buffers
+        }
+    }
+    traffic / (interior * k as f64)
+}
 
 /// Build the streaming traversal for `choice` over the (padded) grid — the
 /// single construction point shared by the coordinator's Analyze path and
@@ -162,6 +306,7 @@ pub fn plan(config: &PlannerConfig, dims: &[usize], stencil: &Stencil, p: usize)
 
     let interior = padded.interior_points(stencil.radius());
     let shards = (interior.div_ceil(SHARD_GRAIN_POINTS) as usize).clamp(1, MAX_SHARDS);
+    let (time_tile, time_tile_dims) = choose_time_tile(&config.machine, &padded, stencil.radius());
 
     Plan {
         dims: dims.to_vec(),
@@ -176,6 +321,8 @@ pub fn plan(config: &PlannerConfig, dims: &[usize], stencil: &Stencil, p: usize)
         eccentricity,
         lower_bound,
         upper_bound,
+        time_tile,
+        time_tile_dims,
     }
 }
 
@@ -301,6 +448,53 @@ mod tests {
         assert_eq!(p.was_tlb_unfavorable, Some(true));
         assert!(p.pad.iter().any(|&x| x > 0), "{p:?}");
         assert!(p.page_min_l1.is_none() || p.page_min_l1.unwrap() >= 5, "{p:?}");
+    }
+
+    #[test]
+    fn time_tile_degrades_to_one_when_cache_cannot_hold_a_halo_deep_tile() {
+        // L1-only machine: 4096 words, budget 2048. Even k = 2 needs a cut
+        // outer dim of 2·(2·2·2) = 16 box words against a target of at most
+        // ⌊√(2048/box0)⌋ — infeasible at every size below.
+        for dims in [vec![128usize, 128, 128], vec![32, 32, 32], vec![20, 20, 20]] {
+            let p = plan(&cfg(), &dims, &Stencil::star13(), 1);
+            assert_eq!(p.time_tile, 1, "{dims:?}");
+            assert!(p.time_tile_dims.is_empty(), "{dims:?}");
+        }
+        // ... and trivially for 1-D / empty-interior grids on any machine.
+        let full = PlannerConfig { machine: MachineModel::r10000_full(), ..cfg() };
+        assert_eq!(plan(&full, &[4096], &Stencil::star(1, 1), 1).time_tile, 1);
+        assert_eq!(choose_time_tile(&MachineModel::r10000_full(), &GridDesc::new(&[4, 4]), 2), (1, Vec::new()));
+    }
+
+    #[test]
+    fn time_tile_engages_when_l2_holds_the_tile() {
+        let c = PlannerConfig { machine: MachineModel::r10000_full(), ..cfg() };
+        let p = plan(&c, &[128, 128, 128], &Stencil::star13(), 1);
+        assert_eq!((p.time_tile, p.time_tile_dims.as_slice()), (5, &[124, 25, 25][..]));
+        let q = plan(&c, &[256, 256, 256], &Stencil::star13(), 1);
+        assert_eq!((q.time_tile, q.time_tile_dims.as_slice()), (4, &[252, 16, 16][..]));
+        // small grids go maximally deep (whole grid fits: tiles uncut)
+        let s = plan(&c, &[32, 32, 32], &Stencil::star13(), 1);
+        assert_eq!((s.time_tile, s.time_tile_dims.as_slice()), (8, &[28, 28, 28][..]));
+        // the chosen box really fits the scratch budget
+        for pl in [&p, &q, &s] {
+            let halo = 2 * pl.time_tile * 2;
+            let boxw: usize = pl.dims.iter().zip(&pl.time_tile_dims).map(|(&n, &t)| n.min(t + halo)).product();
+            assert!(boxw <= 512 * 1024 / 2, "box {boxw} exceeds the ping-pong budget");
+        }
+    }
+
+    #[test]
+    fn temporal_traffic_model_beats_classic() {
+        let g = GridDesc::new(&[128, 128, 128]);
+        // fused single-step pass: ~2 words/point (read everything once,
+        // write the interior once) — already well under classic's 5.
+        let fused = temporal_solve_traffic_wpp(&g, 2, 1, &[124, 124, 124]);
+        assert!(fused > 1.9 && fused < 2.3, "fused wpp = {fused}");
+        // deep tile: the box redundancy is amortized over k steps
+        let deep = temporal_solve_traffic_wpp(&g, 2, 5, &[124, 25, 25]);
+        assert!(deep < fused, "deep wpp = {deep} ≥ fused {fused}");
+        assert!(deep < CLASSIC_SOLVE_TRAFFIC_WPP / 3.0, "deep wpp = {deep}");
     }
 
     #[test]

@@ -19,7 +19,7 @@
 use crate::cache::{CacheSim, CacheStats, LoadProfile, MachineModel, MemoryModel};
 use crate::grid::{GridDesc, MultiArrayLayout};
 use crate::stencil::Stencil;
-use crate::traversal::{shard_ranges, Traversal};
+use crate::traversal::{shard_ranges, TemporalTraversal, Traversal, MAX_STREAM_DIMS};
 use crate::util::threadpool::ThreadPool;
 use std::ops::Range;
 
@@ -322,6 +322,305 @@ pub fn apply_sharded<T: Traversal + ?Sized>(
             unsafe { qp.0.add(base as usize).write(acc) };
         });
     });
+}
+
+// ---------------------------------------------------------------------------
+// Temporal blocking (time-tiled solve step)
+// ---------------------------------------------------------------------------
+
+/// Advance the whole field `k` timesteps of the damped explicit iteration
+/// `u ← u + α·Ku` in one pass over main memory: for each owned tile of
+/// `tt`, step a halo-deep box `k` times in ping-pong scratch buffers
+/// (overlapped temporal blocking — the `j`-th step's valid region shrinks
+/// by `r` per side, so tiles are fully independent and the existing
+/// disjoint-pencil sharding applies unchanged), then write the tile's owned
+/// words of timestep `k` straight into `u_out`.
+///
+/// `u_out` must enter holding the field's **boundary words** (callers
+/// double-buffer: clone the initial field once, then swap after every
+/// superstep) — the Dirichlet update never touches them. With `k = 1` the
+/// scratch degenerates away entirely and this is the *fused* single-pass
+/// update (no `q` array, no second axpy pass — and no halo redundancy).
+///
+/// Returns `k` pairs `(Σ u'², Σ (Ku)²)`. Every per-term product is the
+/// identical value the classic `apply` + axpy path computes (same
+/// [`fold_point`] coefficient order onto the same operand values, same
+/// `u + α·acc` update expression — so the resulting **field is bitwise
+/// equal** to `k` sequential single steps, by induction over steps).
+/// Boundary words contribute zero to both sums on the classic path, so
+/// only the norms' **summation order** differs (tile-major here,
+/// chunk-major there) — the documented fp tolerance; see DESIGN.md §2.6.
+///
+/// ## Why concurrent tiles are safe
+///
+/// Within one superstep every worker reads only `u_in` (shared) plus its
+/// own scratch, and writes only the owned words of its tiles in `u_out`;
+/// owned tiles partition the K-interior (property-tested in
+/// `traversal::temporal`), so no word is ever written by two workers.
+#[allow(clippy::too_many_arguments)]
+pub fn step_time_tiled(
+    tt: &TemporalTraversal,
+    grid: &GridDesc,
+    stencil: &Stencil,
+    u_in: &[f64],
+    u_out: &mut [f64],
+    alpha: f64,
+    k: usize,
+    pool: &ThreadPool,
+    shards: usize,
+) -> Vec<(f64, f64)> {
+    check_numeric_args(tt, grid, stencil, u_in, u_out);
+    assert!(k >= 1 && k <= tt.time_tile(), "k = {k} outside 1..={}", tt.time_tile());
+    assert_eq!(tt.radius(), stencil.radius(), "traversal halo must match the stencil radius");
+    let ranges = shard_ranges(tt.num_pencils(), shards);
+    if ranges.is_empty() {
+        return vec![(0.0, 0.0); k];
+    }
+    let gdeltas: Vec<i64> = stencil.offsets().iter().map(|o| grid.delta_of(o)).collect();
+    let ctx = TileCtx { tt, grid, stencil, coeffs: stencil.coeffs(), gdeltas: &gdeltas, alpha, k };
+    // Raw-pointer sink, same pattern as `apply_sharded`; SAFETY: the
+    // disjointness argument above — each owned word of u_out is written by
+    // exactly one worker, and u_in/u_out are distinct buffers.
+    struct OutPtr(*mut f64);
+    unsafe impl Sync for OutPtr {}
+    let op = OutPtr(u_out.as_mut_ptr());
+    let op = &op;
+    let worker = |i: usize| {
+        let mut acc = vec![(0.0f64, 0.0f64); k];
+        let (mut a, mut b) = (Vec::new(), Vec::new());
+        for t in ranges[i].clone() {
+            advance_tile(&ctx, t, u_in, op.0, &mut a, &mut b, &mut acc);
+        }
+        acc
+    };
+    let partials = if ranges.len() == 1 { vec![worker(0)] } else { pool.scope_map(ranges.len(), worker) };
+    let mut out = vec![(0.0, 0.0); k];
+    for p in partials {
+        for (o, v) in out.iter_mut().zip(p) {
+            o.0 += v.0;
+            o.1 += v.1;
+        }
+    }
+    out
+}
+
+/// Immutable per-sweep context shared by every tile of one time-tiled step.
+struct TileCtx<'a> {
+    tt: &'a TemporalTraversal,
+    grid: &'a GridDesc,
+    stencil: &'a Stencil,
+    coeffs: &'a [f64],
+    /// Stencil deltas in the global storage layout (step-1 reads).
+    gdeltas: &'a [i64],
+    alpha: f64,
+    k: usize,
+}
+
+/// Advance one owned tile `k` steps: seed the scratch boundary shell, run
+/// the shrinking-valid-region ping-pong, write owned step-`k` words to
+/// `out`, and accumulate per-step norms into `acc`.
+///
+/// Validity induction (the halo math): step `s` computes the region
+/// `V_s = clamp(T ± (k−s)·r, interior)`. Its reads lie in `V_s ± r`, and
+/// every such point is either in `V_{s−1}` (written by the previous step)
+/// or a *boundary* word of the box — which the Dirichlet update holds
+/// constant, so the seeded time-0 copy is correct at every step. Step 1
+/// reads `u_in` directly (no box copy); step `k` has `V_k = T` exactly.
+fn advance_tile(
+    ctx: &TileCtx<'_>,
+    t: usize,
+    u_in: &[f64],
+    out: *mut f64,
+    a: &mut Vec<f64>,
+    b: &mut Vec<f64>,
+    acc: &mut [(f64, f64)],
+) {
+    let d = ctx.grid.ndim();
+    let dims = ctx.grid.dims();
+    let gs = ctx.grid.strides();
+    let interior = ctx.tt.interior();
+    let (k, r) = (ctx.k, ctx.tt.radius() as i64);
+    let tr = ctx.tt.tile_ranges(t);
+    let h = k as i64 * r;
+    // halo-deep box around the owned tile, clipped to the full grid
+    let mut blo = [0i64; MAX_STREAM_DIMS];
+    let mut be = [0i64; MAX_STREAM_DIMS];
+    let mut ls = [0i64; MAX_STREAM_DIMS];
+    let mut vol = 1i64;
+    for i in 0..d {
+        blo[i] = (tr[i].start - h).max(0);
+        let bhi = (tr[i].end + h).min(dims[i] as i64);
+        be[i] = bhi - blo[i];
+        ls[i] = vol;
+        vol *= be[i];
+    }
+    let ldeltas: Vec<i64> = if k > 1 {
+        if a.len() < vol as usize {
+            a.resize(vol as usize, 0.0);
+        }
+        if b.len() < vol as usize {
+            b.resize(vol as usize, 0.0);
+        }
+        seed_boundary_shell(ctx, &blo[..d], &be[..d], &ls[..d], u_in, a, b);
+        ctx.stencil.offsets().iter().map(|o| o.iter().zip(&ls[..d]).map(|(&c, &st)| c * st).sum()).collect()
+    } else {
+        Vec::new()
+    };
+    for s in 1..=k {
+        let g2 = (k - s) as i64 * r;
+        let mut vlo = [0i64; MAX_STREAM_DIMS];
+        let mut vhi = [0i64; MAX_STREAM_DIMS];
+        for i in 0..d {
+            vlo[i] = (tr[i].start - g2).max(interior[i].start);
+            vhi[i] = (tr[i].end + g2).min(interior[i].end);
+        }
+        let (first, last, odd) = (s == 1, s == k, s % 2 == 1);
+        // ping-pong parity: odd steps write b, even steps write a; reads
+        // come from the opposite buffer (step 1 reads u_in directly, step
+        // k writes u_out directly).
+        let dst: *mut f64 = if last { out } else if odd { b.as_mut_ptr() } else { a.as_mut_ptr() };
+        let src: &[f64] = if first { u_in } else if odd { &a[..] } else { &b[..] };
+        let deltas: &[i64] = if first { ctx.gdeltas } else { &ldeltas };
+        let n0 = (vhi[0] - vlo[0]) as usize;
+        // the owned dim-0 segment of each line (T ⊆ V_s in every dim)
+        let (o_lo, o_hi) = ((tr[0].start - vlo[0]) as usize, (tr[0].end - vlo[0]) as usize);
+        let mut xo = [0i64; MAX_STREAM_DIMS];
+        xo[1..d].copy_from_slice(&vlo[1..d]);
+        'lines: loop {
+            let mut in_t = true;
+            let mut gb = vlo[0] * gs[0] as i64;
+            let mut lb = vlo[0] - blo[0];
+            for i in 1..d {
+                in_t &= tr[i].start <= xo[i] && xo[i] < tr[i].end;
+                gb += xo[i] * gs[i] as i64;
+                lb += (xo[i] - blo[i]) * ls[i];
+            }
+            let sbase = if first { gb } else { lb };
+            let obase = if last { gb } else { lb };
+            let (olo, ohi) = if in_t { (o_lo, o_hi) } else { (n0, n0) };
+            // SAFETY: dst is either u_out (disjoint owned writes across
+            // tiles) or this worker's scratch sized to the box; obase..+n0
+            // lies inside it because V_s ⊆ box (local) / storage (global).
+            unsafe {
+                let line_out = dst.add(obase as usize);
+                tile_line(ctx.coeffs, deltas, src, sbase, n0, olo, ohi, ctx.alpha, line_out, &mut acc[s - 1]);
+            }
+            let mut i = 1;
+            loop {
+                if i >= d {
+                    break 'lines;
+                }
+                xo[i] += 1;
+                if xo[i] < vhi[i] {
+                    continue 'lines;
+                }
+                xo[i] = vlo[i];
+                i += 1;
+            }
+        }
+    }
+}
+
+/// Copy the box words *outside* the K-interior (the Dirichlet shell) from
+/// `u_in` into both scratch buffers: those words are read by steps ≥ 2 but
+/// never written, and they are constant in time, so the time-0 copy is
+/// correct forever. Interior scratch words need no seeding — the validity
+/// induction shows every interior read of step `s ≥ 2` was written by step
+/// `s − 1`.
+fn seed_boundary_shell(
+    ctx: &TileCtx<'_>,
+    blo: &[i64],
+    be: &[i64],
+    ls: &[i64],
+    u_in: &[f64],
+    a: &mut [f64],
+    b: &mut [f64],
+) {
+    let d = blo.len();
+    let gs = ctx.grid.strides();
+    let interior = ctx.tt.interior();
+    let n0 = be[0] as usize;
+    let cap_l = (interior[0].start - blo[0]).clamp(0, be[0]) as usize;
+    let cap_r = (interior[0].end - blo[0]).clamp(0, be[0]) as usize;
+    let mut xo = [0i64; MAX_STREAM_DIMS];
+    for i in 1..d {
+        xo[i] = blo[i];
+    }
+    loop {
+        let mut outer_boundary = false;
+        let mut gb = blo[0] * gs[0] as i64;
+        let mut lb = 0i64;
+        for i in 1..d {
+            outer_boundary |= xo[i] < interior[i].start || xo[i] >= interior[i].end;
+            gb += xo[i] * gs[i] as i64;
+            lb += (xo[i] - blo[i]) * ls[i];
+        }
+        let (gb, lb) = (gb as usize, lb as usize);
+        if outer_boundary {
+            a[lb..lb + n0].copy_from_slice(&u_in[gb..gb + n0]);
+            b[lb..lb + n0].copy_from_slice(&u_in[gb..gb + n0]);
+        } else {
+            a[lb..lb + cap_l].copy_from_slice(&u_in[gb..gb + cap_l]);
+            b[lb..lb + cap_l].copy_from_slice(&u_in[gb..gb + cap_l]);
+            a[lb + cap_r..lb + n0].copy_from_slice(&u_in[gb + cap_r..gb + n0]);
+            b[lb + cap_r..lb + n0].copy_from_slice(&u_in[gb + cap_r..gb + n0]);
+        }
+        let mut i = 1;
+        loop {
+            if i >= d {
+                return;
+            }
+            xo[i] += 1;
+            if xo[i] < blo[i] + be[i] {
+                break;
+            }
+            xo[i] = blo[i];
+            i += 1;
+        }
+    }
+}
+
+/// One dim-0 line of a time-tiled step: `n` updated values written through
+/// `out`, folding `src` at `sbase + j` with `deltas`; norms accumulate over
+/// the owned sub-segment `[olo, ohi)` only, with the freshly computed
+/// values still in registers (per-term bitwise identical to the classic
+/// axpy-norm terms).
+///
+/// SAFETY contract: `out..out+n` must be writable and disjoint from `src`,
+/// and `sbase + deltas` must stay within `src` for all `j < n` (the
+/// caller's box/validity geometry guarantees both).
+#[inline(always)]
+#[allow(clippy::too_many_arguments)]
+unsafe fn tile_line(
+    coeffs: &[f64],
+    deltas: &[i64],
+    src: &[f64],
+    sbase: i64,
+    n: usize,
+    olo: usize,
+    ohi: usize,
+    alpha: f64,
+    out: *mut f64,
+    acc: &mut (f64, f64),
+) {
+    let (mut u2, mut r2) = (0.0, 0.0);
+    for j in 0..olo {
+        let q = fold_point(coeffs, deltas, src, sbase + j as i64);
+        out.add(j).write(src[(sbase + j as i64) as usize] + alpha * q);
+    }
+    for j in olo..ohi {
+        let q = fold_point(coeffs, deltas, src, sbase + j as i64);
+        let v = src[(sbase + j as i64) as usize] + alpha * q;
+        out.add(j).write(v);
+        u2 += v * v;
+        r2 += q * q;
+    }
+    for j in ohi..n {
+        let q = fold_point(coeffs, deltas, src, sbase + j as i64);
+        out.add(j).write(src[(sbase + j as i64) as usize] + alpha * q);
+    }
+    acc.0 += u2;
+    acc.1 += r2;
 }
 
 /// Combined mode used by tests: numeric result plus miss report in one

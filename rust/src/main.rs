@@ -19,6 +19,11 @@
 //!     replay a deterministic Zipf+scan trace through the memoizing
 //!     service; prints per-phase memo hit rates and latencies. Exits
 //!     non-zero if the memo tier never hits (CI smoke gate).
+//! stencilcache bench-gate --baseline BENCH_NUMERIC.json --current fresh.json [--tolerance 2.0]
+//!     compare a fresh bench snapshot against a committed baseline; exits
+//!     non-zero on a throughput regression beyond the tolerance factor or
+//!     any increase in a modelled words/point metric. Baseline entries
+//!     tagged "provisional" are report-only.
 //! stencilcache info
 //!     artifact + platform report
 //! ```
@@ -48,9 +53,10 @@ fn main() {
         Some("solve") => cmd_solve(&args),
         Some("serve-demo") => cmd_serve_demo(&args),
         Some("replay") => cmd_replay(&args),
+        Some("bench-gate") => cmd_bench_gate(&args),
         Some("info") => cmd_info(),
         _ => {
-            eprintln!("usage: stencilcache <analyze|experiment|solve|serve-demo|replay|info> [options]");
+            eprintln!("usage: stencilcache <analyze|experiment|solve|serve-demo|replay|bench-gate|info> [options]");
             eprintln!("       see rust/src/main.rs docs for options");
             2
         }
@@ -279,6 +285,43 @@ fn cmd_replay(args: &Args) -> i32 {
         Err(e) => {
             eprintln!("replay: {e}");
             1
+        }
+    }
+}
+
+fn cmd_bench_gate(args: &Args) -> i32 {
+    use stencilcache::util::{bench, json};
+    let run = || -> Result<bool, String> {
+        let baseline = args.get("baseline").ok_or("bench-gate requires --baseline <committed BENCH_*.json>")?;
+        let current = args.get("current").ok_or("bench-gate requires --current <fresh snapshot>")?;
+        let tolerance = args.get_f64("tolerance", 2.0)?;
+        if tolerance < 1.0 {
+            return Err("--tolerance must be >= 1.0 (it is a slowdown factor)".into());
+        }
+        let load = |path: &str| -> Result<json::Json, String> {
+            let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+            json::parse(&text).map_err(|e| format!("{path}: {e}"))
+        };
+        let rep = bench::gate(&load(baseline)?, &load(current)?, tolerance);
+        for note in &rep.notes {
+            println!("note: {note}");
+        }
+        for failure in &rep.failures {
+            eprintln!("REGRESSION: {failure}");
+        }
+        println!(
+            "bench-gate: {} failure(s), {} note(s) at tolerance {tolerance}x ({current} vs {baseline})",
+            rep.failures.len(),
+            rep.notes.len()
+        );
+        Ok(rep.passed())
+    };
+    match run() {
+        Ok(true) => 0,
+        Ok(false) => 1,
+        Err(e) => {
+            eprintln!("bench-gate: {e}");
+            2
         }
     }
 }

@@ -35,7 +35,7 @@ use crate::engine;
 use crate::grid::GridDesc;
 use crate::runtime::{HostTensor, RuntimeHandle};
 use crate::stencil::Stencil;
-use crate::traversal::{shard_ranges, Traversal};
+use crate::traversal::{shard_ranges, TemporalTraversal, Traversal};
 use crate::util::rng::Rng;
 use crate::util::threadpool::ThreadPool;
 use anyhow::{anyhow, Result};
@@ -68,6 +68,12 @@ pub struct NumericJob<'a> {
     pub shards: usize,
     /// Seed for the deterministic input field.
     pub seed: u64,
+    /// Planner-chosen temporal traversal for multi-step Solve jobs: when
+    /// set, the native backend advances `time_tile()` steps per pass over
+    /// memory via [`engine::step_time_tiled`] (DESIGN.md §2.6) instead of
+    /// the classic apply + axpy two-sweep loop. `None` — and Execute jobs
+    /// always — use the classic path. The PJRT backend ignores it.
+    pub temporal: Option<&'a TemporalTraversal>,
 }
 
 /// What a numeric backend returns.
@@ -211,6 +217,49 @@ impl<'a> NativeBackend<'a> {
     pub fn stable_alpha(stencil: &Stencil) -> f64 {
         0.8 / stencil.coeffs().iter().map(|c| c.abs()).sum::<f64>()
     }
+
+    /// Time-tiled solve body: supersteps of up to `time_tile()` timesteps,
+    /// each one pass over main memory ([`engine::step_time_tiled`]), with
+    /// the field double-buffered across supersteps (the clone is paid once
+    /// and carries the Dirichlet boundary + padding words; every owned
+    /// interior word is overwritten each superstep).
+    ///
+    /// The per-step log keeps one [`SolveStep`] per *timestep* — identical
+    /// shape to the classic path — with the superstep's wall time split
+    /// evenly across its steps (remainder on the first).
+    fn solve_time_tiled(&self, job: &NumericJob<'_>, tt: &TemporalTraversal, steps: usize) -> Result<NumericOutcome> {
+        let r = job.stencil.radius();
+        let mut u = deterministic_field(job.grid, r, job.seed);
+        let mut v = u.clone();
+        let alpha = Self::stable_alpha(job.stencil);
+        let k_max = tt.time_tile();
+        let mut log = Vec::with_capacity(steps);
+        let mut done = 0usize;
+        while done < steps {
+            let kk = (steps - done).min(k_max);
+            let t0 = Instant::now();
+            let norms =
+                engine::step_time_tiled(tt, job.grid, job.stencil, &u, &mut v, alpha, kk, self.pool, job.shards);
+            let total = t0.elapsed().as_micros() as u64;
+            std::mem::swap(&mut u, &mut v);
+            let (each, rem) = (total / kk as u64, total % kk as u64);
+            for (s, (u2, r2)) in norms.into_iter().enumerate() {
+                log.push(SolveStep {
+                    step: done + s,
+                    u_norm: u2.sqrt(),
+                    residual_norm: r2.sqrt(),
+                    micros: each + if s == 0 { rem } else { 0 },
+                });
+            }
+            done += kk;
+        }
+        let result_norm = match log.last() {
+            Some(s) => s.u_norm,
+            None => l2_norm_sharded(&u, self.pool, job.shards),
+        };
+        let micros: u64 = log.iter().map(|s| s.micros).sum();
+        Ok(NumericOutcome { result_norm, solve_log: log, micros, executions: steps as u64 })
+    }
 }
 
 impl NumericBackend for NativeBackend<'_> {
@@ -236,6 +285,11 @@ impl NumericBackend for NativeBackend<'_> {
     }
 
     fn solve(&self, job: &NumericJob<'_>, steps: usize) -> Result<NumericOutcome> {
+        if let Some(tt) = job.temporal {
+            if steps > 0 {
+                return self.solve_time_tiled(job, tt, steps);
+            }
+        }
         let r = job.stencil.radius();
         let mut u = deterministic_field(job.grid, r, job.seed);
         // q only ever holds Ku over the interior; boundary words stay zero,
@@ -370,7 +424,15 @@ mod tests {
         let t = traversal::natural_stream(&g, 1);
         let pool = ThreadPool::new(3);
         let backend = NativeBackend::new(&pool);
-        let job = NumericJob { dims: &[12, 11, 10], grid: &g, stencil: &s, traversal: &t, shards: 3, seed: 7 };
+        let job = NumericJob {
+            dims: &[12, 11, 10],
+            grid: &g,
+            stencil: &s,
+            traversal: &t,
+            shards: 3,
+            seed: 7,
+            temporal: None,
+        };
         let a = backend.execute(&job).unwrap();
         let b = backend.execute(&job).unwrap();
         assert!(a.result_norm > 0.0);
@@ -385,7 +447,15 @@ mod tests {
         let t = traversal::natural_stream(&g, 2);
         let pool = ThreadPool::new(2);
         let backend = NativeBackend::new(&pool);
-        let job = NumericJob { dims: &[14, 14, 14], grid: &g, stencil: &s, traversal: &t, shards: 2, seed: 0xBEEF };
+        let job = NumericJob {
+            dims: &[14, 14, 14],
+            grid: &g,
+            stencil: &s,
+            traversal: &t,
+            shards: 2,
+            seed: 0xBEEF,
+            temporal: None,
+        };
         let out = backend.solve(&job, 12).unwrap();
         assert_eq!(out.solve_log.len(), 12);
         assert_eq!(out.executions, 12);
@@ -406,7 +476,15 @@ mod tests {
         let t = traversal::natural_stream(&g, 1);
         let pool = ThreadPool::new(4);
         let backend = NativeBackend::new(&pool);
-        let mk = |shards| NumericJob { dims: &[40, 40, 40], grid: &g, stencil: &s, traversal: &t, shards, seed: 5 };
+        let mk = |shards| NumericJob {
+            dims: &[40, 40, 40],
+            grid: &g,
+            stencil: &s,
+            traversal: &t,
+            shards,
+            seed: 5,
+            temporal: None,
+        };
         let a = backend.solve(&mk(1), 5).unwrap();
         let b = backend.solve(&mk(4), 5).unwrap();
         for (x, y) in a.solve_log.iter().zip(&b.solve_log) {
@@ -421,7 +499,15 @@ mod tests {
         let t = traversal::natural_stream(&g, 1);
         let pool = ThreadPool::new(2);
         let backend = NativeBackend::new(&pool);
-        let job = NumericJob { dims: &[10, 10], grid: &g, stencil: &s, traversal: &t, shards: 1, seed: 9 };
+        let job = NumericJob {
+            dims: &[10, 10],
+            grid: &g,
+            stencil: &s,
+            traversal: &t,
+            shards: 1,
+            seed: 9,
+            temporal: None,
+        };
         let out = backend.solve(&job, 0).unwrap();
         assert!(out.solve_log.is_empty());
         let u = deterministic_field(&g, 1, 9);
@@ -437,8 +523,24 @@ mod tests {
         let backend = NativeBackend::new(&pool);
         let nat = traversal::natural_stream(&g, 1);
         let blk = traversal::blocked_stream(&g, 1, &[4, 4, 4]);
-        let jn = NumericJob { dims: &[16, 14, 12], grid: &g, stencil: &s, traversal: &nat, shards: 1, seed: 2 };
-        let jb = NumericJob { dims: &[16, 14, 12], grid: &g, stencil: &s, traversal: &blk, shards: 1, seed: 2 };
+        let jn = NumericJob {
+            dims: &[16, 14, 12],
+            grid: &g,
+            stencil: &s,
+            traversal: &nat,
+            shards: 1,
+            seed: 2,
+            temporal: None,
+        };
+        let jb = NumericJob {
+            dims: &[16, 14, 12],
+            grid: &g,
+            stencil: &s,
+            traversal: &blk,
+            shards: 1,
+            seed: 2,
+            temporal: None,
+        };
         let a = backend.execute(&jn).unwrap();
         let b = backend.execute(&jb).unwrap();
         assert_eq!(a.result_norm, b.result_norm);
@@ -459,6 +561,71 @@ mod tests {
         assert!((u2s - u2p).abs() < 1e-9 * (1.0 + u2s.abs()));
         assert!((r2s - r2p).abs() < 1e-9 * (1.0 + r2s.abs()));
         assert!((l2_norm_sharded(&u_par, &pool, 5) - u2s.sqrt()).abs() < 1e-9 * (1.0 + u2s.sqrt()));
+    }
+
+    #[test]
+    fn temporal_solve_matches_classic_per_step_norms() {
+        // star13 over 24³, 8 steps with k = 3 (so the last superstep is
+        // partial): the field is bitwise equal to the classic path by
+        // construction (see engine::step_time_tiled); the logged norms
+        // differ only in summation order.
+        let (g, s) = job_parts(&[24, 24, 24], 2);
+        let t = traversal::natural_stream(&g, 2);
+        let tt = traversal::temporal_stream(&g, 2, &[20, 6, 7], 3);
+        let pool = ThreadPool::new(3);
+        let backend = NativeBackend::new(&pool);
+        let dims = [24usize, 24, 24];
+        let classic = NumericJob {
+            dims: &dims,
+            grid: &g,
+            stencil: &s,
+            traversal: &t,
+            shards: 1,
+            seed: 11,
+            temporal: None,
+        };
+        let tiled = NumericJob {
+            dims: &dims,
+            grid: &g,
+            stencil: &s,
+            traversal: &t,
+            shards: 3,
+            seed: 11,
+            temporal: Some(&tt),
+        };
+        let a = backend.solve(&classic, 8).unwrap();
+        let b = backend.solve(&tiled, 8).unwrap();
+        assert_eq!(b.solve_log.len(), 8, "one SolveStep per timestep, superstep or not");
+        assert_eq!(b.executions, 8);
+        for (x, y) in a.solve_log.iter().zip(&b.solve_log) {
+            assert_eq!(x.step, y.step);
+            let du = (x.u_norm - y.u_norm).abs();
+            assert!(du < 1e-9 * (1.0 + x.u_norm), "step {}: {} vs {}", x.step, x.u_norm, y.u_norm);
+            assert!((x.residual_norm - y.residual_norm).abs() < 1e-9 * (1.0 + x.residual_norm));
+        }
+        assert!((a.result_norm - b.result_norm).abs() < 1e-9 * (1.0 + a.result_norm));
+    }
+
+    #[test]
+    fn temporal_solve_zero_steps_returns_input_norm() {
+        let (g, s) = job_parts(&[12, 12], 2);
+        let tt = traversal::temporal_stream(&g, 2, &[8, 8], 2);
+        let t = traversal::natural_stream(&g, 2);
+        let pool = ThreadPool::new(2);
+        let backend = NativeBackend::new(&pool);
+        let job = NumericJob {
+            dims: &[12, 12],
+            grid: &g,
+            stencil: &s,
+            traversal: &t,
+            shards: 1,
+            seed: 3,
+            temporal: Some(&tt),
+        };
+        let out = backend.solve(&job, 0).unwrap();
+        assert!(out.solve_log.is_empty());
+        let u = deterministic_field(&g, 2, 3);
+        assert_eq!(out.result_norm, u.iter().map(|x| x * x).sum::<f64>().sqrt());
     }
 
     #[test]

@@ -14,7 +14,10 @@
 //!   sweep the faces of the fundamental parallelepiped of a *reduced
 //!   basis* of the interference lattice along pencils (see [`fitting`]);
 //! - [`strip_stream`] — the §3 example order that attains the lower bound
-//!   when `n_1 = k·S` and associativity exceeds the stencil diameter.
+//!   when `n_1 = k·S` and associativity exceeds the stencil diameter;
+//! - [`temporal::temporal_stream`] — owned-tile decomposition for the
+//!   time-tiled solve path (k timesteps per halo-deep tile; see
+//!   [`temporal`] and `engine::step_time_tiled`).
 //!
 //! ## Streaming vs materialized
 //!
@@ -37,6 +40,7 @@
 //! simulated miss counts are directly comparable.
 
 pub mod fitting;
+pub mod temporal;
 pub mod tiled;
 
 use crate::grid::GridDesc;
@@ -46,6 +50,7 @@ pub use fitting::{
     cache_fitting, cache_fitting_for_cache, cache_fitting_stream, cache_fitting_stream_for_cache,
     cache_fitting_sweep, FittingOptions, FittingTraversal,
 };
+pub use temporal::{temporal_stream, TemporalTraversal};
 pub use tiled::{conflict_free_tile, tiled_z_sweep, tiled_z_sweep_stream};
 
 /// Maximum dimensions representable by the packed [`Order`] encoding.

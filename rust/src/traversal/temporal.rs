@@ -1,0 +1,192 @@
+//! Temporal (time-tiled) traversal: halo-deep pencil blocks advanced `k`
+//! timesteps per visit.
+//!
+//! The §4 traversals bound the traffic of *one* sweep; a multi-step solve
+//! pays that traffic once per timestep. Temporal blocking (Malas/Hager/
+//! Wellein-style overlapped tiles; see DESIGN.md §2.6) amortizes it: each
+//! tile loads a block deep enough to carry `k·r` halo layers, advances `k`
+//! steps entirely in cache-resident scratch, and only then moves on —
+//! main-memory words move once per *superstep* instead of once per step.
+//!
+//! A [`TemporalTraversal`] partitions the K-interior into rectangular
+//! **owned** tiles (dim 0 is normally kept uncut so lines stay contiguous;
+//! the planner chooses the outer extents from the [`crate::cache::MachineModel`]).
+//! As a plain [`Traversal`] it streams each owned tile in natural order —
+//! one pencil per tile, so the existing `shard_ranges` machinery shards the
+//! time-tiled sweep exactly like any other order. The halo arithmetic
+//! (valid-region shrinkage, scratch boxes) lives in
+//! [`crate::engine::step_time_tiled`], which consumes the tile geometry via
+//! [`TemporalTraversal::tile_ranges`].
+
+use super::{extent, interior_ranges, points_of, Traversal, MAX_STREAM_DIMS};
+use crate::grid::GridDesc;
+use std::ops::Range;
+
+/// Owned-tile decomposition of the K-interior plus the time-tile depth `k`.
+#[derive(Debug, Clone)]
+pub struct TemporalTraversal {
+    ranges: Vec<Range<i64>>,
+    tile: Vec<usize>,
+    k: usize,
+    r: usize,
+}
+
+/// Build a temporal traversal: `tile[i]` is the owned (halo-free) tile
+/// extent along dim `i`, `k ≥ 1` the number of timesteps advanced per tile
+/// visit (`k = 1` is the fused single-pass update — no halo redundancy).
+pub fn temporal_stream(grid: &GridDesc, r: usize, tile: &[usize], k: usize) -> TemporalTraversal {
+    assert_eq!(tile.len(), grid.ndim());
+    assert!(tile.iter().all(|&t| t >= 1));
+    assert!(k >= 1, "time-tile depth must be at least 1");
+    TemporalTraversal { ranges: interior_ranges(grid, r), tile: tile.to_vec(), k, r }
+}
+
+impl TemporalTraversal {
+    /// Timesteps advanced per tile visit.
+    pub fn time_tile(&self) -> usize {
+        self.k
+    }
+
+    /// Stencil radius the halo math was built for.
+    pub fn radius(&self) -> usize {
+        self.r
+    }
+
+    /// K-interior ranges the owned tiles partition.
+    pub fn interior(&self) -> &[Range<i64>] {
+        &self.ranges
+    }
+
+    fn tiles_along(&self, i: usize) -> usize {
+        extent(&self.ranges[i]).div_ceil(self.tile[i])
+    }
+
+    /// Owned region of tile `t` (global coordinates, clipped to the
+    /// interior). Tiles are indexed dim-0-fastest; together they partition
+    /// the K-interior exactly.
+    pub fn tile_ranges(&self, t: usize) -> Vec<Range<i64>> {
+        let d = self.ranges.len();
+        let mut out = Vec::with_capacity(d);
+        let mut k = t;
+        for i in 0..d {
+            let tiles = self.tiles_along(i);
+            let ti = k % tiles;
+            k /= tiles;
+            let lo = self.ranges[i].start + (ti * self.tile[i]) as i64;
+            out.push(lo..(lo + self.tile[i] as i64).min(self.ranges[i].end));
+        }
+        out
+    }
+}
+
+impl Traversal for TemporalTraversal {
+    fn ndim(&self) -> usize {
+        self.ranges.len()
+    }
+
+    fn num_points(&self) -> u64 {
+        points_of(&self.ranges)
+    }
+
+    fn num_pencils(&self) -> usize {
+        if self.num_points() == 0 {
+            return 0;
+        }
+        (0..self.ranges.len()).map(|i| self.tiles_along(i)).product()
+    }
+
+    fn stream_pencils(&self, pencils: Range<usize>, f: &mut dyn FnMut(&[i64])) {
+        let np = self.num_pencils();
+        let pencils = pencils.start.min(np)..pencils.end.min(np);
+        if pencils.is_empty() {
+            return;
+        }
+        let d = self.ranges.len();
+        let mut x = vec![0i64; d];
+        for t in pencils {
+            let tr = self.tile_ranges(t);
+            let mut origin = [0i64; MAX_STREAM_DIMS];
+            let mut hi = [0i64; MAX_STREAM_DIMS];
+            for i in 0..d {
+                origin[i] = tr[i].start;
+                hi[i] = tr[i].end;
+            }
+            x.copy_from_slice(&origin[..d]);
+            'points: loop {
+                f(&x);
+                let mut i = 0;
+                loop {
+                    x[i] += 1;
+                    if x[i] < hi[i] {
+                        continue 'points;
+                    }
+                    x[i] = origin[i];
+                    i += 1;
+                    if i == d {
+                        break 'points;
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{natural, Order};
+    use super::*;
+
+    #[test]
+    fn tiles_partition_the_interior() {
+        let g = GridDesc::new(&[14, 12, 10]);
+        let tt = temporal_stream(&g, 2, &[10, 3, 4], 4);
+        let mut seen = Vec::new();
+        for t in 0..tt.num_pencils() {
+            let tr = tt.tile_ranges(t);
+            assert!(tr.iter().all(|rg| rg.start < rg.end), "tile {t} empty: {tr:?}");
+            for z in tr[2].clone() {
+                for y in tr[1].clone() {
+                    for x in tr[0].clone() {
+                        seen.push(Order::pack(&[x, y, z]));
+                    }
+                }
+            }
+        }
+        seen.sort_unstable();
+        let reference = natural(&g, 2).canonical_set();
+        assert_eq!(seen, reference, "owned tiles must partition the K-interior");
+    }
+
+    #[test]
+    fn stream_visits_the_interior_multiset() {
+        for (dims, r, tile, k) in
+            [(vec![11usize, 9, 8], 1usize, vec![9usize, 2, 3], 2usize), (vec![7, 6], 2, vec![16, 16], 3)]
+        {
+            let g = GridDesc::new(&dims);
+            let tt = temporal_stream(&g, r, &tile, k);
+            let mut set = Vec::new();
+            tt.stream(&mut |x| set.push(Order::pack(x)));
+            assert_eq!(set.len() as u64, tt.num_points());
+            set.sort_unstable();
+            assert_eq!(set, natural(&g, r).canonical_set(), "{dims:?}");
+        }
+    }
+
+    #[test]
+    fn single_tile_when_tile_exceeds_interior() {
+        let g = GridDesc::new(&[9, 9, 9]);
+        let tt = temporal_stream(&g, 2, &[64, 64, 64], 8);
+        assert_eq!(tt.num_pencils(), 1);
+        assert_eq!(tt.tile_ranges(0), vec![2..7, 2..7, 2..7]);
+        assert_eq!(tt.time_tile(), 8);
+        assert_eq!(tt.radius(), 2);
+    }
+
+    #[test]
+    fn empty_interior_has_no_pencils() {
+        let g = GridDesc::new(&[4, 4]);
+        let tt = temporal_stream(&g, 2, &[1, 1], 2);
+        assert_eq!(tt.num_pencils(), 0);
+        assert_eq!(tt.num_points(), 0);
+    }
+}

@@ -4,6 +4,7 @@
 //! statistics, and throughput reporting. All `rust/benches/*.rs` targets
 //! (`harness = false`) are built on this.
 
+use super::json::Json;
 use super::stats::Summary;
 use std::time::{Duration, Instant};
 
@@ -171,8 +172,7 @@ impl Bencher {
     }
 
     /// Write all results as a JSON array (used to snapshot bench runs).
-    pub fn to_json(&self) -> super::json::Json {
-        use super::json::Json;
+    pub fn to_json(&self) -> Json {
         let mut arr = Vec::new();
         for r in &self.results {
             let s = r.summary();
@@ -189,6 +189,134 @@ impl Bencher {
         }
         Json::Arr(arr)
     }
+
+    /// Build a snapshot array: wall-clock results, optionally tagged
+    /// `"provisional": true` (regressions against provisional baselines are
+    /// reported but do not fail the gate — use it when the committed baseline
+    /// was captured on a different machine), followed by caller-provided
+    /// metric entries such as deterministic traffic-model numbers.
+    pub fn snapshot(&self, provisional: bool, extra: Vec<Json>) -> Json {
+        let mut arr = match self.to_json() {
+            Json::Arr(v) => v,
+            _ => unreachable!("to_json always returns an array"),
+        };
+        if provisional {
+            for e in &mut arr {
+                e.set("provisional", true);
+            }
+        }
+        arr.extend(extra);
+        Json::Arr(arr)
+    }
+}
+
+/// Snapshot output path requested via the `STENCILCACHE_BENCH_JSON` env var.
+pub fn snapshot_path_from_env() -> Option<String> {
+    std::env::var("STENCILCACHE_BENCH_JSON").ok().filter(|p| !p.is_empty())
+}
+
+/// Persist a snapshot pretty-printed with a trailing newline so committed
+/// baselines (BENCH_*.json) diff cleanly between blessings.
+pub fn write_snapshot(path: &str, snapshot: &Json) -> std::io::Result<()> {
+    let mut text = snapshot.to_pretty();
+    text.push('\n');
+    std::fs::write(path, text)
+}
+
+/// Outcome of comparing a fresh bench snapshot against a committed baseline.
+#[derive(Debug, Default)]
+pub struct GateReport {
+    /// Hard regressions: the perf gate should exit non-zero.
+    pub failures: Vec<String>,
+    /// Informational findings: provisional-baseline regressions, entries
+    /// missing on one side, and similar report-only conditions.
+    pub notes: Vec<String>,
+}
+
+impl GateReport {
+    pub fn passed(&self) -> bool {
+        self.failures.is_empty()
+    }
+}
+
+fn metric(entry: &Json, key: &str) -> Option<f64> {
+    entry.get(key).and_then(Json::as_f64)
+}
+
+fn entry_name(entry: &Json) -> Option<&str> {
+    entry.get("name").and_then(Json::as_str)
+}
+
+/// Compare `current` against `baseline`, both JSON arrays of entries keyed by
+/// `"name"`. Rules:
+///
+/// - `throughput_per_s` (wall-clock): regression when current drops below
+///   baseline / `tolerance` (default CI tolerance is 2x, so only gross
+///   slowdowns fail — micro-noise does not).
+/// - `words_per_point` (deterministic traffic model): machine-independent, so
+///   `tolerance` does not apply; any increase beyond 0.01% is a regression.
+/// - Baseline entries tagged `"provisional": true` downgrade their
+///   regressions to notes.
+/// - Entries present on only one side produce notes, never failures, so
+///   adding or renaming benches does not brick CI before re-blessing.
+pub fn gate(baseline: &Json, current: &Json, tolerance: f64) -> GateReport {
+    let mut rep = GateReport::default();
+    let base = match baseline.as_arr() {
+        Some(b) => b,
+        None => {
+            rep.failures.push("baseline snapshot is not a JSON array".to_string());
+            return rep;
+        }
+    };
+    let cur = match current.as_arr() {
+        Some(c) => c,
+        None => {
+            rep.failures.push("current snapshot is not a JSON array".to_string());
+            return rep;
+        }
+    };
+    for b in base {
+        let name = match entry_name(b) {
+            Some(n) => n,
+            None => continue,
+        };
+        let c = match cur.iter().find(|e| entry_name(e) == Some(name)) {
+            Some(c) => c,
+            None => {
+                rep.notes.push(format!("{name}: in baseline but missing from current run"));
+                continue;
+            }
+        };
+        let provisional = matches!(b.get("provisional"), Some(Json::Bool(true)));
+        let mut regressions = Vec::new();
+        if let (Some(bt), Some(ct)) = (metric(b, "throughput_per_s"), metric(c, "throughput_per_s")) {
+            if bt > 0.0 && ct < bt / tolerance {
+                regressions.push(format!(
+                    "{name}: throughput {ct:.3e}/s is below the {tolerance:.1}x floor of baseline {bt:.3e}/s"
+                ));
+            }
+        }
+        if let (Some(bw), Some(cw)) = (metric(b, "words_per_point"), metric(c, "words_per_point")) {
+            if cw > bw * 1.0001 {
+                regressions.push(format!("{name}: modelled words/point rose {bw:.4} -> {cw:.4}"));
+            }
+        }
+        for msg in regressions {
+            if provisional {
+                rep.notes.push(format!("{msg} [provisional baseline: report-only]"));
+            } else {
+                rep.failures.push(msg);
+            }
+        }
+    }
+    for c in cur {
+        if let Some(name) = entry_name(c) {
+            if !base.iter().any(|b| entry_name(b) == Some(name)) {
+                rep.notes.push(format!("{name}: new entry with no baseline (bless a refreshed snapshot to gate it)"));
+            }
+        }
+    }
+    rep
 }
 
 #[cfg(test)]
@@ -222,6 +350,102 @@ mod tests {
         let j = b.to_json().to_string();
         assert!(j.contains("\"name\":\"x\""));
         assert!(j.contains("mean_ns"));
+    }
+
+    fn entry(name: &str, throughput: Option<f64>, wpp: Option<f64>, provisional: bool) -> Json {
+        let mut o = Json::obj();
+        o.set("name", name);
+        if let Some(tp) = throughput {
+            o.set("throughput_per_s", tp);
+        }
+        if let Some(w) = wpp {
+            o.set("words_per_point", w);
+        }
+        if provisional {
+            o.set("provisional", true);
+        }
+        o
+    }
+
+    #[test]
+    fn gate_passes_within_tolerance() {
+        let base = Json::Arr(vec![entry("a", Some(100.0), None, false)]);
+        let cur = Json::Arr(vec![entry("a", Some(60.0), None, false)]);
+        let rep = gate(&base, &cur, 2.0);
+        assert!(rep.passed(), "60/s vs 100/s baseline is within the 2x floor: {:?}", rep.failures);
+        assert!(rep.notes.is_empty());
+    }
+
+    #[test]
+    fn gate_fails_on_large_throughput_regression() {
+        let base = Json::Arr(vec![entry("a", Some(100.0), None, false)]);
+        let cur = Json::Arr(vec![entry("a", Some(40.0), None, false)]);
+        let rep = gate(&base, &cur, 2.0);
+        assert!(!rep.passed());
+        assert!(rep.failures[0].contains("a: throughput"));
+    }
+
+    #[test]
+    fn gate_provisional_baseline_is_report_only() {
+        let base = Json::Arr(vec![entry("a", Some(100.0), None, true)]);
+        let cur = Json::Arr(vec![entry("a", Some(10.0), None, false)]);
+        let rep = gate(&base, &cur, 2.0);
+        assert!(rep.passed());
+        assert_eq!(rep.notes.len(), 1);
+        assert!(rep.notes[0].contains("report-only"));
+    }
+
+    #[test]
+    fn gate_hard_fails_on_traffic_model_increase() {
+        let base = Json::Arr(vec![entry("model", None, Some(0.86), false)]);
+        let worse = Json::Arr(vec![entry("model", None, Some(0.90), false)]);
+        // The 2x wall-clock tolerance must NOT excuse a deterministic model regression.
+        assert!(!gate(&base, &worse, 2.0).passed());
+        let same = Json::Arr(vec![entry("model", None, Some(0.86), false)]);
+        assert!(gate(&base, &same, 2.0).passed());
+        let better = Json::Arr(vec![entry("model", None, Some(0.80), false)]);
+        assert!(gate(&base, &better, 2.0).passed());
+    }
+
+    #[test]
+    fn gate_missing_entries_are_notes_not_failures() {
+        let base = Json::Arr(vec![entry("only_in_base", Some(1.0), None, false)]);
+        let cur = Json::Arr(vec![entry("only_in_current", Some(1.0), None, false)]);
+        let rep = gate(&base, &cur, 2.0);
+        assert!(rep.passed());
+        assert_eq!(rep.notes.len(), 2);
+    }
+
+    #[test]
+    fn gate_rejects_non_array_snapshots() {
+        let rep = gate(&Json::obj(), &Json::Arr(vec![]), 2.0);
+        assert!(!rep.passed());
+    }
+
+    #[test]
+    fn snapshot_marks_provisional_and_appends_extra() {
+        let mut b = quick();
+        b.bench_items("x", 10.0, || 0);
+        let snap = b.snapshot(true, vec![entry("model", None, Some(5.0), false)]);
+        let arr = snap.as_arr().unwrap();
+        assert_eq!(arr.len(), 2);
+        assert_eq!(arr[0].get("provisional"), Some(&Json::Bool(true)));
+        assert_eq!(arr[1].get("name").unwrap().as_str(), Some("model"));
+    }
+
+    #[test]
+    fn snapshot_roundtrips_through_write_and_parse() {
+        let mut b = quick();
+        b.bench("y", || 0);
+        let snap = b.snapshot(false, vec![]);
+        let path = std::env::temp_dir().join(format!("stencilcache_bench_snap_{}.json", std::process::id()));
+        let path = path.to_str().unwrap().to_string();
+        write_snapshot(&path, &snap).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let _ = std::fs::remove_file(&path);
+        assert!(text.ends_with('\n'));
+        let parsed = super::super::json::parse(&text).unwrap();
+        assert!(gate(&parsed, &snap, 2.0).passed());
     }
 
     #[test]

@@ -189,7 +189,15 @@ fn native_backend_norms_traversal_invariant() {
     let dims = [18usize, 16, 14];
     let mut norms = Vec::new();
     for (_, t) in traversal_family(&g, 2, 4096) {
-        let job = NumericJob { dims: &dims, grid: &g, stencil: &s, traversal: t.as_ref(), shards: 1, seed: 0xBEEF };
+        let job = NumericJob {
+            dims: &dims,
+            grid: &g,
+            stencil: &s,
+            traversal: t.as_ref(),
+            shards: 1,
+            seed: 0xBEEF,
+            temporal: None,
+        };
         let out = backend.solve(&job, 4).unwrap();
         norms.push(out.solve_log.iter().map(|st| (st.u_norm, st.residual_norm)).collect::<Vec<_>>());
     }
@@ -224,6 +232,168 @@ fn native_solve_128_cubed_end_to_end() {
     let (first, last) = (&resp.solve_log[0], resp.solve_log.last().unwrap());
     assert!(last.u_norm < first.u_norm);
     assert!(last.residual_norm > 0.0);
+}
+
+// ---------------------------------------------------------------------------
+// Temporal blocking (DESIGN.md §2.6)
+// ---------------------------------------------------------------------------
+
+/// Reference: `steps` classic explicit steps (apply + full-buffer axpy),
+/// returning the final field and the per-step `(Σ u'², Σ q²)` sums — the
+/// exact arithmetic `NativeBackend::solve` performs with `shards = 1`.
+fn classic_steps(g: &GridDesc, s: &Stencil, u0: &[f64], alpha: f64, steps: usize) -> (Vec<f64>, Vec<(f64, f64)>) {
+    let nat = traversal::natural_stream(g, s.radius());
+    let mut u = u0.to_vec();
+    let mut q = vec![0.0; u.len()];
+    let mut norms = Vec::new();
+    for _ in 0..steps {
+        engine::apply(&nat, g, s, &u, &mut q);
+        let (mut u2, mut r2) = (0.0, 0.0);
+        for i in 0..u.len() {
+            u[i] += alpha * q[i];
+            u2 += u[i] * u[i];
+            r2 += q[i] * q[i];
+        }
+        norms.push((u2, r2));
+    }
+    (u, norms)
+}
+
+fn close(a: f64, b: f64) -> bool {
+    // summation-order tolerance: ~n·ε relative for sums of ~10⁴ terms
+    (a - b).abs() <= 1e-11 * (1.0 + a.abs().max(b.abs()))
+}
+
+/// TENTPOLE equivalence: one time-tiled superstep of depth `k` produces a
+/// field **bitwise equal** to `k` classic single steps, for k ∈ {1, 2, 4},
+/// across star radii, odd grid shapes and dimensionalities; the per-step
+/// norm sums agree to summation-order tolerance.
+#[test]
+fn temporal_step_bitwise_equals_k_single_steps() {
+    let pool = ThreadPool::new(2);
+    let cases: &[(&[usize], usize, &[usize])] = &[
+        (&[24, 22, 20], 2, &[18, 5, 6]),
+        (&[19, 17, 16], 1, &[17, 4, 5]),
+        (&[15, 14], 2, &[11, 4]),
+        (&[40], 1, &[38]),
+    ];
+    for &(dims, r, tile) in cases {
+        let g = GridDesc::new(dims);
+        let s = Stencil::star(dims.len(), r);
+        let alpha = NativeBackend::stable_alpha(&s);
+        let u0 = solver::deterministic_field(&g, r, 41);
+        for k in [1usize, 2, 4] {
+            let (u_ref, norms_ref) = classic_steps(&g, &s, &u0, alpha, k);
+            let tt = traversal::temporal_stream(&g, r, tile, k);
+            let mut v = u0.clone();
+            let norms = engine::step_time_tiled(&tt, &g, &s, &u0, &mut v, alpha, k, &pool, 1);
+            assert_eq!(v, u_ref, "{dims:?} r={r} k={k}: field must be bitwise equal");
+            assert_eq!(norms.len(), k);
+            for (i, ((u2, r2), (u2r, r2r))) in norms.iter().zip(&norms_ref).enumerate() {
+                assert!(close(*u2, *u2r), "{dims:?} k={k} step {i}: u² {u2} vs {u2r}");
+                assert!(close(*r2, *r2r), "{dims:?} k={k} step {i}: r² {r2} vs {r2r}");
+            }
+        }
+    }
+}
+
+/// Sharded time-tiled sweeps are bitwise identical to the serial sweep:
+/// owned tiles partition the interior, so shard boundaries cannot change a
+/// single written word.
+#[test]
+fn temporal_step_sharded_matches_serial_bitwise() {
+    let g = GridDesc::new(&[19, 18, 17]);
+    let s = Stencil::star13();
+    let alpha = NativeBackend::stable_alpha(&s);
+    let u0 = solver::deterministic_field(&g, 2, 53);
+    let pool = ThreadPool::new(4);
+    for k in [1usize, 3] {
+        let tt = traversal::temporal_stream(&g, 2, &[15, 4, 5], k);
+        let mut v_ref = u0.clone();
+        engine::step_time_tiled(&tt, &g, &s, &u0, &mut v_ref, alpha, k, &pool, 1);
+        let (u_classic, _) = classic_steps(&g, &s, &u0, alpha, k);
+        assert_eq!(v_ref, u_classic, "serial temporal k={k} vs classic");
+        for shards in [2usize, 7] {
+            let mut v = u0.clone();
+            engine::step_time_tiled(&tt, &g, &s, &u0, &mut v, alpha, k, &pool, shards);
+            assert_eq!(v, v_ref, "k={k}, {shards} shards");
+        }
+    }
+}
+
+/// Halo correctness when the whole grid is smaller than one halo-deep
+/// tile: the valid-region clamp must keep every read in bounds and the
+/// result exact (single tile, box = entire grid, deep k).
+#[test]
+fn temporal_halo_correctness_grid_smaller_than_tile() {
+    let pool = ThreadPool::new(2);
+    for (dims, r, k) in [(vec![9usize, 8, 7], 1usize, 4usize), (vec![7, 7], 2, 2), (vec![11, 9], 1, 4)] {
+        let g = GridDesc::new(&dims);
+        let s = Stencil::star(dims.len(), r);
+        let alpha = NativeBackend::stable_alpha(&s);
+        let u0 = solver::deterministic_field(&g, r, 67);
+        let (u_ref, _) = classic_steps(&g, &s, &u0, alpha, k);
+        let tt = traversal::temporal_stream(&g, r, &vec![64; dims.len()], k);
+        assert_eq!(tt.num_pencils(), 1, "{dims:?}: tile must swallow the grid");
+        let mut v = u0.clone();
+        engine::step_time_tiled(&tt, &g, &s, &u0, &mut v, alpha, k, &pool, 3);
+        assert_eq!(v, u_ref, "{dims:?} r={r} k={k}");
+    }
+}
+
+/// End-to-end through the coordinator: a machine with an L2 plans a deep
+/// time tile (k = 8 at 48³), and the temporal solve's per-step norms match
+/// the default machine's fused-k=1 solve to reduction-order tolerance.
+#[test]
+fn coordinator_temporal_solve_matches_default_machine() {
+    use stencilcache::cache::MachineModel;
+    let req = || StencilRequest {
+        dims: vec![48, 48, 48],
+        stencil: StencilSpec::Star13,
+        rhs_arrays: 1,
+        kind: JobKind::Solve { steps: 9 },
+    };
+    let fused = Coordinator::analysis_only(PlannerConfig::default()).submit(&req()).unwrap();
+    assert_eq!(fused.plan.time_tile, 1, "L1-only machine cannot hold a halo-deep tile");
+    let full = PlannerConfig { machine: MachineModel::r10000_full(), ..PlannerConfig::default() };
+    let deep = Coordinator::analysis_only(full).submit(&req()).unwrap();
+    assert!(deep.plan.time_tile >= 4, "plan.time_tile = {}", deep.plan.time_tile);
+    assert_eq!(deep.plan.time_tile_dims.len(), 3);
+    assert_eq!(deep.solve_log.len(), 9);
+    for (a, b) in fused.solve_log.iter().zip(&deep.solve_log) {
+        assert!((a.u_norm - b.u_norm).abs() < 1e-9 * (1.0 + a.u_norm), "step {}: {} vs {}", a.step, a.u_norm, b.u_norm);
+        let dr = (a.residual_norm - b.residual_norm).abs();
+        assert!(dr < 1e-9 * (1.0 + a.residual_norm), "step {}", a.step);
+    }
+    for w in deep.solve_log.windows(2) {
+        assert!(w[1].u_norm <= w[0].u_norm * 1.0001, "energy must not grow: {w:?}");
+    }
+}
+
+/// Full-size temporal equivalence for the scheduled CI job: at 256³ the
+/// r10000-full planner picks k ≥ 4, and one depth-k superstep is bitwise
+/// equal to k classic steps. Run with:
+///
+/// ```text
+/// cargo test --release -q --test numeric -- --ignored temporal_equivalence_256
+/// ```
+#[test]
+#[ignore = "large: ~134 MB per buffer and 4+ full-grid sweeps; nightly CI runs it in release"]
+fn temporal_equivalence_256_cubed() {
+    use stencilcache::cache::MachineModel;
+    use stencilcache::coordinator::choose_time_tile;
+    let g = GridDesc::new(&[256, 256, 256]);
+    let s = Stencil::star13();
+    let (k, tile) = choose_time_tile(&MachineModel::r10000_full(), &g, 2);
+    assert!(k >= 4, "256³ on r10000-full must time-tile at least 4 deep, got {k}");
+    let alpha = NativeBackend::stable_alpha(&s);
+    let u0 = solver::deterministic_field(&g, 2, 97);
+    let (u_ref, _) = classic_steps(&g, &s, &u0, alpha, k);
+    let pool = ThreadPool::new(4);
+    let tt = traversal::temporal_stream(&g, 2, &tile, k);
+    let mut v = u0.clone();
+    engine::step_time_tiled(&tt, &g, &s, &u0, &mut v, alpha, k, &pool, 4);
+    assert_eq!(v, u_ref, "256³ k={k}: temporal field must be bitwise equal");
 }
 
 /// The §5 cache-params used by the sharded analysis must not change the
