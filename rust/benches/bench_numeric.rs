@@ -18,6 +18,7 @@ use stencilcache::coordinator::{
 use stencilcache::engine;
 use stencilcache::grid::GridDesc;
 use stencilcache::lattice::InterferenceLattice;
+use stencilcache::shard;
 use stencilcache::solver::{self, NativeBackend, NumericBackend, NumericJob};
 use stencilcache::stencil::Stencil;
 use stencilcache::traversal;
@@ -138,6 +139,18 @@ fn main() {
         backend.solve(&job_deep, steps).unwrap().result_norm
     });
 
+    // Block-decomposed solve over the shard/halo layer (DESIGN.md §2.9):
+    // the same explicit steps through per-shard blocks and typed HaloMsg
+    // exchange — the wall-clock cost of the decomposition itself.
+    let shard_grid = [2usize, 2, 2];
+    let splan = std::sync::Arc::new(shard::ShardPlan::new(&dims, &shard_grid, r));
+    let alpha = NativeBackend::stable_alpha(&stencil);
+    b.bench_items(&format!("solve_{n}^3_star13_x{steps}/block_decomposed_2x2x2"), solve_items, || {
+        shard::solve_blocks(&splan, &stencil, alpha, steps, 1, &shard::ShardStorage::InMemory, &pool, None)
+            .unwrap()
+            .final_norm
+    });
+
     // Deterministic traffic-model entries (words moved between cache and
     // memory per point per step). Machine-independent by construction —
     // canonical tiles, not the shard-split ones — so CI hard-gates them:
@@ -149,14 +162,25 @@ fn main() {
         o.set("name", name).set("words_per_point", wpp);
         o
     };
-    let extra = vec![
+    let mut extra = vec![
         model_entry(format!("model/solve_traffic_wpp_{n}^3_star13/classic"), CLASSIC_SOLVE_TRAFFIC_WPP),
         model_entry(format!("model/solve_traffic_wpp_{n}^3_star13/temporal_fused_k1"), wpp_fused),
         model_entry(format!("model/solve_traffic_wpp_{n}^3_star13/temporal_k{k_deep}_r10000full"), wpp_deep),
     ];
+    // Geometric halo accounting of the 2×2×2 decomposition: exact,
+    // machine-independent, hard-gated — a drift means the shard geometry
+    // or the PEM bound changed, never noise.
+    let g = format!("{}x{}x{}", shard_grid[0], shard_grid[1], shard_grid[2]);
+    extra.push(model_entry(format!("model/halo_wpp_{n}^3_star13_grid{g}"), splan.halo_words_per_point()));
+    extra.push(model_entry(format!("model/halo_bound_wpp_{n}^3_star13_grid{g}"), splan.pem_halo_bound_per_point()));
     println!(
         "modelled solve traffic (words/pt/step): classic {CLASSIC_SOLVE_TRAFFIC_WPP:.3}, \
          fused k=1 {wpp_fused:.3}, k={k_deep} halo-deep {wpp_deep:.3}"
+    );
+    println!(
+        "halo traffic (words/pt/exchange, grid {g}): measured {:.6}, PEM bound {:.6}",
+        splan.halo_words_per_point(),
+        splan.pem_halo_bound_per_point()
     );
 
     if let Some(path) = bench::snapshot_path_from_env() {

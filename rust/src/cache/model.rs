@@ -317,6 +317,16 @@ impl MachineModel {
         self.l2.is_some() || self.tlb.is_some()
     }
 
+    /// Scratch capacity for cache-resident tiling: the deepest *cache*
+    /// level's size in words (L2 when present, else L1). The TLB is
+    /// deliberately skipped even when it is the deepest level the machine
+    /// exposes — its span is translation *reach* over memory that still
+    /// misses the real caches, so sizing a working set to page reach on a
+    /// TLB-but-no-L2 machine would thrash the only cache that exists.
+    pub fn scratch_words(&self) -> usize {
+        self.l2.as_ref().map_or(self.l1.size_words(), |c| c.size_words())
+    }
+
     /// The TLB's reach in words (`entries · page_words`) — the modulus of
     /// the **page interference lattice**, the TLB analog of
     /// [`CacheParams::lattice_modulus`]: under the capacity-modulus

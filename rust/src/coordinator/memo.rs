@@ -78,6 +78,12 @@ pub struct RequestKey {
     pub machine: crate::cache::MachineModel,
     pub max_pad: usize,
     pub auto_pad: bool,
+    /// Block-shard override — part of the identity because it changes the
+    /// plan's `shard_grid` and therefore the decomposed solve's traffic.
+    pub shard_grid: Option<Vec<usize>>,
+    /// RAM budget — part of the identity because it flips `out_of_core`
+    /// and refines the shard grid.
+    pub ram_budget_words: Option<u64>,
     pub facet: Facet,
 }
 
@@ -99,6 +105,8 @@ impl RequestKey {
             machine: config.machine.clone(),
             max_pad: config.max_pad,
             auto_pad: config.auto_pad,
+            shard_grid: config.shard_grid.clone(),
+            ram_budget_words: config.ram_budget_words,
             facet,
         }
     }
@@ -115,7 +123,8 @@ impl RequestKey {
 
     /// Approximate heap + inline bytes of this key (budget charging).
     pub fn approx_bytes(&self) -> usize {
-        std::mem::size_of::<RequestKey>() + self.dims.len() * std::mem::size_of::<usize>()
+        std::mem::size_of::<RequestKey>()
+            + (self.dims.len() + self.shard_grid.as_ref().map_or(0, |g| g.len())) * std::mem::size_of::<usize>()
     }
 }
 
@@ -141,7 +150,8 @@ impl CachedValue {
     pub fn approx_bytes(&self) -> usize {
         let p = self.plan();
         let plan_bytes = std::mem::size_of::<Plan>()
-            + (p.dims.len() + p.storage_dims.len() + p.pad.len()) * std::mem::size_of::<usize>();
+            + (p.dims.len() + p.storage_dims.len() + p.pad.len() + p.shard_grid.len())
+                * std::mem::size_of::<usize>();
         match self {
             CachedValue::Plan(_) => plan_bytes,
             CachedValue::Analysis { .. } => plan_bytes + std::mem::size_of::<MissReport>(),

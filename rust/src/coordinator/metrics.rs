@@ -42,6 +42,11 @@ pub struct Metrics {
     /// Stencil applications served by the native numeric backend.
     pub native_executions: AtomicU64,
     pub native_micros: AtomicU64,
+    /// Ghost words carried across shard boundaries by `HaloMsg`s in
+    /// block-decomposed solves (the measured PEM halo traffic).
+    pub halo_words_loaded: AtomicU64,
+    /// `HaloMsg` exchanges performed by block-decomposed solves.
+    pub halo_exchanges: AtomicU64,
 }
 
 impl Metrics {
@@ -75,7 +80,9 @@ impl Metrics {
             .set("pjrt_executions", self.pjrt_executions.load(Ordering::Relaxed))
             .set("pjrt_micros", self.pjrt_micros.load(Ordering::Relaxed))
             .set("native_executions", self.native_executions.load(Ordering::Relaxed))
-            .set("native_micros", self.native_micros.load(Ordering::Relaxed));
+            .set("native_micros", self.native_micros.load(Ordering::Relaxed))
+            .set("halo_words_loaded", self.halo_words_loaded.load(Ordering::Relaxed))
+            .set("halo_exchanges", self.halo_exchanges.load(Ordering::Relaxed));
         o
     }
 }

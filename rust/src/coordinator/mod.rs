@@ -465,6 +465,18 @@ impl Coordinator {
         plan: Arc<Plan>,
         steps: Option<usize>,
     ) -> Result<StencilResponse> {
+        // Block-decomposed native path (DESIGN.md §2.9): an explicit
+        // shard-grid override or an out-of-core verdict routes Solve
+        // through the shard/halo layer — per-shard blocks (disk tiles when
+        // out-of-core), typed HaloMsg exchange, measured halo traffic in
+        // the metrics. Execute jobs and default in-memory solves keep the
+        // temporal fast path below; PJRT cannot honor a RAM budget or a
+        // shard grid, so the explicit request wins over artifacts.
+        if let Some(n) = steps {
+            if self.config.shard_grid.is_some() || plan.out_of_core {
+                return self.run_decomposed_solve(req, stencil, plan, n);
+            }
+        }
         let grid = GridDesc::with_padding(&plan.dims, &plan.pad);
         let seed: u64 = if steps.is_some() { 0xBEEF } else { 0xC0FFEE };
         let prefix = if steps.is_some() { "step_norms_" } else { "star13_" };
@@ -543,6 +555,58 @@ impl Coordinator {
         })
     }
 
+    /// Solve via the block-decomposed shard/halo layer (DESIGN.md §2.9):
+    /// the plan's shard grid cuts the *logical* grid into axis-aligned
+    /// blocks that communicate only through typed `HaloMsg`s; out-of-core
+    /// plans stream the blocks through disk tiles under the configured RAM
+    /// budget. Results are bitwise-identical to the classic native Solve
+    /// for star stencils — each interior point folds the same coefficients
+    /// over the same operand values in the same order
+    /// (`engine::fold_point`), and only the norm reductions re-associate.
+    fn run_decomposed_solve(
+        &self,
+        req: &StencilRequest,
+        stencil: &Stencil,
+        plan: Arc<Plan>,
+        steps: usize,
+    ) -> Result<StencilResponse> {
+        // Padding is a cache-interference remedy for monolithic sweeps;
+        // per-shard blocks are fresh, small allocations, so the decomposed
+        // path always runs on the unpadded dims.
+        let grid = GridDesc::new(&req.dims);
+        let order = traversal::natural_stream(&grid, stencil.radius());
+        let (_guard, _budget) = self.enter_fanout();
+        let storage = if plan.out_of_core {
+            crate::shard::ShardStorage::temp()
+        } else {
+            crate::shard::ShardStorage::InMemory
+        };
+        let backend = NativeBackend::new(&self.pool);
+        let job = NumericJob {
+            dims: &req.dims,
+            grid: &grid,
+            stencil,
+            traversal: &order,
+            shards: plan.shard_grid.iter().product(),
+            seed: 0xBEEF,
+            temporal: None,
+        };
+        let out = backend.solve_decomposed(&job, steps, &plan.shard_grid, &storage, self.config.ram_budget_words)?;
+        Metrics::bump(&self.metrics.native_executions, out.executions);
+        Metrics::bump(&self.metrics.native_micros, out.micros);
+        Metrics::bump(&self.metrics.halo_words_loaded, out.halo_words_loaded);
+        Metrics::bump(&self.metrics.halo_exchanges, out.halo_exchanges);
+        Metrics::bump(&self.metrics.executed, 1);
+        Metrics::bump(&self.metrics.points_processed, order.num_points() * out.executions);
+        Ok(StencilResponse {
+            plan,
+            miss_report: None,
+            result_norm: Some(out.result_norm),
+            solve_log: out.solve_log,
+            wall_micros: 0,
+        })
+    }
+
     /// Snapshot the metrics as JSON text (memo-tier usage included when
     /// memoization is enabled).
     pub fn metrics_json(&self) -> String {
@@ -607,6 +671,7 @@ mod tests {
             machine: crate::cache::MachineModel::l1_only(crate::cache::CacheParams::new(1, 64, 1)),
             max_pad: 0,
             auto_pad: false,
+            ..PlannerConfig::default()
         };
         let c = Coordinator::analysis_only(config);
         let mk = |kind| StencilRequest {
@@ -698,6 +763,58 @@ mod tests {
         assert_eq!(resp.result_norm.unwrap(), resp.solve_log.last().unwrap().u_norm);
         assert_eq!(c.metrics.native_executions.load(Ordering::Relaxed), 6);
         assert_eq!(c.metrics.executed.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn decomposed_solve_matches_default_solve_and_counts_halo() {
+        let mk = |kind| StencilRequest {
+            dims: vec![20, 18, 16],
+            stencil: StencilSpec::Star { r: 2 },
+            rhs_arrays: 1,
+            kind,
+        };
+        let base = coord().submit(&mk(JobKind::Solve { steps: 4 })).unwrap();
+        let config = PlannerConfig { shard_grid: Some(vec![2, 1, 2]), ..PlannerConfig::default() };
+        let c = Coordinator::analysis_only(config);
+        let dec = c.submit(&mk(JobKind::Solve { steps: 4 })).unwrap();
+        assert_eq!(dec.plan.shard_grid, vec![2, 1, 2]);
+        assert_eq!(dec.solve_log.len(), 4);
+        // same field, re-associated norm reductions
+        for (a, b) in base.solve_log.iter().zip(&dec.solve_log) {
+            assert!((a.u_norm - b.u_norm).abs() < 1e-9 * (1.0 + a.u_norm), "{} vs {}", a.u_norm, b.u_norm);
+            assert!((a.residual_norm - b.residual_norm).abs() < 1e-9 * (1.0 + a.residual_norm));
+        }
+        // measured halo traffic is exact: steps × the plan's ghost words
+        let sp = crate::shard::ShardPlan::new(&[20, 18, 16], &[2, 1, 2], 2);
+        assert_eq!(c.metrics.halo_words_loaded.load(Ordering::Relaxed), 4 * sp.halo_words());
+        assert!(c.metrics.halo_exchanges.load(Ordering::Relaxed) > 0);
+        assert_eq!(c.metrics.native_executions.load(Ordering::Relaxed), 4);
+        let j = c.metrics_json();
+        assert!(j.contains("halo_words_loaded"));
+        assert!(j.contains("halo_exchanges"));
+    }
+
+    #[test]
+    fn ram_budget_routes_solve_out_of_core() {
+        let req = StencilRequest {
+            dims: vec![16, 16, 16],
+            stencil: StencilSpec::Star { r: 1 },
+            rhs_arrays: 1,
+            kind: JobKind::Solve { steps: 3 },
+        };
+        // 2 × 16³ = 8192 working words > 6000 ⇒ the planner flips the job
+        // out-of-core and refines the shard grid under the budget.
+        let config = PlannerConfig { ram_budget_words: Some(6_000), ..PlannerConfig::default() };
+        let c = Coordinator::analysis_only(config);
+        let ooc = c.submit(&req).unwrap();
+        assert!(ooc.plan.out_of_core);
+        assert!(ooc.plan.shard_grid.iter().product::<usize>() > 1);
+        let base = coord().submit(&req).unwrap();
+        for (a, b) in base.solve_log.iter().zip(&ooc.solve_log) {
+            assert!((a.u_norm - b.u_norm).abs() < 1e-9 * (1.0 + a.u_norm), "{} vs {}", a.u_norm, b.u_norm);
+            assert!((a.residual_norm - b.residual_norm).abs() < 1e-9 * (1.0 + a.residual_norm));
+        }
+        assert!(c.metrics.halo_words_loaded.load(Ordering::Relaxed) > 0);
     }
 
     #[test]

@@ -72,6 +72,16 @@ pub struct Plan {
     /// the fused pass needs no fixed tile shape and the coordinator picks
     /// shard-parallel tiles instead).
     pub time_tile_dims: Vec<usize>,
+    /// Block-shard grid for the decomposed solve path (DESIGN.md §2.9,
+    /// `crate::shard`): the config override when given, else chosen by the
+    /// PEM surface/volume criterion targeting the pencil fan-out, and
+    /// refined further when `out_of_core` so every shard's working set
+    /// fits the RAM budget.
+    pub shard_grid: Vec<usize>,
+    /// The solve's ping-pong field pair exceeds the configured RAM budget:
+    /// the coordinator must stream shard blocks from disk tiles instead of
+    /// holding both fields resident.
+    pub out_of_core: bool,
 }
 
 /// Planner configuration.
@@ -85,11 +95,26 @@ pub struct PlannerConfig {
     pub max_pad: usize,
     /// Allow the planner to pad unfavorable grids.
     pub auto_pad: bool,
+    /// Explicit block-shard grid for decomposed solves (one entry per
+    /// dimension); `None` lets the planner choose by the PEM criterion.
+    /// Setting this forces native Solve through the decomposed path even
+    /// in memory — the way to exercise the halo exchange deliberately.
+    pub shard_grid: Option<Vec<usize>>,
+    /// RAM budget in words for solve fields. When the ping-pong field pair
+    /// exceeds it the solve runs out-of-core (disk tiles, bounded
+    /// concurrency). `None` = unbounded, fully in memory.
+    pub ram_budget_words: Option<u64>,
 }
 
 impl Default for PlannerConfig {
     fn default() -> Self {
-        PlannerConfig { machine: MachineModel::r10000(), max_pad: 8, auto_pad: true }
+        PlannerConfig {
+            machine: MachineModel::r10000(),
+            max_pad: 8,
+            auto_pad: true,
+            shard_grid: None,
+            ram_budget_words: None,
+        }
     }
 }
 
@@ -135,8 +160,9 @@ pub fn choose_time_tile(machine: &MachineModel, grid: &GridDesc, r: usize) -> (u
     if e.iter().any(|&x| x == 0) {
         return (1, Vec::new());
     }
-    let capacity = machine.l2.as_ref().map_or(machine.l1.size_words(), |c| c.size_words());
-    let budget = capacity / 2; // two ping-pong scratch buffers
+    // deepest *cache* level only — a TLB-but-no-L2 machine must size by
+    // its L1, not its page reach (see MachineModel::scratch_words)
+    let budget = machine.scratch_words() / 2; // two ping-pong scratch buffers
     for k in (2..=MAX_TIME_TILE).rev() {
         let halo = 2 * k * r;
         let box0 = dims[0].min(e[0] + halo);
@@ -308,6 +334,25 @@ pub fn plan(config: &PlannerConfig, dims: &[usize], stencil: &Stencil, p: usize)
     let shards = (interior.div_ceil(SHARD_GRAIN_POINTS) as usize).clamp(1, MAX_SHARDS);
     let (time_tile, time_tile_dims) = choose_time_tile(&config.machine, &padded, stencil.radius());
 
+    // Block decomposition (DESIGN.md §2.9): the solve's ping-pong field
+    // pair must fit the RAM budget or the blocks stream from disk. The
+    // grid itself comes from the PEM surface/volume criterion (longest
+    // axis halves first), targeting the same fan-out as the pencil
+    // shards; the budget then refines it until one shard's halo-extended
+    // working set fits.
+    let out_of_core = config.ram_budget_words.is_some_and(|b| 2 * grid.num_points() > b);
+    let mut shard_grid = match &config.shard_grid {
+        Some(g) => {
+            assert_eq!(g.len(), dims.len(), "shard grid arity mismatch: {g:?} for dims {dims:?}");
+            g.clone()
+        }
+        None => crate::shard::choose_shard_grid(dims, stencil.radius(), shards),
+    };
+    if out_of_core {
+        shard_grid =
+            crate::shard::refine_grid_for_budget(dims, stencil.radius(), shard_grid, config.ram_budget_words.unwrap());
+    }
+
     Plan {
         dims: dims.to_vec(),
         storage_dims,
@@ -323,6 +368,8 @@ pub fn plan(config: &PlannerConfig, dims: &[usize], stencil: &Stencil, p: usize)
         upper_bound,
         time_tile,
         time_tile_dims,
+        shard_grid,
+        out_of_core,
     }
 }
 
@@ -442,7 +489,7 @@ mod tests {
             tlb: Some(TlbParams { entries: 36, page_words: 512 }),
             latency: Latency::r10000(),
         };
-        let c = PlannerConfig { machine, max_pad: 8, auto_pad: true };
+        let c = PlannerConfig { machine, ..cfg() };
         let p = plan(&c, &[95, 97, 40], &Stencil::star13(), 1);
         assert!(!p.was_unfavorable);
         assert_eq!(p.was_tlb_unfavorable, Some(true));
@@ -464,6 +511,59 @@ mod tests {
         let full = PlannerConfig { machine: MachineModel::r10000_full(), ..cfg() };
         assert_eq!(plan(&full, &[4096], &Stencil::star(1, 1), 1).time_tile, 1);
         assert_eq!(choose_time_tile(&MachineModel::r10000_full(), &GridDesc::new(&[4, 4]), 2), (1, Vec::new()));
+    }
+
+    #[test]
+    fn tlb_reach_is_not_tile_scratch() {
+        use crate::cache::{CacheParams, Latency, TlbParams};
+        // A TLB-but-no-L2 machine: huge translation reach (64Ki pages ≈
+        // 32M words) over a tiny 512-word L1. Sizing the tile by the
+        // deepest *level* would pick the page reach and happily fit a
+        // deep tile that thrashes the only real cache; the deepest-cache
+        // fallback must skip TLB levels and degrade to k = 1.
+        let machine = MachineModel {
+            name: "tiny-l1+huge-tlb",
+            l1: CacheParams::new(2, 32, 8), // 512 words
+            l2: None,
+            tlb: Some(TlbParams { entries: 65536, page_words: 512 }),
+            latency: Latency::r10000(),
+        };
+        assert_eq!(machine.scratch_words(), 512);
+        assert!(machine.page_modulus().unwrap() > machine.scratch_words());
+        let g = GridDesc::new(&[64, 64, 64]);
+        assert_eq!(choose_time_tile(&machine, &g, 2), (1, Vec::new()));
+        let p = plan(&PlannerConfig { machine, ..cfg() }, &[64, 64, 64], &Stencil::star13(), 1);
+        assert_eq!(p.time_tile, 1);
+        assert!(p.time_tile_dims.is_empty());
+    }
+
+    #[test]
+    fn shard_grid_defaults_to_single_block_and_follows_overrides() {
+        // small grid, no budget: one block, fully in memory
+        let p = plan(&cfg(), &[32, 32, 32], &Stencil::star13(), 1);
+        assert_eq!(p.shard_grid, vec![1, 1, 1]);
+        assert!(!p.out_of_core);
+        // explicit override is taken verbatim
+        let c = PlannerConfig { shard_grid: Some(vec![2, 1, 2]), ..cfg() };
+        let p = plan(&c, &[32, 32, 32], &Stencil::star13(), 1);
+        assert_eq!(p.shard_grid, vec![2, 1, 2]);
+        assert!(!p.out_of_core);
+    }
+
+    #[test]
+    fn ram_budget_flips_out_of_core_and_refines_the_grid() {
+        // 128³ fields are 2·2M words; a 1M-word budget forces out-of-core
+        // and the refinement must cut until one shard's working set
+        // (2·|halo box|) fits the budget.
+        let c = PlannerConfig { ram_budget_words: Some(1 << 20), ..cfg() };
+        let p = plan(&c, &[128, 128, 128], &Stencil::star13(), 1);
+        assert!(p.out_of_core);
+        let sp = crate::shard::ShardPlan::new(&[128, 128, 128], &p.shard_grid, 2);
+        assert!(sp.peak_working_words() <= 1 << 20, "{:?}", p.shard_grid);
+        assert!(sp.num_shards() > 1);
+        // a budget the ping-pong pair fits under stays in memory
+        let c = PlannerConfig { ram_budget_words: Some(1 << 23), ..cfg() };
+        assert!(!plan(&c, &[128, 128, 128], &Stencil::star13(), 1).out_of_core);
     }
 
     #[test]

@@ -250,10 +250,11 @@ fn check_numeric_args<T: Traversal + ?Sized>(traversal: &T, grid: &GridDesc, ste
 }
 
 /// The per-point stencil fold — the ONE definition shared by the
-/// sequential and sharded apply loops, so the documented bitwise equality
-/// between them can never drift apart.
+/// sequential and sharded apply loops *and* the block-decomposed solve in
+/// [`crate::shard`], so the documented bitwise equality between all of
+/// them can never drift apart.
 #[inline(always)]
-fn fold_point(coeffs: &[f64], deltas: &[i64], u: &[f64], base: i64) -> f64 {
+pub(crate) fn fold_point(coeffs: &[f64], deltas: &[i64], u: &[f64], base: i64) -> f64 {
     let mut acc = 0.0;
     for (&c, &dl) in coeffs.iter().zip(deltas) {
         acc += c * u[(base + dl) as usize];

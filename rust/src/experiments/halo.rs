@@ -1,0 +1,88 @@
+//! **HALO** — measured per-shard ghost traffic vs. the PEM bound.
+//!
+//! The shard/halo decomposition layer (DESIGN.md §2.9) bounds per-step
+//! ghost loads by the parallel-external-memory surface term
+//! `Σ_s (Π(ŵ_i + 2r) − Π ŵ_i)` with `ŵ_i = ⌈n_i/g_i⌉`. This driver runs
+//! real block-decomposed solves over a ladder of shard grids and tabulates
+//! the *measured* `HaloMsg` words per point next to that bound: the
+//! measurement counts only in-grid ghost words (shards on the domain
+//! boundary clip their halos), so it sits at or below the bound and
+//! approaches it as shards move away from the boundary.
+
+use super::save_csv;
+use crate::report::Table;
+use crate::shard::{self, ShardPlan, ShardStorage};
+use crate::solver::NativeBackend;
+use crate::stencil::Stencil;
+use crate::util::threadpool::ThreadPool;
+use std::sync::Arc;
+
+/// Shard-grid ladder: 1 shard (no halo) up through 32 blocks.
+fn shard_grids(quick: bool) -> Vec<Vec<usize>> {
+    let mut grids = vec![vec![1, 1, 1], vec![2, 1, 1], vec![2, 2, 1], vec![2, 2, 2]];
+    if !quick {
+        grids.push(vec![4, 2, 2]);
+        grids.push(vec![4, 4, 2]);
+    }
+    grids
+}
+
+pub fn run(quick: bool) -> Table {
+    let n: usize = if quick { 24 } else { 48 };
+    let dims = vec![n, n, n];
+    let stencil = Stencil::star13();
+    let steps = 2usize;
+    let alpha = NativeBackend::stable_alpha(&stencil);
+    let pool = ThreadPool::with_default_parallelism();
+    let mut table = Table::new(
+        &format!("HALO: measured ghost words/point vs PEM bound, {n}³ star13, {steps} steps"),
+        &["shard grid", "shards", "halo msgs/step", "measured wpp", "PEM bound wpp", "meas/bound"],
+    );
+    for g in shard_grids(quick) {
+        let plan = Arc::new(ShardPlan::new(&dims, &g, stencil.radius()));
+        let out = shard::solve_blocks(&plan, &stencil, alpha, steps, 0xBEEF, &ShardStorage::InMemory, &pool, None)
+            .expect("in-memory block solve");
+        let points = plan.num_points() as f64;
+        let measured = out.halo_words_loaded as f64 / steps as f64 / points;
+        let bound = plan.pem_halo_bound_per_point();
+        let ratio = if bound > 0.0 { measured / bound } else { 0.0 };
+        table.add_row(vec![
+            format!("{}x{}x{}", g[0], g[1], g[2]),
+            plan.num_shards().to_string(),
+            (out.halo_exchanges / steps as u64).to_string(),
+            format!("{measured:.4}"),
+            format!("{bound:.4}"),
+            format!("{ratio:.2}"),
+        ]);
+    }
+    println!("{}", table.to_text());
+    save_csv(&table, "halo");
+    table
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measured_never_exceeds_bound() {
+        let t = run(true);
+        assert!(t.num_rows() >= 4);
+        for row in t.rows() {
+            let measured: f64 = row[3].parse().unwrap();
+            let bound: f64 = row[4].parse().unwrap();
+            assert!(measured <= bound * 1.0001, "clipped halo must sit under the PEM bound: {row:?}");
+        }
+    }
+
+    #[test]
+    fn single_shard_has_no_halo_and_traffic_grows_with_shards() {
+        let t = run(true);
+        let rows = t.rows();
+        assert_eq!(rows[0][0], "1x1x1");
+        assert_eq!(rows[0][3], "0.0000", "no ghost traffic without shard boundaries: {:?}", rows[0]);
+        let first: f64 = rows[1][3].parse().unwrap();
+        let last: f64 = rows.last().unwrap()[3].parse().unwrap();
+        assert!(last > first, "more shard faces must move more ghost words: {first} vs {last}");
+    }
+}

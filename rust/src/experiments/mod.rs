@@ -13,12 +13,14 @@
 //! | `bounds`  | Eq 7/12 sandwich | [`bounds_table::run`] |
 //! | `multirhs`| §5 Eq 13/14    | [`multirhs::run`] |
 //! | `appb`    | Appendix B     | [`appb::run`] |
+//! | `halo`    | PEM halo bound vs measured ghost traffic (not in the paper) | [`halo::run`] |
 //! | `replay`  | serving-layer memo hit rates (not in the paper) | [`replay::run`] |
 
 pub mod appb;
 pub mod bounds_table;
 pub mod fig4;
 pub mod fig5;
+pub mod halo;
 pub mod multirhs;
 pub mod replay;
 pub mod sec3;
@@ -127,18 +129,19 @@ pub fn run(id: &str, quick: bool) -> Result<Vec<Table>, String> {
         "bounds" => Ok(vec![bounds_table::run(quick)]),
         "multirhs" => Ok(vec![multirhs::run(quick)]),
         "appb" => Ok(vec![appb::run()]),
+        "halo" => Ok(vec![halo::run(quick)]),
         // serving-layer replay (not a paper artifact, so not part of "all";
         // the `stencilcache replay` subcommand exposes the full knob set)
         "replay" => Ok(vec![replay::run(&replay::ReplayConfig::paper(quick)).table]),
         "all" => {
             let mut out = Vec::new();
-            for id in ["fig4", "fig5a", "fig5b", "fig5corr", "sec3", "bounds", "multirhs", "appb"] {
+            for id in ["fig4", "fig5a", "fig5b", "fig5corr", "sec3", "bounds", "multirhs", "appb", "halo"] {
                 out.extend(run(id, quick)?);
             }
             Ok(out)
         }
         other => Err(format!(
-            "unknown experiment {other:?}; available: fig4 fig5a fig5b fig5corr sec3 bounds multirhs appb replay all"
+            "unknown experiment {other:?}; available: fig4 fig5a fig5b fig5corr sec3 bounds multirhs appb halo replay all"
         )),
     }
 }

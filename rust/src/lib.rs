@@ -48,6 +48,7 @@ pub mod lattice;
 pub mod padding;
 pub mod report;
 pub mod runtime;
+pub mod shard;
 pub mod solver;
 pub mod stencil;
 pub mod traversal;

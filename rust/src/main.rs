@@ -10,8 +10,11 @@
 //!     report per-level loads and a stall-cycle estimate
 //! stencilcache experiment <fig4|fig5a|fig5b|fig5corr|sec3|bounds|multirhs|appb|all> [--quick]
 //!     regenerate a paper figure/table
-//! stencilcache solve --n 64 --steps 100
-//!     run the heat solver (PJRT when artifacts exist, native otherwise)
+//! stencilcache solve --n 64 --steps 100 [--shard-grid 2,2,2] [--ram-budget-mb 256]
+//!     run the heat solver (PJRT when artifacts exist, native otherwise).
+//!     --shard-grid forces the block decomposition (DESIGN.md §2.9);
+//!     --ram-budget-mb caps resident field memory — solves whose working
+//!     set exceeds it run out-of-core over disk tiles.
 //! stencilcache serve-demo [--requests 64]
 //!     demo of the serving layer (submit/drain) over a mixed workload
 //! stencilcache replay [--requests 600] [--hot 8] [--scan 48] [--zipf 1.1]
@@ -24,6 +27,10 @@
 //!     non-zero on a throughput regression beyond the tolerance factor or
 //!     any increase in a modelled words/point metric. Baseline entries
 //!     tagged "provisional" are report-only.
+//! stencilcache bench-gate --bless --baseline BENCH_NUMERIC.json [--current fresh.json]
+//!     re-bless the committed baseline: copy the fresh snapshot (--current,
+//!     or the STENCILCACHE_BENCH_JSON path) over it with "provisional"
+//!     tags cleared, so future regressions gate hard.
 //! stencilcache info
 //!     artifact + platform report
 //! ```
@@ -37,7 +44,7 @@ use stencilcache::util::logger;
 
 fn main() {
     logger::init();
-    let args = match Args::from_env(&["quick", "verbose", "no-auto-pad"]) {
+    let args = match Args::from_env(&["quick", "verbose", "no-auto-pad", "bless"]) {
         Ok(a) => a,
         Err(e) => {
             eprintln!("error: {e}");
@@ -97,6 +104,7 @@ fn cmd_analyze(args: &Args) -> i32 {
             machine: machine.clone(),
             max_pad: args.get_usize("max-pad", 8)?,
             auto_pad: !args.flag("no-auto-pad"),
+            ..PlannerConfig::default()
         };
         let coord = Coordinator::analysis_only(config);
         let stencil = if dims.len() == 3 { StencilSpec::Star13 } else { StencilSpec::Star { r: 1 } };
@@ -168,6 +176,15 @@ fn cmd_solve(args: &Args) -> i32 {
     let run = || -> Result<(), String> {
         let n = args.get_usize("n", 64)?;
         let steps = args.get_usize("steps", 100)?;
+        let shard_grid = match args.get("shard-grid") {
+            Some(_) => Some(args.get_dims("shard-grid", &[])?),
+            None => None,
+        };
+        let ram_budget_mb = args.get_usize("ram-budget-mb", 0)?;
+        // --ram-budget-mb caps the *field* working set in f64 words; the
+        // planner flips the solve out-of-core when 2·N³ words exceed it.
+        let ram_budget_words = (ram_budget_mb > 0).then(|| ram_budget_mb as u64 * (1 << 20) / 8);
+        let mk_config = || PlannerConfig { shard_grid: shard_grid.clone(), ram_budget_words, ..PlannerConfig::default() };
         // PJRT when artifacts are available, the native backend otherwise;
         // surface the startup error so broken artifact setups stay visible.
         let svc = match RuntimeService::start(None) {
@@ -178,8 +195,8 @@ fn cmd_solve(args: &Args) -> i32 {
             }
         };
         let coord = match &svc {
-            Some(s) => Coordinator::with_runtime(PlannerConfig::default(), s.handle()),
-            None => Coordinator::analysis_only(PlannerConfig::default()),
+            Some(s) => Coordinator::with_runtime(mk_config(), s.handle()),
+            None => Coordinator::analysis_only(mk_config()),
         };
         let resp = coord
             .submit(&StencilRequest {
@@ -189,6 +206,15 @@ fn cmd_solve(args: &Args) -> i32 {
                 kind: JobKind::Solve { steps },
             })
             .map_err(|e| e.to_string())?;
+        // mirrors the coordinator's routing: the decomposed path engages
+        // only on an explicit shard grid or an out-of-core verdict
+        if shard_grid.is_some() || resp.plan.out_of_core {
+            println!(
+                "(block-decomposed solve: shard grid {:?}{})",
+                resp.plan.shard_grid,
+                if resp.plan.out_of_core { ", out-of-core disk tiles" } else { "" }
+            );
+        }
         println!("step   ||u||        ||Ku||       µs");
         for s in resp.solve_log.iter().step_by((steps / 20).max(1)) {
             println!("{:>4}  {:>11.5}  {:>11.5}  {:>7}", s.step, s.u_norm, s.residual_norm, s.micros);
@@ -293,15 +319,27 @@ fn cmd_bench_gate(args: &Args) -> i32 {
     use stencilcache::util::{bench, json};
     let run = || -> Result<bool, String> {
         let baseline = args.get("baseline").ok_or("bench-gate requires --baseline <committed BENCH_*.json>")?;
+        let load = |path: &str| -> Result<json::Json, String> {
+            let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+            json::parse(&text).map_err(|e| format!("{path}: {e}"))
+        };
+        if args.flag("bless") {
+            let current = match args.get("current") {
+                Some(c) => c.to_string(),
+                None => bench::snapshot_path_from_env().ok_or(
+                    "bench-gate --bless needs a fresh snapshot: pass --current or set STENCILCACHE_BENCH_JSON",
+                )?,
+            };
+            let snap = bench::clear_provisional(&load(&current)?);
+            bench::write_snapshot(baseline, &snap).map_err(|e| format!("{baseline}: {e}"))?;
+            println!("bench-gate: blessed {current} over {baseline} (provisional tags cleared)");
+            return Ok(true);
+        }
         let current = args.get("current").ok_or("bench-gate requires --current <fresh snapshot>")?;
         let tolerance = args.get_f64("tolerance", 2.0)?;
         if tolerance < 1.0 {
             return Err("--tolerance must be >= 1.0 (it is a slowdown factor)".into());
         }
-        let load = |path: &str| -> Result<json::Json, String> {
-            let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
-            json::parse(&text).map_err(|e| format!("{path}: {e}"))
-        };
         let rep = bench::gate(&load(baseline)?, &load(current)?, tolerance);
         for note in &rep.notes {
             println!("note: {note}");

@@ -1,0 +1,656 @@
+//! Per-shard block storage and the block-decomposed solve driver.
+//!
+//! A [`ShardedField`] holds one value block per shard — the shard's
+//! *owned box* in local column-major layout — behind one of two backends:
+//!
+//! - **in-memory**: one `Vec<f64>` per shard, allocated and touched only
+//!   by that shard's worker (NUMA-friendly first-touch);
+//! - **out-of-core**: one little-endian f64 tile file per shard under a
+//!   caller-supplied directory, so grids larger than RAM stream through
+//!   bounded buffers (the halo-extended compute box of one shard at a
+//!   time).
+//!
+//! The solve driver ([`solve_blocks`]) advances the same explicit step as
+//! `solver::NativeBackend::solve` — `u ← u + α·Ku` over the K-interior,
+//! Dirichlet boundary pinned — but over shard blocks with a typed
+//! [`HaloMsg`] exchange per step. The result field is **bitwise
+//! identical** to the unsharded path: per point the fold is
+//! `engine::fold_point` (the one shared definition) over the same operand
+//! values in the same coefficient order, and the update `u + α·Ku` is the
+//! same expression; only norm summation order differs (partials combine
+//! in shard order), which stays within 1e-9 relative of the flat sums.
+
+use super::{box_strides, box_words, for_each_row, HaloMsg, ShardPlan};
+use crate::engine::fold_point;
+use crate::stencil::Stencil;
+use crate::util::rng::Rng;
+use crate::util::threadpool::ThreadPool;
+use anyhow::{bail, Result};
+use std::fs::{self, File};
+use std::io::{BufWriter, Read, Seek, SeekFrom, Write};
+use std::ops::Range;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Storage backend selector for a [`ShardedField`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ShardStorage {
+    /// One heap block per shard (the default; current in-RAM behavior).
+    InMemory,
+    /// One disk tile per shard under `dir` (created on demand; tiles are
+    /// removed when the field drops, the directory when it empties).
+    OutOfCore { dir: PathBuf },
+}
+
+impl ShardStorage {
+    /// A fresh process-unique temp directory for out-of-core tiles.
+    pub fn temp() -> ShardStorage {
+        static SEQ: AtomicU64 = AtomicU64::new(0);
+        let dir = std::env::temp_dir().join(format!(
+            "stencilcache-shard-{}-{}",
+            std::process::id(),
+            SEQ.fetch_add(1, Ordering::Relaxed)
+        ));
+        ShardStorage::OutOfCore { dir }
+    }
+}
+
+enum Backend {
+    Mem { blocks: Vec<Vec<f64>> },
+    Disk { dir: PathBuf, tag: String },
+}
+
+/// A field decomposed into per-shard owned blocks (see module docs).
+pub struct ShardedField {
+    plan: Arc<ShardPlan>,
+    backend: Backend,
+}
+
+impl ShardedField {
+    pub fn plan(&self) -> &Arc<ShardPlan> {
+        &self.plan
+    }
+
+    fn path(dir: &std::path::Path, tag: &str, s: usize) -> PathBuf {
+        dir.join(format!("{tag}_{s:05}.f64"))
+    }
+
+    /// A field with no block data yet (solve ping-pong target: every block
+    /// is fully written before it is ever read).
+    pub fn empty(plan: Arc<ShardPlan>, storage: &ShardStorage, tag: &str) -> Result<ShardedField> {
+        let backend = match storage {
+            ShardStorage::InMemory => Backend::Mem { blocks: vec![Vec::new(); plan.num_shards()] },
+            ShardStorage::OutOfCore { dir } => {
+                fs::create_dir_all(dir)?;
+                Backend::Disk { dir: dir.clone(), tag: tag.to_string() }
+            }
+        };
+        Ok(ShardedField { plan, backend })
+    }
+
+    /// The deterministic solve input, scattered to shard blocks: zero
+    /// everywhere except the K-interior, whose values are drawn in global
+    /// natural (dim-0-fastest lexicographic) order from `Rng::new(seed)` —
+    /// the exact sequence of `solver::deterministic_field`, so the
+    /// decomposed field is bitwise the same no matter the shard grid.
+    /// (Restricting a lexicographic visit to any sub-box preserves the
+    /// sub-box's own lexicographic order, so per-shard writes are
+    /// monotone: each block streams out append-only with zero-fill for
+    /// boundary gaps.)
+    pub fn deterministic(plan: Arc<ShardPlan>, seed: u64, storage: &ShardStorage, tag: &str) -> Result<ShardedField> {
+        let n = plan.num_shards();
+        let d = plan.ndim();
+        let r = plan.radius() as i64;
+        let sizes: Vec<u64> = (0..n).map(|s| box_words(&plan.owned_box(s))).collect();
+        let mut sinks: Vec<Sink> = match storage {
+            ShardStorage::InMemory => sizes.iter().map(|&w| Sink::Mem(Vec::with_capacity(w as usize))).collect(),
+            ShardStorage::OutOfCore { dir } => {
+                fs::create_dir_all(dir)?;
+                let mut v = Vec::with_capacity(n);
+                for s in 0..n {
+                    let f = File::create(Self::path(dir, tag, s))?;
+                    v.push(Sink::File { w: BufWriter::with_capacity(1 << 16, f), written: 0 });
+                }
+                v
+            }
+        };
+        // Per-axis lookup: coordinate → (axis-shard index, local coord);
+        // per-shard local strides and shard-index strides.
+        let ax: Vec<Vec<(usize, u64)>> = (0..d)
+            .map(|i| {
+                let cuts = plan.axis_cuts(i);
+                let mut t = Vec::with_capacity(plan.dims()[i]);
+                for x in 0..plan.dims()[i] as i64 {
+                    let k = cuts.partition_point(|&c| c <= x) - 1;
+                    t.push((k, (x - cuts[k]) as u64));
+                }
+                t
+            })
+            .collect();
+        let lstrides: Vec<Vec<u64>> = (0..n).map(|s| box_strides(&plan.owned_box(s))).collect();
+        let mut gstride = vec![1usize; d];
+        for i in 1..d {
+            gstride[i] = gstride[i - 1] * plan.shard_grid()[i - 1];
+        }
+        let has_interior = plan.dims().iter().all(|&nn| nn as i64 >= 2 * r + 1);
+        if has_interior {
+            let ir: Vec<Range<i64>> = plan.dims().iter().map(|&nn| r..(nn as i64 - r)).collect();
+            let mut rng = Rng::new(seed);
+            let mut x: Vec<i64> = ir.iter().map(|rg| rg.start).collect();
+            'stream: loop {
+                for x0 in ir[0].clone() {
+                    x[0] = x0;
+                    let val = rng.f64() - 0.5;
+                    let mut s = 0usize;
+                    for i in 0..d {
+                        s += ax[i][x[i] as usize].0 * gstride[i];
+                    }
+                    let mut off = 0u64;
+                    for i in 0..d {
+                        off += ax[i][x[i] as usize].1 * lstrides[s][i];
+                    }
+                    sinks[s].push_at(off, val)?;
+                }
+                let mut i = 1;
+                loop {
+                    if i == d {
+                        break 'stream;
+                    }
+                    x[i] += 1;
+                    if x[i] < ir[i].end {
+                        break;
+                    }
+                    x[i] = ir[i].start;
+                    i += 1;
+                }
+            }
+        }
+        let backend = match storage {
+            ShardStorage::InMemory => {
+                let blocks = sinks
+                    .into_iter()
+                    .zip(&sizes)
+                    .map(|(snk, &w)| match snk {
+                        Sink::Mem(mut b) => {
+                            b.resize(w as usize, 0.0);
+                            b
+                        }
+                        Sink::File { .. } => unreachable!(),
+                    })
+                    .collect();
+                Backend::Mem { blocks }
+            }
+            ShardStorage::OutOfCore { dir } => {
+                for (snk, &w) in sinks.iter_mut().zip(&sizes) {
+                    snk.finish(w)?;
+                }
+                Backend::Disk { dir: dir.clone(), tag: tag.to_string() }
+            }
+        };
+        Ok(ShardedField { plan, backend })
+    }
+
+    /// Read a global-coordinate box that lies inside shard `s`'s owned
+    /// box, returning its values in column-major order. This is the halo
+    /// pack primitive (and, with the full owned box, the block reader).
+    pub fn read_box(&self, s: usize, region: &[Range<i64>]) -> Result<Vec<f64>> {
+        let owned = self.plan.owned_box(s);
+        debug_assert!(
+            region.iter().zip(&owned).all(|(rg, o)| rg.start >= o.start && rg.end <= o.end),
+            "read_box region {region:?} escapes owned box {owned:?}"
+        );
+        let ls = box_strides(&owned);
+        let total = box_words(region) as usize;
+        let mut out = Vec::with_capacity(total);
+        match &self.backend {
+            Backend::Mem { blocks } => {
+                let b = &blocks[s];
+                for_each_row(region, |x, len| {
+                    let off: usize =
+                        x.iter().zip(&owned).zip(&ls).map(|((xi, o), st)| (xi - o.start) as usize * *st as usize).sum();
+                    out.extend_from_slice(&b[off..off + len]);
+                });
+            }
+            Backend::Disk { dir, tag } => {
+                let mut rows: Vec<(u64, usize)> = Vec::new();
+                let mut max_len = 0usize;
+                for_each_row(region, |x, len| {
+                    let off: u64 = x.iter().zip(&owned).zip(&ls).map(|((xi, o), st)| (xi - o.start) as u64 * st).sum();
+                    rows.push((off, len));
+                    max_len = max_len.max(len);
+                });
+                let mut f = File::open(Self::path(dir, tag, s))?;
+                let mut bytes = vec![0u8; max_len * 8];
+                for (off, len) in rows {
+                    f.seek(SeekFrom::Start(off * 8))?;
+                    let bb = &mut bytes[..len * 8];
+                    f.read_exact(bb)?;
+                    for c in bb.chunks_exact(8) {
+                        out.push(f64::from_le_bytes(c.try_into().unwrap()));
+                    }
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// Replace shard `s`'s block (in-memory backend).
+    fn set_block(&mut self, s: usize, data: Vec<f64>) {
+        match &mut self.backend {
+            Backend::Mem { blocks } => blocks[s] = data,
+            Backend::Disk { .. } => unreachable!("disk blocks are written via write_block_shared"),
+        }
+    }
+
+    /// Write shard `s`'s block through a shared reference — legal for the
+    /// disk backend because each worker owns a distinct tile file.
+    fn write_block_shared(&self, s: usize, data: &[f64]) -> Result<()> {
+        match &self.backend {
+            Backend::Mem { .. } => unreachable!("in-memory blocks are returned from the step, not written in place"),
+            Backend::Disk { dir, tag } => {
+                let f = File::create(Self::path(dir, tag, s))?;
+                let mut w = BufWriter::with_capacity(1 << 16, f);
+                for v in data {
+                    w.write_all(&v.to_le_bytes())?;
+                }
+                w.flush()?;
+                Ok(())
+            }
+        }
+    }
+
+    fn is_disk(&self) -> bool {
+        matches!(self.backend, Backend::Disk { .. })
+    }
+
+    /// Assemble the full field into the flat column-major layout of an
+    /// unpadded grid over `plan.dims()` (tests, experiments, small grids —
+    /// materializes |G| words).
+    pub fn gather(&self) -> Result<Vec<f64>> {
+        let dims = self.plan.dims();
+        let mut gstrides = vec![1u64; dims.len()];
+        for i in 1..dims.len() {
+            gstrides[i] = gstrides[i - 1] * dims[i - 1] as u64;
+        }
+        let mut out = vec![0.0f64; self.plan.num_points() as usize];
+        for s in 0..self.plan.num_shards() {
+            let owned = self.plan.owned_box(s);
+            let data = self.read_box(s, &owned)?;
+            let mut i = 0usize;
+            for_each_row(&owned, |x, len| {
+                let goff: usize = x.iter().zip(&gstrides).map(|(&xi, &st)| xi as usize * st as usize).sum();
+                out[goff..goff + len].copy_from_slice(&data[i..i + len]);
+                i += len;
+            });
+        }
+        Ok(out)
+    }
+
+    /// Σ v² over the whole field, partials combined in shard order.
+    pub fn norm_sq(&self) -> Result<f64> {
+        let mut acc = 0.0f64;
+        for s in 0..self.plan.num_shards() {
+            let data = self.read_box(s, &self.plan.owned_box(s))?;
+            acc += data.iter().map(|v| v * v).sum::<f64>();
+        }
+        Ok(acc)
+    }
+}
+
+impl Drop for ShardedField {
+    fn drop(&mut self) {
+        if let Backend::Disk { dir, tag } = &self.backend {
+            for s in 0..self.plan.num_shards() {
+                let _ = fs::remove_file(Self::path(dir, tag, s));
+            }
+            // succeeds once the last field sharing the directory is gone
+            let _ = fs::remove_dir(dir);
+        }
+    }
+}
+
+/// Append-only block writer with zero-fill for skipped (boundary) words.
+enum Sink {
+    Mem(Vec<f64>),
+    File { w: BufWriter<File>, written: u64 },
+}
+
+impl Sink {
+    fn push_at(&mut self, off: u64, v: f64) -> Result<()> {
+        match self {
+            Sink::Mem(b) => {
+                debug_assert!(off as usize >= b.len(), "scatter offsets must be monotone per shard");
+                b.resize(off as usize, 0.0);
+                b.push(v);
+            }
+            Sink::File { w, written } => {
+                debug_assert!(off >= *written, "scatter offsets must be monotone per shard");
+                const Z: [u8; 8] = [0u8; 8];
+                while *written < off {
+                    w.write_all(&Z)?;
+                    *written += 1;
+                }
+                w.write_all(&v.to_le_bytes())?;
+                *written += 1;
+            }
+        }
+        Ok(())
+    }
+
+    fn finish(&mut self, total: u64) -> Result<()> {
+        match self {
+            Sink::Mem(b) => b.resize(total as usize, 0.0),
+            Sink::File { w, written } => {
+                const Z: [u8; 8] = [0u8; 8];
+                while *written < total {
+                    w.write_all(&Z)?;
+                    *written += 1;
+                }
+                w.flush()?;
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Per-step norms of the block solve (flat squared sums, shard-ordered).
+#[derive(Debug, Clone, Copy)]
+pub struct StepNorms {
+    /// Σ u'² after the step's update.
+    pub u2: f64,
+    /// Σ (Ku)² before the update.
+    pub r2: f64,
+    pub micros: u64,
+}
+
+/// What the block-decomposed solve returns.
+#[derive(Debug)]
+pub struct BlockSolveOutcome {
+    pub steps: Vec<StepNorms>,
+    /// ‖u‖₂ after the last step (input norm when `steps == 0`).
+    pub final_norm: f64,
+    /// Ghost words carried by [`HaloMsg`]s, summed over shards and steps —
+    /// equals `steps · plan.halo_words()` (the exchange is exact).
+    pub halo_words_loaded: u64,
+    /// Number of [`HaloMsg`]s exchanged, summed over shards and steps.
+    pub halo_exchanges: u64,
+}
+
+struct ShardStepOut {
+    block: Option<Vec<f64>>,
+    u2: f64,
+    r2: f64,
+    halo_words: u64,
+    halo_msgs: u64,
+}
+
+/// Copy a column-major `region` payload into the halo-extended buffer.
+fn unpack_region(buf: &mut [f64], ext: &[Range<i64>], estrides: &[u64], region: &[Range<i64>], data: &[f64]) {
+    let mut i = 0usize;
+    for_each_row(region, |x, len| {
+        let off: usize = x.iter().zip(ext).zip(estrides).map(|((xi, e), st)| (xi - e.start) as usize * *st as usize).sum();
+        buf[off..off + len].copy_from_slice(&data[i..i + len]);
+        i += len;
+    });
+}
+
+/// Advance one shard one step: assemble the halo-extended buffer from the
+/// shard's own old block plus one [`HaloMsg`] per source, then sweep the
+/// owned box in local natural order computing `u + α·Ku` at K-interior
+/// points (boundary points copy through — the Dirichlet condition).
+fn step_shard(
+    plan: &ShardPlan,
+    stencil: &Stencil,
+    alpha: f64,
+    cur: &ShardedField,
+    next: &ShardedField,
+    s: usize,
+    interior: Option<&[Range<i64>]>,
+) -> Result<ShardStepOut> {
+    let d = plan.ndim();
+    let ext = plan.halo_box(s);
+    let estrides = box_strides(&ext);
+    let mut buf = vec![0.0f64; box_words(&ext) as usize];
+    let owned = plan.owned_box(s);
+    let own_data = cur.read_box(s, &owned)?;
+    unpack_region(&mut buf, &ext, &estrides, &owned, &own_data);
+    drop(own_data);
+    let (mut halo_words, mut halo_msgs) = (0u64, 0u64);
+    for (src, region) in plan.sources_for(s) {
+        let data = cur.read_box(src, &region)?;
+        let m = HaloMsg { src, dst: s, region, data };
+        halo_words += m.words();
+        halo_msgs += 1;
+        unpack_region(&mut buf, &ext, &estrides, &m.region, &m.data);
+    }
+    let coeffs = stencil.coeffs();
+    let deltas: Vec<i64> =
+        stencil.offsets().iter().map(|k| k.iter().zip(&estrides).map(|(&ki, &st)| ki * st as i64).sum()).collect();
+    let mut out = Vec::with_capacity(box_words(&owned) as usize);
+    let (mut u2, mut r2) = (0.0f64, 0.0f64);
+    let mut x: Vec<i64> = owned.iter().map(|rg| rg.start).collect();
+    'sweep: loop {
+        // buffer offset of the row's first owned element (x[0] stays at
+        // owned[0].start; only higher coordinates advance)
+        let mut base: i64 =
+            x.iter().zip(&ext).zip(&estrides).map(|((xi, e), st)| (xi - e.start) * *st as i64).sum();
+        // the dim-0 run of K-interior points within this row, empty when a
+        // higher coordinate sits on the boundary shell
+        let hi_ok = interior.map_or(false, |ir| (1..d).all(|i| x[i] >= ir[i].start && x[i] < ir[i].end));
+        let (ilo, ihi) = match interior {
+            Some(ir) if hi_ok => (ir[0].start.max(owned[0].start), ir[0].end.min(owned[0].end)),
+            _ => (owned[0].start, owned[0].start),
+        };
+        for x0 in owned[0].clone() {
+            let u_old = buf[base as usize];
+            let val = if x0 >= ilo && x0 < ihi {
+                let ku = fold_point(coeffs, &deltas, &buf, base);
+                r2 += ku * ku;
+                u_old + alpha * ku
+            } else {
+                u_old
+            };
+            u2 += val * val;
+            out.push(val);
+            base += 1;
+        }
+        let mut i = 1;
+        loop {
+            if i == d {
+                break 'sweep;
+            }
+            x[i] += 1;
+            if x[i] < owned[i].end {
+                break;
+            }
+            x[i] = owned[i].start;
+            i += 1;
+        }
+    }
+    if next.is_disk() {
+        next.write_block_shared(s, &out)?;
+        Ok(ShardStepOut { block: None, u2, r2, halo_words, halo_msgs })
+    } else {
+        Ok(ShardStepOut { block: Some(out), u2, r2, halo_words, halo_msgs })
+    }
+}
+
+/// Run `steps` explicit steps `u ← u + α·Ku` over the decomposition,
+/// returning the outcome **and** the final field (tests compare it
+/// bitwise against the unsharded path). See [`solve_blocks`] for the
+/// drop-the-field convenience wrapper.
+///
+/// Under the out-of-core backend with a RAM budget, the per-step fan-out
+/// is throttled to `budget / peak_working_words` concurrent shards (the
+/// halo-extended buffer plus the written block per in-flight shard), and
+/// the call fails fast if even a single shard's working set exceeds the
+/// budget — the planner's grid refinement should have prevented that.
+#[allow(clippy::too_many_arguments)]
+pub fn solve_blocks_with_field(
+    plan: &Arc<ShardPlan>,
+    stencil: &Stencil,
+    alpha: f64,
+    steps: usize,
+    seed: u64,
+    storage: &ShardStorage,
+    pool: &ThreadPool,
+    ram_budget_words: Option<u64>,
+) -> Result<(BlockSolveOutcome, ShardedField)> {
+    assert_eq!(plan.ndim(), stencil.ndim(), "plan/stencil arity mismatch");
+    assert_eq!(plan.radius(), stencil.radius(), "ghost width must equal the stencil radius");
+    let n = plan.num_shards();
+    let conc = match (storage, ram_budget_words) {
+        (ShardStorage::OutOfCore { .. }, Some(b)) => {
+            let per_shard = plan.peak_working_words().max(1);
+            if per_shard > b {
+                bail!(
+                    "RAM budget of {b} words cannot hold one shard's working set ({per_shard} words); \
+                     a finer shard grid than {:?} is required",
+                    plan.shard_grid()
+                );
+            }
+            ((b / per_shard) as usize).clamp(1, n)
+        }
+        _ => n,
+    };
+    let mut cur = ShardedField::deterministic(plan.clone(), seed, storage, "a")?;
+    let mut next = ShardedField::empty(plan.clone(), storage, "b")?;
+    let interior: Option<Vec<Range<i64>>> = {
+        let r = plan.radius();
+        if plan.dims().iter().all(|&nn| nn >= 2 * r + 1) {
+            Some(plan.dims().iter().map(|&nn| r as i64..(nn - r) as i64).collect())
+        } else {
+            None
+        }
+    };
+    let ids: Vec<usize> = (0..n).collect();
+    let mut step_norms = Vec::with_capacity(steps);
+    let (mut hw, mut hx) = (0u64, 0u64);
+    for _ in 0..steps {
+        let t0 = Instant::now();
+        let (mut u2, mut r2) = (0.0f64, 0.0f64);
+        for wave in ids.chunks(conc.max(1)) {
+            let results = pool.scope_map(wave.len(), |w| {
+                step_shard(plan, stencil, alpha, &cur, &next, wave[w], interior.as_deref())
+            });
+            for (w, res) in results.into_iter().enumerate() {
+                let r = res?;
+                if let Some(b) = r.block {
+                    next.set_block(wave[w], b);
+                }
+                // partials combine in shard order — independent of the
+                // wave size, so norms don't depend on the RAM budget
+                u2 += r.u2;
+                r2 += r.r2;
+                hw += r.halo_words;
+                hx += r.halo_msgs;
+            }
+        }
+        step_norms.push(StepNorms { u2, r2, micros: t0.elapsed().as_micros() as u64 });
+        std::mem::swap(&mut cur, &mut next);
+    }
+    let final_norm = match step_norms.last() {
+        Some(sn) => sn.u2.sqrt(),
+        None => cur.norm_sq()?.sqrt(),
+    };
+    let outcome =
+        BlockSolveOutcome { steps: step_norms, final_norm, halo_words_loaded: hw, halo_exchanges: hx };
+    Ok((outcome, cur))
+}
+
+/// [`solve_blocks_with_field`] without the field (the coordinator path).
+/// For the out-of-core backend this also removes the tile directory.
+#[allow(clippy::too_many_arguments)]
+pub fn solve_blocks(
+    plan: &Arc<ShardPlan>,
+    stencil: &Stencil,
+    alpha: f64,
+    steps: usize,
+    seed: u64,
+    storage: &ShardStorage,
+    pool: &ThreadPool,
+    ram_budget_words: Option<u64>,
+) -> Result<BlockSolveOutcome> {
+    let (outcome, field) = solve_blocks_with_field(plan, stencil, alpha, steps, seed, storage, pool, ram_budget_words)?;
+    drop(field);
+    if let ShardStorage::OutOfCore { dir } = storage {
+        let _ = fs::remove_dir(dir);
+    }
+    Ok(outcome)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::grid::GridDesc;
+    use crate::solver::deterministic_field;
+
+    fn pool() -> ThreadPool {
+        ThreadPool::new(3)
+    }
+
+    #[test]
+    fn deterministic_scatter_matches_flat_field() {
+        for grid in [vec![1usize, 1], vec![2, 3], vec![4, 1]] {
+            let plan = Arc::new(ShardPlan::new(&[11, 9], &grid, 1));
+            let f = ShardedField::deterministic(plan, 0xBEEF, &ShardStorage::InMemory, "a").unwrap();
+            let flat = deterministic_field(&GridDesc::new(&[11, 9]), 1, 0xBEEF);
+            assert_eq!(f.gather().unwrap(), flat, "grid {grid:?}");
+        }
+    }
+
+    #[test]
+    fn out_of_core_scatter_matches_in_memory() {
+        let plan = Arc::new(ShardPlan::new(&[10, 8, 6], &[2, 2, 1], 1));
+        let mem = ShardedField::deterministic(plan.clone(), 7, &ShardStorage::InMemory, "a").unwrap();
+        let storage = ShardStorage::temp();
+        let disk = ShardedField::deterministic(plan, 7, &storage, "a").unwrap();
+        assert_eq!(mem.gather().unwrap(), disk.gather().unwrap());
+        assert_eq!(mem.norm_sq().unwrap(), disk.norm_sq().unwrap());
+        drop(disk);
+        if let ShardStorage::OutOfCore { dir } = &storage {
+            assert!(!dir.exists(), "dropping the last field must remove the tile dir");
+        }
+    }
+
+    #[test]
+    fn read_box_returns_column_major_region() {
+        let plan = Arc::new(ShardPlan::new(&[6, 4], &[1, 1], 1));
+        let f = ShardedField::deterministic(plan, 3, &ShardStorage::InMemory, "a").unwrap();
+        let all = f.gather().unwrap();
+        let region = vec![1..4i64, 1..3i64];
+        let got = f.read_box(0, &region).unwrap();
+        let mut want = Vec::new();
+        for x1 in 1..3usize {
+            for x0 in 1..4usize {
+                want.push(all[x1 * 6 + x0]);
+            }
+        }
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn zero_step_solve_returns_input_norm() {
+        let plan = Arc::new(ShardPlan::new(&[9, 9], &[3, 1], 2));
+        let s = Stencil::star(2, 2);
+        let p = pool();
+        let (out, _f) =
+            solve_blocks_with_field(&plan, &s, 0.05, 0, 42, &ShardStorage::InMemory, &p, None).unwrap();
+        let flat = deterministic_field(&GridDesc::new(&[9, 9]), 2, 42);
+        let want = flat.iter().map(|v| v * v).sum::<f64>().sqrt();
+        assert!((out.final_norm - want).abs() < 1e-12 * (1.0 + want));
+        assert_eq!(out.halo_exchanges, 0);
+    }
+
+    #[test]
+    fn budget_smaller_than_one_shard_fails_fast() {
+        let plan = Arc::new(ShardPlan::new(&[16, 16], &[2, 2], 1));
+        let s = Stencil::star(2, 1);
+        let p = pool();
+        let storage = ShardStorage::temp();
+        let err = solve_blocks(&plan, &s, 0.1, 1, 1, &storage, &p, Some(8)).unwrap_err();
+        assert!(err.to_string().contains("RAM budget"), "{err}");
+    }
+}

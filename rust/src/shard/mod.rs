@@ -1,0 +1,546 @@
+//! Shard/halo decomposition layer (DESIGN.md §2.9).
+//!
+//! The paper's §4–§6 traffic bounds are surface-to-volume arguments per
+//! cache level. Hupp & Jacob's *parallel external memory* (PEM) model
+//! (PAPERS.md) applies the same argument one level further out: when a
+//! grid is decomposed into axis-aligned shards, the words a shard must
+//! load beyond its owned box are exactly its ghost (halo) surface, and
+//! per exchange they are bounded by `Π(ŵ_i + 2r) − Π ŵ_i` where `ŵ_i` is
+//! the largest owned extent along axis `i` and `r` the stencil radius.
+//! This module makes that decomposition first-class instead of the
+//! implicit pencil-range split the coordinator used to bury in
+//! `engine::apply_sharded`:
+//!
+//! - [`ShardPlan`] — grid → shard-box geometry: per-axis cuts, owned
+//!   boxes, halo-extended boxes of width `r`, owner lookup, and the
+//!   measured-vs-bound halo accounting ([`ShardPlan::halo_words`] vs
+//!   [`ShardPlan::pem_halo_bound`]);
+//! - [`HaloMsg`] ([`msg`]) — the typed exchange buffer; ghost values move
+//!   between shards **only** inside these messages, so a network
+//!   transport is a drop-in replacement for the in-process exchange;
+//! - [`ShardedField`] ([`field`]) — per-shard block storage with an
+//!   in-memory backend (per-shard allocation, NUMA-friendly: each block
+//!   is touched only by its worker) and an **out-of-core** backend (one
+//!   disk tile per shard, streamed under a configurable RAM budget), plus
+//!   the block-decomposed solve driver [`field::solve_blocks`] whose
+//!   result field is bitwise identical to the unsharded path (the
+//!   per-point fold is `engine::fold_point`, the ONE shared definition).
+//!
+//! The measured halo is exact, not modelled: because owned boxes
+//! partition the grid, every ghost cell of a shard has exactly one owner,
+//! so the words carried by [`HaloMsg`]s equal the geometric
+//! `Σ_s (|halo_box(s)| − |owned_box(s)|)` — an invariant the property
+//! tests pin. Clipping at the physical boundary only shrinks halo boxes,
+//! so measured ≤ PEM bound always holds.
+
+pub mod field;
+pub mod msg;
+
+pub use field::{solve_blocks, solve_blocks_with_field, BlockSolveOutcome, ShardStorage, ShardedField, StepNorms};
+pub use msg::HaloMsg;
+
+use crate::traversal::shard_ranges;
+use std::ops::Range;
+
+/// Ceiling on the total block-shard count the planner's budget refinement
+/// will reach for — a backstop against degenerate grids, far above any
+/// sensible decomposition (cf. `MAX_SHARDS` for the pencil fan-out).
+pub const MAX_BLOCK_SHARDS: usize = 512;
+
+/// Number of points in an axis-aligned box.
+pub fn box_words(b: &[Range<i64>]) -> u64 {
+    b.iter().map(|rg| (rg.end - rg.start).max(0) as u64).product()
+}
+
+/// Column-major (dim-0-fastest) strides over a box's extents.
+pub(crate) fn box_strides(b: &[Range<i64>]) -> Vec<u64> {
+    let mut s = vec![1u64; b.len()];
+    for i in 1..b.len() {
+        s[i] = s[i - 1] * (b[i - 1].end - b[i - 1].start).max(0) as u64;
+    }
+    s
+}
+
+/// Visit the rows of a box: runs along dim 0, higher dims advancing
+/// dim-1-fastest. Calls `f(row_start_coords, row_len)` per row. The halo
+/// pack/unpack paths and the out-of-core tile IO all iterate through this
+/// one helper, so payload order is column-major everywhere by
+/// construction.
+pub(crate) fn for_each_row(region: &[Range<i64>], mut f: impl FnMut(&[i64], usize)) {
+    let d = region.len();
+    if region.iter().any(|rg| rg.end <= rg.start) {
+        return;
+    }
+    let row_len = (region[0].end - region[0].start) as usize;
+    let mut x: Vec<i64> = region.iter().map(|rg| rg.start).collect();
+    loop {
+        f(&x, row_len);
+        let mut i = 1;
+        loop {
+            if i == d {
+                return;
+            }
+            x[i] += 1;
+            if x[i] < region[i].end {
+                break;
+            }
+            x[i] = region[i].start;
+            i += 1;
+        }
+    }
+}
+
+/// The two-level decomposition of a logical grid into axis-aligned shards
+/// with ghost regions of width `r` (the stencil radius).
+///
+/// Owned boxes partition `[0, n_i)` per axis via the same near-equal
+/// contiguous split as `traversal::shard_ranges`, so every grid point —
+/// boundary included — has exactly one owner. The halo-extended box of a
+/// shard is its owned box grown by `r` per side, clipped to the grid.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ShardPlan {
+    dims: Vec<usize>,
+    grid: Vec<usize>,
+    /// Per axis: ascending cut coordinates, `grid[i] + 1` entries from 0
+    /// to `dims[i]`; axis-shard `k` owns `cuts[i][k]..cuts[i][k+1]`.
+    cuts: Vec<Vec<i64>>,
+    r: usize,
+}
+
+impl ShardPlan {
+    /// Decompose `dims` into `shard_grid[i]` slabs per axis with ghost
+    /// width `r`. Axis counts are clamped to `1..=dims[i]`.
+    pub fn new(dims: &[usize], shard_grid: &[usize], r: usize) -> ShardPlan {
+        assert!(!dims.is_empty(), "zero-dimensional shard plan");
+        assert_eq!(dims.len(), shard_grid.len(), "shard grid arity mismatch");
+        assert!(dims.iter().all(|&n| n >= 1), "dims must be positive: {dims:?}");
+        let mut grid = Vec::with_capacity(dims.len());
+        let mut cuts = Vec::with_capacity(dims.len());
+        for (&n, &g) in dims.iter().zip(shard_grid) {
+            let ranges = shard_ranges(n, g.max(1));
+            grid.push(ranges.len());
+            let mut c: Vec<i64> = ranges.iter().map(|rg| rg.start as i64).collect();
+            c.push(n as i64);
+            cuts.push(c);
+        }
+        ShardPlan { dims: dims.to_vec(), grid, cuts, r }
+    }
+
+    pub fn ndim(&self) -> usize {
+        self.dims.len()
+    }
+
+    pub fn dims(&self) -> &[usize] {
+        &self.dims
+    }
+
+    /// Shards per axis.
+    pub fn shard_grid(&self) -> &[usize] {
+        &self.grid
+    }
+
+    /// Ghost width (stencil radius).
+    pub fn radius(&self) -> usize {
+        self.r
+    }
+
+    /// Ascending cut coordinates along `axis`: `shard_grid()[axis] + 1`
+    /// entries from 0 to `dims[axis]`; axis-shard `k` owns
+    /// `cuts[k]..cuts[k + 1]`.
+    pub fn axis_cuts(&self, axis: usize) -> &[i64] {
+        &self.cuts[axis]
+    }
+
+    pub fn num_shards(&self) -> usize {
+        self.grid.iter().product()
+    }
+
+    /// Logical grid points |G|.
+    pub fn num_points(&self) -> u64 {
+        self.dims.iter().map(|&n| n as u64).product()
+    }
+
+    /// Per-axis shard coordinates of shard `s` (dim-0 fastest, matching
+    /// the temporal tile odometer).
+    pub fn shard_coords(&self, s: usize) -> Vec<usize> {
+        debug_assert!(s < self.num_shards());
+        let mut c = vec![0usize; self.grid.len()];
+        let mut k = s;
+        for i in 0..self.grid.len() {
+            c[i] = k % self.grid[i];
+            k /= self.grid[i];
+        }
+        c
+    }
+
+    /// Inverse of [`ShardPlan::shard_coords`].
+    pub fn shard_index(&self, coords: &[usize]) -> usize {
+        debug_assert_eq!(coords.len(), self.grid.len());
+        let mut s = 0usize;
+        let mut stride = 1usize;
+        for i in 0..self.grid.len() {
+            debug_assert!(coords[i] < self.grid[i]);
+            s += coords[i] * stride;
+            stride *= self.grid[i];
+        }
+        s
+    }
+
+    /// The box of points shard `s` owns (a partition cell of the grid).
+    pub fn owned_box(&self, s: usize) -> Vec<Range<i64>> {
+        let c = self.shard_coords(s);
+        c.iter().zip(&self.cuts).map(|(&k, cut)| cut[k]..cut[k + 1]).collect()
+    }
+
+    /// The owned box grown by `r` per side, clipped to the grid — the
+    /// region shard `s` must hold to apply the stencil at every owned
+    /// interior point.
+    pub fn halo_box(&self, s: usize) -> Vec<Range<i64>> {
+        let r = self.r as i64;
+        self.owned_box(s)
+            .iter()
+            .zip(&self.dims)
+            .map(|(rg, &n)| (rg.start - r).max(0)..(rg.end + r).min(n as i64))
+            .collect()
+    }
+
+    /// Which shard owns logical point `x`.
+    pub fn owner_of(&self, x: &[i64]) -> usize {
+        debug_assert_eq!(x.len(), self.dims.len());
+        let mut coords = vec![0usize; self.dims.len()];
+        for i in 0..self.dims.len() {
+            debug_assert!(x[i] >= 0 && (x[i] as usize) < self.dims[i]);
+            // cuts are ascending; the owner is the last cut ≤ x_i.
+            coords[i] = self.cuts[i].partition_point(|&c| c <= x[i]) - 1;
+        }
+        self.shard_index(&coords)
+    }
+
+    /// The halo sources of shard `dst`: every other shard whose owned box
+    /// intersects `dst`'s halo-extended box, with the intersection region
+    /// (global coordinates). Deterministic order: source shards ascend in
+    /// the dim-0-fastest odometer. Because owned boxes partition the grid,
+    /// the returned regions tile `halo_box(dst) \ owned_box(dst)` exactly.
+    pub fn sources_for(&self, dst: usize) -> Vec<(usize, Vec<Range<i64>>)> {
+        let d = self.dims.len();
+        let ext = self.halo_box(dst);
+        // per-axis range of axis-shard indices overlapping the halo box
+        let mut lo = vec![0usize; d];
+        let mut hi = vec![0usize; d];
+        for i in 0..d {
+            lo[i] = self.cuts[i].partition_point(|&c| c <= ext[i].start) - 1;
+            hi[i] = self.cuts[i].partition_point(|&c| c <= ext[i].end - 1) - 1;
+        }
+        let mut out = Vec::new();
+        let mut c = lo.clone();
+        loop {
+            let s = self.shard_index(&c);
+            if s != dst {
+                let owned = self.owned_box(s);
+                let region: Vec<Range<i64>> = ext
+                    .iter()
+                    .zip(&owned)
+                    .map(|(e, o)| e.start.max(o.start)..e.end.min(o.end))
+                    .collect();
+                if box_words(&region) > 0 {
+                    out.push((s, region));
+                }
+            }
+            let mut i = 0;
+            loop {
+                if i == d {
+                    out.sort_by_key(|(s, _)| *s);
+                    return out;
+                }
+                c[i] += 1;
+                if c[i] <= hi[i] {
+                    break;
+                }
+                c[i] = lo[i];
+                i += 1;
+            }
+        }
+    }
+
+    /// Ghost words one full exchange loads, summed over shards — the
+    /// *measured* per-step halo traffic (exact: clipped extended boxes
+    /// minus owned boxes).
+    pub fn halo_words(&self) -> u64 {
+        (0..self.num_shards()).map(|s| box_words(&self.halo_box(s)) - box_words(&self.owned_box(s))).sum()
+    }
+
+    /// The PEM surface-to-volume bound on one exchange:
+    /// `shards · (Π(ŵ_i + 2r) − Π ŵ_i)` with `ŵ_i = ⌈n_i / g_i⌉` the
+    /// largest owned extent per axis. Boundary clipping only shrinks halo
+    /// boxes and the surface term is monotone in the extents, so
+    /// [`ShardPlan::halo_words`] ≤ this bound always.
+    pub fn pem_halo_bound(&self) -> u64 {
+        let grown: u64 = self
+            .dims
+            .iter()
+            .zip(&self.grid)
+            .map(|(&n, &g)| (n.div_ceil(g) + 2 * self.r) as u64)
+            .product();
+        let owned: u64 = self.dims.iter().zip(&self.grid).map(|(&n, &g)| n.div_ceil(g) as u64).product();
+        self.num_shards() as u64 * (grown - owned)
+    }
+
+    /// Measured halo words per grid point per exchange — the
+    /// EXPERIMENTS.md / bench-gate words-per-point figure.
+    pub fn halo_words_per_point(&self) -> f64 {
+        self.halo_words() as f64 / self.num_points() as f64
+    }
+
+    /// Bound counterpart of [`ShardPlan::halo_words_per_point`].
+    pub fn pem_halo_bound_per_point(&self) -> f64 {
+        self.pem_halo_bound() as f64 / self.num_points() as f64
+    }
+
+    /// Peak resident words one shard's step needs: the halo-extended
+    /// read buffer, the owned write block, and the transient [`HaloMsg`]
+    /// payloads (which sum to halo-box minus owned words) — `2·|ext|` per
+    /// concurrently processed shard. The out-of-core driver divides the
+    /// RAM budget by this to pick its concurrency.
+    pub fn peak_working_words(&self) -> u64 {
+        (0..self.num_shards()).map(|s| 2 * box_words(&self.halo_box(s))).max().unwrap_or(0)
+    }
+}
+
+/// Choose a shard grid for `dims` by the PEM surface/volume criterion:
+/// repeatedly halve the axis with the largest local slab extent (halo
+/// surface shrinks fastest where the slab is longest) until `target`
+/// shards are reached, never cutting a slab below the stencil diameter
+/// `2r + 1` (a thinner slab would load more ghost words than it owns).
+/// Ties prefer the highest axis, keeping dim-0 runs long — contiguous
+/// rows for the streaming traversal and the disk tiles.
+pub fn choose_shard_grid(dims: &[usize], r: usize, target: usize) -> Vec<usize> {
+    let d = dims.len();
+    let mut grid = vec![1usize; d];
+    let min_extent = 2 * r + 1;
+    let mut shards = 1usize;
+    while shards < target {
+        let mut best: Option<usize> = None;
+        for i in 0..d {
+            if dims[i] / (grid[i] * 2) < min_extent {
+                continue;
+            }
+            let ext = dims[i] / grid[i];
+            let better = match best {
+                None => true,
+                Some(b) => {
+                    let bext = dims[b] / grid[b];
+                    ext > bext || (ext == bext && i > b)
+                }
+            };
+            if better {
+                best = Some(i);
+            }
+        }
+        match best {
+            Some(i) => {
+                grid[i] *= 2;
+                shards *= 2;
+            }
+            None => break,
+        }
+    }
+    grid
+}
+
+/// Grow `grid` until every shard's working set fits `budget_words`
+/// ([`ShardPlan::peak_working_words`]), splitting by the same
+/// longest-axis criterion as [`choose_shard_grid`]. Stops at
+/// [`MAX_BLOCK_SHARDS`] or when no axis can be cut without dropping below
+/// the stencil diameter; the solve driver reports the budget violation if
+/// refinement ran out of axes.
+pub fn refine_grid_for_budget(dims: &[usize], r: usize, mut grid: Vec<usize>, budget_words: u64) -> Vec<usize> {
+    let min_extent = 2 * r + 1;
+    loop {
+        let plan = ShardPlan::new(dims, &grid, r);
+        if plan.peak_working_words() <= budget_words || plan.num_shards() >= MAX_BLOCK_SHARDS {
+            return grid;
+        }
+        let mut best: Option<usize> = None;
+        for i in 0..dims.len() {
+            if dims[i] / (grid[i] * 2) < min_extent {
+                continue;
+            }
+            let ext = dims[i] / grid[i];
+            let better = match best {
+                None => true,
+                Some(b) => {
+                    let bext = dims[b] / grid[b];
+                    ext > bext || (ext == bext && i > b)
+                }
+            };
+            if better {
+                best = Some(i);
+            }
+        }
+        match best {
+            Some(i) => grid[i] *= 2,
+            None => return grid,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cuts_partition_every_axis() {
+        let p = ShardPlan::new(&[10, 7, 5], &[3, 2, 1], 1);
+        assert_eq!(p.num_shards(), 6);
+        for (i, &n) in p.dims().iter().enumerate() {
+            assert_eq!(p.cuts[i][0], 0);
+            assert_eq!(*p.cuts[i].last().unwrap(), n as i64);
+            for w in p.cuts[i].windows(2) {
+                assert!(w[0] < w[1], "axis {i}: empty or inverted cell {w:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn owned_boxes_partition_the_grid() {
+        let p = ShardPlan::new(&[9, 8], &[2, 3], 2);
+        let mut owned_total = 0u64;
+        for s in 0..p.num_shards() {
+            owned_total += box_words(&p.owned_box(s));
+        }
+        assert_eq!(owned_total, p.num_points());
+        // every point's owner contains it
+        for x0 in 0..9i64 {
+            for x1 in 0..8i64 {
+                let s = p.owner_of(&[x0, x1]);
+                let b = p.owned_box(s);
+                assert!(b[0].contains(&x0) && b[1].contains(&x1), "({x0},{x1}) not in owner's box {b:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn shard_index_roundtrip() {
+        let p = ShardPlan::new(&[16, 16, 16], &[2, 3, 2], 1);
+        for s in 0..p.num_shards() {
+            assert_eq!(p.shard_index(&p.shard_coords(s)), s);
+        }
+    }
+
+    #[test]
+    fn halo_box_is_owned_grown_by_radius_clipped() {
+        for r in [1usize, 2, 4] {
+            let p = ShardPlan::new(&[32, 32], &[2, 2], r);
+            for s in 0..p.num_shards() {
+                let o = p.owned_box(s);
+                let h = p.halo_box(s);
+                for i in 0..2 {
+                    assert_eq!(h[i].start, (o[i].start - r as i64).max(0));
+                    assert_eq!(h[i].end, (o[i].end + r as i64).min(32));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sources_tile_the_halo_exactly() {
+        let p = ShardPlan::new(&[12, 10, 8], &[2, 2, 2], 2);
+        for dst in 0..p.num_shards() {
+            let srcs = p.sources_for(dst);
+            let words: u64 = srcs.iter().map(|(_, rg)| box_words(rg)).sum();
+            assert_eq!(words, box_words(&p.halo_box(dst)) - box_words(&p.owned_box(dst)));
+            // regions are pairwise disjoint (owners partition the grid)
+            for (a, (sa, ra)) in srcs.iter().enumerate() {
+                assert_ne!(*sa, dst);
+                for (sb, rb) in srcs.iter().skip(a + 1) {
+                    assert_ne!(sa, sb);
+                    let overlap: u64 = ra
+                        .iter()
+                        .zip(rb)
+                        .map(|(x, y)| (x.end.min(y.end) - x.start.max(y.start)).max(0) as u64)
+                        .product();
+                    assert_eq!(overlap, 0, "regions of src {sa} and {sb} overlap");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn thin_slabs_pull_ghosts_from_non_neighbors() {
+        // slab width 1 < r = 2: the halo of a middle shard spans two
+        // shards per side, so sources_for must reach past adjacency.
+        let p = ShardPlan::new(&[8], &[8], 2);
+        let srcs = p.sources_for(4);
+        let ids: Vec<usize> = srcs.iter().map(|(s, _)| *s).collect();
+        assert_eq!(ids, vec![2, 3, 5, 6]);
+    }
+
+    #[test]
+    fn measured_halo_never_exceeds_pem_bound() {
+        for (dims, grid, r) in [
+            (vec![64usize, 64, 64], vec![2usize, 2, 2], 2usize),
+            (vec![45, 91, 100], vec![1, 2, 4], 1),
+            (vec![17, 9], vec![4, 3], 2),
+            (vec![33], vec![5], 4),
+        ] {
+            let p = ShardPlan::new(&dims, &grid, r);
+            assert!(
+                p.halo_words() <= p.pem_halo_bound(),
+                "{dims:?}/{grid:?}/r{r}: measured {} > bound {}",
+                p.halo_words(),
+                p.pem_halo_bound()
+            );
+        }
+    }
+
+    #[test]
+    fn single_shard_has_no_halo() {
+        let p = ShardPlan::new(&[20, 20, 20], &[1, 1, 1], 2);
+        assert_eq!(p.halo_words(), 0);
+        assert_eq!(p.pem_halo_bound(), 0);
+        assert!(p.sources_for(0).is_empty());
+    }
+
+    #[test]
+    fn interior_2x2x2_halo_matches_closed_form() {
+        // 128³ split 2×2×2 at r = 2: every shard is a corner — two clipped
+        // sides per axis — so each extended box is 66³ over a 64³ owned box.
+        let p = ShardPlan::new(&[128, 128, 128], &[2, 2, 2], 2);
+        assert_eq!(p.halo_words(), 8 * (66u64.pow(3) - 64u64.pow(3)));
+        assert_eq!(p.pem_halo_bound(), 8 * (68u64.pow(3) - 64u64.pow(3)));
+    }
+
+    #[test]
+    fn choose_grid_splits_longest_axis_first() {
+        let g = choose_shard_grid(&[256, 64, 64], 2, 4);
+        assert_eq!(g, vec![4, 1, 1]);
+        let g = choose_shard_grid(&[128, 128, 128], 2, 8);
+        assert_eq!(g, vec![2, 2, 2]);
+        // ties prefer the highest axis (long dim-0 rows survive)
+        let g = choose_shard_grid(&[64, 64, 64], 2, 2);
+        assert_eq!(g, vec![1, 1, 2]);
+    }
+
+    #[test]
+    fn choose_grid_respects_stencil_diameter_floor() {
+        // 12 points at r = 2: diameter 5, so one halving (extent 6) is
+        // legal but a second (extent 3) is not.
+        let g = choose_shard_grid(&[12], 2, 64);
+        assert_eq!(g, vec![2]);
+        // nothing splittable at all
+        let g = choose_shard_grid(&[6, 6], 2, 8);
+        assert_eq!(g, vec![1, 1]);
+    }
+
+    #[test]
+    fn refine_grid_reaches_the_budget() {
+        let dims = vec![128usize, 128, 128];
+        let base = choose_shard_grid(&dims, 2, 1);
+        assert_eq!(base, vec![1, 1, 1]);
+        // budget of two 68³ boxes forces roughly 2×2×2 blocks
+        let refined = refine_grid_for_budget(&dims, 2, base, 2 * 68 * 68 * 68);
+        let p = ShardPlan::new(&dims, &refined, 2);
+        assert!(p.peak_working_words() <= 2 * 68 * 68 * 68, "{refined:?}");
+        assert!(p.num_shards() >= 8);
+    }
+}

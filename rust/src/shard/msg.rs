@@ -1,0 +1,46 @@
+//! Typed halo exchange messages.
+//!
+//! A [`HaloMsg`] is the **only** channel through which ghost values cross
+//! a shard boundary: the solve driver builds one message per
+//! (source, destination) pair from [`super::ShardPlan::sources_for`],
+//! fills its payload by reading the source's *old* block, and unpacks it
+//! into the destination's halo-extended compute buffer. Keeping the
+//! exchange typed — a global-coordinate region plus a column-major
+//! payload — is what makes a network transport a drop-in later: serialize
+//! the struct, nothing else changes.
+
+use std::ops::Range;
+
+/// One ghost-region transfer from shard `src` to shard `dst`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HaloMsg {
+    /// Owning shard the ghost values are read from.
+    pub src: usize,
+    /// Shard whose halo-extended buffer receives them.
+    pub dst: usize,
+    /// Global-coordinate box of the transferred region
+    /// (`halo_box(dst) ∩ owned_box(src)`).
+    pub region: Vec<Range<i64>>,
+    /// The region's values in column-major (dim-0-fastest) order;
+    /// `data.len() == words()`.
+    pub data: Vec<f64>,
+}
+
+impl HaloMsg {
+    /// Number of ghost words this message carries.
+    pub fn words(&self) -> u64 {
+        super::box_words(&self.region)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn words_is_region_volume() {
+        let m = HaloMsg { src: 0, dst: 1, region: vec![0..3, 2..4], data: vec![0.0; 6] };
+        assert_eq!(m.words(), 6);
+        assert_eq!(m.data.len() as u64, m.words());
+    }
+}

@@ -87,6 +87,12 @@ pub struct NumericOutcome {
     pub micros: u64,
     /// Stencil applications performed (1 for execute, `steps` for solve).
     pub executions: u64,
+    /// Ghost words carried across shard boundaries by typed `HaloMsg`s —
+    /// nonzero only for block-decomposed solves (`crate::shard`), where it
+    /// equals `steps · ShardPlan::halo_words()` exactly.
+    pub halo_words_loaded: u64,
+    /// `HaloMsg` exchanges performed (block-decomposed solves only).
+    pub halo_exchanges: u64,
 }
 
 /// A numeric execution backend: applies the stencil once, or runs an
@@ -258,7 +264,60 @@ impl<'a> NativeBackend<'a> {
             None => l2_norm_sharded(&u, self.pool, job.shards),
         };
         let micros: u64 = log.iter().map(|s| s.micros).sum();
-        Ok(NumericOutcome { result_norm, solve_log: log, micros, executions: steps as u64 })
+        Ok(NumericOutcome {
+            result_norm,
+            solve_log: log,
+            micros,
+            executions: steps as u64,
+            halo_words_loaded: 0,
+            halo_exchanges: 0,
+        })
+    }
+
+    /// Block-decomposed solve over the shard/halo layer (DESIGN.md §2.9):
+    /// the field lives as per-shard blocks ([`crate::shard::ShardedField`],
+    /// in memory or out-of-core), ghost values cross shard boundaries only
+    /// inside typed [`crate::shard::HaloMsg`]s, and the outcome carries the
+    /// measured halo traffic. Runs on the request's *logical* dims — block
+    /// layouts are per-shard, so planner padding (a storage-layout remedy
+    /// for cache interference) does not apply. The step, the per-point
+    /// fold, and α are the classic path's own, so the result field is
+    /// bitwise identical to [`NumericBackend::solve`] on the same job.
+    pub fn solve_decomposed(
+        &self,
+        job: &NumericJob<'_>,
+        steps: usize,
+        shard_grid: &[usize],
+        storage: &crate::shard::ShardStorage,
+        ram_budget_words: Option<u64>,
+    ) -> Result<NumericOutcome> {
+        let plan = Arc::new(crate::shard::ShardPlan::new(job.dims, shard_grid, job.stencil.radius()));
+        let alpha = Self::stable_alpha(job.stencil);
+        let out = crate::shard::solve_blocks(
+            &plan,
+            job.stencil,
+            alpha,
+            steps,
+            job.seed,
+            storage,
+            self.pool,
+            ram_budget_words,
+        )?;
+        let log: Vec<SolveStep> = out
+            .steps
+            .iter()
+            .enumerate()
+            .map(|(i, sn)| SolveStep { step: i, u_norm: sn.u2.sqrt(), residual_norm: sn.r2.sqrt(), micros: sn.micros })
+            .collect();
+        let micros: u64 = log.iter().map(|s| s.micros).sum();
+        Ok(NumericOutcome {
+            result_norm: out.final_norm,
+            solve_log: log,
+            micros,
+            executions: steps as u64,
+            halo_words_loaded: out.halo_words_loaded,
+            halo_exchanges: out.halo_exchanges,
+        })
     }
 }
 
@@ -281,6 +340,8 @@ impl NumericBackend for NativeBackend<'_> {
             solve_log: Vec::new(),
             micros: t0.elapsed().as_micros() as u64,
             executions: 1,
+            halo_words_loaded: 0,
+            halo_exchanges: 0,
         })
     }
 
@@ -313,7 +374,14 @@ impl NumericBackend for NativeBackend<'_> {
             None => l2_norm_sharded(&u, self.pool, job.shards),
         };
         let micros: u64 = log.iter().map(|s| s.micros).sum();
-        Ok(NumericOutcome { result_norm, solve_log: log, micros, executions: steps as u64 })
+        Ok(NumericOutcome {
+            result_norm,
+            solve_log: log,
+            micros,
+            executions: steps as u64,
+            halo_words_loaded: 0,
+            halo_exchanges: 0,
+        })
     }
 }
 
@@ -360,6 +428,8 @@ impl NumericBackend for PjrtBackend {
             solve_log: Vec::new(),
             micros: t0.elapsed().as_micros() as u64,
             executions: 1,
+            halo_words_loaded: 0,
+            halo_exchanges: 0,
         })
     }
 
@@ -376,7 +446,14 @@ impl NumericBackend for PjrtBackend {
             log.push(SolveStep { step, u_norm: norms.data[0] as f64, residual_norm: norms.data[1] as f64, micros });
         }
         let micros: u64 = log.iter().map(|s| s.micros).sum();
-        Ok(NumericOutcome { result_norm: u.norm(), solve_log: log, micros, executions: steps as u64 })
+        Ok(NumericOutcome {
+            result_norm: u.norm(),
+            solve_log: log,
+            micros,
+            executions: steps as u64,
+            halo_words_loaded: 0,
+            halo_exchanges: 0,
+        })
     }
 }
 

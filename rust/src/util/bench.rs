@@ -223,6 +223,24 @@ pub fn write_snapshot(path: &str, snapshot: &Json) -> std::io::Result<()> {
     std::fs::write(path, text)
 }
 
+/// Strip `"provisional": true` tags from every entry of a snapshot array.
+/// Blessing a baseline records it as measured-on-this-machine, so later
+/// regressions against it gate hard instead of report-only.
+pub fn clear_provisional(snapshot: &Json) -> Json {
+    match snapshot {
+        Json::Arr(entries) => Json::Arr(
+            entries
+                .iter()
+                .map(|e| match e {
+                    Json::Obj(pairs) => Json::Obj(pairs.iter().filter(|(k, _)| k != "provisional").cloned().collect()),
+                    other => other.clone(),
+                })
+                .collect(),
+        ),
+        other => other.clone(),
+    }
+}
+
 /// Outcome of comparing a fresh bench snapshot against a committed baseline.
 #[derive(Debug, Default)]
 pub struct GateReport {
@@ -431,6 +449,22 @@ mod tests {
         assert_eq!(arr.len(), 2);
         assert_eq!(arr[0].get("provisional"), Some(&Json::Bool(true)));
         assert_eq!(arr[1].get("name").unwrap().as_str(), Some("model"));
+    }
+
+    #[test]
+    fn clear_provisional_strips_tags_only() {
+        let snap = Json::Arr(vec![
+            entry("a", Some(10.0), None, true),
+            entry("model", None, Some(0.5), false),
+        ]);
+        let blessed = clear_provisional(&snap);
+        let arr = blessed.as_arr().unwrap();
+        assert_eq!(arr[0].get("provisional"), None);
+        assert_eq!(arr[0].get("throughput_per_s"), snap.as_arr().unwrap()[0].get("throughput_per_s"));
+        assert_eq!(arr[1], snap.as_arr().unwrap()[1]);
+        // a blessed baseline gates its own numbers hard
+        let rep = gate(&blessed, &Json::Arr(vec![entry("a", Some(1.0), None, false)]), 2.0);
+        assert!(!rep.passed());
     }
 
     #[test]
