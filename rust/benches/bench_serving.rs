@@ -18,6 +18,7 @@
 use stencilcache::coordinator::{Coordinator, JobKind, PlannerConfig, StencilRequest, StencilSpec};
 use stencilcache::experiments::replay;
 use stencilcache::util::bench::{self, Bencher};
+use stencilcache::util::json::Json;
 use stencilcache::util::rng::Rng;
 use std::cell::Cell;
 
@@ -67,9 +68,41 @@ fn main() {
         );
     }
 
+    // Open-loop serving rows: deterministic Poisson / bursty arrival
+    // schedules through the admission-controlled dispatch pipeline
+    // (experiments::replay::run_open_loop). Sojourn tails are wall-clock,
+    // so these rows are always tagged provisional: perf-smoke reports a
+    // drift instead of failing on machine-to-machine variance.
+    let mut extra = Vec::new();
+    for arrivals in [replay::Arrivals::Poisson, replay::Arrivals::Bursty { burst: 32 }] {
+        let cfg = replay::OpenLoopConfig { arrivals, ..replay::OpenLoopConfig::paper(true) };
+        let out = replay::run_open_loop(&cfg);
+        println!(
+            "open_loop/{}: {}/{} completed, shed {:.1}%, p50 {:.3} ms, p99 {:.3} ms, p99.9 {:.3} ms, collapsed {}",
+            out.label,
+            out.completed,
+            out.requests,
+            100.0 * out.shed_rate(),
+            out.p50_ms,
+            out.p99_ms,
+            out.p999_ms,
+            out.collapsed
+        );
+        let mut o = Json::obj();
+        o.set("name", format!("serving/open_loop_{}_2krps", out.label))
+            .set("throughput_per_s", out.achieved_rps)
+            .set("p50_ms", out.p50_ms)
+            .set("p99_ms", out.p99_ms)
+            .set("p999_ms", out.p999_ms)
+            .set("shed_pct", 100.0 * out.shed_rate())
+            .set("n", out.requests)
+            .set("provisional", true);
+        extra.push(o);
+    }
+
     if let Some(path) = bench::snapshot_path_from_env() {
         let provisional = std::env::var("STENCILCACHE_BENCH_PROVISIONAL").is_ok();
-        let snap = b.snapshot(provisional, Vec::new());
+        let snap = b.snapshot(provisional, extra);
         bench::write_snapshot(&path, &snap).expect("write bench snapshot");
         println!("wrote bench snapshot to {path}");
     }

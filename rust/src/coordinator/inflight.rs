@@ -1,0 +1,335 @@
+//! Request-coalescing primitives for the serving layer.
+//!
+//! [`SingleFlight`] collapses concurrent misses on one canonical key into a
+//! single computation: the first caller becomes the *leader* and computes,
+//! every later caller blocks on the flight and receives a clone of the
+//! leader's value (for the coordinator that clone is an `Arc` bump, never a
+//! recomputed plan or report). A leader that unwinds without publishing
+//! wakes its waiters with [`Flight::Retry`] instead of hanging them.
+//!
+//! [`Admission`] is the bounded-inflight admission controller: at most
+//! `cap` permits are out at any instant, and an acquire past the cap is
+//! *shed* (counted and refused) rather than queued — an overloaded server
+//! answers `Overloaded` immediately instead of building an unbounded
+//! backlog.
+
+use std::collections::HashMap;
+use std::hash::Hash;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, PoisonError};
+
+/// Lock with poison recovery: a panic in some other holder must not brick
+/// this long-lived structure (the protected state is always internally
+/// consistent — every critical section here is a handful of non-panicking
+/// map/scalar operations).
+fn recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+enum SlotState<V> {
+    /// The leader is still computing.
+    Pending,
+    /// The leader published a value; waiters clone it.
+    Done(V),
+    /// The leader unwound without publishing; waiters must retry.
+    Abandoned,
+}
+
+struct Slot<V> {
+    state: Mutex<SlotState<V>>,
+    cond: Condvar,
+}
+
+/// One in-flight computation per key; see the module docs.
+pub struct SingleFlight<K, V> {
+    slots: Mutex<HashMap<K, Arc<Slot<V>>>>,
+}
+
+/// Outcome of [`SingleFlight::join`].
+pub enum Flight<'a, K: Eq + Hash + Clone, V: Clone> {
+    /// This caller owns the computation: compute, then call
+    /// [`Leader::complete`]. Dropping the token without completing wakes
+    /// every waiter with `Retry`.
+    Leader(Leader<'a, K, V>),
+    /// Another caller computed the value while we waited.
+    Shared(V),
+    /// The leader abandoned the flight (panicked mid-compute); re-probe
+    /// any cache and join again.
+    Retry,
+}
+
+/// The leader's obligation token for one flight.
+pub struct Leader<'a, K: Eq + Hash + Clone, V: Clone> {
+    owner: &'a SingleFlight<K, V>,
+    key: K,
+    slot: Arc<Slot<V>>,
+    completed: bool,
+}
+
+impl<K: Eq + Hash + Clone, V: Clone> SingleFlight<K, V> {
+    pub fn new() -> SingleFlight<K, V> {
+        SingleFlight { slots: Mutex::new(HashMap::new()) }
+    }
+
+    /// Join the flight for `key`. The first caller becomes the leader;
+    /// everyone else blocks until the leader completes or abandons.
+    pub fn join(&self, key: &K) -> Flight<'_, K, V> {
+        let slot = {
+            let mut slots = recover(&self.slots);
+            match slots.get(key) {
+                Some(s) => Arc::clone(s),
+                None => {
+                    let s = Arc::new(Slot { state: Mutex::new(SlotState::Pending), cond: Condvar::new() });
+                    slots.insert(key.clone(), Arc::clone(&s));
+                    return Flight::Leader(Leader { owner: self, key: key.clone(), slot: s, completed: false });
+                }
+            }
+        };
+        let mut st = recover(&slot.state);
+        loop {
+            match &*st {
+                SlotState::Pending => st = slot.cond.wait(st).unwrap_or_else(PoisonError::into_inner),
+                SlotState::Done(v) => return Flight::Shared(v.clone()),
+                SlotState::Abandoned => return Flight::Retry,
+            }
+        }
+    }
+
+    /// Keys with a leader computing right now.
+    pub fn in_flight(&self) -> usize {
+        recover(&self.slots).len()
+    }
+
+    fn finish(&self, key: &K, slot: &Arc<Slot<V>>, outcome: SlotState<V>) {
+        {
+            let mut slots = recover(&self.slots);
+            // Remove only the exact slot this leader owns: after an
+            // abandoned flight a retrying caller may already have installed
+            // a fresh one under the same key.
+            if slots.get(key).is_some_and(|s| Arc::ptr_eq(s, slot)) {
+                slots.remove(key);
+            }
+        }
+        *recover(&slot.state) = outcome;
+        slot.cond.notify_all();
+    }
+}
+
+impl<K: Eq + Hash + Clone, V: Clone> Default for SingleFlight<K, V> {
+    fn default() -> SingleFlight<K, V> {
+        SingleFlight::new()
+    }
+}
+
+impl<K: Eq + Hash + Clone, V: Clone> Leader<'_, K, V> {
+    /// Publish the computed value to every waiter and retire the flight.
+    pub fn complete(mut self, value: V) {
+        self.completed = true;
+        self.owner.finish(&self.key, &self.slot, SlotState::Done(value));
+    }
+}
+
+impl<K: Eq + Hash + Clone, V: Clone> Drop for Leader<'_, K, V> {
+    fn drop(&mut self) {
+        if !self.completed {
+            // Unwound without a value: wake the waiters so each can retry
+            // instead of blocking forever on a dead leader.
+            self.owner.finish(&self.key, &self.slot, SlotState::Abandoned);
+        }
+    }
+}
+
+/// Bounded-inflight admission controller; see the module docs.
+#[derive(Debug)]
+pub struct Admission {
+    cap: usize,
+    inflight: AtomicUsize,
+    admitted: AtomicU64,
+    shed: AtomicU64,
+}
+
+/// RAII admission slot: dropping it releases the slot (on completion *or*
+/// unwind — a panicking request must not leak capacity).
+#[derive(Debug)]
+pub struct Permit {
+    adm: Arc<Admission>,
+}
+
+impl Admission {
+    pub fn new(cap: usize) -> Arc<Admission> {
+        Arc::new(Admission {
+            cap: cap.max(1),
+            inflight: AtomicUsize::new(0),
+            admitted: AtomicU64::new(0),
+            shed: AtomicU64::new(0),
+        })
+    }
+
+    /// Try to admit one request: `Some(permit)` below the cap, `None`
+    /// (shed, counted) at the cap. Never blocks.
+    pub fn try_acquire(this: &Arc<Admission>) -> Option<Permit> {
+        let mut cur = this.inflight.load(Ordering::Relaxed);
+        loop {
+            if cur >= this.cap {
+                this.shed.fetch_add(1, Ordering::Relaxed);
+                return None;
+            }
+            match this.inflight.compare_exchange_weak(cur, cur + 1, Ordering::AcqRel, Ordering::Relaxed) {
+                Ok(_) => {
+                    this.admitted.fetch_add(1, Ordering::Relaxed);
+                    return Some(Permit { adm: Arc::clone(this) });
+                }
+                Err(now) => cur = now,
+            }
+        }
+    }
+
+    pub fn cap(&self) -> usize {
+        self.cap
+    }
+
+    pub fn inflight(&self) -> usize {
+        self.inflight.load(Ordering::Relaxed)
+    }
+
+    pub fn admitted_total(&self) -> u64 {
+        self.admitted.load(Ordering::Relaxed)
+    }
+
+    pub fn shed_total(&self) -> u64 {
+        self.shed.load(Ordering::Relaxed)
+    }
+}
+
+impl Drop for Permit {
+    fn drop(&mut self) {
+        self.adm.inflight.fetch_sub(1, Ordering::AcqRel);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+    use std::sync::Barrier;
+
+    #[test]
+    fn single_flight_collapses_concurrent_joins() {
+        let sf: SingleFlight<u64, u64> = SingleFlight::new();
+        let computed = AtomicU64::new(0);
+        let k = 8;
+        let barrier = Barrier::new(k);
+        let vals: Vec<u64> = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..k)
+                .map(|_| {
+                    let (sf, computed, barrier) = (&sf, &computed, &barrier);
+                    s.spawn(move || {
+                        barrier.wait();
+                        loop {
+                            match sf.join(&7) {
+                                Flight::Leader(token) => {
+                                    computed.fetch_add(1, Ordering::Relaxed);
+                                    token.complete(42);
+                                    break 42;
+                                }
+                                Flight::Shared(v) => break v,
+                                Flight::Retry => continue,
+                            }
+                        }
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        assert!(vals.iter().all(|&v| v == 42));
+        // Every thread got the value; at least one collapse is guaranteed
+        // only when joins overlap, but the compute count never exceeds the
+        // thread count and a leader exists per retry round.
+        assert!(computed.load(Ordering::Relaxed) >= 1);
+        assert_eq!(sf.in_flight(), 0);
+    }
+
+    #[test]
+    fn followers_observe_leader_value_not_their_own() {
+        let sf: SingleFlight<&'static str, u64> = SingleFlight::new();
+        let Flight::Leader(token) = sf.join(&"k") else { panic!("first join must lead") };
+        let follower = std::thread::scope(|s| {
+            let sf = &sf;
+            let h = s.spawn(move || match sf.join(&"k") {
+                Flight::Shared(v) => v,
+                _ => panic!("second concurrent join must follow"),
+            });
+            // Publish only once the follower holds the flight: joining
+            // clones the slot Arc (map + leader + follower = 3), after
+            // which the follower can only observe Done(99).
+            while Arc::strong_count(&token.slot) < 3 {
+                std::thread::yield_now();
+            }
+            token.complete(99);
+            h.join().unwrap()
+        });
+        assert_eq!(follower, 99);
+    }
+
+    #[test]
+    fn abandoned_leader_wakes_waiters_with_retry() {
+        let sf = Arc::new(SingleFlight::<u64, u64>::new());
+        let Flight::Leader(token) = sf.join(&1) else { panic!("first join must lead") };
+        let sf2 = Arc::clone(&sf);
+        let waiter = std::thread::spawn(move || {
+            loop {
+                match sf2.join(&1) {
+                    Flight::Leader(t) => {
+                        // after the abandon, the retrying waiter leads
+                        t.complete(5);
+                        break 5u64;
+                    }
+                    Flight::Shared(v) => break v,
+                    Flight::Retry => continue,
+                }
+            }
+        });
+        // simulate a panicking leader: drop without complete()
+        drop(token);
+        assert_eq!(waiter.join().unwrap(), 5);
+        assert_eq!(sf.in_flight(), 0);
+    }
+
+    #[test]
+    fn admission_sheds_at_cap_and_recovers() {
+        let adm = Admission::new(2);
+        let p1 = Admission::try_acquire(&adm).expect("slot 1");
+        let p2 = Admission::try_acquire(&adm).expect("slot 2");
+        assert!(Admission::try_acquire(&adm).is_none(), "cap reached must shed");
+        assert_eq!(adm.shed_total(), 1);
+        assert_eq!(adm.inflight(), 2);
+        drop(p1);
+        let p3 = Admission::try_acquire(&adm).expect("slot freed by drop");
+        drop(p2);
+        drop(p3);
+        assert_eq!(adm.inflight(), 0);
+        assert_eq!(adm.admitted_total(), 3);
+    }
+
+    #[test]
+    fn admission_never_exceeds_cap_under_contention() {
+        let adm = Admission::new(4);
+        let peak = Arc::new(AtomicU64::new(0));
+        std::thread::scope(|s| {
+            for _ in 0..16 {
+                let (adm, peak) = (Arc::clone(&adm), Arc::clone(&peak));
+                s.spawn(move || {
+                    for _ in 0..200 {
+                        if let Some(p) = Admission::try_acquire(&adm) {
+                            let now = adm.inflight() as u64;
+                            peak.fetch_max(now, Ordering::Relaxed);
+                            drop(p);
+                        }
+                    }
+                });
+            }
+        });
+        assert!(peak.load(Ordering::Relaxed) <= 4, "inflight exceeded the cap");
+        assert_eq!(adm.inflight(), 0);
+    }
+}

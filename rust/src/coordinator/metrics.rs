@@ -1,7 +1,92 @@
-//! Coordinator metrics registry: lock-free counters + JSON snapshots.
+//! Coordinator metrics registry: lock-free counters, log-bucketed latency
+//! histograms, and JSON snapshots.
 
 use crate::util::json::Json;
 use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Request kinds with a latency histogram, in [`Metrics::latency`] index
+/// order (`Analyze` and `AnalyzeWith` share the "analyze" histogram).
+pub const LATENCY_KINDS: [&str; 4] = ["plan", "analyze", "execute", "solve"];
+
+/// Lock-free log-bucketed latency histogram (microsecond samples).
+///
+/// Bucket 0 holds exactly 0 µs; bucket `b ≥ 1` holds `[2^(b-1), 2^b)` µs,
+/// with the last bucket open-ended — 31 doubling buckets span sub-µs hits
+/// to ~half an hour. Quantiles return the inclusive upper edge of the
+/// bucket containing the requested rank, so the estimate is exact to
+/// within one doubling and never *under*-reports a tail.
+#[derive(Debug)]
+pub struct Histogram {
+    buckets: [AtomicU64; Histogram::BUCKETS],
+}
+
+impl Histogram {
+    pub const BUCKETS: usize = 32;
+
+    pub fn new() -> Histogram {
+        Histogram { buckets: std::array::from_fn(|_| AtomicU64::new(0)) }
+    }
+
+    /// Bucket index for a sample: the bit width of `value_us`.
+    fn bucket_index(value_us: u64) -> usize {
+        ((64 - value_us.leading_zeros()) as usize).min(Histogram::BUCKETS - 1)
+    }
+
+    /// Inclusive upper edge of bucket `b` (`u64::MAX` for the open last
+    /// bucket).
+    pub fn bucket_upper(b: usize) -> u64 {
+        if b == 0 {
+            0
+        } else if b >= Histogram::BUCKETS - 1 {
+            u64::MAX
+        } else {
+            (1u64 << b) - 1
+        }
+    }
+
+    pub fn record(&self, value_us: u64) {
+        self.buckets[Histogram::bucket_index(value_us)].fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).sum()
+    }
+
+    /// Quantile estimate for `q` in (0, 1]: upper edge of the bucket
+    /// holding rank `ceil(q·n)` (0 when empty).
+    pub fn quantile_us(&self, q: f64) -> u64 {
+        let counts: Vec<u64> = self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect();
+        let total: u64 = counts.iter().sum();
+        if total == 0 {
+            return 0;
+        }
+        let rank = ((q * total as f64).ceil() as u64).clamp(1, total);
+        let mut cum = 0u64;
+        for (b, c) in counts.iter().enumerate() {
+            cum += c;
+            if cum >= rank {
+                return Histogram::bucket_upper(b);
+            }
+        }
+        Histogram::bucket_upper(Histogram::BUCKETS - 1)
+    }
+
+    /// `{count, p50_us, p99_us, p999_us}` snapshot.
+    pub fn snapshot(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("count", self.count())
+            .set("p50_us", self.quantile_us(0.50))
+            .set("p99_us", self.quantile_us(0.99))
+            .set("p999_us", self.quantile_us(0.999));
+        o
+    }
+}
+
+impl Default for Histogram {
+    fn default() -> Histogram {
+        Histogram::new()
+    }
+}
 
 /// Counters exported by the coordinator. All updates are relaxed atomics —
 /// metrics never synchronize program logic.
@@ -47,6 +132,19 @@ pub struct Metrics {
     pub halo_words_loaded: AtomicU64,
     /// `HaloMsg` exchanges performed by block-decomposed solves.
     pub halo_exchanges: AtomicU64,
+    /// Requests that joined an in-flight computation for the same
+    /// canonical key instead of recomputing (single-flight collapsing).
+    pub single_flight_collapsed: AtomicU64,
+    /// TCP connections accepted by the serving front end.
+    pub server_connections: AtomicU64,
+    /// Requests decoded off the wire (including ones later shed).
+    pub server_requests: AtomicU64,
+    /// Wire requests shed by admission control (`overloaded` responses).
+    pub server_shed: AtomicU64,
+    /// Wire requests rejected as malformed (`bad_request` responses).
+    pub server_bad_requests: AtomicU64,
+    /// Per-kind service-time histograms (µs), indexed as [`LATENCY_KINDS`].
+    pub latency: [Histogram; LATENCY_KINDS.len()],
 }
 
 impl Metrics {
@@ -56,6 +154,14 @@ impl Metrics {
 
     pub fn bump(counter: &AtomicU64, by: u64) {
         counter.fetch_add(by, Ordering::Relaxed);
+    }
+
+    /// Record one service-time sample for the kind at `kind_idx` (an index
+    /// into [`LATENCY_KINDS`]; out-of-range samples are dropped).
+    pub fn record_latency(&self, kind_idx: usize, micros: u64) {
+        if let Some(h) = self.latency.get(kind_idx) {
+            h.record(micros);
+        }
     }
 
     /// Point-in-time snapshot as JSON (insertion-ordered, stable for diffs).
@@ -82,7 +188,17 @@ impl Metrics {
             .set("native_executions", self.native_executions.load(Ordering::Relaxed))
             .set("native_micros", self.native_micros.load(Ordering::Relaxed))
             .set("halo_words_loaded", self.halo_words_loaded.load(Ordering::Relaxed))
-            .set("halo_exchanges", self.halo_exchanges.load(Ordering::Relaxed));
+            .set("halo_exchanges", self.halo_exchanges.load(Ordering::Relaxed))
+            .set("single_flight_collapsed", self.single_flight_collapsed.load(Ordering::Relaxed))
+            .set("server_connections", self.server_connections.load(Ordering::Relaxed))
+            .set("server_requests", self.server_requests.load(Ordering::Relaxed))
+            .set("server_shed", self.server_shed.load(Ordering::Relaxed))
+            .set("server_bad_requests", self.server_bad_requests.load(Ordering::Relaxed));
+        let mut lat = Json::obj();
+        for (i, name) in LATENCY_KINDS.iter().enumerate() {
+            lat.set(name, self.latency[i].snapshot());
+        }
+        o.set("latency_us", lat);
         o
     }
 }
@@ -109,6 +225,59 @@ mod tests {
         assert!(s.contains("\"sim_memo_hits\":0"));
         assert!(s.contains("\"sim_memo_misses\":0"));
         assert!(s.contains("\"memo_evictions\":0"));
+    }
+
+    #[test]
+    fn histogram_bucket_boundaries_pinned() {
+        // bucket 0 ⇔ 0 µs; bucket b ⇔ [2^(b-1), 2^b)
+        assert_eq!(Histogram::bucket_index(0), 0);
+        assert_eq!(Histogram::bucket_index(1), 1);
+        assert_eq!(Histogram::bucket_index(2), 2);
+        assert_eq!(Histogram::bucket_index(3), 2);
+        assert_eq!(Histogram::bucket_index(4), 3);
+        assert_eq!(Histogram::bucket_index(1023), 10);
+        assert_eq!(Histogram::bucket_index(1024), 11);
+        assert_eq!(Histogram::bucket_index(u64::MAX), Histogram::BUCKETS - 1);
+        assert_eq!(Histogram::bucket_upper(0), 0);
+        assert_eq!(Histogram::bucket_upper(1), 1);
+        assert_eq!(Histogram::bucket_upper(3), 7);
+        assert_eq!(Histogram::bucket_upper(Histogram::BUCKETS - 1), u64::MAX);
+    }
+
+    #[test]
+    fn histogram_quantiles_pinned() {
+        let h = Histogram::new();
+        assert_eq!(h.quantile_us(0.5), 0, "empty histogram reports 0");
+        for v in 1..=8u64 {
+            h.record(v);
+        }
+        // buckets: b1{1}=1, b2{2,3}=2, b3{4..7}=3, b4{8}=1; n=8
+        assert_eq!(h.count(), 8);
+        // p50 rank 4 lands in b3 → upper edge 7; p99 rank 8 in b4 → 15
+        assert_eq!(h.quantile_us(0.50), 7);
+        assert_eq!(h.quantile_us(0.99), 15);
+        assert_eq!(h.quantile_us(0.999), 15);
+        // a single sample answers every quantile with its own bucket edge
+        let one = Histogram::new();
+        one.record(0);
+        assert_eq!(one.quantile_us(0.999), 0);
+        let s = h.snapshot().to_string();
+        assert!(s.contains("\"count\":8"));
+        assert!(s.contains("\"p50_us\":7"));
+    }
+
+    #[test]
+    fn latency_kinds_flow_into_snapshot() {
+        let m = Metrics::new();
+        m.record_latency(0, 3); // plan
+        m.record_latency(1, 900); // analyze
+        m.record_latency(99, 1); // out of range: dropped, no panic
+        let s = m.snapshot().to_string();
+        assert!(s.contains("\"latency_us\""));
+        assert!(s.contains("\"plan\":{\"count\":1"));
+        assert!(s.contains("\"analyze\":{\"count\":1"));
+        assert!(s.contains("\"execute\":{\"count\":0"));
+        assert_eq!(m.latency[1].quantile_us(0.5), 1023);
     }
 
     #[test]

@@ -34,14 +34,18 @@
 //! (`submit`/`serve`/`drain` + `prefill` warm-up).
 
 mod batcher;
+mod inflight;
 mod memo;
 mod metrics;
 mod planner;
+mod server;
 mod service;
 
 pub use batcher::{group_by_shape, schedule, Batch, BatchKey};
+pub use inflight::{Admission, Flight, Leader, Permit, SingleFlight};
 pub use memo::{entry_bytes, CachedValue, Facet, MemoCounters, MemoSnapshot, RequestKey, S3Fifo, DEFAULT_MEMO_BYTES};
-pub use metrics::Metrics;
+pub use metrics::{Histogram, Metrics, LATENCY_KINDS};
+pub use server::{Server, ServerConfig};
 pub use planner::{
     build_traversal, choose_time_tile, plan, temporal_solve_traffic_wpp, Plan, PlannerConfig, TraversalChoice,
     CLASSIC_SOLVE_TRAFFIC_WPP, MAX_SHARDS, MAX_TIME_TILE, SHARD_GRAIN_POINTS,
@@ -57,10 +61,11 @@ use crate::runtime::RuntimeHandle;
 use crate::solver::{NativeBackend, NumericBackend, NumericJob, PjrtBackend};
 use crate::stencil::Stencil;
 use crate::traversal::{self, Traversal};
+use crate::util::json::Json;
 use crate::util::threadpool::ThreadPool;
 use anyhow::{bail, Result};
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, MutexGuard, PoisonError};
 use std::time::Instant;
 
 /// Stencil shape specification in requests.
@@ -99,6 +104,12 @@ pub enum JobKind {
     /// `steps` heat/Jacobi iterations with per-step norms, on the same
     /// backend selection as `Execute`.
     Solve { steps: usize },
+    /// Fault injection: panics inside `dispatch`, exercising the serving
+    /// layer's panic containment (`submit_caught`, scope_map propagation,
+    /// poison recovery). Exposed on the wire as `"chaos_panic"` for the
+    /// smoke harness; never useful to a real client.
+    #[doc(hidden)]
+    ChaosPanic,
 }
 
 /// A stencil job.
@@ -124,6 +135,7 @@ impl StencilRequest {
             JobKind::AnalyzeWith(TraversalChoice::CacheFitting) => "analyze-fit",
             JobKind::Execute => "execute",
             JobKind::Solve { .. } => "solve",
+            JobKind::ChaosPanic => "chaos",
         };
         BatchKey { kind, dims: self.dims.clone(), stencil: self.stencil.clone(), machine: config.machine.clone() }
     }
@@ -168,6 +180,12 @@ pub struct Coordinator {
     /// O(1) index operation — a hit copies an `Arc<Plan>` pointer plus a
     /// small inline `Copy` report, never a `Plan`.
     memo: Option<Mutex<S3Fifo<RequestKey, CachedValue>>>,
+    /// Single-flight tier over the memo: N concurrent misses on one
+    /// canonical plan key compute once; the waiters share the leader's
+    /// `Arc<Plan>` (see `plan_for`).
+    plan_flights: SingleFlight<RequestKey, Arc<Plan>>,
+    /// Same collapsing for analysis reports (plan + `Copy` report).
+    analysis_flights: SingleFlight<RequestKey, CachedValue>,
     /// Fan-out jobs (analyses + native numeric sweeps) currently executing —
     /// divides the shard budget so that concurrent jobs inside `serve`
     /// share the machine instead of each fanning out to the full worker
@@ -183,6 +201,8 @@ impl Coordinator {
             pool: ThreadPool::with_default_parallelism(),
             metrics: Arc::new(Metrics::new()),
             memo: Some(Mutex::new(S3Fifo::with_capacity(DEFAULT_MEMO_BYTES))),
+            plan_flights: SingleFlight::new(),
+            analysis_flights: SingleFlight::new(),
             active_fanout: AtomicUsize::new(0),
         }
     }
@@ -208,19 +228,30 @@ impl Coordinator {
         self.memo = capacity_bytes.map(|b| Mutex::new(S3Fifo::with_capacity(b)));
     }
 
+    /// Lock the memo index with poison recovery. A request that panics
+    /// while holding this lock (caught at the serving boundary by
+    /// `submit_caught`) poisons the mutex; `unwrap()` here would then brick
+    /// every later request on the resident server. Recovering is always
+    /// sound for the S3-FIFO: each critical section is a short sequence of
+    /// index operations whose worst interrupted outcome is a stale or
+    /// missing *cache* entry — recomputed on the next miss, never wrong.
+    fn lock_memo(m: &Mutex<S3Fifo<RequestKey, CachedValue>>) -> MutexGuard<'_, S3Fifo<RequestKey, CachedValue>> {
+        m.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+
     /// Usage + counters of the memo tier (`None` when disabled).
     pub fn memo_snapshot(&self) -> Option<MemoSnapshot> {
-        self.memo.as_ref().map(|m| m.lock().unwrap().snapshot())
+        self.memo.as_ref().map(|m| Coordinator::lock_memo(m).snapshot())
     }
 
     fn memo_get(&self, key: &RequestKey) -> Option<CachedValue> {
-        self.memo.as_ref().and_then(|m| m.lock().unwrap().get(key).cloned())
+        self.memo.as_ref().and_then(|m| Coordinator::lock_memo(m).get(key).cloned())
     }
 
     fn memo_put(&self, key: RequestKey, value: CachedValue) {
         if let Some(m) = &self.memo {
             let weight = entry_bytes(&key, &value);
-            let evicted = m.lock().unwrap().insert(key, value, weight);
+            let evicted = Coordinator::lock_memo(m).insert(key, value, weight);
             if evicted > 0 {
                 Metrics::bump(&self.metrics.memo_evictions, evicted);
             }
@@ -257,15 +288,46 @@ impl Coordinator {
     /// Resolve the plan for `req` through the memo tier. Returns the
     /// `Arc`-shared plan and whether it was a cache hit; on a miss the
     /// freshly computed plan is admitted under its canonical key.
+    ///
+    /// Concurrent misses on the same key are **single-flighted**: the first
+    /// caller plans, everyone else blocks on the flight and shares the
+    /// leader's `Arc<Plan>` (counted in `single_flight_collapsed`). This
+    /// closes the duplicated-work window the memo tier alone leaves open —
+    /// a burst of N identical cold requests used to run N lattice
+    /// reductions.
     fn plan_for(&self, req: &StencilRequest, stencil: &Stencil) -> (Arc<Plan>, bool) {
         let key = RequestKey::plan_facet(&self.config, req);
         if let Some(CachedValue::Plan(p)) = self.memo_get(&key) {
             return (p, true);
         }
-        let plan = Arc::new(plan(&self.config, &req.dims, stencil, req.rhs_arrays));
-        Metrics::bump(&self.metrics.planned, 1);
-        self.memo_put(key, CachedValue::Plan(plan.clone()));
-        (plan, false)
+        loop {
+            match self.plan_flights.join(&key) {
+                Flight::Leader(token) => {
+                    // Re-probe under leadership: the previous leader may
+                    // have published between our miss and our join.
+                    if let Some(CachedValue::Plan(p)) = self.memo_get(&key) {
+                        token.complete(p.clone());
+                        return (p, true);
+                    }
+                    let plan = Arc::new(plan(&self.config, &req.dims, stencil, req.rhs_arrays));
+                    Metrics::bump(&self.metrics.planned, 1);
+                    self.memo_put(key.clone(), CachedValue::Plan(plan.clone()));
+                    token.complete(plan.clone());
+                    return (plan, false);
+                }
+                Flight::Shared(p) => {
+                    Metrics::bump(&self.metrics.single_flight_collapsed, 1);
+                    return (p, false);
+                }
+                Flight::Retry => {
+                    // leader panicked mid-plan; probe the memo and lead the
+                    // next flight ourselves if it is still missing
+                    if let Some(CachedValue::Plan(p)) = self.memo_get(&key) {
+                        return (p, true);
+                    }
+                }
+            }
+        }
     }
 
     /// Register an in-flight fan-out job; returns the drop guard and this
@@ -284,18 +346,51 @@ impl Coordinator {
         &self.config
     }
 
+    /// Histogram index for a request kind (see [`LATENCY_KINDS`]);
+    /// `None` for kinds without a latency series (fault injection).
+    fn latency_index(kind: &JobKind) -> Option<usize> {
+        match kind {
+            JobKind::Plan => Some(0),
+            JobKind::Analyze | JobKind::AnalyzeWith(_) => Some(1),
+            JobKind::Execute => Some(2),
+            JobKind::Solve { .. } => Some(3),
+            JobKind::ChaosPanic => None,
+        }
+    }
+
     /// Handle one request synchronously.
     pub fn submit(&self, req: &StencilRequest) -> Result<StencilResponse> {
         Metrics::bump(&self.metrics.requests, 1);
         let t0 = Instant::now();
         let result = self.dispatch(req);
+        let micros = t0.elapsed().as_micros() as u64;
+        // errors are recorded too: a failing tail is still a tail
+        if let Some(idx) = Coordinator::latency_index(&req.kind) {
+            self.metrics.record_latency(idx, micros);
+        }
         if result.is_err() {
             Metrics::bump(&self.metrics.failed, 1);
         }
         result.map(|mut r| {
-            r.wall_micros = t0.elapsed().as_micros() as u64;
+            r.wall_micros = micros;
             r
         })
+    }
+
+    /// [`submit`](Coordinator::submit) with panic containment: a request
+    /// that panics anywhere in dispatch (a worker bug, fault injection)
+    /// unwinds to this boundary and becomes a per-request `Err` instead of
+    /// aborting the process. This is the entry point every resident
+    /// serving path (TCP front end, `serve` waves, open-loop replay) uses —
+    /// one poisoned request must never take down the server.
+    pub fn submit_caught(&self, req: &StencilRequest) -> Result<StencilResponse> {
+        match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| self.submit(req))) {
+            Ok(result) => result,
+            Err(payload) => {
+                Metrics::bump(&self.metrics.failed, 1);
+                bail!("request panicked: {}", panic_message(payload.as_ref()))
+            }
+        }
     }
 
     /// Handle a slice of requests: batch by shape, run batches across the
@@ -310,7 +405,9 @@ impl Coordinator {
         let ordered = schedule(&batches);
         let outcomes = self.pool.scope_map(ordered.len(), |slot| {
             let idx = ordered[slot];
-            (idx, self.submit(&reqs[idx]))
+            // submit_caught: one panicking request in a wave answers as an
+            // Err in its slot; its siblings still complete
+            (idx, self.submit_caught(&reqs[idx]))
         });
         let mut slots: Vec<Option<Result<StencilResponse>>> = (0..reqs.len()).map(|_| None).collect();
         for (idx, resp) in outcomes {
@@ -320,6 +417,11 @@ impl Coordinator {
     }
 
     fn dispatch(&self, req: &StencilRequest) -> Result<StencilResponse> {
+        // Fault injection first: the panic must exercise the *containment*
+        // path (submit_caught / scope_map propagation), not the validators.
+        if matches!(req.kind, JobKind::ChaosPanic) {
+            panic!("chaos_panic: injected worker fault");
+        }
         if req.dims.is_empty() || req.dims.iter().any(|&d| d == 0) {
             bail!("invalid dims {:?}", req.dims);
         }
@@ -372,6 +474,7 @@ impl Coordinator {
                 self.note_memo(plan_hit);
                 self.run_numeric(req, &stencil, plan, Some(*steps))
             }
+            JobKind::ChaosPanic => unreachable!("handled at dispatch entry"),
         }
     }
 
@@ -392,6 +495,61 @@ impl Coordinator {
             return Ok(resp);
         }
         self.note_memo(false);
+        // Single-flight over the analysis key: concurrent identical misses
+        // elect one leader to simulate; everyone else blocks on the flight
+        // and shares the leader's value (`Arc<Plan>` bump + `Copy` report).
+        let value = loop {
+            match self.analysis_flights.join(&key) {
+                Flight::Leader(token) => {
+                    // re-probe under leadership: a previous leader may have
+                    // published between our miss and our join
+                    if let Some(v @ CachedValue::Analysis { .. }) = self.memo_get(&key) {
+                        token.complete(v.clone());
+                        break v;
+                    }
+                    let (report, admit) = self.compute_analysis(req, stencil, &plan, choice);
+                    let v = CachedValue::Analysis { plan: plan.clone(), report };
+                    if admit {
+                        self.memo_put(key.clone(), v.clone());
+                    }
+                    token.complete(v.clone());
+                    break v;
+                }
+                Flight::Shared(v) => {
+                    Metrics::bump(&self.metrics.single_flight_collapsed, 1);
+                    break v;
+                }
+                Flight::Retry => {
+                    // the leader panicked mid-simulation; take over unless
+                    // some other waiter already published
+                    if let Some(v @ CachedValue::Analysis { .. }) = self.memo_get(&key) {
+                        break v;
+                    }
+                }
+            }
+        };
+        let CachedValue::Analysis { plan, report } = value else {
+            unreachable!("analysis flights carry analysis values")
+        };
+        Ok(StencilResponse {
+            plan,
+            miss_report: Some(report),
+            result_norm: None,
+            solve_log: Vec::new(),
+            wall_micros: 0,
+        })
+    }
+
+    /// The actual cache simulation behind `run_analysis` (leader side of
+    /// the flight). Returns the merged report and whether it may be
+    /// admitted to the memo.
+    fn compute_analysis(
+        &self,
+        req: &StencilRequest,
+        stencil: &Stencil,
+        plan: &Arc<Plan>,
+        choice: TraversalChoice,
+    ) -> (MissReport, bool) {
         let grid = GridDesc::with_padding(&plan.dims, &plan.pad);
         // The hot path is a lazy stream: nothing proportional to the grid
         // is materialized, so Analyze scales to 512³+ grids whose packed
@@ -433,16 +591,7 @@ impl Coordinator {
             Metrics::bump(&self.metrics.sim_tlb_misses, tlb.misses());
         }
         Metrics::bump(&self.metrics.sim_stall_cycles, report.levels.stall_cycles(machine.latency));
-        if shards == quiet_shards {
-            self.memo_put(key, CachedValue::Analysis { plan: plan.clone(), report });
-        }
-        Ok(StencilResponse {
-            plan,
-            miss_report: Some(report),
-            result_norm: None,
-            solve_log: Vec::new(),
-            wall_micros: 0,
-        })
+        (report, shards == quiet_shards)
     }
 
     /// Serve a numeric job (`Execute` when `steps` is None, `Solve`
@@ -610,6 +759,12 @@ impl Coordinator {
     /// Snapshot the metrics as JSON text (memo-tier usage included when
     /// memoization is enabled).
     pub fn metrics_json(&self) -> String {
+        self.metrics_json_value().to_pretty()
+    }
+
+    /// [`metrics_json`](Coordinator::metrics_json) as a structured value —
+    /// the wire front end embeds it in `metrics` responses.
+    pub fn metrics_json_value(&self) -> Json {
         let mut j = self.metrics.snapshot();
         j.set("pool_workers", self.pool.workers());
         if let Some(s) = self.memo_snapshot() {
@@ -625,7 +780,19 @@ impl Coordinator {
             j.set("cached_executables", rt.cached_executables());
             j.set("platform", rt.platform());
         }
-        j.to_pretty()
+        j
+    }
+}
+
+/// Best-effort text of a panic payload (`&str` and `String` panics cover
+/// everything this codebase raises).
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> &str {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        s
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s
+    } else {
+        "non-string panic payload"
     }
 }
 
@@ -986,6 +1153,85 @@ mod tests {
         assert!(resp.miss_report.is_some());
         assert_eq!(c.metrics.sharded_analyses.load(Ordering::Relaxed), 0);
         assert_eq!(c.metrics.shards_executed.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn chaos_panic_is_contained_and_service_continues() {
+        let c = coord();
+        let req = StencilRequest::analyze(&[16, 16, 16]);
+        let _ = c.submit(&req).unwrap();
+        let chaos = StencilRequest {
+            dims: vec![4, 4, 4],
+            stencil: StencilSpec::Star { r: 1 },
+            rhs_arrays: 1,
+            kind: JobKind::ChaosPanic,
+        };
+        let err = c.submit_caught(&chaos).expect_err("chaos must fail");
+        assert!(err.to_string().contains("panicked"), "{err}");
+        assert!(err.to_string().contains("chaos_panic"), "{err}");
+        // regression: the coordinator keeps serving — memo hits still flow
+        let again = c.submit(&req).unwrap();
+        assert!(again.miss_report.is_some());
+        assert!(c.metrics.sim_memo_hits.load(Ordering::Relaxed) >= 1);
+        assert!(c.metrics.failed.load(Ordering::Relaxed) >= 1);
+    }
+
+    #[test]
+    fn serve_wave_survives_one_panicking_request() {
+        let c = coord();
+        let chaos = StencilRequest {
+            dims: vec![4, 4, 4],
+            stencil: StencilSpec::Star { r: 1 },
+            rhs_arrays: 1,
+            kind: JobKind::ChaosPanic,
+        };
+        let reqs = vec![StencilRequest::analyze(&[16, 16, 16]), chaos, StencilRequest::analyze(&[20, 20, 20])];
+        let out = c.serve(&reqs);
+        assert_eq!(out.len(), 3);
+        assert!(out[0].is_ok(), "healthy request before the panic must succeed");
+        assert!(out[1].is_err(), "the poisoned request answers as an Err");
+        assert!(out[2].is_ok(), "healthy request after the panic must succeed");
+        // and the same coordinator serves the next wave too
+        let next = c.serve(&[StencilRequest::analyze(&[16, 16, 16])]);
+        assert!(next[0].is_ok());
+    }
+
+    #[test]
+    fn memo_survives_a_poisoned_lock() {
+        let c = coord();
+        let req = StencilRequest::analyze(&[16, 16, 16]);
+        let _ = c.submit(&req).unwrap();
+        // poison the memo mutex the way a mid-request panic would
+        let m = c.memo.as_ref().unwrap();
+        let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _guard = m.lock().unwrap();
+            panic!("poison the memo lock");
+        }));
+        assert!(m.lock().is_err(), "the mutex is genuinely poisoned");
+        // regression: lock recovery keeps the memo (and the service) alive
+        let warm = c.submit(&req).unwrap();
+        assert!(warm.miss_report.is_some());
+        assert!(c.metrics.sim_memo_hits.load(Ordering::Relaxed) >= 2);
+        assert!(c.memo_snapshot().is_some());
+    }
+
+    #[test]
+    fn latency_histograms_record_per_kind() {
+        let c = coord();
+        let _ = c.submit(&StencilRequest::analyze(&[12, 12, 12])).unwrap();
+        let _ = c.submit(&StencilRequest {
+            dims: vec![12, 12, 12],
+            stencil: StencilSpec::Star13,
+            rhs_arrays: 1,
+            kind: JobKind::Plan,
+        });
+        assert_eq!(c.metrics.latency[0].count(), 1, "plan series");
+        assert_eq!(c.metrics.latency[1].count(), 1, "analyze series");
+        assert_eq!(c.metrics.latency[2].count(), 0, "execute untouched");
+        let j = c.metrics_json();
+        assert!(j.contains("latency_us"));
+        assert!(j.contains("p999_us"));
+        assert!(j.contains("single_flight_collapsed"));
     }
 
     #[test]

@@ -1,0 +1,591 @@
+//! JSON-over-TCP serving front end.
+//!
+//! Line-delimited request/response over plain `TcpStream`s — no HTTP, no
+//! serde, no async runtime; connections and dispatch run on the existing
+//! [`ThreadPool`] machinery. One request per line, one response line per
+//! request; responses for pipelined requests on a connection may arrive
+//! out of order (match on `id`).
+//!
+//! Request object (`\n`-terminated, ≤ `max_line_bytes`):
+//!
+//! ```text
+//! {"id": 7,                       // echoed verbatim; any JSON value
+//!  "kind": "plan" | "analyze" | "analyze_with" | "execute" | "solve"
+//!        | "metrics" | "chaos_panic" | "shutdown",
+//!  "dims": [64, 64, 64],          // per-dim extents, 1..=4096, ≤ 6 dims
+//!  "stencil": "star13" | {"star": 2},   // optional; default star13 for
+//!                                       // 3-D dims, {"star":1} otherwise
+//!  "rhs": 1,                      // optional RHS-array count, 1..=64
+//!  "steps": 5,                    // solve only, 1..=10000
+//!  "traversal": "natural" | "fitting"}  // analyze_with only
+//! ```
+//!
+//! Success: `{"id":…, "ok":true, "wall_us":…, "plan":{…}, …}` with
+//! `misses_per_point`/`points` for analyses, `result_norm`/`steps` for
+//! numeric jobs. Failure: `{"id":…, "ok":false, "error":"bad_request" |
+//! "overloaded" | "internal", "message":…}`.
+//!
+//! Three serving-layer properties hold by construction:
+//!
+//! - **single-flight**: concurrent misses on one canonical key compute
+//!   once (the coordinator's flight tier; watch `single_flight_collapsed`
+//!   in a `metrics` response);
+//! - **admission control**: at most `max_inflight` stencil jobs run at
+//!   once; excess requests get an immediate typed `overloaded` response
+//!   instead of queueing (`metrics`/`shutdown` bypass admission — control
+//!   traffic must work *especially* under overload);
+//! - **panic containment**: a request that panics (or sends malformed
+//!   JSON) receives an error response while the server keeps serving
+//!   (`Coordinator::submit_caught` + the poison-recovering locks).
+
+use super::inflight::{Admission, Permit};
+use super::{JobKind, Service, StencilRequest, StencilResponse, StencilSpec, TraversalChoice};
+use crate::util::json::{self, Json};
+use crate::util::threadpool::ThreadPool;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Mutex, PoisonError};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+/// Input caps for wire requests — generous for every real workload, tight
+/// enough that a hostile client cannot request months of compute.
+pub const MAX_WIRE_DIMS: usize = 6;
+pub const MAX_WIRE_EXTENT: usize = 4096;
+pub const MAX_WIRE_RADIUS: usize = 8;
+pub const MAX_WIRE_STEPS: usize = 10_000;
+/// Depth cap for wire JSON (requests are flat; 16 is plenty).
+pub const MAX_WIRE_DEPTH: usize = 16;
+
+/// Server tuning knobs.
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    /// Bind address; port 0 picks an ephemeral port (read it back from
+    /// [`Server::addr`]).
+    pub addr: String,
+    /// Admission cap: stencil jobs admitted concurrently; the excess is
+    /// shed with a typed `overloaded` response.
+    pub max_inflight: usize,
+    /// Dispatch workers turning decoded requests into responses (the
+    /// coordinator's own pool fans each job out further).
+    pub workers: usize,
+    /// Per-line byte cap; a longer request line answers `bad_request` and
+    /// closes the connection (mid-line resync is impossible).
+    pub max_line_bytes: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> ServerConfig {
+        let workers = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).clamp(2, 16);
+        ServerConfig { addr: "127.0.0.1:0".into(), max_inflight: 64, workers, max_line_bytes: 64 * 1024 }
+    }
+}
+
+/// A running JSON-over-TCP front end over an [`Arc<Service>`].
+///
+/// Dropping the server shuts it down: stops accepting, closes live
+/// connections, joins every thread.
+pub struct Server {
+    svc: Arc<Service>,
+    admission: Arc<Admission>,
+    stop: Arc<AtomicBool>,
+    addr: SocketAddr,
+    accept: Option<JoinHandle<()>>,
+    conns: Arc<Mutex<Vec<TcpStream>>>,
+    conn_threads: Arc<Mutex<Vec<JoinHandle<()>>>>,
+}
+
+fn lock<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+impl Server {
+    /// Bind and start serving. Returns once the listener is live.
+    pub fn start(svc: Arc<Service>, config: ServerConfig) -> std::io::Result<Server> {
+        let listener = TcpListener::bind(config.addr.as_str())?;
+        let addr = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let admission = Admission::new(config.max_inflight);
+        let pool = Arc::new(ThreadPool::new(config.workers));
+        let conns: Arc<Mutex<Vec<TcpStream>>> = Arc::new(Mutex::new(Vec::new()));
+        let conn_threads: Arc<Mutex<Vec<JoinHandle<()>>>> = Arc::new(Mutex::new(Vec::new()));
+        let accept = {
+            let svc = Arc::clone(&svc);
+            let stop = Arc::clone(&stop);
+            let admission = Arc::clone(&admission);
+            let conns = Arc::clone(&conns);
+            let conn_threads = Arc::clone(&conn_threads);
+            let max_line = config.max_line_bytes.max(64);
+            std::thread::Builder::new().name("stencilcache-accept".into()).spawn(move || {
+                for incoming in listener.incoming() {
+                    if stop.load(Ordering::Acquire) {
+                        break;
+                    }
+                    let stream = match incoming {
+                        Ok(s) => s,
+                        Err(_) => continue,
+                    };
+                    if let Ok(clone) = stream.try_clone() {
+                        lock(&conns).push(clone);
+                    }
+                    let svc = Arc::clone(&svc);
+                    let stop = Arc::clone(&stop);
+                    let admission = Arc::clone(&admission);
+                    let pool = Arc::clone(&pool);
+                    let handle = std::thread::Builder::new()
+                        .name("stencilcache-conn".into())
+                        .spawn(move || handle_conn(stream, svc, admission, pool, stop, addr, max_line));
+                    if let Ok(h) = handle {
+                        lock(&conn_threads).push(h);
+                    }
+                }
+            })?
+        };
+        Ok(Server { svc, admission, stop, addr, accept: Some(accept), conns, conn_threads })
+    }
+
+    /// The bound address (resolves port 0).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    pub fn service(&self) -> &Arc<Service> {
+        &self.svc
+    }
+
+    pub fn admission(&self) -> &Arc<Admission> {
+        &self.admission
+    }
+
+    /// Block until the server is asked to stop (a wire `shutdown` request
+    /// or [`Server::shutdown`] from another thread).
+    pub fn wait(&mut self) {
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+
+    /// Stop accepting, close live connections, join every thread.
+    /// Idempotent; also runs on drop.
+    pub fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::Release);
+        // unblock the accept loop with a throwaway connection
+        let _ = TcpStream::connect(self.addr);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        for s in lock(&self.conns).drain(..) {
+            let _ = s.shutdown(Shutdown::Both);
+        }
+        let handles: Vec<JoinHandle<()>> = lock(&self.conn_threads).drain(..).collect();
+        for h in handles {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+enum LineError {
+    TooLong,
+    Io,
+}
+
+/// `read_until('\n')` with a hard byte cap (a `Take` bounds each call, so
+/// a client streaming an endless line cannot grow the buffer unboundedly).
+fn read_line_bounded<R: BufRead>(r: &mut R, buf: &mut Vec<u8>, max: usize) -> Result<usize, LineError> {
+    let mut limited = r.by_ref().take(max as u64 + 1);
+    match limited.read_until(b'\n', buf) {
+        Ok(n) => {
+            if n > max && buf.last() != Some(&b'\n') {
+                Err(LineError::TooLong)
+            } else {
+                Ok(n)
+            }
+        }
+        Err(_) => Err(LineError::Io),
+    }
+}
+
+fn handle_conn(
+    stream: TcpStream,
+    svc: Arc<Service>,
+    admission: Arc<Admission>,
+    pool: Arc<ThreadPool>,
+    stop: Arc<AtomicBool>,
+    server_addr: SocketAddr,
+    max_line: usize,
+) {
+    super::Metrics::bump(&svc.coordinator().metrics().server_connections, 1);
+    let write_half = match stream.try_clone() {
+        Ok(s) => s,
+        Err(_) => return,
+    };
+    // One writer thread per connection serializes response lines: dispatch
+    // jobs finish out of order on the pool, and interleaved partial writes
+    // would corrupt the stream.
+    let (tx, rx) = mpsc::channel::<String>();
+    let writer = std::thread::Builder::new().name("stencilcache-conn-writer".into()).spawn(move || {
+        let mut out = write_half;
+        for line in rx {
+            let ok = out
+                .write_all(line.as_bytes())
+                .and_then(|_| out.write_all(b"\n"))
+                .and_then(|_| out.flush())
+                .is_ok();
+            if !ok {
+                break;
+            }
+        }
+    });
+    let Ok(writer) = writer else { return };
+    let mut reader = BufReader::new(stream);
+    let mut buf: Vec<u8> = Vec::new();
+    loop {
+        if stop.load(Ordering::Acquire) {
+            break;
+        }
+        buf.clear();
+        match read_line_bounded(&mut reader, &mut buf, max_line) {
+            Ok(0) => break, // EOF
+            Ok(_) => {}
+            Err(LineError::TooLong) => {
+                let msg = format!("request line exceeds {max_line} bytes");
+                let _ = tx.send(error_response(Json::Null, "bad_request", &msg).to_string());
+                break;
+            }
+            Err(LineError::Io) => break,
+        }
+        let Ok(text) = std::str::from_utf8(&buf) else {
+            super::Metrics::bump(&svc.coordinator().metrics().server_bad_requests, 1);
+            let _ = tx.send(error_response(Json::Null, "bad_request", "request line is not UTF-8").to_string());
+            continue;
+        };
+        let text = text.trim();
+        if text.is_empty() {
+            continue;
+        }
+        handle_line(text, &svc, &admission, &pool, &stop, server_addr, &tx);
+    }
+    drop(tx);
+    let _ = writer.join();
+}
+
+fn handle_line(
+    text: &str,
+    svc: &Arc<Service>,
+    admission: &Arc<Admission>,
+    pool: &ThreadPool,
+    stop: &Arc<AtomicBool>,
+    server_addr: SocketAddr,
+    tx: &mpsc::Sender<String>,
+) {
+    let metrics = svc.coordinator().metrics();
+    let parsed = match json::parse_with_limits(text, text.len(), MAX_WIRE_DEPTH) {
+        Ok(v) => v,
+        Err(e) => {
+            super::Metrics::bump(&metrics.server_bad_requests, 1);
+            let _ = tx.send(error_response(Json::Null, "bad_request", &format!("malformed JSON: {e}")).to_string());
+            return;
+        }
+    };
+    let id = parsed.get("id").cloned().unwrap_or(Json::Null);
+    super::Metrics::bump(&metrics.server_requests, 1);
+    let Some(kind) = parsed.get("kind").and_then(Json::as_str) else {
+        super::Metrics::bump(&metrics.server_bad_requests, 1);
+        let _ = tx.send(error_response(id, "bad_request", "missing \"kind\"").to_string());
+        return;
+    };
+    match kind {
+        "metrics" => {
+            let mut o = Json::obj();
+            o.set("id", id).set("ok", true).set("metrics", svc.coordinator().metrics_json_value());
+            let _ = tx.send(o.to_string());
+        }
+        "shutdown" => {
+            let mut o = Json::obj();
+            o.set("id", id).set("ok", true).set("stopping", true);
+            let _ = tx.send(o.to_string());
+            stop.store(true, Ordering::Release);
+            // unblock the accept loop; the owner's shutdown()/drop joins
+            let _ = TcpStream::connect(server_addr);
+        }
+        _ => {
+            let req = match decode_request(kind, &parsed) {
+                Ok(r) => r,
+                Err(msg) => {
+                    super::Metrics::bump(&metrics.server_bad_requests, 1);
+                    let _ = tx.send(error_response(id, "bad_request", &msg).to_string());
+                    return;
+                }
+            };
+            let Some(permit) = Admission::try_acquire(admission) else {
+                super::Metrics::bump(&metrics.server_shed, 1);
+                let msg = format!("inflight cap {} reached; retry later", admission.cap());
+                let _ = tx.send(error_response(id, "overloaded", &msg).to_string());
+                return;
+            };
+            let svc = Arc::clone(svc);
+            let tx = tx.clone();
+            let t0 = Instant::now();
+            pool.submit(move || {
+                let permit: Permit = permit; // move the slot into the job
+                let result = svc.coordinator().submit_caught(&req);
+                let line = response_line(id, result, t0.elapsed().as_micros() as u64);
+                drop(permit);
+                let _ = tx.send(line.to_string());
+            });
+        }
+    }
+}
+
+/// Decode a wire object into a [`StencilRequest`], enforcing the input
+/// caps. Errors are client-facing `bad_request` messages.
+fn decode_request(kind: &str, v: &Json) -> Result<StencilRequest, String> {
+    let job = match kind {
+        "plan" => JobKind::Plan,
+        "analyze" => JobKind::Analyze,
+        "analyze_with" => match v.get("traversal").and_then(Json::as_str) {
+            Some("natural") => JobKind::AnalyzeWith(TraversalChoice::Natural),
+            Some("fitting") | Some("cache_fitting") => JobKind::AnalyzeWith(TraversalChoice::CacheFitting),
+            other => {
+                return Err(format!("analyze_with needs \"traversal\": \"natural\" or \"fitting\" (got {other:?})"))
+            }
+        },
+        "execute" => JobKind::Execute,
+        "solve" => {
+            let steps = v.get("steps").and_then(Json::as_i64).unwrap_or(0);
+            if steps < 1 || steps as usize > MAX_WIRE_STEPS {
+                return Err(format!("solve needs \"steps\" in 1..={MAX_WIRE_STEPS}"));
+            }
+            JobKind::Solve { steps: steps as usize }
+        }
+        "chaos_panic" => JobKind::ChaosPanic,
+        other => {
+            return Err(format!(
+                "unknown kind {other:?} (expected plan|analyze|analyze_with|execute|solve|metrics|shutdown)"
+            ))
+        }
+    };
+    let dims: Vec<usize> = match v.get("dims").and_then(Json::as_arr) {
+        Some(xs) => {
+            if xs.is_empty() || xs.len() > MAX_WIRE_DIMS {
+                return Err(format!("\"dims\" needs 1..={MAX_WIRE_DIMS} entries"));
+            }
+            let mut out = Vec::with_capacity(xs.len());
+            for x in xs {
+                match x.as_i64() {
+                    Some(d) if d >= 1 && (d as usize) <= MAX_WIRE_EXTENT => out.push(d as usize),
+                    _ => return Err(format!("\"dims\" entries must be integers in 1..={MAX_WIRE_EXTENT}")),
+                }
+            }
+            out
+        }
+        // fault injection never reaches the validators, so dims are moot
+        None if matches!(job, JobKind::ChaosPanic) => vec![4, 4, 4],
+        None => return Err("missing \"dims\" array".into()),
+    };
+    let stencil = match v.get("stencil") {
+        None => {
+            if dims.len() == 3 {
+                StencilSpec::Star13
+            } else {
+                StencilSpec::Star { r: 1 }
+            }
+        }
+        Some(Json::Str(s)) if s == "star13" => StencilSpec::Star13,
+        Some(obj) => match obj.get("star").and_then(Json::as_i64) {
+            Some(r) if r >= 1 && (r as usize) <= MAX_WIRE_RADIUS => StencilSpec::Star { r: r as usize },
+            _ => {
+                return Err(format!("\"stencil\" must be \"star13\" or {{\"star\": r}} with r in 1..={MAX_WIRE_RADIUS}"))
+            }
+        },
+    };
+    let rhs = match v.get("rhs") {
+        None => 1,
+        Some(x) => match x.as_i64() {
+            Some(r) if (1..=64).contains(&r) => r as usize,
+            _ => return Err("\"rhs\" must be an integer in 1..=64".into()),
+        },
+    };
+    Ok(StencilRequest { dims, stencil, rhs_arrays: rhs, kind: job })
+}
+
+fn error_response(id: Json, class: &str, message: &str) -> Json {
+    let mut o = Json::obj();
+    o.set("id", id).set("ok", false).set("error", class).set("message", message);
+    o
+}
+
+/// Encode a coordinator outcome as one response line. Panics surface as
+/// `internal`, validator rejections as `bad_request`.
+fn response_line(id: Json, result: anyhow::Result<StencilResponse>, wall_us: u64) -> Json {
+    match result {
+        Ok(resp) => {
+            let mut o = Json::obj();
+            o.set("id", id).set("ok", true).set("wall_us", wall_us);
+            let mut plan = Json::obj();
+            plan.set("dims", resp.plan.dims.clone())
+                .set("pad", resp.plan.pad.clone())
+                .set("traversal", format!("{:?}", resp.plan.traversal))
+                .set("shards", resp.plan.shards)
+                .set("time_tile", resp.plan.time_tile)
+                .set("unfavorable", resp.plan.was_unfavorable);
+            o.set("plan", plan);
+            if let Some(m) = &resp.miss_report {
+                o.set("points", m.points).set("misses_per_point", m.misses_per_point());
+            }
+            if let Some(n) = resp.result_norm {
+                o.set("result_norm", n);
+            }
+            if let Some(last) = resp.solve_log.last() {
+                o.set("steps", resp.solve_log.len()).set("final_residual", last.residual_norm);
+            }
+            o
+        }
+        Err(e) => {
+            let msg = e.to_string();
+            let class = if msg.contains("panicked") { "internal" } else { "bad_request" };
+            error_response(id, class, &msg)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::PlannerConfig;
+    use std::time::Duration;
+
+    struct Client {
+        stream: TcpStream,
+        reader: BufReader<TcpStream>,
+    }
+
+    impl Client {
+        fn connect(addr: SocketAddr) -> Client {
+            let stream = TcpStream::connect(addr).expect("connect");
+            stream.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+            let reader = BufReader::new(stream.try_clone().expect("clone"));
+            Client { stream, reader }
+        }
+
+        fn send(&mut self, line: &str) {
+            self.stream.write_all(line.as_bytes()).unwrap();
+            self.stream.write_all(b"\n").unwrap();
+            self.stream.flush().unwrap();
+        }
+
+        fn recv(&mut self) -> Json {
+            let mut line = String::new();
+            let n = self.reader.read_line(&mut line).expect("response before timeout");
+            assert!(n > 0, "server closed the connection unexpectedly");
+            json::parse(line.trim()).expect("response is valid JSON")
+        }
+    }
+
+    fn start_server(max_inflight: usize) -> Server {
+        let svc = Arc::new(Service::new(PlannerConfig::default()));
+        let cfg = ServerConfig { max_inflight, workers: 4, ..ServerConfig::default() };
+        Server::start(svc, cfg).expect("server start")
+    }
+
+    fn is_ok(v: &Json) -> bool {
+        v.get("ok") == Some(&Json::Bool(true))
+    }
+
+    fn error_class(v: &Json) -> &str {
+        v.get("error").and_then(Json::as_str).unwrap_or("")
+    }
+
+    #[test]
+    fn round_trip_plan_and_analyze() {
+        let mut server = start_server(16);
+        let mut c = Client::connect(server.addr());
+        c.send("{\"id\":1,\"kind\":\"plan\",\"dims\":[24,24,24]}");
+        let r = c.recv();
+        assert!(is_ok(&r), "{r}");
+        assert_eq!(r.get("id").unwrap().as_i64(), Some(1));
+        assert!(r.get("plan").unwrap().get("dims").is_some());
+        c.send("{\"id\":2,\"kind\":\"analyze\",\"dims\":[20,20,20]}");
+        let r = c.recv();
+        assert!(is_ok(&r), "{r}");
+        assert!(r.get("misses_per_point").unwrap().as_f64().unwrap() > 0.0);
+        server.shutdown();
+    }
+
+    #[test]
+    fn malformed_and_invalid_requests_answer_errors_and_server_survives() {
+        let mut server = start_server(16);
+        let mut c = Client::connect(server.addr());
+        // malformed JSON
+        c.send("{\"id\":1,\"kind\":\"analyze\",\"dims\":[16,16");
+        let r = c.recv();
+        assert!(!is_ok(&r));
+        assert_eq!(error_class(&r), "bad_request");
+        // structurally valid, semantically invalid (star13 is 3-D)
+        c.send("{\"id\":2,\"kind\":\"analyze\",\"dims\":[16,16],\"stencil\":\"star13\"}");
+        let r = c.recv();
+        assert!(!is_ok(&r));
+        assert_eq!(error_class(&r), "bad_request");
+        // a panicking request answers internal...
+        c.send("{\"id\":3,\"kind\":\"chaos_panic\"}");
+        let r = c.recv();
+        assert!(!is_ok(&r));
+        assert_eq!(error_class(&r), "internal");
+        // ...and the same connection keeps working afterwards
+        c.send("{\"id\":4,\"kind\":\"plan\",\"dims\":[16,16,16]}");
+        let r = c.recv();
+        assert!(is_ok(&r), "{r}");
+        server.shutdown();
+    }
+
+    #[test]
+    fn oversized_line_is_rejected() {
+        let svc = Arc::new(Service::new(PlannerConfig::default()));
+        let cfg = ServerConfig { max_line_bytes: 256, workers: 2, ..ServerConfig::default() };
+        let mut server = Server::start(svc, cfg).expect("server start");
+        let mut c = Client::connect(server.addr());
+        let huge = format!("{{\"id\":1,\"kind\":\"plan\",\"pad\":\"{}\"}}", "x".repeat(512));
+        c.send(&huge);
+        let r = c.recv();
+        assert!(!is_ok(&r));
+        assert_eq!(error_class(&r), "bad_request");
+        server.shutdown();
+    }
+
+    #[test]
+    fn metrics_request_reports_latency_histograms() {
+        let mut server = start_server(16);
+        let mut c = Client::connect(server.addr());
+        c.send("{\"id\":1,\"kind\":\"analyze\",\"dims\":[16,16,16]}");
+        assert!(is_ok(&c.recv()));
+        c.send("{\"id\":2,\"kind\":\"metrics\"}");
+        let r = c.recv();
+        assert!(is_ok(&r), "{r}");
+        let m = r.get("metrics").expect("metrics body");
+        assert!(m.get("server_requests").unwrap().as_i64().unwrap() >= 2);
+        let lat = m.get("latency_us").expect("latency histograms");
+        assert_eq!(lat.get("analyze").unwrap().get("count").unwrap().as_i64(), Some(1));
+        assert!(lat.get("analyze").unwrap().get("p999_us").is_some());
+        server.shutdown();
+    }
+
+    #[test]
+    fn wire_shutdown_stops_the_accept_loop() {
+        let mut server = start_server(4);
+        let mut c = Client::connect(server.addr());
+        c.send("{\"id\":1,\"kind\":\"shutdown\"}");
+        let r = c.recv();
+        assert!(is_ok(&r), "{r}");
+        // wait() returning (instead of hanging the test) IS the assertion:
+        // the wire request stopped the accept loop
+        server.wait();
+        server.shutdown();
+    }
+}

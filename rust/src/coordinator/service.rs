@@ -21,7 +21,7 @@
 
 use super::{Coordinator, JobKind, MemoSnapshot, PlannerConfig, StencilRequest, StencilResponse, StencilSpec};
 use anyhow::Result;
-use std::sync::Mutex;
+use std::sync::{Mutex, MutexGuard, PoisonError};
 
 /// Handle to a queued request; [`Service::drain`] tags each response with
 /// the ticket of the submission that produced it.
@@ -59,6 +59,15 @@ impl Service {
         &self.coord
     }
 
+    /// Queue lock with poison recovery: a caller panicking mid-`submit`
+    /// (e.g. fault injection unwinding through a server thread) must not
+    /// brick the resident queue — worst case is one lost enqueue attempt,
+    /// never a corrupt queue (the push is the last statement under the
+    /// lock).
+    fn lock_queue(&self) -> MutexGuard<'_, Queued> {
+        self.queue.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+
     /// Mutable access (memo reconfiguration between traffic waves).
     pub fn coordinator_mut(&mut self) -> &mut Coordinator {
         &mut self.coord
@@ -66,7 +75,7 @@ impl Service {
 
     /// Enqueue a request for the next [`Service::drain`].
     pub fn submit(&self, req: StencilRequest) -> Ticket {
-        let mut q = self.queue.lock().unwrap();
+        let mut q = self.lock_queue();
         let t = Ticket(q.next);
         q.next += 1;
         q.reqs.push((t, req));
@@ -75,7 +84,7 @@ impl Service {
 
     /// Requests currently queued (not yet drained).
     pub fn pending(&self) -> usize {
-        self.queue.lock().unwrap().reqs.len()
+        self.lock_queue().reqs.len()
     }
 
     /// Run every queued request through the coordinator's batched serve
@@ -84,7 +93,7 @@ impl Service {
     /// next one.
     pub fn drain(&self) -> Vec<(Ticket, Result<StencilResponse>)> {
         let batch = {
-            let mut q = self.queue.lock().unwrap();
+            let mut q = self.lock_queue();
             std::mem::take(&mut q.reqs)
         };
         if batch.is_empty() {

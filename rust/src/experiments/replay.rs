@@ -18,12 +18,23 @@
 //!
 //! The replay is sequential (one request at a time) so latencies and hit
 //! counts are exactly reproducible for a given seed.
+//!
+//! **Open-loop mode** ([`run_open_loop`]) is the tail-latency counterpart:
+//! requests arrive on a deterministic Poisson (or bursty) schedule and are
+//! dispatched onto a worker pool *regardless of whether earlier requests
+//! finished* — the arrival clock never waits for the server, so queueing
+//! delay shows up in the sojourn times instead of silently stretching the
+//! trace (no coordinated omission). Arrivals past the admission cap are
+//! shed at the door, exactly like the TCP front end does.
 
-use crate::coordinator::{Coordinator, JobKind, PlannerConfig, Service, StencilRequest, StencilSpec};
+use crate::coordinator::{Admission, Coordinator, JobKind, PlannerConfig, Service, StencilRequest, StencilSpec};
 use crate::report::Table;
 use crate::util::rng::Rng;
 use crate::util::stats::Summary;
-use std::sync::atomic::Ordering;
+use crate::util::threadpool::ThreadPool;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
 
 /// Configuration of a replay run.
 #[derive(Debug, Clone)]
@@ -262,6 +273,235 @@ pub fn run(cfg: &ReplayConfig) -> ReplayOutcome {
     }
 }
 
+/// Arrival process for the open-loop replay.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Arrivals {
+    /// Independent exponential gaps (memoryless, rate `rate_rps`).
+    Poisson,
+    /// `burst` back-to-back arrivals, then an exponential gap with mean
+    /// `burst / rate_rps` — same average rate, much nastier tail.
+    Bursty { burst: usize },
+}
+
+impl Arrivals {
+    pub fn label(&self) -> String {
+        match self {
+            Arrivals::Poisson => "poisson".to_string(),
+            Arrivals::Bursty { burst } => format!("bursty{burst}x"),
+        }
+    }
+}
+
+/// Configuration of an open-loop replay run.
+#[derive(Debug, Clone)]
+pub struct OpenLoopConfig {
+    /// Arrivals to generate.
+    pub requests: usize,
+    /// Offered load in requests per second.
+    pub rate_rps: f64,
+    pub arrivals: Arrivals,
+    /// Number of hot shapes (Zipf-drawn, like the closed-loop trace).
+    pub hot: usize,
+    pub zipf_s: f64,
+    pub seed: u64,
+    pub memo_bytes: usize,
+    /// Admission cap: arrivals beyond this many in-flight requests are
+    /// shed immediately (never queued).
+    pub inflight_cap: usize,
+    /// Dispatch workers draining admitted requests.
+    pub workers: usize,
+}
+
+impl OpenLoopConfig {
+    /// The EXPERIMENTS.md configuration: 2 krps over 8 hot shapes, cap 32.
+    /// `quick` shrinks the trace for smoke runs.
+    pub fn paper(quick: bool) -> OpenLoopConfig {
+        OpenLoopConfig {
+            requests: if quick { 160 } else { 480 },
+            rate_rps: 2000.0,
+            arrivals: Arrivals::Poisson,
+            hot: 8,
+            zipf_s: 1.1,
+            seed: 0x0427,
+            memo_bytes: 64 * 1024,
+            inflight_cap: 32,
+            workers: 4,
+        }
+    }
+}
+
+/// One exponential inter-arrival gap (seconds) with the given mean.
+fn exp_gap(rng: &mut Rng, mean_s: f64) -> f64 {
+    // 1 - u ∈ (0, 1]: ln never sees 0
+    -(1.0 - rng.f64()).ln() * mean_s
+}
+
+/// The deterministic arrival schedule: microsecond offsets from the start
+/// of the run, nondecreasing, mean rate `rate_rps` for either process.
+pub fn arrival_offsets_us(cfg: &OpenLoopConfig) -> Vec<u64> {
+    let mut rng = Rng::new(cfg.seed ^ 0xA221_7A15);
+    let mut t = 0.0f64;
+    let mut out = Vec::with_capacity(cfg.requests);
+    match cfg.arrivals {
+        Arrivals::Poisson => {
+            for _ in 0..cfg.requests {
+                t += exp_gap(&mut rng, 1.0 / cfg.rate_rps);
+                out.push((t * 1e6) as u64);
+            }
+        }
+        Arrivals::Bursty { burst } => {
+            let burst = burst.max(1);
+            while out.len() < cfg.requests {
+                t += exp_gap(&mut rng, burst as f64 / cfg.rate_rps);
+                for _ in 0..burst.min(cfg.requests - out.len()) {
+                    out.push((t * 1e6) as u64);
+                }
+            }
+        }
+    }
+    out
+}
+
+/// `sorted` must be ascending; returns the rank-`ceil(q·n)` element
+/// (0 when empty) — same convention as `Histogram::quantile_us`.
+fn percentile_sorted(sorted: &[u64], q: f64) -> u64 {
+    if sorted.is_empty() {
+        return 0;
+    }
+    let rank = ((q * sorted.len() as f64).ceil() as usize).clamp(1, sorted.len());
+    sorted[rank - 1]
+}
+
+/// Outcome of an open-loop replay run.
+#[derive(Debug, Clone)]
+pub struct OpenLoopOutcome {
+    /// `poisson` / `bursty32x` — the arrival process label.
+    pub label: String,
+    pub offered_rps: f64,
+    pub requests: u64,
+    /// Requests that ran to a successful response.
+    pub completed: u64,
+    /// Requests shed at the admission door.
+    pub shed: u64,
+    /// Admitted requests that answered an error.
+    pub errors: u64,
+    /// `single_flight_collapsed` over the run (the trace starts cold, so
+    /// the first burst on a hot shape collapses onto one computation).
+    pub collapsed: u64,
+    /// Sojourn percentiles, measured from the *scheduled* arrival time —
+    /// dispatcher lag counts against the server (no coordinated omission).
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+    pub p999_ms: f64,
+    pub achieved_rps: f64,
+    pub metrics_json: String,
+}
+
+impl OpenLoopOutcome {
+    pub fn shed_rate(&self) -> f64 {
+        if self.requests == 0 {
+            0.0
+        } else {
+            self.shed as f64 / self.requests as f64
+        }
+    }
+}
+
+/// Replay a deterministic open-loop arrival schedule against a fresh
+/// memoizing service with bounded admission, and measure the sojourn tail.
+///
+/// The service starts **cold** on purpose: the opening burst of Zipf
+/// rank-0 requests is the single-flight demonstration — N concurrent
+/// misses on one key, one computation, `collapsed` > 0 in the outcome.
+pub fn run_open_loop(cfg: &OpenLoopConfig) -> OpenLoopOutcome {
+    let mut coord = Coordinator::analysis_only(PlannerConfig::default());
+    coord.configure_memo(Some(cfg.memo_bytes));
+    let svc = Arc::new(Service::over(coord));
+
+    let hot = hot_shapes(cfg.hot);
+    let mut rng = Rng::new(cfg.seed);
+    let reqs = zipf_requests(&hot, cfg.zipf_s, cfg.requests, &mut rng);
+    let offsets = arrival_offsets_us(cfg);
+
+    let pool = ThreadPool::new(cfg.workers.max(1));
+    let admission = Admission::new(cfg.inflight_cap);
+    let sojourns: Arc<Mutex<Vec<u64>>> = Arc::new(Mutex::new(Vec::with_capacity(cfg.requests)));
+    let errors = Arc::new(AtomicU64::new(0));
+    let mut shed = 0u64;
+
+    let t0 = Instant::now();
+    for (req, &offset_us) in reqs.into_iter().zip(&offsets) {
+        let target = Duration::from_micros(offset_us);
+        let now = t0.elapsed();
+        if target > now {
+            std::thread::sleep(target - now);
+        }
+        // Shed at the door, not in a queue: open-loop arrivals never slow
+        // down because the server is busy — the cap is the only backstop.
+        let Some(permit) = Admission::try_acquire(&admission) else {
+            shed += 1;
+            continue;
+        };
+        let svc = Arc::clone(&svc);
+        let sojourns = Arc::clone(&sojourns);
+        let errors = Arc::clone(&errors);
+        pool.submit(move || {
+            let result = svc.coordinator().submit_caught(&req);
+            if result.is_err() {
+                errors.fetch_add(1, Ordering::Relaxed);
+            }
+            let sojourn_us = (t0.elapsed().as_micros() as u64).saturating_sub(offset_us);
+            sojourns.lock().unwrap_or_else(std::sync::PoisonError::into_inner).push(sojourn_us);
+            drop(permit);
+        });
+    }
+    pool.wait_idle();
+    let elapsed_s = t0.elapsed().as_secs_f64().max(1e-9);
+
+    let mut lat: Vec<u64> = {
+        let guard = sojourns.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+        guard.clone()
+    };
+    lat.sort_unstable();
+    let errors = errors.load(Ordering::Relaxed);
+    let metrics = svc.coordinator().metrics();
+    OpenLoopOutcome {
+        label: cfg.arrivals.label(),
+        offered_rps: cfg.rate_rps,
+        requests: cfg.requests as u64,
+        completed: lat.len() as u64 - errors,
+        shed,
+        errors,
+        collapsed: metrics.single_flight_collapsed.load(Ordering::Relaxed),
+        p50_ms: percentile_sorted(&lat, 0.50) as f64 / 1e3,
+        p99_ms: percentile_sorted(&lat, 0.99) as f64 / 1e3,
+        p999_ms: percentile_sorted(&lat, 0.999) as f64 / 1e3,
+        achieved_rps: lat.len() as f64 / elapsed_s,
+        metrics_json: svc.metrics_json(),
+    }
+}
+
+/// Render open-loop outcomes side by side (the EXPERIMENTS.md table).
+pub fn open_loop_table(outs: &[OpenLoopOutcome]) -> Table {
+    let mut table = Table::new(
+        "open-loop serving: deterministic arrivals vs sojourn tail (measured from scheduled arrival)",
+        &["arrivals", "offered rps", "requests", "shed %", "p50 ms", "p99 ms", "p99.9 ms", "collapsed"],
+    );
+    for o in outs {
+        table.add_row(vec![
+            o.label.clone(),
+            format!("{:.0}", o.offered_rps),
+            o.requests.to_string(),
+            format!("{:4.1}%", 100.0 * o.shed_rate()),
+            format!("{:.2}", o.p50_ms),
+            format!("{:.2}", o.p99_ms),
+            format!("{:.2}", o.p999_ms),
+            o.collapsed.to_string(),
+        ]);
+    }
+    table
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -312,5 +552,63 @@ mod tests {
         assert!(out.hot_set_retained());
         assert_eq!(out.table.num_rows(), 4);
         assert!(out.metrics_json.contains("sim_memo_hits"));
+    }
+
+    #[test]
+    fn arrival_offsets_deterministic_and_rate_matched() {
+        let cfg = OpenLoopConfig::paper(true);
+        let a = arrival_offsets_us(&cfg);
+        let b = arrival_offsets_us(&cfg);
+        assert_eq!(a, b, "schedule must be a pure function of the config");
+        assert_eq!(a.len(), cfg.requests);
+        assert!(a.windows(2).all(|w| w[0] <= w[1]), "offsets nondecreasing");
+        // mean gap ≈ 1/rate: the span of n arrivals concentrates around
+        // n/rate (CV of the sum is 1/√n ≈ 8% here; 3σ bounds)
+        let span_s = *a.last().unwrap() as f64 / 1e6;
+        let expect = cfg.requests as f64 / cfg.rate_rps;
+        assert!(span_s > expect * 0.7 && span_s < expect * 1.3, "span {span_s} vs {expect}");
+    }
+
+    #[test]
+    fn bursty_arrivals_share_offsets_within_a_burst() {
+        let cfg = OpenLoopConfig { arrivals: Arrivals::Bursty { burst: 8 }, ..OpenLoopConfig::paper(true) };
+        let offs = arrival_offsets_us(&cfg);
+        assert_eq!(offs.len(), cfg.requests);
+        // every burst of 8 arrives at one instant (zero intra-burst gaps)
+        for chunk in offs.chunks(8) {
+            assert!(chunk.iter().all(|&t| t == chunk[0]), "{chunk:?}");
+        }
+        // distinct bursts are separated (exponential gaps are a.s. > 0)
+        assert!(offs[0] < offs[8]);
+    }
+
+    #[test]
+    fn percentile_sorted_pinned() {
+        assert_eq!(percentile_sorted(&[], 0.5), 0);
+        let xs: Vec<u64> = (1..=10).collect();
+        assert_eq!(percentile_sorted(&xs, 0.50), 5);
+        assert_eq!(percentile_sorted(&xs, 0.99), 10);
+        assert_eq!(percentile_sorted(&xs, 0.999), 10);
+        assert_eq!(percentile_sorted(&[7], 0.5), 7);
+    }
+
+    #[test]
+    fn quick_open_loop_accounts_for_every_arrival() {
+        // tiny, fast config: high rate + small cap forces real shedding
+        let cfg = OpenLoopConfig {
+            requests: 80,
+            rate_rps: 20_000.0,
+            inflight_cap: 4,
+            workers: 2,
+            ..OpenLoopConfig::paper(true)
+        };
+        let out = run_open_loop(&cfg);
+        assert_eq!(out.completed + out.shed + out.errors, out.requests, "{out:?}");
+        assert_eq!(out.errors, 0, "hot-shape requests are all valid");
+        assert!(out.completed > 0);
+        assert!(out.p50_ms <= out.p99_ms && out.p99_ms <= out.p999_ms);
+        assert!(out.metrics_json.contains("latency_us"));
+        let table = open_loop_table(&[out]);
+        assert_eq!(table.num_rows(), 1);
     }
 }

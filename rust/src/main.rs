@@ -17,11 +17,26 @@
 //!     set exceeds it run out-of-core over disk tiles.
 //! stencilcache serve-demo [--requests 64]
 //!     demo of the serving layer (submit/drain) over a mixed workload
+//! stencilcache serve [--port 7077] [--cap 64] [--workers N]
+//!     run the JSON-over-TCP front end (newline-delimited requests, see
+//!     README "Network serving"). --cap bounds in-flight requests; excess
+//!     arrivals answer a typed "overloaded" response. Stops cleanly on a
+//!     {"kind":"shutdown"} request.
+//! stencilcache serve-smoke
+//!     end-to-end smoke of the TCP front end against itself: malformed
+//!     lines, an injected worker panic, a duplicate-key burst (asserts
+//!     single-flight collapse), and an overload burst against a cap-1
+//!     server (asserts shed + recovery). Exits non-zero on any failure.
 //! stencilcache replay [--requests 600] [--hot 8] [--scan 48] [--zipf 1.1]
 //!                     [--seed N] [--memo-bytes 32768] [--quick]
 //!     replay a deterministic Zipf+scan trace through the memoizing
 //!     service; prints per-phase memo hit rates and latencies. Exits
 //!     non-zero if the memo tier never hits (CI smoke gate).
+//! stencilcache replay --open-loop [--rate 2000] [--burst 32] [--cap 32]
+//!                     [--requests 480] [--workers 4] [--quick]
+//!     open-loop arrivals (Poisson, or bursty with --burst > 1) against a
+//!     bounded-admission service: sojourn tail measured from the scheduled
+//!     arrival times, shed rate, and single-flight collapse count.
 //! stencilcache bench-gate --baseline BENCH_NUMERIC.json --current fresh.json [--tolerance 2.0]
 //!     compare a fresh bench snapshot against a committed baseline; exits
 //!     non-zero on a throughput regression beyond the tolerance factor or
@@ -44,7 +59,7 @@ use stencilcache::util::logger;
 
 fn main() {
     logger::init();
-    let args = match Args::from_env(&["quick", "verbose", "no-auto-pad", "bless"]) {
+    let args = match Args::from_env(&["quick", "verbose", "no-auto-pad", "bless", "open-loop"]) {
         Ok(a) => a,
         Err(e) => {
             eprintln!("error: {e}");
@@ -59,11 +74,15 @@ fn main() {
         Some("experiment") => cmd_experiment(&args),
         Some("solve") => cmd_solve(&args),
         Some("serve-demo") => cmd_serve_demo(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("serve-smoke") => cmd_serve_smoke(),
         Some("replay") => cmd_replay(&args),
         Some("bench-gate") => cmd_bench_gate(&args),
         Some("info") => cmd_info(),
         _ => {
-            eprintln!("usage: stencilcache <analyze|experiment|solve|serve-demo|replay|bench-gate|info> [options]");
+            eprintln!(
+                "usage: stencilcache <analyze|experiment|solve|serve-demo|serve|serve-smoke|replay|bench-gate|info> [options]"
+            );
             eprintln!("       see rust/src/main.rs docs for options");
             2
         }
@@ -280,8 +299,199 @@ fn cmd_serve_demo(args: &Args) -> i32 {
     }
 }
 
+fn cmd_serve(args: &Args) -> i32 {
+    use stencilcache::coordinator::{Server, ServerConfig};
+    let run = || -> Result<(), String> {
+        let dflt = ServerConfig::default();
+        let port = args.get_usize("port", 7077)?;
+        let cfg = ServerConfig {
+            addr: format!("127.0.0.1:{port}"),
+            max_inflight: args.get_usize("cap", dflt.max_inflight)?.max(1),
+            workers: args.get_usize("workers", dflt.workers)?.max(1),
+            max_line_bytes: dflt.max_line_bytes,
+        };
+        let svc = std::sync::Arc::new(Service::new(PlannerConfig::default()));
+        let mut server = Server::start(svc, cfg).map_err(|e| e.to_string())?;
+        println!(
+            "stencilcache serving on {} — newline-delimited JSON, kind = plan|analyze|analyze_with|execute|solve|metrics|shutdown",
+            server.addr()
+        );
+        server.wait(); // returns when a wire shutdown (or signal) stops the accept loop
+        server.shutdown();
+        println!("server stopped");
+        Ok(())
+    };
+    match run() {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("serve: {e}");
+            1
+        }
+    }
+}
+
+/// Minimal line-protocol client for the smoke harness.
+struct SmokeClient {
+    stream: std::net::TcpStream,
+    reader: std::io::BufReader<std::net::TcpStream>,
+}
+
+impl SmokeClient {
+    fn connect(addr: std::net::SocketAddr) -> Result<SmokeClient, String> {
+        let stream = std::net::TcpStream::connect(addr).map_err(|e| format!("connect {addr}: {e}"))?;
+        stream
+            .set_read_timeout(Some(std::time::Duration::from_secs(120)))
+            .map_err(|e| e.to_string())?;
+        let reader = std::io::BufReader::new(stream.try_clone().map_err(|e| e.to_string())?);
+        Ok(SmokeClient { stream, reader })
+    }
+
+    fn send(&mut self, line: &str) -> Result<(), String> {
+        use std::io::Write;
+        self.stream
+            .write_all(line.as_bytes())
+            .and_then(|_| self.stream.write_all(b"\n"))
+            .and_then(|_| self.stream.flush())
+            .map_err(|e| format!("send: {e}"))
+    }
+
+    fn recv(&mut self) -> Result<stencilcache::util::json::Json, String> {
+        use std::io::BufRead;
+        let mut line = String::new();
+        let n = self.reader.read_line(&mut line).map_err(|e| format!("recv: {e}"))?;
+        if n == 0 {
+            return Err("recv: server closed the connection".into());
+        }
+        stencilcache::util::json::parse(line.trim()).map_err(|e| format!("recv: bad response JSON: {e}"))
+    }
+}
+
+fn cmd_serve_smoke() -> i32 {
+    use stencilcache::coordinator::{Server, ServerConfig};
+    use stencilcache::util::json::Json;
+    let is_ok = |v: &Json| v.get("ok") == Some(&Json::Bool(true));
+    let error_class = |v: &Json| v.get("error").and_then(Json::as_str).unwrap_or("").to_string();
+    let run = || -> Result<(), String> {
+        // --- server 1: error containment + single-flight ---
+        let svc = std::sync::Arc::new(Service::new(PlannerConfig::default()));
+        let cfg = ServerConfig { max_inflight: 16, workers: 4, ..ServerConfig::default() };
+        let mut server = Server::start(svc, cfg).map_err(|e| e.to_string())?;
+        let mut c = SmokeClient::connect(server.addr())?;
+
+        // malformed JSON answers bad_request, connection stays up
+        c.send("{\"id\":1,\"kind\":\"analyze\",\"dims\":[16,16")?;
+        let r = c.recv()?;
+        if is_ok(&r) || error_class(&r) != "bad_request" {
+            return Err(format!("malformed line: expected bad_request, got {r}"));
+        }
+        // semantically invalid request (star13 is 3-D)
+        c.send("{\"id\":2,\"kind\":\"analyze\",\"dims\":[16,16],\"stencil\":\"star13\"}")?;
+        let r = c.recv()?;
+        if is_ok(&r) || error_class(&r) != "bad_request" {
+            return Err(format!("invalid request: expected bad_request, got {r}"));
+        }
+        // injected worker panic answers internal; the server keeps serving
+        c.send("{\"id\":3,\"kind\":\"chaos_panic\"}")?;
+        let r = c.recv()?;
+        if is_ok(&r) || error_class(&r) != "internal" {
+            return Err(format!("chaos_panic: expected internal, got {r}"));
+        }
+        c.send("{\"id\":4,\"kind\":\"plan\",\"dims\":[16,16,16]}")?;
+        let r = c.recv()?;
+        if !is_ok(&r) {
+            return Err(format!("post-panic plan: expected ok, got {r}"));
+        }
+        println!("serve-smoke: malformed / invalid / panicking requests contained; server still serving");
+
+        // duplicate-key burst: 8 pipelined identical cold analyses must
+        // collapse onto one computation. Timing-dependent (a very fast
+        // leader can finish before the rest arrive), so retry on fresh
+        // keys until the collapse counter moves.
+        let mut collapsed = 0i64;
+        for attempt in 0..10usize {
+            let n = 40 + 2 * attempt;
+            for i in 0..8 {
+                c.send(&format!("{{\"id\":{},\"kind\":\"analyze\",\"dims\":[{n},{n},{n}]}}", 100 + i))?;
+            }
+            for _ in 0..8 {
+                let r = c.recv()?;
+                if !is_ok(&r) {
+                    return Err(format!("duplicate-key burst: unexpected failure {r}"));
+                }
+            }
+            c.send("{\"id\":999,\"kind\":\"metrics\"}")?;
+            let m = c.recv()?;
+            collapsed = m
+                .get("metrics")
+                .and_then(|j| j.get("single_flight_collapsed"))
+                .and_then(Json::as_i64)
+                .unwrap_or(0);
+            if collapsed > 0 {
+                break;
+            }
+        }
+        if collapsed == 0 {
+            return Err("single_flight_collapsed stayed 0 across 10 duplicate-key bursts".into());
+        }
+        println!("serve-smoke: duplicate-key burst collapsed {collapsed} request(s) onto in-flight computations");
+
+        // clean wire shutdown
+        c.send("{\"id\":5,\"kind\":\"shutdown\"}")?;
+        let r = c.recv()?;
+        if !is_ok(&r) {
+            return Err(format!("shutdown: expected ok, got {r}"));
+        }
+        server.wait();
+        server.shutdown();
+        println!("serve-smoke: wire shutdown joined cleanly");
+
+        // --- server 2: admission control (cap 1) ---
+        let svc2 = std::sync::Arc::new(Service::new(PlannerConfig::default()));
+        let cfg2 = ServerConfig { max_inflight: 1, workers: 4, ..ServerConfig::default() };
+        let mut server2 = Server::start(svc2, cfg2).map_err(|e| e.to_string())?;
+        let mut c2 = SmokeClient::connect(server2.addr())?;
+        for i in 0..8 {
+            c2.send(&format!("{{\"id\":{i},\"kind\":\"analyze\",\"dims\":[64,64,64]}}"))?;
+        }
+        let (mut ok, mut overloaded) = (0u32, 0u32);
+        for _ in 0..8 {
+            let r = c2.recv()?;
+            if is_ok(&r) {
+                ok += 1;
+            } else if error_class(&r) == "overloaded" {
+                overloaded += 1;
+            } else {
+                return Err(format!("overload burst: unexpected response {r}"));
+            }
+        }
+        if ok == 0 || overloaded == 0 {
+            return Err(format!("overload burst: ok {ok}, overloaded {overloaded} — expected both nonzero"));
+        }
+        // the cap-1 server recovers once the burst drains
+        c2.send("{\"id\":9,\"kind\":\"plan\",\"dims\":[16,16,16]}")?;
+        let r = c2.recv()?;
+        if !is_ok(&r) {
+            return Err(format!("post-overload plan: expected ok, got {r}"));
+        }
+        server2.shutdown();
+        println!("serve-smoke: cap-1 server shed {overloaded}/8 and recovered");
+        println!("serve-smoke: PASS");
+        Ok(())
+    };
+    match run() {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("serve-smoke: FAIL: {e}");
+            1
+        }
+    }
+}
+
 fn cmd_replay(args: &Args) -> i32 {
     use stencilcache::experiments::replay::{self, ReplayConfig};
+    if args.flag("open-loop") {
+        return cmd_replay_open_loop(args);
+    }
     let run = || -> Result<(), String> {
         let mut cfg = ReplayConfig::paper(args.flag("quick"));
         cfg.requests = args.get_usize("requests", cfg.requests)?.max(1);
@@ -310,6 +520,46 @@ fn cmd_replay(args: &Args) -> i32 {
         Ok(()) => 0,
         Err(e) => {
             eprintln!("replay: {e}");
+            1
+        }
+    }
+}
+
+fn cmd_replay_open_loop(args: &Args) -> i32 {
+    use stencilcache::experiments::replay::{open_loop_table, run_open_loop, Arrivals, OpenLoopConfig};
+    let run = || -> Result<(), String> {
+        let mut cfg = OpenLoopConfig::paper(args.flag("quick"));
+        cfg.requests = args.get_usize("requests", cfg.requests)?.max(1);
+        cfg.hot = args.get_usize("hot", cfg.hot)?.max(1);
+        cfg.zipf_s = args.get_f64("zipf", cfg.zipf_s)?;
+        cfg.seed = args.get_usize("seed", cfg.seed as usize)? as u64;
+        cfg.memo_bytes = args.get_usize("memo-bytes", cfg.memo_bytes)?;
+        cfg.rate_rps = args.get_f64("rate", cfg.rate_rps)?;
+        cfg.inflight_cap = args.get_usize("cap", cfg.inflight_cap)?.max(1);
+        cfg.workers = args.get_usize("workers", cfg.workers)?.max(1);
+        let burst = args.get_usize("burst", 1)?;
+        if burst > 1 {
+            cfg.arrivals = Arrivals::Bursty { burst };
+        }
+        if cfg.rate_rps <= 0.0 {
+            return Err("--rate must be positive".into());
+        }
+        let out = run_open_loop(&cfg);
+        println!("{}", open_loop_table(std::slice::from_ref(&out)).to_text());
+        println!(
+            "completed {} / shed {} / errors {} of {} arrivals; achieved {:.0} rps; single-flight collapsed {}",
+            out.completed, out.shed, out.errors, out.requests, out.achieved_rps, out.collapsed
+        );
+        println!("\n== metrics ==\n{}", out.metrics_json);
+        if out.completed == 0 {
+            return Err("no request completed — the serving path is not draining".into());
+        }
+        Ok(())
+    };
+    match run() {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("replay --open-loop: {e}");
             1
         }
     }

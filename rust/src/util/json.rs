@@ -1,9 +1,49 @@
-//! Minimal JSON emitter (no serde offline). Only what the metrics registry
-//! and experiment drivers need: objects, arrays, strings, numbers, bools.
+//! Minimal JSON emitter + parser (no serde offline). Only what the metrics
+//! registry, experiment drivers, and the wire protocol need: objects,
+//! arrays, strings, numbers, bools.
 //! Output is deterministic (insertion-ordered objects) so experiment logs
 //! diff cleanly between runs.
+//!
+//! The parser consumes **untrusted** bytes (the TCP front end feeds client
+//! lines straight into it), so structural misuse and malformed input are
+//! typed [`JsonError`]s — never panics — and [`parse`] enforces a byte-size
+//! and nesting-depth limit so a hostile document cannot blow the stack.
 
 use std::fmt::Write as _;
+
+/// Default input cap for [`parse`] (8 MiB — far above any manifest or wire
+/// line we produce; [`parse_with_limits`] overrides it).
+pub const MAX_PARSE_BYTES: usize = 8 << 20;
+
+/// Default nesting-depth cap for [`parse`]. Recursion depth is bounded by
+/// this, so a `[[[[…` bomb errors out instead of overflowing the stack.
+pub const MAX_PARSE_DEPTH: usize = 64;
+
+/// Typed error for JSON parsing and structural misuse.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum JsonError {
+    /// `try_set` on a non-object value.
+    NotAnObject,
+    /// Malformed input; `at` is the byte offset of the problem.
+    Syntax { at: usize, msg: String },
+    /// Nesting exceeded the parser's depth limit.
+    TooDeep { limit: usize },
+    /// Input exceeded the parser's byte-size limit.
+    TooLarge { len: usize, limit: usize },
+}
+
+impl std::fmt::Display for JsonError {
+    fn fmt(&self, fm: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            JsonError::NotAnObject => write!(fm, "set on a non-object JSON value"),
+            JsonError::Syntax { at, msg } => write!(fm, "{msg} at byte {at}"),
+            JsonError::TooDeep { limit } => write!(fm, "nesting deeper than {limit} levels"),
+            JsonError::TooLarge { len, limit } => write!(fm, "document of {len} bytes exceeds the {limit}-byte limit"),
+        }
+    }
+}
+
+impl std::error::Error for JsonError {}
 
 /// A JSON value. Objects preserve insertion order.
 #[derive(Debug, Clone, PartialEq)]
@@ -31,20 +71,35 @@ impl Json {
         Json::Obj(Vec::new())
     }
 
-    /// Insert (or overwrite) a key in an object value. Panics on non-objects —
-    /// that is a programming error, not a data error.
+    /// Insert (or overwrite) a key in an object value.
+    ///
+    /// On a non-object the value is first reset to an empty object (the
+    /// old scalar is discarded). Builder code always starts from
+    /// [`Json::obj`], so that case is pure misuse recovery — the resident
+    /// server must never panic over a structural mistake; use [`try_set`]
+    /// to *detect* the misuse instead.
+    ///
+    /// [`try_set`]: Json::try_set
     pub fn set(&mut self, key: &str, val: impl Into<Json>) -> &mut Self {
-        match self {
-            Json::Obj(pairs) => {
-                if let Some(p) = pairs.iter_mut().find(|(k, _)| k == key) {
-                    p.1 = val.into();
-                } else {
-                    pairs.push((key.to_string(), val.into()));
-                }
-            }
-            _ => panic!("Json::set on a non-object"),
+        if !matches!(self, Json::Obj(_)) {
+            *self = Json::obj();
         }
-        self
+        self.try_set(key, val).expect("just coerced to an object")
+    }
+
+    /// Fallible [`set`](Json::set): `Err(JsonError::NotAnObject)` instead
+    /// of coercing when `self` is not an object.
+    pub fn try_set(&mut self, key: &str, val: impl Into<Json>) -> Result<&mut Self, JsonError> {
+        if let Json::Obj(pairs) = self {
+            if let Some(p) = pairs.iter_mut().find(|(k, _)| k == key) {
+                p.1 = val.into();
+            } else {
+                pairs.push((key.to_string(), val.into()));
+            }
+        } else {
+            return Err(JsonError::NotAnObject);
+        }
+        Ok(self)
     }
 
     pub fn get(&self, key: &str) -> Option<&Json> {
@@ -168,16 +223,26 @@ fn write_escaped(out: &mut String, s: &str) {
     out.push('"');
 }
 
-/// Parse a JSON document (used for `artifacts/manifest.json`). Supports the
-/// full JSON grammar except exotic number forms; numbers parse as `Int`
-/// when integral, else `Num`.
-pub fn parse(s: &str) -> Result<Json, String> {
-    let mut p = Parser { b: s.as_bytes(), i: 0 };
+/// Parse a JSON document (manifest files, wire requests) under the default
+/// [`MAX_PARSE_BYTES`] / [`MAX_PARSE_DEPTH`] limits. Supports the full JSON
+/// grammar except exotic number forms; numbers parse as `Int` when
+/// integral, else `Num`.
+pub fn parse(s: &str) -> Result<Json, JsonError> {
+    parse_with_limits(s, MAX_PARSE_BYTES, MAX_PARSE_DEPTH)
+}
+
+/// [`parse`] with explicit byte-size and nesting-depth limits (the server
+/// passes its per-line byte cap).
+pub fn parse_with_limits(s: &str, max_bytes: usize, max_depth: usize) -> Result<Json, JsonError> {
+    if s.len() > max_bytes {
+        return Err(JsonError::TooLarge { len: s.len(), limit: max_bytes });
+    }
+    let mut p = Parser { b: s.as_bytes(), i: 0, depth: 0, max_depth };
     p.skip_ws();
     let v = p.value()?;
     p.skip_ws();
     if p.i != p.b.len() {
-        return Err(format!("trailing garbage at byte {}", p.i));
+        return Err(p.err("trailing garbage"));
     }
     Ok(v)
 }
@@ -185,9 +250,25 @@ pub fn parse(s: &str) -> Result<Json, String> {
 struct Parser<'a> {
     b: &'a [u8],
     i: usize,
+    depth: usize,
+    max_depth: usize,
 }
 
 impl<'a> Parser<'a> {
+    fn err(&self, msg: impl Into<String>) -> JsonError {
+        JsonError::Syntax { at: self.i, msg: msg.into() }
+    }
+
+    /// Container entry: bounds the recursion (containers are the only
+    /// recursive productions).
+    fn descend(&mut self) -> Result<(), JsonError> {
+        self.depth += 1;
+        if self.depth > self.max_depth {
+            return Err(JsonError::TooDeep { limit: self.max_depth });
+        }
+        Ok(())
+    }
+
     fn skip_ws(&mut self) {
         while self.i < self.b.len() && matches!(self.b[self.i], b' ' | b'\t' | b'\n' | b'\r') {
             self.i += 1;
@@ -198,16 +279,16 @@ impl<'a> Parser<'a> {
         self.b.get(self.i).copied()
     }
 
-    fn expect(&mut self, c: u8) -> Result<(), String> {
+    fn expect(&mut self, c: u8) -> Result<(), JsonError> {
         if self.peek() == Some(c) {
             self.i += 1;
             Ok(())
         } else {
-            Err(format!("expected {:?} at byte {}", c as char, self.i))
+            Err(self.err(format!("expected {:?}", c as char)))
         }
     }
 
-    fn value(&mut self) -> Result<Json, String> {
+    fn value(&mut self) -> Result<Json, JsonError> {
         self.skip_ws();
         match self.peek() {
             Some(b'{') => self.object(),
@@ -217,20 +298,20 @@ impl<'a> Parser<'a> {
             Some(b'f') => self.literal("false", Json::Bool(false)),
             Some(b'n') => self.literal("null", Json::Null),
             Some(c) if c == b'-' || c.is_ascii_digit() => self.number(),
-            other => Err(format!("unexpected {:?} at byte {}", other.map(|c| c as char), self.i)),
+            other => Err(self.err(format!("unexpected {:?}", other.map(|c| c as char)))),
         }
     }
 
-    fn literal(&mut self, word: &str, val: Json) -> Result<Json, String> {
+    fn literal(&mut self, word: &str, val: Json) -> Result<Json, JsonError> {
         if self.b[self.i..].starts_with(word.as_bytes()) {
             self.i += word.len();
             Ok(val)
         } else {
-            Err(format!("bad literal at byte {}", self.i))
+            Err(self.err("bad literal"))
         }
     }
 
-    fn number(&mut self) -> Result<Json, String> {
+    fn number(&mut self) -> Result<Json, JsonError> {
         let start = self.i;
         if self.peek() == Some(b'-') {
             self.i += 1;
@@ -258,18 +339,18 @@ impl<'a> Parser<'a> {
         }
         let txt = std::str::from_utf8(&self.b[start..self.i]).unwrap();
         if is_float {
-            txt.parse::<f64>().map(Json::Num).map_err(|e| e.to_string())
+            txt.parse::<f64>().map(Json::Num).map_err(|e| self.err(e.to_string()))
         } else {
-            txt.parse::<i64>().map(Json::Int).map_err(|e| e.to_string())
+            txt.parse::<i64>().map(Json::Int).map_err(|e| self.err(e.to_string()))
         }
     }
 
-    fn string(&mut self) -> Result<String, String> {
+    fn string(&mut self) -> Result<String, JsonError> {
         self.expect(b'"')?;
         let mut out = String::new();
         loop {
             match self.peek() {
-                None => return Err("unterminated string".into()),
+                None => return Err(self.err("unterminated string")),
                 Some(b'"') => {
                     self.i += 1;
                     return Ok(out);
@@ -287,21 +368,21 @@ impl<'a> Parser<'a> {
                         Some(b'f') => out.push('\u{c}'),
                         Some(b'u') => {
                             if self.i + 4 >= self.b.len() {
-                                return Err("bad \\u escape".into());
+                                return Err(self.err("bad \\u escape"));
                             }
                             let hex = std::str::from_utf8(&self.b[self.i + 1..self.i + 5])
-                                .map_err(|_| "bad \\u escape")?;
-                            let code = u32::from_str_radix(hex, 16).map_err(|_| "bad \\u escape")?;
+                                .map_err(|_| self.err("bad \\u escape"))?;
+                            let code = u32::from_str_radix(hex, 16).map_err(|_| self.err("bad \\u escape"))?;
                             out.push(char::from_u32(code).unwrap_or('\u{FFFD}'));
                             self.i += 4;
                         }
-                        other => return Err(format!("bad escape {other:?}")),
+                        other => return Err(self.err(format!("bad escape {other:?}"))),
                     }
                     self.i += 1;
                 }
                 Some(_) => {
                     // consume one UTF-8 scalar
-                    let s = std::str::from_utf8(&self.b[self.i..]).map_err(|_| "invalid utf-8")?;
+                    let s = std::str::from_utf8(&self.b[self.i..]).map_err(|_| self.err("invalid utf-8"))?;
                     let c = s.chars().next().unwrap();
                     out.push(c);
                     self.i += c.len_utf8();
@@ -310,12 +391,14 @@ impl<'a> Parser<'a> {
         }
     }
 
-    fn array(&mut self) -> Result<Json, String> {
+    fn array(&mut self) -> Result<Json, JsonError> {
+        self.descend()?;
         self.expect(b'[')?;
         let mut items = Vec::new();
         self.skip_ws();
         if self.peek() == Some(b']') {
             self.i += 1;
+            self.depth -= 1;
             return Ok(Json::Arr(items));
         }
         loop {
@@ -327,19 +410,22 @@ impl<'a> Parser<'a> {
                 }
                 Some(b']') => {
                     self.i += 1;
+                    self.depth -= 1;
                     return Ok(Json::Arr(items));
                 }
-                _ => return Err(format!("expected , or ] at byte {}", self.i)),
+                _ => return Err(self.err("expected , or ]")),
             }
         }
     }
 
-    fn object(&mut self) -> Result<Json, String> {
+    fn object(&mut self) -> Result<Json, JsonError> {
+        self.descend()?;
         self.expect(b'{')?;
         let mut pairs = Vec::new();
         self.skip_ws();
         if self.peek() == Some(b'}') {
             self.i += 1;
+            self.depth -= 1;
             return Ok(Json::Obj(pairs));
         }
         loop {
@@ -356,9 +442,10 @@ impl<'a> Parser<'a> {
                 }
                 Some(b'}') => {
                     self.i += 1;
+                    self.depth -= 1;
                     return Ok(Json::Obj(pairs));
                 }
-                _ => return Err(format!("expected , or }} at byte {}", self.i)),
+                _ => return Err(self.err("expected , or }")),
             }
         }
     }
@@ -521,6 +608,50 @@ mod tests {
         assert!(parse("tru").is_err());
         assert!(parse("1 2").is_err());
         assert!(parse("\"open").is_err());
+    }
+
+    #[test]
+    fn set_on_non_object_recovers_try_set_reports() {
+        let mut v = Json::Int(7);
+        assert_eq!(v.try_set("k", 1i64), Err(JsonError::NotAnObject));
+        assert_eq!(v, Json::Int(7), "try_set must not mutate a non-object");
+        // set() coerces instead of panicking: the server must survive it
+        v.set("k", 1i64);
+        assert_eq!(v.to_string(), "{\"k\":1}");
+        let mut o = Json::obj();
+        o.try_set("a", 1i64).unwrap().try_set("b", 2i64).unwrap();
+        assert_eq!(o.to_string(), "{\"a\":1,\"b\":2}");
+    }
+
+    #[test]
+    fn parse_depth_limit() {
+        let ok = format!("{}{}", "[".repeat(MAX_PARSE_DEPTH), "]".repeat(MAX_PARSE_DEPTH));
+        assert!(parse(&ok).is_ok(), "exactly the limit must parse");
+        let deep = format!("{}{}", "[".repeat(MAX_PARSE_DEPTH + 1), "]".repeat(MAX_PARSE_DEPTH + 1));
+        assert_eq!(parse(&deep), Err(JsonError::TooDeep { limit: MAX_PARSE_DEPTH }));
+        // an unclosed bomb (the stack-blowing shape) errors the same way
+        let bomb = "[".repeat(100_000);
+        assert_eq!(parse(&bomb), Err(JsonError::TooDeep { limit: MAX_PARSE_DEPTH }));
+        // mixed nesting counts both container kinds
+        let mixed = format!("{}1{}", "{\"k\":[".repeat(40), "]}".repeat(40));
+        assert_eq!(parse_with_limits(&mixed, MAX_PARSE_BYTES, 16), Err(JsonError::TooDeep { limit: 16 }));
+    }
+
+    #[test]
+    fn parse_size_limit() {
+        assert_eq!(
+            parse_with_limits("[1,2,3]", 3, MAX_PARSE_DEPTH),
+            Err(JsonError::TooLarge { len: 7, limit: 3 })
+        );
+        assert!(parse_with_limits("[1,2,3]", 7, MAX_PARSE_DEPTH).is_ok());
+    }
+
+    #[test]
+    fn errors_carry_position_and_render() {
+        let err = parse("{\"a\" 1}").unwrap_err();
+        assert!(matches!(err, JsonError::Syntax { .. }));
+        let shown = err.to_string();
+        assert!(shown.contains("byte"), "Display includes the offset: {shown}");
     }
 
     #[test]

@@ -65,7 +65,12 @@ impl ThreadPool {
     }
 
     /// Parallel map: apply `f` to every index in `0..n`, returning results in
-    /// index order. Panics in workers are propagated to the caller.
+    /// index order. A panic in any worker is captured with its original
+    /// payload and re-raised (`resume_unwind`) on the *caller's* thread at
+    /// the scope boundary — so a caller that wraps `scope_map` in
+    /// `catch_unwind` (the coordinator's serving path does) observes the
+    /// real panic instead of a synthetic one, and a poisoned request can be
+    /// answered with an error while the process keeps serving.
     ///
     /// `f` must be `Sync` because all workers share one reference to it.
     pub fn scope_map<T, F>(&self, n: usize, f: F) -> Vec<T>
@@ -79,6 +84,7 @@ impl ThreadPool {
         let results: Vec<Mutex<Option<T>>> = (0..n).map(|_| Mutex::new(None)).collect();
         let next = AtomicUsize::new(0);
         let panicked = AtomicBool::new(false);
+        let payload: Mutex<Option<Box<dyn std::any::Any + Send + 'static>>> = Mutex::new(None);
         // SAFETY-free approach: use std scoped threads are unavailable inside a
         // pool, so we run the work-stealing loop on the *caller* thread plus
         // the pool via raw pointers wrapped in an Arc'd closure would require
@@ -97,7 +103,11 @@ impl ThreadPool {
                     let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(i)));
                     match out {
                         Ok(v) => *results[i].lock().unwrap() = Some(v),
-                        Err(_) => {
+                        Err(p) => {
+                            // keep the first payload; later panics (other
+                            // workers racing past the flag) are dropped
+                            let mut slot = payload.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+                            slot.get_or_insert(p);
                             panicked.store(true, Ordering::Relaxed);
                             break;
                         }
@@ -105,8 +115,8 @@ impl ThreadPool {
                 });
             }
         });
-        if panicked.load(Ordering::Relaxed) {
-            panic!("scope_map: worker panicked");
+        if let Some(p) = payload.into_inner().unwrap_or_else(std::sync::PoisonError::into_inner) {
+            std::panic::resume_unwind(p);
         }
         results
             .into_iter()
@@ -205,8 +215,8 @@ mod tests {
     }
 
     #[test]
-    #[should_panic(expected = "scope_map: worker panicked")]
-    fn scope_map_propagates_panic() {
+    #[should_panic(expected = "boom")]
+    fn scope_map_propagates_original_panic_payload() {
         let pool = ThreadPool::new(2);
         let _ = pool.scope_map(8, |i| {
             if i == 3 {
@@ -214,6 +224,27 @@ mod tests {
             }
             i
         });
+    }
+
+    #[test]
+    fn scope_map_panic_is_catchable_and_pool_survives() {
+        // the serving path wraps scope_map items in catch_unwind; the
+        // resumed payload must be the original one and the pool must keep
+        // working afterwards
+        let pool = ThreadPool::new(2);
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.scope_map(4, |i| {
+                if i == 1 {
+                    panic!("poisoned request");
+                }
+                i
+            })
+        }));
+        let payload = caught.expect_err("panic must propagate");
+        let msg = payload.downcast_ref::<&str>().copied().unwrap_or("");
+        assert_eq!(msg, "poisoned request");
+        let out = pool.scope_map(6, |i| i * 2);
+        assert_eq!(out, vec![0, 2, 4, 6, 8, 10]);
     }
 
     #[test]

@@ -3,6 +3,11 @@
 //! scan-resistant on real coordinator traffic, and the replay driver must
 //! meet the acceptance bar (≥ 80% hit rate over a ≥ 500-request
 //! Zipf+scan trace with the hot set retained across the scan).
+//!
+//! The network-serving tier rides the same contract: concurrent identical
+//! misses single-flight onto one computation, overload sheds with a typed
+//! response instead of hanging, and a panicking request answers an error
+//! while the resident service keeps serving.
 
 use stencilcache::coordinator::{
     Coordinator, JobKind, PlannerConfig, Service, StencilRequest, StencilResponse, StencilSpec, TraversalChoice,
@@ -148,6 +153,137 @@ fn execute_after_analyze_reuses_plan_and_recomputes() {
     assert_eq!(warm.metrics().planned.load(Ordering::Relaxed), 1, "Execute must reuse the cached plan");
     assert_eq!(warm.metrics().native_executions.load(Ordering::Relaxed), 1, "Execute must still run numerics");
     assert_eq!(fingerprint(&warm_exec), fingerprint(&cold_exec));
+}
+
+/// A burst of identical cold Plan requests must run the planner exactly
+/// once: the first caller leads, every other caller either collapses onto
+/// the in-flight computation or hits the memo entry the leader published,
+/// and all of them share one `Arc<Plan>` allocation.
+#[test]
+fn single_flight_collapses_concurrent_plan_misses() {
+    use stencilcache::coordinator::Plan;
+    use std::sync::{Arc, Barrier};
+    let c = Coordinator::analysis_only(PlannerConfig::default());
+    let k = 8;
+    let barrier = Barrier::new(k);
+    let plans: Vec<Arc<Plan>> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..k)
+            .map(|_| {
+                let (c, barrier) = (&c, &barrier);
+                s.spawn(move || {
+                    barrier.wait();
+                    c.submit(&star13(&[40, 40, 40], JobKind::Plan)).unwrap().plan
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    let m = c.metrics();
+    assert_eq!(m.planned.load(Ordering::Relaxed), 1, "k concurrent misses must plan exactly once");
+    assert!(plans.iter().all(|p| Arc::ptr_eq(p, &plans[0])), "all callers must share the leader's Arc<Plan>");
+    let collapsed = m.single_flight_collapsed.load(Ordering::Relaxed);
+    let hits = m.sim_memo_hits.load(Ordering::Relaxed);
+    assert_eq!(collapsed + hits, k as u64 - 1, "every non-leader collapsed onto the flight or hit the memo");
+}
+
+/// Same property for the expensive side: concurrent identical Analyze
+/// misses run the cache simulation once, and every caller receives an
+/// identical report.
+#[test]
+fn single_flight_collapses_concurrent_analysis_misses() {
+    use std::sync::Barrier;
+    let c = Coordinator::analysis_only(PlannerConfig::default());
+    let k = 6;
+    let barrier = Barrier::new(k);
+    let prints: Vec<String> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..k)
+            .map(|_| {
+                let (c, barrier) = (&c, &barrier);
+                s.spawn(move || {
+                    barrier.wait();
+                    fingerprint(&c.submit(&star13(&[36, 36, 36], JobKind::Analyze)).unwrap())
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    let m = c.metrics();
+    assert_eq!(m.analyzed.load(Ordering::Relaxed), 1, "k concurrent misses must simulate exactly once");
+    assert_eq!(m.planned.load(Ordering::Relaxed), 1, "and plan exactly once");
+    assert!(prints.windows(2).all(|w| w[0] == w[1]), "all callers must see the leader's report");
+}
+
+/// Overload behavior over the wire: with the inflight cap at 1, a
+/// pipelined burst gets a mix of `ok` and typed `overloaded` answers —
+/// every line is answered (bounded reads, no hang) — and once the burst
+/// drains the very next request is served normally.
+#[test]
+fn server_sheds_on_overload_answers_every_line_and_recovers() {
+    use stencilcache::coordinator::{Server, ServerConfig};
+    use stencilcache::util::json::{self, Json};
+    use std::io::{BufRead, BufReader, Write};
+    let svc = std::sync::Arc::new(Service::new(PlannerConfig::default()));
+    let cfg = ServerConfig { max_inflight: 1, workers: 4, ..ServerConfig::default() };
+    let mut server = Server::start(svc, cfg).expect("bind loopback");
+    let stream = std::net::TcpStream::connect(server.addr()).expect("connect");
+    stream.set_read_timeout(Some(std::time::Duration::from_secs(120))).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut w = stream;
+    // distinct shapes: responses must come from real dispatch, not memo
+    for i in 0..6u32 {
+        let n = 60 + 2 * i;
+        writeln!(w, "{{\"id\":{i},\"kind\":\"analyze\",\"dims\":[{n},{n},{n}]}}").unwrap();
+    }
+    w.flush().unwrap();
+    let (mut ok, mut overloaded) = (0, 0);
+    for _ in 0..6 {
+        let mut line = String::new();
+        assert!(reader.read_line(&mut line).unwrap() > 0, "server must answer every line, not hang");
+        let v = json::parse(line.trim()).unwrap();
+        if matches!(v.get("ok"), Some(Json::Bool(true))) {
+            ok += 1;
+        } else {
+            assert_eq!(v.get("error").and_then(Json::as_str), Some("overloaded"), "unexpected error in {line}");
+            overloaded += 1;
+        }
+    }
+    assert!(ok >= 1, "the admitted request must complete");
+    assert!(overloaded >= 1, "cap 1 must shed part of a 6-deep pipelined burst");
+    assert!(server.admission().shed_total() >= overloaded as u64);
+    // recovery: the burst is drained, so a fresh request is admitted
+    writeln!(w, "{{\"id\":9,\"kind\":\"plan\",\"dims\":[16,16,16]}}").unwrap();
+    let mut line = String::new();
+    assert!(reader.read_line(&mut line).unwrap() > 0, "server must keep serving after shedding");
+    let v = json::parse(line.trim()).unwrap();
+    assert!(matches!(v.get("ok"), Some(Json::Bool(true))), "post-burst request must succeed: {line}");
+    server.shutdown();
+}
+
+/// Panic containment at the Service layer: a fault-injected request in the
+/// middle of a wave answers `Err` while its neighbors succeed, and the
+/// same resident service keeps serving the next wave.
+#[test]
+fn service_survives_panicking_request_mid_wave() {
+    let svc = Service::new(PlannerConfig::default());
+    svc.submit(star13(&[16, 16, 16], JobKind::Analyze));
+    svc.submit(StencilRequest {
+        dims: vec![4, 4, 4],
+        stencil: StencilSpec::Star { r: 1 },
+        rhs_arrays: 1,
+        kind: JobKind::ChaosPanic,
+    });
+    svc.submit(star13(&[18, 18, 18], JobKind::Analyze));
+    let wave = svc.drain();
+    assert_eq!(wave.len(), 3);
+    assert!(wave[0].1.is_ok());
+    let err = wave[1].1.as_ref().expect_err("fault injection must surface as Err").to_string();
+    assert!(err.contains("panicked"), "error must identify the panic: {err}");
+    assert!(wave[2].1.is_ok(), "the request after the panic must still succeed");
+    // the same resident service serves the next wave normally
+    svc.submit(star13(&[16, 16, 16], JobKind::Analyze));
+    let next = svc.drain();
+    assert_eq!(next.len(), 1);
+    assert!(next[0].1.is_ok());
 }
 
 /// Mixed batched traffic through Service::serve: memoization must not
