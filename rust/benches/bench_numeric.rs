@@ -59,6 +59,39 @@ fn main() {
         q[grid.offset_of(&[2, 2, 2]) as usize]
     });
 
+    // Row-kernel rows (DESIGN.md §2.11): the retained per-point scalar
+    // sweep (`apply_reference`, the bitwise reference) vs the row kernel
+    // that all production paths now run. Without `--features simd` both
+    // execute portable code and the rows measure the array-of-4 layout
+    // alone; with it the rows dispatch to AVX2/FMA, and the third row
+    // adds the planner's software-prefetch distance on top. The speedup
+    // line printed below is the scalar-vs-SIMD acceptance number.
+    let scalar_ns = b
+        .bench_items(&format!("apply_{n}^3_star13/kernel_pointwise_scalar"), points, || {
+            engine::apply_reference(&natural, &grid, &stencil, &u, &mut q);
+            q[grid.offset_of(&[2, 2, 2]) as usize]
+        })
+        .median_ns();
+    let rows_ns = b
+        .bench_items(&format!("apply_{n}^3_star13/kernel_rows_default"), points, || {
+            engine::apply(&natural, &grid, &stencil, &u, &mut q);
+            q[grid.offset_of(&[2, 2, 2]) as usize]
+        })
+        .median_ns();
+    let prefetch = MachineModel::modern().prefetch_distance();
+    let rows_pf_cfg = engine::KernelCfg { strict: false, prefetch };
+    let rows_pf_ns = b
+        .bench_items(&format!("apply_{n}^3_star13/kernel_rows_prefetch{prefetch}"), points, || {
+            engine::apply_cfg(&natural, &grid, &stencil, &u, &mut q, &rows_pf_cfg);
+            q[grid.offset_of(&[2, 2, 2]) as usize]
+        })
+        .median_ns();
+    println!(
+        "kernel speedup vs pointwise scalar: rows {:.2}x, rows+prefetch({prefetch}) {:.2}x",
+        scalar_ns / rows_ns,
+        scalar_ns / rows_pf_ns
+    );
+
     // sharded apply: same natural order fanned out over the pool
     let pool = ThreadPool::with_default_parallelism();
     let shards = pool.workers() * 2;
@@ -170,6 +203,13 @@ fn main() {
     // Geometric halo accounting of the 2×2×2 decomposition: exact,
     // machine-independent, hard-gated — a drift means the shard geometry
     // or the PEM bound changed, never noise.
+    // Words the row kernel touches per interior point (13 operand loads
+    // plus the one store) — exact by construction, so hard-gated: an
+    // increase means the kernel started touching more memory per point.
+    extra.push(model_entry(
+        format!("model/kernel_touched_wpp_{n}^3_star13"),
+        (stencil.size() + 1) as f64,
+    ));
     let g = format!("{}x{}x{}", shard_grid[0], shard_grid[1], shard_grid[2]);
     extra.push(model_entry(format!("model/halo_wpp_{n}^3_star13_grid{g}"), splan.halo_words_per_point()));
     extra.push(model_entry(format!("model/halo_bound_wpp_{n}^3_star13_grid{g}"), splan.pem_halo_bound_per_point()));

@@ -153,6 +153,29 @@ impl LoadProfile {
         }
         cycles
     }
+
+    /// [`LoadProfile::stall_cycles`] with the software-prefetch discount of
+    /// `engine::kernel`'s streaming prefetch: a kernel running with
+    /// `prefetch_distance > 0` issues the operand line `dist` words early,
+    /// hiding up to [`Latency::prefetch`] cycles of each **cold** miss at
+    /// the memory boundary (L2 when present, else L1). Only cold misses
+    /// are discounted — they are the first-touch streaming traffic the
+    /// row-ahead prefetch targets; replacement misses come from reuse the
+    /// traversal failed to keep resident, which a streaming prefetch does
+    /// not help. With `dist == 0` or `lat.prefetch == 0` this is exactly
+    /// [`LoadProfile::stall_cycles`].
+    pub fn stall_cycles_prefetched(&self, lat: Latency, dist: usize) -> u64 {
+        let base = self.stall_cycles(lat);
+        if dist == 0 || lat.prefetch == 0 {
+            return base;
+        }
+        let cold = match (self.get(Level::L1), self.get(Level::L2)) {
+            (_, Some(l2)) => l2.cold_misses,
+            (Some(l1), None) => l1.cold_misses,
+            _ => 0,
+        };
+        base.saturating_sub(cold * lat.prefetch.min(lat.mem))
+    }
 }
 
 /// Miss latencies in cycles for the stall estimate. The numbers are coarse
@@ -166,13 +189,20 @@ pub struct Latency {
     pub mem: u64,
     /// TLB refill (software on MIPS).
     pub tlb: u64,
+    /// Cycles a *timely software prefetch* hides of a memory-serviced cold
+    /// miss (0 = the machine gets nothing from software prefetch, and
+    /// [`LoadProfile::stall_cycles_prefetched`] degenerates to the exact
+    /// [`LoadProfile::stall_cycles`]). Capped at `mem` — a prefetch cannot
+    /// hide more than the full memory trip.
+    pub prefetch: u64,
 }
 
 impl Latency {
     /// R10000 / Origin 2000 ballpark: ~10-cycle L2, ~80-cycle local
-    /// memory, ~50-cycle software TLB refill.
+    /// memory, ~50-cycle software TLB refill. `prefetch` is 0: the paper's
+    /// platform model stays exactly the §2/§7 stall estimate.
     pub fn r10000() -> Latency {
-        Latency { l2: 10, mem: 80, tlb: 50 }
+        Latency { l2: 10, mem: 80, tlb: 50, prefetch: 0 }
     }
 }
 
@@ -293,7 +323,10 @@ impl MachineModel {
             l1: CacheParams::new(12, 64, 8),      // 6144 words = 48 KB
             l2: Some(CacheParams::new(16, 1024, 8)), // 131072 words = 1 MB
             tlb: Some(TlbParams { entries: 1536, page_words: 512 }),
-            latency: Latency { l2: 14, mem: 220, tlb: 30 },
+            // prefetch ≈ 3/4 of the memory trip: modern cores overlap a
+            // timely T0 prefetch with the fold almost entirely, but DRAM
+            // queueing keeps some exposure
+            latency: Latency { l2: 14, mem: 220, tlb: 30, prefetch: 160 },
         }
     }
 
@@ -334,6 +367,23 @@ impl MachineModel {
     /// contend for the same translation reach.
     pub fn page_modulus(&self) -> Option<usize> {
         self.tlb.map(|t| t.span_words())
+    }
+
+    /// The software-prefetch distance (in words ahead of the current
+    /// chunk) the planner hands to `engine::kernel`: enough whole L1
+    /// lines to cover the memory latency at ~2 cycles of fold work per
+    /// streamed word, clamped to [1, 16] lines. Deterministic in the
+    /// descriptor — machines whose [`Latency::prefetch`] is 0 (the paper's
+    /// R10000) get 0, so their kernels issue no prefetch and their stall
+    /// estimate stays exact.
+    pub fn prefetch_distance(&self) -> usize {
+        if self.latency.prefetch == 0 {
+            return 0;
+        }
+        let lw = self.l1.line_words;
+        let per_line = 2 * lw as u64;
+        let lines = (self.latency.mem.div_ceil(per_line) as usize).clamp(1, 16);
+        lines * lw
     }
 
     /// Build the hierarchy simulator for this machine (requires at least
@@ -439,7 +489,7 @@ mod tests {
 
     #[test]
     fn stall_cycles_shapes() {
-        let lat = Latency { l2: 10, mem: 100, tlb: 50 };
+        let lat = Latency { l2: 10, mem: 100, tlb: 50, prefetch: 0 };
         let one = CacheStats { cold_misses: 2, ..CacheStats::default() };
         // single level: misses go straight to memory
         assert_eq!(LoadProfile::single(one).stall_cycles(lat), 200);
@@ -449,6 +499,38 @@ mod tests {
         p.push(Level::L2, CacheStats { replacement_misses: 1, ..CacheStats::default() });
         p.push(Level::Tlb, CacheStats { cold_misses: 3, ..CacheStats::default() });
         assert_eq!(p.stall_cycles(lat), 2 * 10 + 100 + 3 * 50);
+    }
+
+    #[test]
+    fn prefetched_stalls_discount_memory_cold_misses_only() {
+        let lat = Latency { l2: 10, mem: 100, tlb: 50, prefetch: 60 };
+        // single level: 2 cold + 1 replacement miss → 300 cycles base;
+        // prefetch hides 60 of each *cold* miss only
+        let one = CacheStats { cold_misses: 2, replacement_misses: 1, ..CacheStats::default() };
+        let p = LoadProfile::single(one);
+        assert_eq!(p.stall_cycles(lat), 300);
+        assert_eq!(p.stall_cycles_prefetched(lat, 64), 300 - 2 * 60);
+        // distance 0 or prefetch term 0 → exactly the base estimate
+        assert_eq!(p.stall_cycles_prefetched(lat, 0), 300);
+        let dead = Latency { prefetch: 0, ..lat };
+        assert_eq!(p.stall_cycles_prefetched(dead, 64), 300);
+        // hierarchical: only the L2's (memory-boundary) cold misses count
+        let mut h = LoadProfile::default();
+        h.push(Level::L1, CacheStats { cold_misses: 5, ..CacheStats::default() });
+        h.push(Level::L2, CacheStats { cold_misses: 3, replacement_misses: 2, ..CacheStats::default() });
+        assert_eq!(h.stall_cycles_prefetched(lat, 64), h.stall_cycles(lat) - 3 * 60);
+        // the discount is capped at the full memory trip
+        let wild = Latency { prefetch: 10_000, ..lat };
+        assert_eq!(p.stall_cycles_prefetched(wild, 64), 300 - 2 * 100);
+    }
+
+    #[test]
+    fn prefetch_distance_is_deterministic_per_preset() {
+        // r10000: prefetch term 0 → no distance, stall estimate exact
+        assert_eq!(MachineModel::r10000().prefetch_distance(), 0);
+        assert_eq!(MachineModel::r10000_full().prefetch_distance(), 0);
+        // modern: ceil(220 / (2·8)) = 14 lines of 8 words
+        assert_eq!(MachineModel::modern().prefetch_distance(), 14 * 8);
     }
 
     #[test]

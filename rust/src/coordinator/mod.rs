@@ -648,7 +648,13 @@ impl Coordinator {
         };
         let backend: Box<dyn NumericBackend + '_> = match pjrt {
             Some(rt) => Box::new(PjrtBackend::new(rt)),
-            None => Box::new(NativeBackend::new(&self.pool)),
+            // native sweeps run the row kernel with the plan's prefetch
+            // distance (0 on machines whose latency model has no prefetch
+            // term — then the kernel issues no prefetch at all)
+            None => Box::new(NativeBackend::with_kernel(
+                &self.pool,
+                engine::KernelCfg { strict: false, prefetch: plan.prefetch_distance },
+            )),
         };
         // Temporal traversal for native Solve jobs (DESIGN.md §2.6): tile
         // depth and shape from the plan. With k = 1 the *fused* single-pass
@@ -709,9 +715,9 @@ impl Coordinator {
     /// blocks that communicate only through typed `HaloMsg`s; out-of-core
     /// plans stream the blocks through disk tiles under the configured RAM
     /// budget. Results are bitwise-identical to the classic native Solve
-    /// for star stencils — each interior point folds the same coefficients
-    /// over the same operand values in the same order
-    /// (`engine::fold_point`), and only the norm reductions re-associate.
+    /// for star stencils — each interior row runs the same
+    /// `engine::kernel::update_row` (same `KernelCfg`) over the same
+    /// operand values, and only the norm reductions re-associate.
     fn run_decomposed_solve(
         &self,
         req: &StencilRequest,
@@ -730,7 +736,10 @@ impl Coordinator {
         } else {
             crate::shard::ShardStorage::InMemory
         };
-        let backend = NativeBackend::new(&self.pool);
+        let backend = NativeBackend::with_kernel(
+            &self.pool,
+            engine::KernelCfg { strict: false, prefetch: plan.prefetch_distance },
+        );
         let job = NumericJob {
             dims: &req.dims,
             grid: &grid,

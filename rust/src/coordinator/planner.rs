@@ -82,6 +82,11 @@ pub struct Plan {
     /// the coordinator must stream shard blocks from disk tiles instead of
     /// holding both fields resident.
     pub out_of_core: bool,
+    /// Software-prefetch distance (words ahead) the native row kernel
+    /// should run with: the config override when given, else
+    /// `MachineModel::prefetch_distance()` (0 on machines whose latency
+    /// model has no prefetch term, e.g. the paper's R10000).
+    pub prefetch_distance: usize,
 }
 
 /// Planner configuration.
@@ -104,6 +109,9 @@ pub struct PlannerConfig {
     /// exceeds it the solve runs out-of-core (disk tiles, bounded
     /// concurrency). `None` = unbounded, fully in memory.
     pub ram_budget_words: Option<u64>,
+    /// Override for the kernel's software-prefetch distance in words
+    /// (CLI `--prefetch-distance`); `None` lets the machine model choose.
+    pub prefetch_distance: Option<usize>,
 }
 
 impl Default for PlannerConfig {
@@ -114,6 +122,7 @@ impl Default for PlannerConfig {
             auto_pad: true,
             shard_grid: None,
             ram_budget_words: None,
+            prefetch_distance: None,
         }
     }
 }
@@ -370,6 +379,7 @@ pub fn plan(config: &PlannerConfig, dims: &[usize], stencil: &Stencil, p: usize)
         time_tile_dims,
         shard_grid,
         out_of_core,
+        prefetch_distance: config.prefetch_distance.unwrap_or_else(|| config.machine.prefetch_distance()),
     }
 }
 

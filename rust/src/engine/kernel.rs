@@ -1,0 +1,576 @@
+//! The one vectorized inner kernel behind every native sweep.
+//!
+//! Before this module, each consumer of the engine carried its own copy of
+//! the innermost loop: `apply_pencils` folded point-by-point, `tile_line`
+//! fused the axpy and norms by hand, and `shard::step_shard` had a third
+//! transliteration. They were kept bitwise-locked only by discipline. Now
+//! there is exactly one definition of "fold the stencil over a row":
+//!
+//! - [`fold_point`] — the scalar reference. One point, coefficients in
+//!   declaration order, `acc += c * u[base + delta]`. This is the bitwise
+//!   ground truth every other path is measured against.
+//! - [`fold_row`] / [`update_row`] — the row kernels. A *row* is a maximal
+//!   dim-0-contiguous run of interior points (dim-0 stride is 1 by layout,
+//!   so the `n` outputs are adjacent words). Rows come from
+//!   [`Traversal::stream_rows`](crate::traversal::Traversal::stream_rows).
+//! - [`sum_sq`] — the shared reduction used by field norms.
+//!
+//! ## Why lanes-across-points is bitwise-safe
+//!
+//! The portable path processes four *consecutive points* per step and
+//! iterates coefficients sequentially, exactly like the scalar fold:
+//!
+//! ```text
+//! for (c, delta) in stencil:          # same outer loop as fold_point
+//!     for lane in 0..4:               # acc[l] += c * u[idx + delta + l]
+//! ```
+//!
+//! Each lane therefore performs the *same IEEE-754 operations in the same
+//! order* as [`fold_point`] would for that point — no horizontal add, no
+//! reassociation — so the portable kernel is **bitwise identical** to the
+//! scalar reference (property-tested in `tests/kernel.rs`). The array-of-4
+//! body is written so the autovectorizer cannot miss it even without the
+//! `simd` feature.
+//!
+//! ## The `simd` feature and the reassociation tolerance
+//!
+//! With `--features simd` on x86_64, rows dispatch at runtime (AVX2+FMA
+//! detection) to an explicit `std::arch` path using `_mm256_fmadd_pd`.
+//! FMA skips the intermediate rounding of `c * u + acc`, so results differ
+//! from the scalar reference by accumulated rounding only: the documented
+//! tolerance is **≤ 1e-12 relative** for the stencils and fields this repo
+//! sweeps (|coeffs| ≤ 13, well-scaled operands). Setting
+//! [`KernelCfg::strict`] forces the portable path back to bitwise.
+//!
+//! Within a build, all four consumers share whichever path is active, and
+//! the FMA path keeps a point's value independent of its position in a row
+//! (the remainder tail uses `f64::mul_add`, the scalar spelling of the
+//! same fused operation) — so sequential/sharded/temporal/out-of-core
+//! sweeps remain *mutually* bitwise identical even in fast mode. Norm
+//! accumulations ([`update_row`]'s `u2`/`r2`) are always extracted
+//! lane-by-lane in increasing-j scalar order for the same reason.
+//!
+//! ## Software prefetch
+//!
+//! [`KernelCfg::prefetch`] is a distance in *words*: each 4-point chunk
+//! issues one `_mm_prefetch(T0)` for the operand line `prefetch` words
+//! ahead of the chunk base, hiding the memory latency of streaming rows
+//! behind the fold arithmetic (see `cache::Latency::prefetch` for the
+//! model side). The planner picks the distance from the `MachineModel`
+//! (`MachineModel::prefetch_distance`); 0 disables. Prefetch is a hint —
+//! it never changes results — and compiles out entirely without the
+//! `simd` feature.
+
+/// Number of points a vector chunk covers. Fixed at 4 (one AVX2 `__m256d`);
+/// the portable path uses the same width so chunk boundaries — and thus
+/// remainder handling — are identical across paths.
+pub const LANES: usize = 4;
+
+/// Kernel execution knobs, chosen by the planner and threaded through
+/// every native consumer (`NativeBackend`, the temporal tiler, the
+/// shard/halo block solver).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct KernelCfg {
+    /// Force the portable lane-per-point path, which is bitwise identical
+    /// to the scalar [`fold_point`] reference. With the `simd` feature off
+    /// this is the only path, so every build without `simd` is strict by
+    /// construction.
+    pub strict: bool,
+    /// Software-prefetch distance in words ahead of the current chunk
+    /// (0 = no prefetch). Planner-chosen via
+    /// `MachineModel::prefetch_distance`; only takes effect on x86_64
+    /// builds with the `simd` feature.
+    pub prefetch: usize,
+}
+
+impl Default for KernelCfg {
+    fn default() -> KernelCfg {
+        KernelCfg { strict: false, prefetch: 0 }
+    }
+}
+
+impl KernelCfg {
+    /// Bitwise mode: portable path regardless of build features.
+    pub fn strict() -> KernelCfg {
+        KernelCfg { strict: true, prefetch: 0 }
+    }
+
+    /// True when this config resolves to the explicit AVX2+FMA path on
+    /// the running machine (always false without the `simd` feature).
+    pub fn uses_fma(&self) -> bool {
+        #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+        {
+            if !self.strict
+                && std::arch::is_x86_feature_detected!("avx2")
+                && std::arch::is_x86_feature_detected!("fma")
+            {
+                return true;
+            }
+        }
+        false
+    }
+}
+
+/// Fold the stencil at one point: `Σ coeffs[i] * u[base + deltas[i]]`,
+/// accumulated in declaration order. This is the scalar **bitwise
+/// reference** for every vector path (it is the pre-kernel
+/// `engine::fold_point`, unchanged).
+#[inline(always)]
+pub(crate) fn fold_point(coeffs: &[f64], deltas: &[i64], u: &[f64], base: i64) -> f64 {
+    let mut acc = 0.0;
+    for (&c, &dl) in coeffs.iter().zip(deltas) {
+        acc += c * u[(base + dl) as usize];
+    }
+    acc
+}
+
+/// Compute `out[j] = (K u)[base + j]` for a dim-0-contiguous row of
+/// `out.len()` points. Portable path is bitwise identical to calling
+/// [`fold_point`] per point; the `simd` fast path matches to ≤ 1e-12
+/// relative (see module docs).
+pub fn fold_row(coeffs: &[f64], deltas: &[i64], u: &[f64], base: i64, out: &mut [f64], cfg: &KernelCfg) {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if cfg.uses_fma() {
+        // SAFETY: AVX2+FMA presence was just verified at runtime.
+        unsafe { fma::fold_row(coeffs, deltas, u, base, out, cfg.prefetch) };
+        return;
+    }
+    fold_row_portable(coeffs, deltas, u, base, out, cfg.prefetch);
+}
+
+/// Fused single-step update over one dim-0-contiguous row of `n` points:
+/// for every `j in 0..n` write `out[j] = src[sbase + j] + alpha * q_j`
+/// (where `q_j` is the stencil fold at `sbase + j`), and accumulate
+/// `acc.0 += v²`, `acc.1 += q²` **only** over `j in lo..hi` — the
+/// sub-range of the row that lands in the caller's owned output region
+/// (temporal tiles fold a halo-deep super-box but count norms only for
+/// owned points).
+///
+/// Norms accumulate into the caller's *running* sums in strictly
+/// increasing-`j` scalar order (lanes extracted after each chunk), so on
+/// the portable path the add sequence — and therefore the result — is
+/// bitwise identical to the scalar loop this replaces; on the FMA path
+/// it stays *mutually* identical across sequential/sharded/temporal/
+/// out-of-core consumers. `tests/shard.rs` pins the block-decomposed
+/// solve's norms exactly against a flat scalar reference through this
+/// property.
+///
+/// # Safety
+/// `out` must be valid for `n` consecutive `f64` writes and must not
+/// alias `src`. `lo <= hi <= n`, and every fold stays inside `src`
+/// (callers pass interior rows).
+#[allow(clippy::too_many_arguments)]
+pub unsafe fn update_row(
+    coeffs: &[f64],
+    deltas: &[i64],
+    src: &[f64],
+    sbase: i64,
+    alpha: f64,
+    n: usize,
+    lo: usize,
+    hi: usize,
+    out: *mut f64,
+    acc: &mut (f64, f64),
+    cfg: &KernelCfg,
+) {
+    debug_assert!(lo <= hi && hi <= n);
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if cfg.uses_fma() {
+        // SAFETY: AVX2+FMA presence was just verified at runtime; caller
+        // upholds the pointer contract.
+        return fma::update_row(coeffs, deltas, src, sbase, alpha, n, lo, hi, out, acc, cfg.prefetch);
+    }
+    let (u2, r2) = (&mut acc.0, &mut acc.1);
+    seg_portable(coeffs, deltas, src, sbase, alpha, 0, lo, out, None, cfg.prefetch);
+    seg_portable(coeffs, deltas, src, sbase, alpha, lo, hi, out, Some((u2, r2)), cfg.prefetch);
+    seg_portable(coeffs, deltas, src, sbase, alpha, hi, n, out, None, cfg.prefetch);
+}
+
+/// Σ v² over a slice — the one shared vector reduction for field norms
+/// (`shard::field::ShardedField::norm_sq` and friends). Four independent
+/// accumulators (reassociated relative to a left-to-right scalar sum, as
+/// any vector reduction must be); remainder elements join the combined
+/// sum through the same final accumulator. Callers that need
+/// bitwise-stable norms against the scalar path (solve residuals) use
+/// [`update_row`]'s j-ordered accumulation instead.
+pub fn sum_sq(v: &[f64]) -> f64 {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if std::arch::is_x86_feature_detected!("avx2") && std::arch::is_x86_feature_detected!("fma") {
+        // SAFETY: AVX2+FMA presence was just verified at runtime.
+        return unsafe { fma::sum_sq(v) };
+    }
+    sum_sq_portable(v)
+}
+
+// ---------------------------------------------------------------------
+// portable path (the bitwise one; also the autovectorizer target)
+// ---------------------------------------------------------------------
+
+/// Fold LANES consecutive points starting at linear index `idx`.
+/// Lane `l` performs exactly the operations of `fold_point(.., idx + l)`
+/// in the same order, so the result is bitwise identical per lane.
+#[inline(always)]
+fn fold4_portable(coeffs: &[f64], deltas: &[i64], u: &[f64], idx: usize) -> [f64; LANES] {
+    let mut acc = [0.0f64; LANES];
+    for (&c, &dl) in coeffs.iter().zip(deltas) {
+        let s = (idx as i64 + dl) as usize;
+        let w = &u[s..s + LANES];
+        for (a, &wv) in acc.iter_mut().zip(w) {
+            *a += c * wv;
+        }
+    }
+    acc
+}
+
+#[inline(always)]
+fn fold_row_portable(coeffs: &[f64], deltas: &[i64], u: &[f64], base: i64, out: &mut [f64], dist: usize) {
+    let n = out.len();
+    let mut j = 0;
+    while j + LANES <= n {
+        let idx = (base + j as i64) as usize;
+        prefetch_ahead(u, idx, dist);
+        out[j..j + LANES].copy_from_slice(&fold4_portable(coeffs, deltas, u, idx));
+        j += LANES;
+    }
+    while j < n {
+        out[j] = fold_point(coeffs, deltas, u, base + j as i64);
+        j += 1;
+    }
+}
+
+/// One segment of a fused row update: fold+axpy+write `j0..j1`, with
+/// optional (u2, r2) accumulation in increasing-j order.
+#[inline(always)]
+unsafe fn seg_portable(
+    coeffs: &[f64],
+    deltas: &[i64],
+    src: &[f64],
+    sbase: i64,
+    alpha: f64,
+    j0: usize,
+    j1: usize,
+    out: *mut f64,
+    mut norms: Option<(&mut f64, &mut f64)>,
+    dist: usize,
+) {
+    let mut j = j0;
+    while j + LANES <= j1 {
+        let idx = (sbase + j as i64) as usize;
+        prefetch_ahead(src, idx, dist);
+        let q = fold4_portable(coeffs, deltas, src, idx);
+        let w = &src[idx..idx + LANES];
+        let mut v = [0.0f64; LANES];
+        for l in 0..LANES {
+            v[l] = w[l] + alpha * q[l];
+            out.add(j + l).write(v[l]);
+        }
+        if let Some((u2, r2)) = norms.as_mut() {
+            // lane extraction in increasing-j order keeps the norm sums
+            // bitwise equal to the scalar loop
+            for l in 0..LANES {
+                **u2 += v[l] * v[l];
+                **r2 += q[l] * q[l];
+            }
+        }
+        j += LANES;
+    }
+    while j < j1 {
+        let q = fold_point(coeffs, deltas, src, sbase + j as i64);
+        let v = src[(sbase + j as i64) as usize] + alpha * q;
+        out.add(j).write(v);
+        if let Some((u2, r2)) = norms.as_mut() {
+            **u2 += v * v;
+            **r2 += q * q;
+        }
+        j += 1;
+    }
+}
+
+#[inline(always)]
+fn sum_sq_portable(v: &[f64]) -> f64 {
+    let mut acc = [0.0f64; LANES];
+    let mut chunks = v.chunks_exact(LANES);
+    for c in chunks.by_ref() {
+        for (a, &x) in acc.iter_mut().zip(c) {
+            *a += x * x;
+        }
+    }
+    let mut s = (acc[0] + acc[1]) + (acc[2] + acc[3]);
+    for &x in chunks.remainder() {
+        s += x * x;
+    }
+    s
+}
+
+/// Issue a T0 prefetch for the operand `dist` words ahead of `idx`
+/// (clamped into the slice so the pointer arithmetic stays in-bounds; the
+/// instruction itself cannot fault). Compiles to nothing without the
+/// `simd` feature or off x86_64.
+#[inline(always)]
+fn prefetch_ahead(u: &[f64], idx: usize, dist: usize) {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if dist > 0 {
+        use std::arch::x86_64::{_mm_prefetch, _MM_HINT_T0};
+        let p = (idx + dist).min(u.len() - 1);
+        // SAFETY: p < u.len(), so the pointer is inside the allocation.
+        unsafe { _mm_prefetch::<_MM_HINT_T0>(u.as_ptr().add(p) as *const i8) };
+    }
+    #[cfg(not(all(feature = "simd", target_arch = "x86_64")))]
+    {
+        let _ = (u, idx, dist);
+    }
+}
+
+// ---------------------------------------------------------------------
+// explicit AVX2 + FMA path (behind the `simd` feature, runtime-detected)
+// ---------------------------------------------------------------------
+
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+mod fma {
+    use super::{prefetch_ahead, LANES};
+    use std::arch::x86_64::*;
+
+    /// Scalar fold with fused multiply-add — the tail companion of
+    /// [`fold4`]. `mul_add` is the same correctly-rounded operation as
+    /// `vfmadd`, so a point's value does not depend on whether it fell in
+    /// a vector chunk or the remainder (position-independence is what
+    /// keeps decomposed-vs-classic fields bitwise equal under `simd`).
+    #[inline(always)]
+    fn fold_point_fma(coeffs: &[f64], deltas: &[i64], u: &[f64], base: i64) -> f64 {
+        let mut acc = 0.0f64;
+        for (&c, &dl) in coeffs.iter().zip(deltas) {
+            acc = c.mul_add(u[(base + dl) as usize], acc);
+        }
+        acc
+    }
+
+    /// Fold LANES consecutive points with one fmadd per coefficient.
+    ///
+    /// # Safety
+    /// Caller verified AVX2+FMA; `idx + delta .. + LANES` stays in `u`.
+    #[inline]
+    #[target_feature(enable = "avx2", enable = "fma")]
+    unsafe fn fold4(coeffs: &[f64], deltas: &[i64], u: &[f64], idx: usize) -> __m256d {
+        let mut acc = _mm256_setzero_pd();
+        for (&c, &dl) in coeffs.iter().zip(deltas) {
+            let w = _mm256_loadu_pd(u.as_ptr().add((idx as i64 + dl) as usize));
+            acc = _mm256_fmadd_pd(_mm256_set1_pd(c), w, acc);
+        }
+        acc
+    }
+
+    /// # Safety
+    /// Caller verified AVX2+FMA at runtime.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn fold_row(coeffs: &[f64], deltas: &[i64], u: &[f64], base: i64, out: &mut [f64], dist: usize) {
+        let n = out.len();
+        let mut j = 0;
+        while j + LANES <= n {
+            let idx = (base + j as i64) as usize;
+            prefetch_ahead(u, idx, dist);
+            _mm256_storeu_pd(out.as_mut_ptr().add(j), fold4(coeffs, deltas, u, idx));
+            j += LANES;
+        }
+        while j < n {
+            out[j] = fold_point_fma(coeffs, deltas, u, base + j as i64);
+            j += 1;
+        }
+    }
+
+    /// # Safety
+    /// Caller verified AVX2+FMA and upholds [`super::update_row`]'s
+    /// pointer contract.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    #[allow(clippy::too_many_arguments)]
+    pub unsafe fn update_row(
+        coeffs: &[f64],
+        deltas: &[i64],
+        src: &[f64],
+        sbase: i64,
+        alpha: f64,
+        n: usize,
+        lo: usize,
+        hi: usize,
+        out: *mut f64,
+        acc: &mut (f64, f64),
+        dist: usize,
+    ) {
+        let (u2, r2) = (&mut acc.0, &mut acc.1);
+        seg(coeffs, deltas, src, sbase, alpha, 0, lo, out, None, dist);
+        seg(coeffs, deltas, src, sbase, alpha, lo, hi, out, Some((u2, r2)), dist);
+        seg(coeffs, deltas, src, sbase, alpha, hi, n, out, None, dist);
+    }
+
+    #[inline]
+    #[target_feature(enable = "avx2", enable = "fma")]
+    #[allow(clippy::too_many_arguments)]
+    unsafe fn seg(
+        coeffs: &[f64],
+        deltas: &[i64],
+        src: &[f64],
+        sbase: i64,
+        alpha: f64,
+        j0: usize,
+        j1: usize,
+        out: *mut f64,
+        mut norms: Option<(&mut f64, &mut f64)>,
+        dist: usize,
+    ) {
+        let va = _mm256_set1_pd(alpha);
+        let mut j = j0;
+        while j + LANES <= j1 {
+            let idx = (sbase + j as i64) as usize;
+            prefetch_ahead(src, idx, dist);
+            let q = fold4(coeffs, deltas, src, idx);
+            let w = _mm256_loadu_pd(src.as_ptr().add(idx));
+            let v = _mm256_fmadd_pd(va, q, w);
+            _mm256_storeu_pd(out.add(j), v);
+            if let Some((u2, r2)) = norms.as_mut() {
+                let mut vl = [0.0f64; LANES];
+                let mut ql = [0.0f64; LANES];
+                _mm256_storeu_pd(vl.as_mut_ptr(), v);
+                _mm256_storeu_pd(ql.as_mut_ptr(), q);
+                // increasing-j scalar extraction: keeps norms identical
+                // across sequential/sharded/temporal/out-of-core paths
+                for l in 0..LANES {
+                    **u2 += vl[l] * vl[l];
+                    **r2 += ql[l] * ql[l];
+                }
+            }
+            j += LANES;
+        }
+        while j < j1 {
+            let q = fold_point_fma(coeffs, deltas, src, sbase + j as i64);
+            let v = alpha.mul_add(q, src[(sbase + j as i64) as usize]);
+            out.add(j).write(v);
+            if let Some((u2, r2)) = norms.as_mut() {
+                **u2 += v * v;
+                **r2 += q * q;
+            }
+            j += 1;
+        }
+    }
+
+    /// # Safety
+    /// Caller verified AVX2+FMA at runtime.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn sum_sq(v: &[f64]) -> f64 {
+        let mut acc = _mm256_setzero_pd();
+        let mut chunks = v.chunks_exact(LANES);
+        for c in chunks.by_ref() {
+            let x = _mm256_loadu_pd(c.as_ptr());
+            acc = _mm256_fmadd_pd(x, x, acc);
+        }
+        let mut lanes = [0.0f64; LANES];
+        _mm256_storeu_pd(lanes.as_mut_ptr(), acc);
+        let mut s = (lanes[0] + lanes[1]) + (lanes[2] + lanes[3]);
+        for &x in chunks.remainder() {
+            s = x.mul_add(x, s);
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// star-5-like 1-D operand layout: deltas within ±2 of the base.
+    fn fixture(n: usize) -> (Vec<f64>, Vec<f64>, Vec<i64>) {
+        let u: Vec<f64> = (0..n).map(|i| ((i * 37 + 11) % 101) as f64 * 0.125 - 6.0).collect();
+        let coeffs = vec![-4.25, 1.0, 1.5, 0.5, 0.75];
+        let deltas = vec![0, -1, 1, -2, 2];
+        (u, coeffs, deltas)
+    }
+
+    #[test]
+    fn portable_fold_row_is_bitwise_equal_to_fold_point() {
+        let (u, coeffs, deltas) = fixture(64);
+        let cfg = KernelCfg::strict();
+        // every base alignment and every remainder length 0..8
+        for base in 2..10i64 {
+            for n in 0..=9usize {
+                let mut out = vec![0.0; n];
+                fold_row(&coeffs, &deltas, &u, base, &mut out, &cfg);
+                for (j, &q) in out.iter().enumerate() {
+                    let want = fold_point(&coeffs, &deltas, &u, base + j as i64);
+                    assert_eq!(q.to_bits(), want.to_bits(), "base={base} n={n} j={j}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn update_row_matches_scalar_fused_loop_bitwise_on_portable_path() {
+        let (u, coeffs, deltas) = fixture(64);
+        let cfg = KernelCfg { strict: true, prefetch: 8 };
+        let alpha = 0.037;
+        let (n, sbase) = (23usize, 3i64);
+        // seed the accumulators nonzero: update_row must *continue* the
+        // caller's running sums (shard sweeps depend on this), not reset
+        let mut acc = (0.25, 0.5);
+        let (mut wu2, mut wr2) = (0.25, 0.5);
+        for (lo, hi) in [(0usize, 23usize), (2, 21), (5, 5), (0, 0), (7, 23)] {
+            let mut out = vec![0.0; n];
+            unsafe { update_row(&coeffs, &deltas, &u, sbase, alpha, n, lo, hi, out.as_mut_ptr(), &mut acc, &cfg) };
+            // scalar reference, exactly the pre-kernel tile_line shape
+            let mut want = vec![0.0; n];
+            for (j, w) in want.iter_mut().enumerate() {
+                let q = fold_point(&coeffs, &deltas, &u, sbase + j as i64);
+                let v = u[(sbase + j as i64) as usize] + alpha * q;
+                *w = v;
+                if (lo..hi).contains(&j) {
+                    wu2 += v * v;
+                    wr2 += q * q;
+                }
+            }
+            for j in 0..n {
+                assert_eq!(out[j].to_bits(), want[j].to_bits(), "lo={lo} hi={hi} j={j}");
+            }
+            assert_eq!(acc.0.to_bits(), wu2.to_bits(), "u2 lo={lo} hi={hi}");
+            assert_eq!(acc.1.to_bits(), wr2.to_bits(), "r2 lo={lo} hi={hi}");
+        }
+    }
+
+    #[test]
+    fn default_mode_matches_strict_within_reassociation_tolerance() {
+        // On non-simd builds default == strict (bitwise); under `simd`
+        // the FMA path must stay within the documented 1e-12.
+        let (u, coeffs, deltas) = fixture(80);
+        let fast = KernelCfg::default();
+        let mut out_fast = vec![0.0; 31];
+        let mut out_ref = vec![0.0; 31];
+        fold_row(&coeffs, &deltas, &u, 4, &mut out_fast, &fast);
+        fold_row(&coeffs, &deltas, &u, 4, &mut out_ref, &KernelCfg::strict());
+        for (a, b) in out_fast.iter().zip(&out_ref) {
+            let tol = 1e-12 * b.abs().max(1.0);
+            assert!((a - b).abs() <= tol, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn sum_sq_matches_scalar_sum_within_tolerance() {
+        let (u, _, _) = fixture(1003);
+        for n in [0usize, 1, 3, 4, 5, 8, 17, 1003] {
+            let s = sum_sq(&u[..n]);
+            let want: f64 = u[..n].iter().map(|v| v * v).sum();
+            let tol = 1e-12 * want.abs().max(1.0);
+            assert!((s - want).abs() <= tol, "n={n}: {s} vs {want}");
+        }
+    }
+
+    #[test]
+    fn prefetch_distance_never_changes_results() {
+        let (u, coeffs, deltas) = fixture(64);
+        let mut base_out = vec![0.0; 40];
+        fold_row(&coeffs, &deltas, &u, 8, &mut base_out, &KernelCfg::default());
+        for dist in [1usize, 7, 64, 100_000] {
+            let cfg = KernelCfg { strict: false, prefetch: dist };
+            let mut out = vec![0.0; 40];
+            fold_row(&coeffs, &deltas, &u, 8, &mut out, &cfg);
+            for (a, b) in out.iter().zip(&base_out) {
+                assert_eq!(a.to_bits(), b.to_bits(), "dist={dist}");
+            }
+        }
+    }
+}

@@ -15,12 +15,22 @@
 //! [`crate::traversal::Order`] still works everywhere — it is itself a
 //! (single-pencil) `Traversal`. [`simulate_sharded`] splits the stream's
 //! pencils into disjoint ranges and fans them out across a worker pool.
+//!
+//! Numeric-mode inner loops all live in [`kernel`]: one vectorized row
+//! fold (portable 4-lane, optional AVX2/FMA behind the `simd` feature,
+//! planner-chosen software prefetch) shared by the sequential, sharded,
+//! time-tiled and block-decomposed paths, with the scalar
+//! `kernel::fold_point` kept as the bitwise reference.
+
+pub mod kernel;
 
 use crate::cache::{CacheSim, CacheStats, LoadProfile, MachineModel, MemoryModel};
 use crate::grid::{GridDesc, MultiArrayLayout};
 use crate::stencil::Stencil;
 use crate::traversal::{shard_ranges, TemporalTraversal, Traversal, MAX_STREAM_DIMS};
 use crate::util::threadpool::ThreadPool;
+pub use kernel::KernelCfg;
+pub(crate) use kernel::fold_point;
 use std::ops::Range;
 
 /// Result of an analysis-mode run.
@@ -234,10 +244,23 @@ where
 
 /// Numeric mode: compute `q(x) = Σ c_i·u(x + k_i)` over the traversal, for
 /// a single RHS array. Buffers are sized by `grid.storage_words()`. The
-/// stream is consumed allocation-free: per point the engine does address
-/// arithmetic and the |K| multiply-adds, nothing else.
+/// stream is consumed allocation-free, row-at-a-time through the one
+/// vectorized [`kernel`] (default [`KernelCfg`]: fast mode, no prefetch —
+/// bitwise identical to the scalar reference on builds without `simd`).
 pub fn apply<T: Traversal + ?Sized>(traversal: &T, grid: &GridDesc, stencil: &Stencil, u: &[f64], q: &mut [f64]) {
-    apply_pencils(traversal, 0..traversal.num_pencils(), grid, stencil, u, q)
+    apply_cfg(traversal, grid, stencil, u, q, &KernelCfg::default())
+}
+
+/// [`apply`] with explicit kernel knobs (strict mode, prefetch distance).
+pub fn apply_cfg<T: Traversal + ?Sized>(
+    traversal: &T,
+    grid: &GridDesc,
+    stencil: &Stencil,
+    u: &[f64],
+    q: &mut [f64],
+    cfg: &KernelCfg,
+) {
+    apply_pencils_cfg(traversal, 0..traversal.num_pencils(), grid, stencil, u, q, cfg)
 }
 
 /// Buffer/arity validation shared by the numeric entry points.
@@ -249,17 +272,25 @@ fn check_numeric_args<T: Traversal + ?Sized>(traversal: &T, grid: &GridDesc, ste
     assert!(q.len() as u64 >= grid.storage_words(), "q buffer too small");
 }
 
-/// The per-point stencil fold — the ONE definition shared by the
-/// sequential and sharded apply loops *and* the block-decomposed solve in
-/// [`crate::shard`], so the documented bitwise equality between all of
-/// them can never drift apart.
-#[inline(always)]
-pub(crate) fn fold_point(coeffs: &[f64], deltas: &[i64], u: &[f64], base: i64) -> f64 {
-    let mut acc = 0.0;
-    for (&c, &dl) in coeffs.iter().zip(deltas) {
-        acc += c * u[(base + dl) as usize];
-    }
-    acc
+/// The pre-kernel per-point sweep: streams *points* (not rows) and folds
+/// each through the scalar [`kernel::fold_point`] reference. Kept as the
+/// bitwise ground truth for the kernel property tests and as the scalar
+/// baseline row in `bench_numeric` — production callers use [`apply`],
+/// which routes rows through the vector kernel.
+pub fn apply_reference<T: Traversal + ?Sized>(
+    traversal: &T,
+    grid: &GridDesc,
+    stencil: &Stencil,
+    u: &[f64],
+    q: &mut [f64],
+) {
+    check_numeric_args(traversal, grid, stencil, u, q);
+    let deltas: Vec<i64> = stencil.offsets().iter().map(|o| grid.delta_of(o)).collect();
+    let coeffs = stencil.coeffs();
+    traversal.stream_pencils(0..traversal.num_pencils(), &mut |x| {
+        let base = grid.offset_of(x) as i64;
+        q[base as usize] = fold_point(coeffs, &deltas, u, base);
+    });
 }
 
 /// [`apply`] restricted to a pencil range of the traversal — the shard body
@@ -273,12 +304,30 @@ pub fn apply_pencils<T: Traversal + ?Sized>(
     u: &[f64],
     q: &mut [f64],
 ) {
+    apply_pencils_cfg(traversal, pencils, grid, stencil, u, q, &KernelCfg::default())
+}
+
+/// [`apply_pencils`] with explicit kernel knobs. The traversal is consumed
+/// as **rows** ([`Traversal::stream_rows`]): each maximal dim-0-contiguous
+/// run is folded by one [`kernel::fold_row`] call, which is where the
+/// 4-lane vectorization and software prefetch live. Traversals without
+/// row structure degrade to 1-long rows — same results, scalar speed.
+pub fn apply_pencils_cfg<T: Traversal + ?Sized>(
+    traversal: &T,
+    pencils: Range<usize>,
+    grid: &GridDesc,
+    stencil: &Stencil,
+    u: &[f64],
+    q: &mut [f64],
+    cfg: &KernelCfg,
+) {
     check_numeric_args(traversal, grid, stencil, u, q);
     let deltas: Vec<i64> = stencil.offsets().iter().map(|o| grid.delta_of(o)).collect();
     let coeffs = stencil.coeffs();
-    traversal.stream_pencils(pencils, &mut |x| {
+    traversal.stream_rows(pencils, &mut |x, n| {
         let base = grid.offset_of(x) as i64;
-        q[base as usize] = fold_point(coeffs, &deltas, u, base);
+        let b = base as usize;
+        kernel::fold_row(coeffs, &deltas, u, base, &mut q[b..b + n], cfg);
     });
 }
 
@@ -290,9 +339,10 @@ pub fn apply_pencils<T: Traversal + ?Sized>(
 /// (no dupes, no gaps — property-tested in `tests/streaming.rs`), each
 /// shard writes only `q[offset(x)]` for its own points `x`, and `u` is
 /// read-only, so no two workers ever touch the same word. Per-point
-/// arithmetic is identical to the sequential [`apply`] (same coefficient
-/// order, and `q` depends only on `u`), so the result field is **bitwise**
-/// equal to the sequential sweep for any traversal and shard count.
+/// arithmetic is identical to the sequential [`apply`] (same kernel, same
+/// coefficient order, and `q` depends only on `u`), so the result field is
+/// **bitwise** equal to the sequential sweep for any traversal and shard
+/// count.
 pub fn apply_sharded<T: Traversal + ?Sized>(
     traversal: &T,
     grid: &GridDesc,
@@ -302,9 +352,24 @@ pub fn apply_sharded<T: Traversal + ?Sized>(
     pool: &ThreadPool,
     shards: usize,
 ) {
+    apply_sharded_cfg(traversal, grid, stencil, u, q, pool, shards, &KernelCfg::default())
+}
+
+/// [`apply_sharded`] with explicit kernel knobs.
+#[allow(clippy::too_many_arguments)]
+pub fn apply_sharded_cfg<T: Traversal + ?Sized>(
+    traversal: &T,
+    grid: &GridDesc,
+    stencil: &Stencil,
+    u: &[f64],
+    q: &mut [f64],
+    pool: &ThreadPool,
+    shards: usize,
+    cfg: &KernelCfg,
+) {
     let ranges = shard_ranges(traversal.num_pencils(), shards);
     if ranges.len() <= 1 {
-        return apply(traversal, grid, stencil, u, q);
+        return apply_cfg(traversal, grid, stencil, u, q, cfg);
     }
     check_numeric_args(traversal, grid, stencil, u, q);
     let deltas: Vec<i64> = stencil.offsets().iter().map(|o| grid.delta_of(o)).collect();
@@ -317,10 +382,12 @@ pub fn apply_sharded<T: Traversal + ?Sized>(
     let qp = QPtr(q.as_mut_ptr());
     let qp = &qp;
     pool.scope_map(ranges.len(), |i| {
-        traversal.stream_pencils(ranges[i].clone(), &mut |x| {
+        traversal.stream_rows(ranges[i].clone(), &mut |x, n| {
             let base = grid.offset_of(x) as i64;
-            let acc = fold_point(coeffs, &deltas, u, base);
-            unsafe { qp.0.add(base as usize).write(acc) };
+            // SAFETY: rows of disjoint pencil ranges are disjoint, so this
+            // worker is the only one touching q[base..base+n].
+            let out = unsafe { std::slice::from_raw_parts_mut(qp.0.add(base as usize), n) };
+            kernel::fold_row(coeffs, &deltas, u, base, out, cfg);
         });
     });
 }
@@ -370,6 +437,25 @@ pub fn step_time_tiled(
     pool: &ThreadPool,
     shards: usize,
 ) -> Vec<(f64, f64)> {
+    step_time_tiled_cfg(tt, grid, stencil, u_in, u_out, alpha, k, pool, shards, &KernelCfg::default())
+}
+
+/// [`step_time_tiled`] with explicit kernel knobs — every tile line runs
+/// through the same [`kernel::update_row`] as the classic and sharded
+/// paths, so the modes stay locked together.
+#[allow(clippy::too_many_arguments)]
+pub fn step_time_tiled_cfg(
+    tt: &TemporalTraversal,
+    grid: &GridDesc,
+    stencil: &Stencil,
+    u_in: &[f64],
+    u_out: &mut [f64],
+    alpha: f64,
+    k: usize,
+    pool: &ThreadPool,
+    shards: usize,
+    cfg: &KernelCfg,
+) -> Vec<(f64, f64)> {
     check_numeric_args(tt, grid, stencil, u_in, u_out);
     assert!(k >= 1 && k <= tt.time_tile(), "k = {k} outside 1..={}", tt.time_tile());
     assert_eq!(tt.radius(), stencil.radius(), "traversal halo must match the stencil radius");
@@ -378,7 +464,7 @@ pub fn step_time_tiled(
         return vec![(0.0, 0.0); k];
     }
     let gdeltas: Vec<i64> = stencil.offsets().iter().map(|o| grid.delta_of(o)).collect();
-    let ctx = TileCtx { tt, grid, stencil, coeffs: stencil.coeffs(), gdeltas: &gdeltas, alpha, k };
+    let ctx = TileCtx { tt, grid, stencil, coeffs: stencil.coeffs(), gdeltas: &gdeltas, alpha, k, cfg };
     // Raw-pointer sink, same pattern as `apply_sharded`; SAFETY: the
     // disjointness argument above — each owned word of u_out is written by
     // exactly one worker, and u_in/u_out are distinct buffers.
@@ -415,6 +501,7 @@ struct TileCtx<'a> {
     gdeltas: &'a [i64],
     alpha: f64,
     k: usize,
+    cfg: &'a KernelCfg,
 }
 
 /// Advance one owned tile `k` steps: seed the scratch boundary shell, run
@@ -499,12 +586,38 @@ fn advance_tile(
             let sbase = if first { gb } else { lb };
             let obase = if last { gb } else { lb };
             let (olo, ohi) = if in_t { (o_lo, o_hi) } else { (n0, n0) };
+            // One dim-0 line of the step through the shared vector kernel:
+            // n0 updated values written through `line_out`, norms
+            // accumulated over the owned sub-segment [olo, ohi) only, in
+            // increasing-j order (per-term bitwise identical to the
+            // classic axpy-norm terms).
             // SAFETY: dst is either u_out (disjoint owned writes across
             // tiles) or this worker's scratch sized to the box; obase..+n0
-            // lies inside it because V_s ⊆ box (local) / storage (global).
+            // lies inside it because V_s ⊆ box (local) / storage (global),
+            // and src reads stay inside the box/storage for the same
+            // reason.
             unsafe {
                 let line_out = dst.add(obase as usize);
-                tile_line(ctx.coeffs, deltas, src, sbase, n0, olo, ohi, ctx.alpha, line_out, &mut acc[s - 1]);
+                // per-line local partials, folded into the step slot
+                // afterwards — the exact grouping of the pre-kernel
+                // `tile_line`, so temporal norms are unchanged bit-for-bit
+                // on the portable path
+                let mut part = (0.0, 0.0);
+                kernel::update_row(
+                    ctx.coeffs,
+                    deltas,
+                    src,
+                    sbase,
+                    ctx.alpha,
+                    n0,
+                    olo,
+                    ohi,
+                    line_out,
+                    &mut part,
+                    ctx.cfg,
+                );
+                acc[s - 1].0 += part.0;
+                acc[s - 1].1 += part.1;
             }
             let mut i = 1;
             loop {
@@ -579,49 +692,6 @@ fn seed_boundary_shell(
             i += 1;
         }
     }
-}
-
-/// One dim-0 line of a time-tiled step: `n` updated values written through
-/// `out`, folding `src` at `sbase + j` with `deltas`; norms accumulate over
-/// the owned sub-segment `[olo, ohi)` only, with the freshly computed
-/// values still in registers (per-term bitwise identical to the classic
-/// axpy-norm terms).
-///
-/// SAFETY contract: `out..out+n` must be writable and disjoint from `src`,
-/// and `sbase + deltas` must stay within `src` for all `j < n` (the
-/// caller's box/validity geometry guarantees both).
-#[inline(always)]
-#[allow(clippy::too_many_arguments)]
-unsafe fn tile_line(
-    coeffs: &[f64],
-    deltas: &[i64],
-    src: &[f64],
-    sbase: i64,
-    n: usize,
-    olo: usize,
-    ohi: usize,
-    alpha: f64,
-    out: *mut f64,
-    acc: &mut (f64, f64),
-) {
-    let (mut u2, mut r2) = (0.0, 0.0);
-    for j in 0..olo {
-        let q = fold_point(coeffs, deltas, src, sbase + j as i64);
-        out.add(j).write(src[(sbase + j as i64) as usize] + alpha * q);
-    }
-    for j in olo..ohi {
-        let q = fold_point(coeffs, deltas, src, sbase + j as i64);
-        let v = src[(sbase + j as i64) as usize] + alpha * q;
-        out.add(j).write(v);
-        u2 += v * v;
-        r2 += q * q;
-    }
-    for j in ohi..n {
-        let q = fold_point(coeffs, deltas, src, sbase + j as i64);
-        out.add(j).write(src[(sbase + j as i64) as usize] + alpha * q);
-    }
-    acc.0 += u2;
-    acc.1 += r2;
 }
 
 /// Combined mode used by tests: numeric result plus miss report in one
@@ -744,6 +814,38 @@ mod tests {
             }
         }
         assert_eq!(q1, q2);
+    }
+
+    #[test]
+    fn row_kernel_apply_matches_pointwise_reference() {
+        // The row-at-a-time kernel path (natural/strip/blocked overrides
+        // of stream_rows plus the 1-long-row fallback) must reproduce the
+        // per-point scalar reference sweep — bitwise on the portable
+        // path, ≤1e-12 relative when the `simd` FMA path is active.
+        let (g, s, _) = setup(&[13, 11, 9]);
+        let words = g.storage_words() as usize;
+        let mut rng = crate::util::rng::Rng::new(17);
+        let u: Vec<f64> = (0..words).map(|_| rng.f64()).collect();
+        let cache = CacheParams::new(1, 16, 2);
+        let traversals: Vec<Box<dyn Traversal>> = vec![
+            Box::new(natural_stream(&g, 1)),
+            Box::new(crate::traversal::strip_stream(&g, 1, 3)),
+            Box::new(crate::traversal::blocked_stream(&g, 1, &[4, 3, 5])),
+            Box::new(crate::traversal::cache_fitting_stream_for_cache(&g, 1, &cache)),
+        ];
+        let strict = KernelCfg { strict: true, prefetch: 16 };
+        for t in &traversals {
+            let mut q_ref = vec![0.0; words];
+            apply_reference(t.as_ref(), &g, &s, &u, &mut q_ref);
+            let mut q_strict = vec![0.0; words];
+            apply_cfg(t.as_ref(), &g, &s, &u, &mut q_strict, &strict);
+            assert_eq!(q_ref, q_strict, "strict mode must be bitwise");
+            let mut q_fast = vec![0.0; words];
+            apply(t.as_ref(), &g, &s, &u, &mut q_fast);
+            for (a, b) in q_fast.iter().zip(&q_ref) {
+                assert!((a - b).abs() <= 1e-12 * b.abs().max(1.0), "{a} vs {b}");
+            }
+        }
     }
 
     #[test]

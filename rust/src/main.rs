@@ -11,10 +11,14 @@
 //! stencilcache experiment <fig4|fig5a|fig5b|fig5corr|sec3|bounds|multirhs|appb|all> [--quick]
 //!     regenerate a paper figure/table
 //! stencilcache solve --n 64 --steps 100 [--shard-grid 2,2,2] [--ram-budget-mb 256]
+//!                    [--prefetch-distance W]
 //!     run the heat solver (PJRT when artifacts exist, native otherwise).
 //!     --shard-grid forces the block decomposition (DESIGN.md §2.9);
 //!     --ram-budget-mb caps resident field memory — solves whose working
 //!     set exceeds it run out-of-core over disk tiles.
+//!     --prefetch-distance overrides how many words ahead the native row
+//!     kernel software-prefetches (0 disables; default: the machine
+//!     model's choice, see DESIGN.md §2.11).
 //! stencilcache serve-demo [--requests 64]
 //!     demo of the serving layer (submit/drain) over a mixed workload
 //! stencilcache serve [--port 7077] [--cap 64] [--workers N]
@@ -203,7 +207,18 @@ fn cmd_solve(args: &Args) -> i32 {
         // --ram-budget-mb caps the *field* working set in f64 words; the
         // planner flips the solve out-of-core when 2·N³ words exceed it.
         let ram_budget_words = (ram_budget_mb > 0).then(|| ram_budget_mb as u64 * (1 << 20) / 8);
-        let mk_config = || PlannerConfig { shard_grid: shard_grid.clone(), ram_budget_words, ..PlannerConfig::default() };
+        // --prefetch-distance overrides the machine model's choice of how
+        // many words ahead the row kernel prefetches (0 disables).
+        let prefetch_distance = match args.get("prefetch-distance") {
+            Some(_) => Some(args.get_usize("prefetch-distance", 0)?),
+            None => None,
+        };
+        let mk_config = || PlannerConfig {
+            shard_grid: shard_grid.clone(),
+            ram_budget_words,
+            prefetch_distance,
+            ..PlannerConfig::default()
+        };
         // PJRT when artifacts are available, the native backend otherwise;
         // surface the startup error so broken artifact setups stay visible.
         let svc = match RuntimeService::start(None) {

@@ -13,7 +13,12 @@
 //! and picks, among pads whose lattice clears the short-vector bar, the one
 //! minimizing memory overhead and then basis eccentricity ("the shortest
 //! vector ... not too short, though short enough to minimize the number of
-//! pencils").
+//! pencils"), and finally — among otherwise-equal pads — the one whose
+//! dim-0 storage extent is closest to a cache-line multiple, so pencil
+//! base offsets stay line-aligned for the vector kernel's unit-stride row
+//! loads (`engine::kernel`). Alignment is deliberately the *last*
+//! objective: it never spends overhead the lattice criterion didn't
+//! already require.
 //!
 //! With a hierarchical [`MachineModel`] the same criterion applies **per
 //! level**: the TLB induces a *page interference lattice* (modulus = the
@@ -87,7 +92,7 @@ pub fn near_half_cache_multiple(grid: &GridDesc, cache: &CacheParams, tol: f64) 
 /// Search pads `0..=max_pad` for the first d−1 dims; return the best
 /// advice per the ordering described in the module docs.
 pub fn advise(grid: &GridDesc, stencil: &Stencil, cache: &CacheParams, max_pad: usize) -> PaddingAdvice {
-    advise_moduli(grid, &[cache.lattice_modulus()], short_vector_bar(stencil, cache), max_pad)
+    advise_moduli(grid, &[cache.lattice_modulus()], short_vector_bar(stencil, cache), max_pad, cache.line_words)
 }
 
 /// [`advise`] against every lattice a machine exposes: the cache-line
@@ -100,7 +105,7 @@ pub fn advise_machine(grid: &GridDesc, stencil: &Stencil, machine: &MachineModel
     if let Some(m) = machine.page_modulus() {
         moduli.push(m);
     }
-    advise_moduli(grid, &moduli, short_vector_bar(stencil, &machine.l1), max_pad)
+    advise_moduli(grid, &moduli, short_vector_bar(stencil, &machine.l1), max_pad, machine.l1.line_words)
 }
 
 /// Does `storage`'s lattice mod `modulus` clear the advisor's strict bar
@@ -111,15 +116,16 @@ fn clears_bar(storage: &[usize], modulus: usize, bar: i64) -> bool {
 }
 
 /// The pad search over an explicit modulus list (first entry = the
-/// cache-line lattice, which supplies the reported diagnostics) and
-/// short-vector bar (the stencil diameter).
-fn advise_moduli(grid: &GridDesc, moduli: &[usize], bar: i64, max_pad: usize) -> PaddingAdvice {
+/// cache-line lattice, which supplies the reported diagnostics),
+/// short-vector bar (the stencil diameter), and the L1 line size in words
+/// (the kernel-alignment tie-break).
+fn advise_moduli(grid: &GridDesc, moduli: &[usize], bar: i64, max_pad: usize, line_words: usize) -> PaddingAdvice {
     assert!(!moduli.is_empty());
     let d = grid.ndim();
     let dims = grid.dims();
     let base_words: f64 = dims.iter().map(|&n| n as f64).product();
 
-    let mut best: Option<(PaddingAdvice, (u8, u64, u64))> = None; // (advice, sort key)
+    let mut best: Option<(PaddingAdvice, (u8, u64, u64, u64))> = None; // (advice, sort key)
     let mut pad = vec![0usize; d];
     // odometer over pads of dims 0..d-1 (last dim fixed at 0)
     loop {
@@ -136,11 +142,17 @@ fn advise_moduli(grid: &GridDesc, moduli: &[usize], bar: i64, max_pad: usize) ->
         let ecc = lat.eccentricity();
         let padded_words: f64 = storage.iter().map(|&n| n as f64).product();
         let overhead = padded_words / base_words - 1.0;
-        // Sort key: favorable first, then overhead (scaled), then ecc.
+        // Sort key: favorable first, then overhead (scaled), then ecc,
+        // then pencil-base misalignment — how far the dim-0 storage
+        // extent (the stride between consecutive row bases) sits from a
+        // cache-line multiple. A line-multiple extent keeps every row's
+        // vector loads on one line boundary pattern and lets the kernel's
+        // prefetch land whole lines (DESIGN.md §2.11).
         let key = (
             u8::from(!favorable),
             (overhead * 1e6) as u64,
             (ecc * 1e3) as u64,
+            (storage[0] % line_words.max(1)) as u64,
         );
         let advice = PaddingAdvice {
             pad: pad.clone(),
@@ -287,6 +299,44 @@ mod tests {
             assert_eq!(a.pad, b.pad, "{dims:?}");
             assert_eq!(a.favorable, b.favorable);
             assert_eq!(a.min_l1, b.min_l1);
+        }
+    }
+
+    #[test]
+    fn alignment_tie_break_is_last_and_matches_brute_force() {
+        // Replicate the advisor's full sort key — (favorable, overhead,
+        // eccentricity, dim-0 misalignment) — over the whole pad lattice
+        // in the advisor's own visit order and assert advise() returns the
+        // lexicographic argmin. This pins that pencil-base alignment
+        // participates in the objective, and only *after* the §6 lattice
+        // criteria (it can never buy alignment with extra overhead).
+        let c = r10k(); // 4-word lines
+        let s = Stencil::star13();
+        let bar = short_vector_bar(&s, &c);
+        for dims in [[45usize, 91, 100], [90, 91, 100], [512, 40, 10]] {
+            let base: f64 = dims.iter().map(|&n| n as f64).product();
+            let mut best: Option<(u8, u64, u64, u64)> = None;
+            let mut best_pad = vec![0usize; 3];
+            for p1 in 0..=8usize {
+                for p0 in 0..=8usize {
+                    let storage = vec![dims[0] + p0, dims[1] + p1, dims[2]];
+                    let lat = InterferenceLattice::new(&storage, c.lattice_modulus());
+                    let fav = lat.min_l1(bar.max(8)).map(|m| m > bar).unwrap_or(true);
+                    let words: f64 = storage.iter().map(|&n| n as f64).product();
+                    let key = (
+                        u8::from(!fav),
+                        ((words / base - 1.0) * 1e6) as u64,
+                        (lat.eccentricity() * 1e3) as u64,
+                        (storage[0] % c.line_words) as u64,
+                    );
+                    if best.map(|b| key < b).unwrap_or(true) {
+                        best = Some(key);
+                        best_pad = vec![p0, p1, 0];
+                    }
+                }
+            }
+            let adv = advise(&GridDesc::new(&dims), &s, &c, 8);
+            assert_eq!(adv.pad, best_pad, "{dims:?}");
         }
     }
 

@@ -14,14 +14,15 @@
 //! `solver::NativeBackend::solve` — `u ← u + α·Ku` over the K-interior,
 //! Dirichlet boundary pinned — but over shard blocks with a typed
 //! [`HaloMsg`] exchange per step. The result field is **bitwise
-//! identical** to the unsharded path: per point the fold is
-//! `engine::fold_point` (the one shared definition) over the same operand
-//! values in the same coefficient order, and the update `u + α·Ku` is the
-//! same expression; only norm summation order differs (partials combine
-//! in shard order), which stays within 1e-9 relative of the flat sums.
+//! identical** to the unsharded path: every interior row runs through
+//! `engine::kernel::update_row` (the one shared row kernel, same
+//! `KernelCfg`) over the same operand values in the same coefficient
+//! order, and the update `u + α·Ku` is the same expression; only norm
+//! summation order differs (partials combine in shard order), which
+//! stays within 1e-9 relative of the flat sums.
 
 use super::{box_strides, box_words, for_each_row, HaloMsg, ShardPlan};
-use crate::engine::fold_point;
+use crate::engine::{kernel, KernelCfg};
 use crate::stencil::Stencil;
 use crate::util::rng::Rng;
 use crate::util::threadpool::ThreadPool;
@@ -288,12 +289,13 @@ impl ShardedField {
         Ok(out)
     }
 
-    /// Σ v² over the whole field, partials combined in shard order.
+    /// Σ v² over the whole field, per-shard partials from the shared
+    /// vector reduction ([`kernel::sum_sq`]) combined in shard order.
     pub fn norm_sq(&self) -> Result<f64> {
         let mut acc = 0.0f64;
         for s in 0..self.plan.num_shards() {
             let data = self.read_box(s, &self.plan.owned_box(s))?;
-            acc += data.iter().map(|v| v * v).sum::<f64>();
+            acc += kernel::sum_sq(&data);
         }
         Ok(acc)
     }
@@ -400,6 +402,13 @@ fn unpack_region(buf: &mut [f64], ext: &[Range<i64>], estrides: &[u64], region: 
 /// shard's own old block plus one [`HaloMsg`] per source, then sweep the
 /// owned box in local natural order computing `u + α·Ku` at K-interior
 /// points (boundary points copy through — the Dirichlet condition).
+///
+/// Each row's K-interior run goes through [`kernel::update_row`] with the
+/// shard's *running* norm accumulators, so the nonzero `u2`/`r2` addends
+/// land in exactly the order the pre-kernel scalar sweep produced —
+/// `tests/shard.rs` pins the grid-of-1 step norms bitwise against a flat
+/// scalar reference.
+#[allow(clippy::too_many_arguments)]
 fn step_shard(
     plan: &ShardPlan,
     stencil: &Stencil,
@@ -408,6 +417,7 @@ fn step_shard(
     next: &ShardedField,
     s: usize,
     interior: Option<&[Range<i64>]>,
+    cfg: &KernelCfg,
 ) -> Result<ShardStepOut> {
     let d = plan.ndim();
     let ext = plan.halo_box(s);
@@ -429,7 +439,10 @@ fn step_shard(
     let deltas: Vec<i64> =
         stencil.offsets().iter().map(|k| k.iter().zip(&estrides).map(|(&ki, &st)| ki * st as i64).sum()).collect();
     let mut out = Vec::with_capacity(box_words(&owned) as usize);
-    let (mut u2, mut r2) = (0.0f64, 0.0f64);
+    // running (Σ v², Σ (Ku)²) accumulators for the whole shard sweep —
+    // update_row continues them in increasing-point order rather than
+    // returning per-row partials, preserving the scalar add sequence
+    let mut acc = (0.0f64, 0.0f64);
     let mut x: Vec<i64> = owned.iter().map(|rg| rg.start).collect();
     'sweep: loop {
         // buffer offset of the row's first owned element (x[0] stays at
@@ -443,17 +456,47 @@ fn step_shard(
             Some(ir) if hi_ok => (ir[0].start.max(owned[0].start), ir[0].end.min(owned[0].end)),
             _ => (owned[0].start, owned[0].start),
         };
-        for x0 in owned[0].clone() {
-            let u_old = buf[base as usize];
-            let val = if x0 >= ilo && x0 < ihi {
-                let ku = fold_point(coeffs, &deltas, &buf, base);
-                r2 += ku * ku;
-                u_old + alpha * ku
-            } else {
-                u_old
-            };
-            u2 += val * val;
-            out.push(val);
+        // a shard whose dim-0 extent sits entirely in the boundary shell
+        // yields an inverted clamp — normalize to the empty run
+        let (ilo, ihi) = if ilo < ihi { (ilo, ihi) } else { (owned[0].start, owned[0].start) };
+        // boundary prefix copies through (Dirichlet), counted in Σ v²
+        for _ in owned[0].start..ilo {
+            let v = buf[base as usize];
+            acc.0 += v * v;
+            out.push(v);
+            base += 1;
+        }
+        // K-interior run through the shared row kernel
+        let run = (ihi - ilo) as usize;
+        if run > 0 {
+            let start = out.len();
+            out.resize(start + run, 0.0);
+            // SAFETY: `out` was just resized to hold `run` words at
+            // `start`, does not alias `buf`, and every fold at
+            // `base + j + delta` stays inside the halo-extended buffer
+            // because interior points carry a full radius of ghosts.
+            unsafe {
+                kernel::update_row(
+                    coeffs,
+                    &deltas,
+                    &buf,
+                    base,
+                    alpha,
+                    run,
+                    0,
+                    run,
+                    out.as_mut_ptr().add(start),
+                    &mut acc,
+                    cfg,
+                );
+            }
+            base += run as i64;
+        }
+        // boundary suffix copies through
+        for _ in ihi..owned[0].end {
+            let v = buf[base as usize];
+            acc.0 += v * v;
+            out.push(v);
             base += 1;
         }
         let mut i = 1;
@@ -469,6 +512,7 @@ fn step_shard(
             i += 1;
         }
     }
+    let (u2, r2) = acc;
     if next.is_disk() {
         next.write_block_shared(s, &out)?;
         Ok(ShardStepOut { block: None, u2, r2, halo_words, halo_msgs })
@@ -497,6 +541,34 @@ pub fn solve_blocks_with_field(
     storage: &ShardStorage,
     pool: &ThreadPool,
     ram_budget_words: Option<u64>,
+) -> Result<(BlockSolveOutcome, ShardedField)> {
+    solve_blocks_with_field_cfg(
+        plan,
+        stencil,
+        alpha,
+        steps,
+        seed,
+        storage,
+        pool,
+        ram_budget_words,
+        &KernelCfg::default(),
+    )
+}
+
+/// [`solve_blocks_with_field`] with explicit kernel knobs — the same
+/// `KernelCfg` the unsharded `NativeBackend` runs, so decomposed-vs-classic
+/// bitwise equality holds mode-for-mode.
+#[allow(clippy::too_many_arguments)]
+pub fn solve_blocks_with_field_cfg(
+    plan: &Arc<ShardPlan>,
+    stencil: &Stencil,
+    alpha: f64,
+    steps: usize,
+    seed: u64,
+    storage: &ShardStorage,
+    pool: &ThreadPool,
+    ram_budget_words: Option<u64>,
+    cfg: &KernelCfg,
 ) -> Result<(BlockSolveOutcome, ShardedField)> {
     assert_eq!(plan.ndim(), stencil.ndim(), "plan/stencil arity mismatch");
     assert_eq!(plan.radius(), stencil.radius(), "ghost width must equal the stencil radius");
@@ -533,7 +605,7 @@ pub fn solve_blocks_with_field(
         let (mut u2, mut r2) = (0.0f64, 0.0f64);
         for wave in ids.chunks(conc.max(1)) {
             let results = pool.scope_map(wave.len(), |w| {
-                step_shard(plan, stencil, alpha, &cur, &next, wave[w], interior.as_deref())
+                step_shard(plan, stencil, alpha, &cur, &next, wave[w], interior.as_deref(), cfg)
             });
             for (w, res) in results.into_iter().enumerate() {
                 let r = res?;
@@ -573,7 +645,24 @@ pub fn solve_blocks(
     pool: &ThreadPool,
     ram_budget_words: Option<u64>,
 ) -> Result<BlockSolveOutcome> {
-    let (outcome, field) = solve_blocks_with_field(plan, stencil, alpha, steps, seed, storage, pool, ram_budget_words)?;
+    solve_blocks_cfg(plan, stencil, alpha, steps, seed, storage, pool, ram_budget_words, &KernelCfg::default())
+}
+
+/// [`solve_blocks`] with explicit kernel knobs (the coordinator path).
+#[allow(clippy::too_many_arguments)]
+pub fn solve_blocks_cfg(
+    plan: &Arc<ShardPlan>,
+    stencil: &Stencil,
+    alpha: f64,
+    steps: usize,
+    seed: u64,
+    storage: &ShardStorage,
+    pool: &ThreadPool,
+    ram_budget_words: Option<u64>,
+    cfg: &KernelCfg,
+) -> Result<BlockSolveOutcome> {
+    let (outcome, field) =
+        solve_blocks_with_field_cfg(plan, stencil, alpha, steps, seed, storage, pool, ram_budget_words, cfg)?;
     drop(field);
     if let ShardStorage::OutOfCore { dir } = storage {
         let _ = fs::remove_dir(dir);

@@ -23,8 +23,9 @@
 //!   is touched only by its worker) and an **out-of-core** backend (one
 //!   disk tile per shard, streamed under a configurable RAM budget), plus
 //!   the block-decomposed solve driver [`field::solve_blocks`] whose
-//!   result field is bitwise identical to the unsharded path (the
-//!   per-point fold is `engine::fold_point`, the ONE shared definition).
+//!   result field is bitwise identical to the unsharded path (every
+//!   interior row runs through `engine::kernel::update_row`, the ONE
+//!   shared row kernel).
 //!
 //! The measured halo is exact, not modelled: because owned boxes
 //! partition the grid, every ghost cell of a shard has exactly one owner,
@@ -36,7 +37,10 @@
 pub mod field;
 pub mod msg;
 
-pub use field::{solve_blocks, solve_blocks_with_field, BlockSolveOutcome, ShardStorage, ShardedField, StepNorms};
+pub use field::{
+    solve_blocks, solve_blocks_cfg, solve_blocks_with_field, solve_blocks_with_field_cfg, BlockSolveOutcome,
+    ShardStorage, ShardedField, StepNorms,
+};
 pub use msg::HaloMsg;
 
 use crate::traversal::shard_ranges;

@@ -200,11 +200,21 @@ fn axpy_norms_sharded(u: &mut [f64], q: &[f64], alpha: f64, pool: &ThreadPool, s
 /// planner's traversal, sharded on the worker pool.
 pub struct NativeBackend<'a> {
     pool: &'a ThreadPool,
+    /// Kernel knobs (strict mode, software-prefetch distance) threaded
+    /// into every engine sweep this backend runs. The default is the
+    /// engine default: fast mode, no prefetch.
+    kernel: engine::KernelCfg,
 }
 
 impl<'a> NativeBackend<'a> {
     pub fn new(pool: &'a ThreadPool) -> Self {
-        NativeBackend { pool }
+        NativeBackend { pool, kernel: engine::KernelCfg::default() }
+    }
+
+    /// Backend with explicit kernel knobs — how the coordinator threads
+    /// the plan's `prefetch_distance` into the numeric sweeps.
+    pub fn with_kernel(pool: &'a ThreadPool, kernel: engine::KernelCfg) -> Self {
+        NativeBackend { pool, kernel }
     }
 
     /// Explicit-Euler step size for `stencil`: `α = 0.8/Σ|c_i|`.
@@ -244,8 +254,18 @@ impl<'a> NativeBackend<'a> {
         while done < steps {
             let kk = (steps - done).min(k_max);
             let t0 = Instant::now();
-            let norms =
-                engine::step_time_tiled(tt, job.grid, job.stencil, &u, &mut v, alpha, kk, self.pool, job.shards);
+            let norms = engine::step_time_tiled_cfg(
+                tt,
+                job.grid,
+                job.stencil,
+                &u,
+                &mut v,
+                alpha,
+                kk,
+                self.pool,
+                job.shards,
+                &self.kernel,
+            );
             let total = t0.elapsed().as_micros() as u64;
             std::mem::swap(&mut u, &mut v);
             let (each, rem) = (total / kk as u64, total % kk as u64);
@@ -280,9 +300,10 @@ impl<'a> NativeBackend<'a> {
     /// inside typed [`crate::shard::HaloMsg`]s, and the outcome carries the
     /// measured halo traffic. Runs on the request's *logical* dims — block
     /// layouts are per-shard, so planner padding (a storage-layout remedy
-    /// for cache interference) does not apply. The step, the per-point
-    /// fold, and α are the classic path's own, so the result field is
-    /// bitwise identical to [`NumericBackend::solve`] on the same job.
+    /// for cache interference) does not apply. The step, the row kernel
+    /// (`engine::kernel`, same `KernelCfg`), and α are the classic path's
+    /// own, so the result field is bitwise identical to
+    /// [`NumericBackend::solve`] on the same job.
     pub fn solve_decomposed(
         &self,
         job: &NumericJob<'_>,
@@ -293,7 +314,7 @@ impl<'a> NativeBackend<'a> {
     ) -> Result<NumericOutcome> {
         let plan = Arc::new(crate::shard::ShardPlan::new(job.dims, shard_grid, job.stencil.radius()));
         let alpha = Self::stable_alpha(job.stencil);
-        let out = crate::shard::solve_blocks(
+        let out = crate::shard::solve_blocks_cfg(
             &plan,
             job.stencil,
             alpha,
@@ -302,6 +323,7 @@ impl<'a> NativeBackend<'a> {
             storage,
             self.pool,
             ram_budget_words,
+            &self.kernel,
         )?;
         let log: Vec<SolveStep> = out
             .steps
@@ -333,7 +355,16 @@ impl NumericBackend for NativeBackend<'_> {
         // time the sweep + reduction only, not input generation — the same
         // accounting the PJRT backend and NativeBackend::solve use.
         let t0 = Instant::now();
-        engine::apply_sharded(job.traversal, job.grid, job.stencil, &u, &mut q, self.pool, job.shards);
+        engine::apply_sharded_cfg(
+            job.traversal,
+            job.grid,
+            job.stencil,
+            &u,
+            &mut q,
+            self.pool,
+            job.shards,
+            &self.kernel,
+        );
         let norm = l2_norm_sharded(&q, self.pool, job.shards);
         Ok(NumericOutcome {
             result_norm: norm,
@@ -360,7 +391,16 @@ impl NumericBackend for NativeBackend<'_> {
         let mut log = Vec::with_capacity(steps);
         for step in 0..steps {
             let t0 = Instant::now();
-            engine::apply_sharded(job.traversal, job.grid, job.stencil, &u, &mut q, self.pool, job.shards);
+            engine::apply_sharded_cfg(
+                job.traversal,
+                job.grid,
+                job.stencil,
+                &u,
+                &mut q,
+                self.pool,
+                job.shards,
+                &self.kernel,
+            );
             let (u2, r2) = axpy_norms_sharded(&mut u, &q, alpha, self.pool, job.shards);
             log.push(SolveStep {
                 step,

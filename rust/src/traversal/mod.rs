@@ -91,6 +91,21 @@ pub trait Traversal: Sync {
     fn stream(&self, f: &mut dyn FnMut(&[i64])) {
         self.stream_pencils(0..self.num_pencils(), f);
     }
+
+    /// Stream the pencils in `pencils` as **rows**: maximal runs of
+    /// consecutive dim-0 points. `f` receives the coordinate of the row's
+    /// first point and the run length `n`; since the dim-0 stride is 1 by
+    /// layout, the `n` points occupy adjacent storage words — exactly the
+    /// shape `engine::kernel`'s vector row primitives consume.
+    ///
+    /// The default degrades every point to a 1-long row (bitwise
+    /// identical to [`Traversal::stream_pencils`], just slower), so
+    /// orders without dim-0-contiguous structure (lattice pencils,
+    /// materialized replays) stay correct without an override. Natural /
+    /// strip / blocked orders override with true multi-point rows.
+    fn stream_rows(&self, pencils: Range<usize>, f: &mut dyn FnMut(&[i64], usize)) {
+        self.stream_pencils(pencils, &mut |x| f(x, 1));
+    }
 }
 
 /// Partition `0..num_pencils` into at most `shards` contiguous, disjoint,
@@ -360,6 +375,40 @@ impl Traversal for NaturalTraversal {
             }
         }
     }
+
+    fn stream_rows(&self, pencils: Range<usize>, f: &mut dyn FnMut(&[i64], usize)) {
+        let np = self.num_pencils();
+        let pencils = pencils.start.min(np)..pencils.end.min(np);
+        if pencils.is_empty() {
+            return;
+        }
+        let d = self.ranges.len();
+        let (lo0, hi0) = (self.ranges[0].start, self.ranges[0].end);
+        let n0 = (hi0 - lo0) as usize;
+        let mut x = vec![0i64; d];
+        x[0] = lo0;
+        let mut k = pencils.start;
+        for i in 1..d {
+            let len = extent(&self.ranges[i]);
+            x[i] = self.ranges[i].start + (k % len) as i64;
+            k /= len;
+        }
+        for _ in 0..pencils.len() {
+            f(&x, n0);
+            let mut i = 1;
+            loop {
+                if i == d {
+                    return;
+                }
+                x[i] += 1;
+                if x[i] < self.ranges[i].end {
+                    break;
+                }
+                x[i] = self.ranges[i].start;
+                i += 1;
+            }
+        }
+    }
 }
 
 /// Streaming §3 strip order: dim 0 cut into strips of `width`; within each
@@ -421,6 +470,46 @@ impl Traversal for StripTraversal {
                     x[0] = v;
                     f(&x);
                 }
+                let mut i = 1;
+                loop {
+                    x[i] += 1;
+                    if x[i] < self.ranges[i].end {
+                        break;
+                    }
+                    x[i] = self.ranges[i].start;
+                    i += 1;
+                    if i == d {
+                        break 'lines;
+                    }
+                }
+            }
+        }
+    }
+
+    fn stream_rows(&self, pencils: Range<usize>, f: &mut dyn FnMut(&[i64], usize)) {
+        let np = self.num_pencils();
+        let pencils = pencils.start.min(np)..pencils.end.min(np);
+        let d = self.ranges.len();
+        let (lo0, hi0) = if pencils.is_empty() {
+            return;
+        } else {
+            (self.ranges[0].start, self.ranges[0].end)
+        };
+        let mut x = vec![0i64; d];
+        for s in pencils {
+            let s_lo = lo0 + (s * self.width) as i64;
+            let s_hi = (s_lo + self.width as i64).min(hi0);
+            let n = (s_hi - s_lo) as usize;
+            x[0] = s_lo;
+            if d == 1 {
+                f(&x, n);
+                continue;
+            }
+            for (i, rg) in self.ranges.iter().enumerate().skip(1) {
+                x[i] = rg.start;
+            }
+            'lines: loop {
+                f(&x, n);
                 let mut i = 1;
                 loop {
                     x[i] += 1;
@@ -510,6 +599,49 @@ impl Traversal for BlockedTraversal {
                     i += 1;
                     if i == d {
                         break 'points;
+                    }
+                }
+            }
+        }
+    }
+
+    fn stream_rows(&self, pencils: Range<usize>, f: &mut dyn FnMut(&[i64], usize)) {
+        let np = self.num_pencils();
+        let pencils = pencils.start.min(np)..pencils.end.min(np);
+        if pencils.is_empty() {
+            return;
+        }
+        let d = self.ranges.len();
+        let mut x = vec![0i64; d];
+        for t in pencils {
+            let mut k = t;
+            let mut origin = [0i64; MAX_STREAM_DIMS];
+            let mut hi = [0i64; MAX_STREAM_DIMS];
+            for i in 0..d {
+                let tiles = self.tiles_along(i);
+                let ti = k % tiles;
+                k /= tiles;
+                origin[i] = self.ranges[i].start + (ti * self.tile[i]) as i64;
+                hi[i] = (origin[i] + self.tile[i] as i64).min(self.ranges[i].end);
+            }
+            let n = (hi[0] - origin[0]) as usize;
+            x.copy_from_slice(&origin[..d]);
+            if d == 1 {
+                f(&x, n);
+                continue;
+            }
+            'rows: loop {
+                f(&x, n);
+                let mut i = 1;
+                loop {
+                    x[i] += 1;
+                    if x[i] < hi[i] {
+                        continue 'rows;
+                    }
+                    x[i] = origin[i];
+                    i += 1;
+                    if i == d {
+                        break 'rows;
                     }
                 }
             }
@@ -738,6 +870,54 @@ mod tests {
         let mut joined = [head, mid, tail].concat();
         joined.sort_unstable();
         assert_eq!(joined, full);
+    }
+
+    #[test]
+    fn stream_rows_reconstructs_the_exact_point_sequence() {
+        // rows (start coordinate + run length along dim 0) expanded back
+        // to points must reproduce stream_pencils exactly — order included
+        let g = GridDesc::new(&[9, 8, 7]);
+        let traversals: Vec<Box<dyn Traversal>> = vec![
+            Box::new(natural_stream(&g, 1)),
+            Box::new(strip_stream(&g, 1, 3)),
+            Box::new(blocked_stream(&g, 1, &[3, 2, 4])),
+            Box::new(MaterializedTraversal::with_pencil_len(natural(&g, 1), 17)),
+        ];
+        for t in &traversals {
+            for rg in [0..t.num_pencils(), 1..3, 2..t.num_pencils()] {
+                let mut pts = Vec::new();
+                t.stream_pencils(rg.clone(), &mut |x| pts.push(Order::pack(x)));
+                let mut from_rows = Vec::new();
+                t.stream_rows(rg, &mut |x, n| {
+                    let mut y = x.to_vec();
+                    for j in 0..n as i64 {
+                        y[0] = x[0] + j;
+                        from_rows.push(Order::pack(&y));
+                    }
+                });
+                assert_eq!(from_rows, pts);
+            }
+        }
+    }
+
+    #[test]
+    fn stream_rows_handles_one_dimensional_grids() {
+        let g = GridDesc::new(&[16]);
+        for t in [
+            Box::new(natural_stream(&g, 2)) as Box<dyn Traversal>,
+            Box::new(strip_stream(&g, 2, 5)),
+            Box::new(blocked_stream(&g, 2, &[4])),
+        ] {
+            let mut pts = Vec::new();
+            t.stream(&mut |x| pts.push(x[0]));
+            let mut from_rows = Vec::new();
+            t.stream_rows(0..t.num_pencils(), &mut |x, n| {
+                for j in 0..n as i64 {
+                    from_rows.push(x[0] + j);
+                }
+            });
+            assert_eq!(from_rows, pts);
+        }
     }
 
     #[test]

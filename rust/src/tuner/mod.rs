@@ -110,8 +110,12 @@ pub enum TuneMetric {
     /// Estimated stall cycles over the machine's **full** memory model
     /// (L1 + L2 + TLB where present, weighted by the machine's latency
     /// model) — deterministic like `SimulatedMisses`, but it can rank
-    /// candidates differently when TLB or L2 traffic dominates. On a
-    /// single-level machine it is `misses × mem_latency`, so it agrees
+    /// candidates differently when TLB or L2 traffic dominates. Machines
+    /// with a nonzero `Latency::prefetch` term are priced with the
+    /// kernel's software prefetch hiding cold-miss memory trips
+    /// (`LoadProfile::stall_cycles_prefetched`), keeping the estimate
+    /// correlated with the vectorized wall clock. On a single-level
+    /// no-prefetch machine it is `misses × mem_latency`, so it agrees
     /// with `SimulatedMisses` exactly.
     StallCycles,
 }
@@ -207,7 +211,11 @@ pub fn tune_with_metric(
             for cand in candidates {
                 let order = cand.build(&calib, r, cache);
                 let rep = engine::simulate_on_machine(&order, &layout, stencil, machine);
-                let stall = rep.levels.stall_cycles(machine.latency);
+                // price candidates the way the native kernel will run
+                // them: with the machine's planner-chosen software
+                // prefetch hiding cold-miss memory trips (a no-op on
+                // machines whose latency model has no prefetch term)
+                let stall = rep.levels.stall_cycles_prefetched(machine.latency, machine.prefetch_distance());
                 if best.as_ref().map(|b| stall < b.calib_stall).unwrap_or(true) {
                     best = Some(win(cand, 0, 0, stall));
                 }

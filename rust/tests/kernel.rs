@@ -1,0 +1,158 @@
+//! Row-kernel equivalence pins (DESIGN.md §2.11): the vectorized kernel
+//! every production path now runs must stay anchored to the retained
+//! per-point scalar sweep (`engine::apply_reference`).
+//!
+//! The contract, enforced in BOTH CI legs (default build and
+//! `--features simd`):
+//!
+//! - `KernelCfg::strict()` is **bitwise** equal to the scalar reference,
+//!   always — strict mode never dispatches to FMA code.
+//! - The default cfg is bitwise on the portable build and within a
+//!   documented 1e-12 relative reassociation/FMA tolerance under `simd`.
+//! - Prefetch distance is a pure hint: any value leaves results bitwise
+//!   unchanged for the same cfg.
+//! - Sharded sweeps equal the serial sweep bitwise under the same cfg
+//!   (pencil ranges split rows between workers, never within a row).
+//!
+//! Coverage axes from the issue: radii r ∈ {1, 2, 4}, 1/2/3-D grids,
+//! unaligned pencil base offsets (odd extents and deliberate padding), and
+//! dim-0 interior lengths 0..8 so every 4-lane remainder shape (including
+//! the empty row) is exercised.
+
+use stencilcache::engine::{self, KernelCfg};
+use stencilcache::grid::GridDesc;
+use stencilcache::solver;
+use stencilcache::stencil::Stencil;
+use stencilcache::traversal::{self, Traversal};
+use stencilcache::util::threadpool::ThreadPool;
+
+/// 1/2/3-D cases per radius. Dim-0 extents are chosen so the interior row
+/// length `dims[0] - 2r` sweeps 0..=8 (every remainder class of the 4-lane
+/// kernel, plus rows shorter than one chunk and the degenerate empty row)
+/// and then some longer, odd, unaligned lengths.
+fn cases(r: usize) -> Vec<(Vec<usize>, Vec<usize>)> {
+    let mut out = Vec::new();
+    for tail in 0..=8usize {
+        // 1-D: row length == tail exactly; no padding
+        out.push((vec![2 * r + tail], vec![0]));
+    }
+    // 2/3-D with odd extents and padding that misaligns every pencil base
+    // (storage row pitch becomes coprime to the 4-word / 8-word lines).
+    out.push((vec![2 * r + 5, 7], vec![1, 0]));
+    out.push((vec![2 * r + 11, 6], vec![3, 1]));
+    out.push((vec![2 * r + 9, 5, 4], vec![1, 2, 0]));
+    out.push((vec![2 * r + 14, 7, 3], vec![0, 1, 1]));
+    out
+}
+
+fn fields(g: &GridDesc, r: usize) -> (Vec<f64>, Vec<f64>, Vec<f64>) {
+    let words = g.storage_words() as usize;
+    let u = solver::deterministic_field(g, r, 13);
+    (u, vec![0.0; words], vec![0.0; words])
+}
+
+/// Strict mode is bitwise equal to the per-point scalar reference in every
+/// build — this is the anchor that keeps default and simd builds honest.
+#[test]
+fn strict_mode_bitwise_equals_pointwise_reference() {
+    for r in [1usize, 2, 4] {
+        for (dims, pad) in cases(r) {
+            let g = GridDesc::with_padding(&dims, &pad);
+            let s = Stencil::star(dims.len(), r);
+            let nat = traversal::natural_stream(&g, r);
+            let (u, mut q_ref, mut q) = fields(&g, r);
+            engine::apply_reference(&nat, &g, &s, &u, &mut q_ref);
+            engine::apply_cfg(&nat, &g, &s, &u, &mut q, &KernelCfg::strict());
+            assert_eq!(q, q_ref, "strict kernel must be bitwise: {dims:?} pad {pad:?} r={r}");
+        }
+    }
+}
+
+/// Default cfg: bitwise without the `simd` feature; within 1e-12 relative
+/// of the scalar reference with it (FMA contraction + 4-lane horizontal
+/// reassociation — see the tolerance derivation in DESIGN.md §2.11).
+#[test]
+fn default_mode_within_documented_tolerance_of_reference() {
+    let strict_build = !cfg!(feature = "simd");
+    for r in [1usize, 2, 4] {
+        for (dims, pad) in cases(r) {
+            let g = GridDesc::with_padding(&dims, &pad);
+            let s = Stencil::star(dims.len(), r);
+            let nat = traversal::natural_stream(&g, r);
+            let (u, mut q_ref, mut q) = fields(&g, r);
+            engine::apply_reference(&nat, &g, &s, &u, &mut q_ref);
+            engine::apply_cfg(&nat, &g, &s, &u, &mut q, &KernelCfg::default());
+            if strict_build {
+                assert_eq!(q, q_ref, "portable default must be bitwise: {dims:?} r={r}");
+            } else {
+                for (i, (a, b)) in q.iter().zip(&q_ref).enumerate() {
+                    let tol = 1e-12 * (1.0 + a.abs().max(b.abs()));
+                    assert!((a - b).abs() <= tol, "{dims:?} r={r} word {i}: {a} vs {b}");
+                }
+            }
+        }
+    }
+}
+
+/// Prefetch is a hint, never a semantic knob: any distance (including ones
+/// far past the row end, exercising the clamp) leaves the field bitwise
+/// identical to distance 0 under the same cfg.
+#[test]
+fn prefetch_distance_never_changes_the_field() {
+    let g = GridDesc::with_padding(&[21, 7, 5], &[1, 1, 0]);
+    let s = Stencil::star13();
+    let nat = traversal::natural_stream(&g, 2);
+    let (u, mut q_ref, mut q) = fields(&g, 2);
+    engine::apply_cfg(&nat, &g, &s, &u, &mut q_ref, &KernelCfg::default());
+    for dist in [1usize, 8, 112, 1 << 20] {
+        q.iter_mut().for_each(|w| *w = 0.0);
+        engine::apply_cfg(&nat, &g, &s, &u, &mut q, &KernelCfg { strict: false, prefetch: dist });
+        assert_eq!(q, q_ref, "prefetch {dist} changed the field");
+    }
+}
+
+/// Sharded-vs-serial under the same cfg is bitwise in every build — under
+/// `--features simd` this pins that shard splits never change which code
+/// path (or which lane grouping) computes a given row.
+#[test]
+fn sharded_apply_bitwise_equals_serial_for_every_cfg() {
+    let pool = ThreadPool::new(3);
+    let cfgs = [KernelCfg::default(), KernelCfg::strict(), KernelCfg { strict: false, prefetch: 112 }];
+    for r in [1usize, 2] {
+        let g = GridDesc::with_padding(&[2 * r + 13, 9, 7], &[1, 0, 1]);
+        let s = Stencil::star(3, r);
+        let nat = traversal::natural_stream(&g, r);
+        let (u, mut q_ref, mut q) = fields(&g, r);
+        for cfg in &cfgs {
+            q_ref.iter_mut().for_each(|w| *w = 0.0);
+            engine::apply_cfg(&nat, &g, &s, &u, &mut q_ref, cfg);
+            for shards in [2usize, 5, 16] {
+                q.iter_mut().for_each(|w| *w = 0.0);
+                engine::apply_sharded_cfg(&nat, &g, &s, &u, &mut q, &pool, shards, cfg);
+                assert_eq!(q, q_ref, "r={r} {shards} shards cfg {cfg:?}");
+            }
+        }
+    }
+}
+
+/// The non-natural traversal families route through the same row kernel
+/// (`stream_rows` fallback included): strict mode stays bitwise equal to
+/// the reference regardless of visit order.
+#[test]
+fn strict_mode_bitwise_across_traversal_families() {
+    let g = GridDesc::new(&[17, 11, 9]);
+    let r = 2usize;
+    let s = Stencil::star(3, r);
+    let (u, mut q_ref, mut q) = fields(&g, r);
+    engine::apply_reference(&traversal::natural_stream(&g, r), &g, &s, &u, &mut q_ref);
+    let fams: Vec<(&str, Box<dyn Traversal>)> = vec![
+        ("strip3", Box::new(traversal::strip_stream(&g, r, 3))),
+        ("blocked", Box::new(traversal::blocked_stream(&g, r, &[4, 4, 4]))),
+        ("tiled_z", Box::new(traversal::tiled_z_sweep_stream(&g, r, 4096, 2))),
+    ];
+    for (name, t) in &fams {
+        q.iter_mut().for_each(|w| *w = 0.0);
+        engine::apply_cfg(t.as_ref(), &g, &s, &u, &mut q, &KernelCfg::strict());
+        assert_eq!(q, q_ref, "{name}");
+    }
+}
