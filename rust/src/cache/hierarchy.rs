@@ -260,7 +260,7 @@ mod tests {
     #[test]
     fn level_aware_stall_prices_l1_misses_at_memory_without_l2() {
         use super::super::Latency;
-        let lat = Latency { l2: 10, mem: 80, tlb: 50, prefetch: 0 };
+        let lat = Latency { l2: 10, mem: 80, tlb: 50, prefetch: 0, remote: 240 };
         // L1-only hierarchy: every miss goes straight to memory.
         let mut h = Hierarchy::with_levels(CacheParams::new(1, 4, 1), None, None);
         for a in [0u64, 4, 0, 4] {

@@ -195,14 +195,23 @@ pub struct Latency {
     /// [`LoadProfile::stall_cycles`]). Capped at `mem` — a prefetch cannot
     /// hide more than the full memory trip.
     pub prefetch: u64,
+    /// Cross-node (remote NUMA) word latency: what a halo word fetched
+    /// from a neighbor shard's node costs, per word. The planner's
+    /// superstep-depth chooser weighs `remote` per exchanged halo word
+    /// against `mem` per redundantly recomputed ghost point — temporal
+    /// blocking across shards only wins while the exchange it saves is
+    /// dearer than the ghost compute it adds.
+    pub remote: u64,
 }
 
 impl Latency {
     /// R10000 / Origin 2000 ballpark: ~10-cycle L2, ~80-cycle local
     /// memory, ~50-cycle software TLB refill. `prefetch` is 0: the paper's
-    /// platform model stays exactly the §2/§7 stall estimate.
+    /// platform model stays exactly the §2/§7 stall estimate. `remote` is
+    /// the Origin 2000's ~3× local-memory penalty for a one-hop remote
+    /// line.
     pub fn r10000() -> Latency {
-        Latency { l2: 10, mem: 80, tlb: 50, prefetch: 0 }
+        Latency { l2: 10, mem: 80, tlb: 50, prefetch: 0, remote: 240 }
     }
 }
 
@@ -325,8 +334,9 @@ impl MachineModel {
             tlb: Some(TlbParams { entries: 1536, page_words: 512 }),
             // prefetch ≈ 3/4 of the memory trip: modern cores overlap a
             // timely T0 prefetch with the fold almost entirely, but DRAM
-            // queueing keeps some exposure
-            latency: Latency { l2: 14, mem: 220, tlb: 30, prefetch: 160 },
+            // queueing keeps some exposure; remote ≈ 3× local DRAM for a
+            // cross-socket line
+            latency: Latency { l2: 14, mem: 220, tlb: 30, prefetch: 160, remote: 660 },
         }
     }
 
@@ -489,7 +499,7 @@ mod tests {
 
     #[test]
     fn stall_cycles_shapes() {
-        let lat = Latency { l2: 10, mem: 100, tlb: 50, prefetch: 0 };
+        let lat = Latency { l2: 10, mem: 100, tlb: 50, prefetch: 0, remote: 300 };
         let one = CacheStats { cold_misses: 2, ..CacheStats::default() };
         // single level: misses go straight to memory
         assert_eq!(LoadProfile::single(one).stall_cycles(lat), 200);
@@ -503,7 +513,7 @@ mod tests {
 
     #[test]
     fn prefetched_stalls_discount_memory_cold_misses_only() {
-        let lat = Latency { l2: 10, mem: 100, tlb: 50, prefetch: 60 };
+        let lat = Latency { l2: 10, mem: 100, tlb: 50, prefetch: 60, remote: 300 };
         // single level: 2 cold + 1 replacement miss → 300 cycles base;
         // prefetch hides 60 of each *cold* miss only
         let one = CacheStats { cold_misses: 2, replacement_misses: 1, ..CacheStats::default() };

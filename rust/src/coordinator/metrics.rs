@@ -132,6 +132,11 @@ pub struct Metrics {
     pub halo_words_loaded: AtomicU64,
     /// `HaloMsg` exchanges performed by block-decomposed solves.
     pub halo_exchanges: AtomicU64,
+    /// Ghost-zone points recomputed redundantly by deep-halo supersteps
+    /// (decomposed solves with `shard_time_tile > 1`) — counted apart from
+    /// `halo_words_loaded` so the exchanged-vs-recomputed trade stays
+    /// visible and the PEM ladder stays honest.
+    pub halo_redundant_words: AtomicU64,
     /// Requests that joined an in-flight computation for the same
     /// canonical key instead of recomputing (single-flight collapsing).
     pub single_flight_collapsed: AtomicU64,
@@ -189,6 +194,7 @@ impl Metrics {
             .set("native_micros", self.native_micros.load(Ordering::Relaxed))
             .set("halo_words_loaded", self.halo_words_loaded.load(Ordering::Relaxed))
             .set("halo_exchanges", self.halo_exchanges.load(Ordering::Relaxed))
+            .set("halo_redundant_words", self.halo_redundant_words.load(Ordering::Relaxed))
             .set("single_flight_collapsed", self.single_flight_collapsed.load(Ordering::Relaxed))
             .set("server_connections", self.server_connections.load(Ordering::Relaxed))
             .set("server_requests", self.server_requests.load(Ordering::Relaxed))
@@ -225,6 +231,7 @@ mod tests {
         assert!(s.contains("\"sim_memo_hits\":0"));
         assert!(s.contains("\"sim_memo_misses\":0"));
         assert!(s.contains("\"memo_evictions\":0"));
+        assert!(s.contains("\"halo_redundant_words\":0"));
     }
 
     #[test]

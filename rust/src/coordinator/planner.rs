@@ -82,6 +82,14 @@ pub struct Plan {
     /// the coordinator must stream shard blocks from disk tiles instead of
     /// holding both fields resident.
     pub out_of_core: bool,
+    /// Superstep depth `k` for the *decomposed* solve path (DESIGN.md
+    /// §2.12): halos deepen to `k·r` and shards exchange once per `k`
+    /// steps. The config override when given, else chosen jointly with the
+    /// shard grid by [`choose_shard_time_tile`]; `1` (classic
+    /// one-exchange-per-step) whenever the deep sweep slab overflows the
+    /// deepest cache or the redundant ghost recompute outweighs the saved
+    /// exchange traffic.
+    pub shard_time_tile: usize,
     /// Software-prefetch distance (words ahead) the native row kernel
     /// should run with: the config override when given, else
     /// `MachineModel::prefetch_distance()` (0 on machines whose latency
@@ -112,6 +120,15 @@ pub struct PlannerConfig {
     /// Override for the kernel's software-prefetch distance in words
     /// (CLI `--prefetch-distance`); `None` lets the machine model choose.
     pub prefetch_distance: Option<usize>,
+    /// Superstep depth override for decomposed solves (CLI `--time-tile`):
+    /// `Some(k)` forces `k`-deep halos verbatim (clamped to ≥ 1); `None`
+    /// lets [`choose_shard_time_tile`] pick from the machine model.
+    pub time_tile: Option<usize>,
+    /// Pin shard workers to cores (CLI `--numa`): the coordinator builds
+    /// its pool with `ThreadPool::new_pinned`, so first-touch allocation
+    /// places each shard's blocks on its worker's NUMA node and the
+    /// worker stays there for every superstep.
+    pub numa: bool,
 }
 
 impl Default for PlannerConfig {
@@ -123,6 +140,8 @@ impl Default for PlannerConfig {
             shard_grid: None,
             ram_budget_words: None,
             prefetch_distance: None,
+            time_tile: None,
+            numa: false,
         }
     }
 }
@@ -272,6 +291,69 @@ pub fn temporal_solve_traffic_wpp(grid: &GridDesc, r: usize, k: usize, tile: &[u
     traffic / (interior * k as f64)
 }
 
+/// Choose the superstep depth `k` for a block-decomposed solve over
+/// `dims` split as `shard_grid` (DESIGN.md §2.12) — the shard-layer twin
+/// of [`choose_time_tile`], deciding how many steps one halo exchange
+/// should feed.
+///
+/// Two tests, both against the machine model:
+///
+/// 1. **Cache residency** (the §6 criterion in time): a shard's `k`-step
+///    sweep ping-pongs over its `k·r`-deep halo box, and the sweep is
+///    only memory-free if its working slab — `diameter` planes of the
+///    box, i.e. `(2r+1) · Π(box dims except the last)` — stays resident
+///    in the deepest cache. Two such slabs (ping + pong) share
+///    [`MachineModel::scratch_words`], so each gets half.
+/// 2. **Cost**: a depth-`k` superstep moves `|halo box| + |owned|` words
+///    through memory once, pulls `halo_words(k)` ghost words at the
+///    cross-node [`crate::cache::Latency::remote`] price, and burns
+///    `redundant_points(k)` ghost-point recomputes; a classic step pays
+///    the full `|halo box| + |owned|` memory sweep *every* step plus a
+///    `halo_words(1)` remote exchange. `k` wins only while
+///    `cost(k)/k < cost(1)` — so k degrades to 1 exactly when the
+///    redundant halo compute (plus the deeper exchange) exceeds the
+///    sweeps it saves.
+///
+/// Returns the deepest winning `k ≤ MAX_TIME_TILE`; 1 means exchange
+/// every step. Single-shard plans always get 1 (no exchange to amortize,
+/// and a deep sweep would only add ghost recompute).
+pub fn choose_shard_time_tile(machine: &MachineModel, dims: &[usize], shard_grid: &[usize], r: usize) -> usize {
+    use crate::shard::{box_words, ShardPlan};
+    if r == 0 || dims.is_empty() || dims.iter().any(|&n| n <= 2 * r) {
+        return 1;
+    }
+    let base = ShardPlan::new(dims, shard_grid, r);
+    if base.num_shards() <= 1 {
+        return 1;
+    }
+    let lat = machine.latency;
+    let budget = (machine.scratch_words() / 2) as u64; // ping-pong slab pair
+    let diam = (2 * r + 1) as u64;
+    // one fused multiply-add per stencil tap per recomputed ghost point
+    let point_cycles = 2 * (2 * dims.len() as u64 * r as u64 + 1);
+    let sweep_words = |p: &ShardPlan| -> u64 {
+        (0..p.num_shards()).map(|s| box_words(&p.halo_box(s)) + box_words(&p.owned_box(s))).sum()
+    };
+    let classic = sweep_words(&base) * lat.mem + base.halo_words() * lat.remote;
+    for k in (2..=MAX_TIME_TILE).rev() {
+        let deep = ShardPlan::with_depth(dims, shard_grid, r, k);
+        let resident = (0..deep.num_shards()).all(|s| {
+            let b = deep.halo_box(s);
+            let lead: u64 = b[..b.len() - 1].iter().map(|rg| (rg.end - rg.start).max(0) as u64).product();
+            diam * lead <= budget
+        });
+        if !resident {
+            continue;
+        }
+        let per_super =
+            sweep_words(&deep) * lat.mem + deep.halo_words() * lat.remote + deep.redundant_points(k) * point_cycles;
+        if per_super < classic * k as u64 {
+            return k;
+        }
+    }
+    1
+}
+
 /// Build the streaming traversal for `choice` over the (padded) grid — the
 /// single construction point shared by the coordinator's Analyze path and
 /// the native numeric sweep, so analysis and computation always walk the
@@ -362,6 +444,26 @@ pub fn plan(config: &PlannerConfig, dims: &[usize], stencil: &Stencil, p: usize)
             crate::shard::refine_grid_for_budget(dims, stencil.radius(), shard_grid, config.ram_budget_words.unwrap());
     }
 
+    // Superstep depth for the decomposed path: the override verbatim, else
+    // model-chosen jointly with the grid above — then walked back down if
+    // the deep plan's ping-pong working set would blow the RAM budget the
+    // out-of-core concurrency divides by.
+    let mut shard_time_tile = match config.time_tile {
+        Some(k) => k.max(1),
+        None => choose_shard_time_tile(&config.machine, dims, &shard_grid, stencil.radius()),
+    };
+    if config.time_tile.is_none() {
+        if let Some(b) = config.ram_budget_words {
+            while shard_time_tile > 1
+                && crate::shard::ShardPlan::with_depth(dims, &shard_grid, stencil.radius(), shard_time_tile)
+                    .peak_working_words()
+                    > b
+            {
+                shard_time_tile -= 1;
+            }
+        }
+    }
+
     Plan {
         dims: dims.to_vec(),
         storage_dims,
@@ -379,6 +481,7 @@ pub fn plan(config: &PlannerConfig, dims: &[usize], stencil: &Stencil, p: usize)
         time_tile_dims,
         shard_grid,
         out_of_core,
+        shard_time_tile,
         prefetch_distance: config.prefetch_distance.unwrap_or_else(|| config.machine.prefetch_distance()),
     }
 }
@@ -605,6 +708,43 @@ mod tests {
         let deep = temporal_solve_traffic_wpp(&g, 2, 5, &[124, 25, 25]);
         assert!(deep < fused, "deep wpp = {deep} ≥ fused {fused}");
         assert!(deep < CLASSIC_SOLVE_TRAFFIC_WPP / 3.0, "deep wpp = {deep}");
+    }
+
+    #[test]
+    fn shard_time_tile_degrades_to_one_when_deep_slab_overflows_the_cache() {
+        // L1-only r10000: 4096 words, slab budget 2048. A 128³/2×2×2 deep
+        // halo box leads with 66·66+ planes — diameter·lead ≈ 22K words —
+        // so no k ≥ 2 is cache-resident and the chooser must fall back to
+        // exchange-every-step.
+        let m = MachineModel::r10000();
+        assert_eq!(choose_shard_time_tile(&m, &[128, 128, 128], &[2, 2, 2], 2), 1);
+        let c = PlannerConfig { shard_grid: Some(vec![2, 2, 2]), ..cfg() };
+        let p = plan(&c, &[128, 128, 128], &Stencil::star13(), 1);
+        assert_eq!(p.shard_time_tile, 1);
+        // single-shard plans never deepen: there is no exchange to amortize
+        let full = MachineModel::r10000_full();
+        assert_eq!(choose_shard_time_tile(&full, &[32, 32, 32], &[1, 1, 1], 2), 1);
+    }
+
+    #[test]
+    fn shard_time_tile_engages_when_the_deep_slab_is_cache_resident() {
+        // r10000-full: 512K-word L2. The same 128³/2×2×2 deep slab
+        // (5·80·80 ≈ 32K words) fits with room to spare, and the modelled
+        // superstep cost beats k classic sweeps — the chooser goes deep.
+        let full = MachineModel::r10000_full();
+        let k = choose_shard_time_tile(&full, &[128, 128, 128], &[2, 2, 2], 2);
+        assert!(k >= 4, "k = {k}");
+        let c = PlannerConfig {
+            machine: MachineModel::r10000_full(),
+            shard_grid: Some(vec![2, 2, 2]),
+            ..cfg()
+        };
+        assert_eq!(plan(&c, &[128, 128, 128], &Stencil::star13(), 1).shard_time_tile, k);
+        // an explicit override is taken verbatim, clamped to ≥ 1
+        let c = PlannerConfig { time_tile: Some(3), ..c };
+        assert_eq!(plan(&c, &[128, 128, 128], &Stencil::star13(), 1).shard_time_tile, 3);
+        let c = PlannerConfig { time_tile: Some(0), ..c };
+        assert_eq!(plan(&c, &[128, 128, 128], &Stencil::star13(), 1).shard_time_tile, 1);
     }
 
     #[test]

@@ -36,7 +36,11 @@ pub fn run(quick: bool) -> Table {
     let pool = ThreadPool::with_default_parallelism();
     let mut table = Table::new(
         &format!("HALO: measured ghost words/point vs PEM bound, {n}³ star13, {steps} steps"),
-        &["shard grid", "shards", "halo msgs/step", "measured wpp", "PEM bound wpp", "meas/bound"],
+        // "redundant wpp" counts ghost points recomputed instead of
+        // exchanged — identically zero at depth 1, where every ghost word
+        // arrives over a HaloMsg (the column exists so the classic ladder
+        // and the superstep ladder below read side by side).
+        &["shard grid", "shards", "halo msgs/step", "measured wpp", "PEM bound wpp", "meas/bound", "redundant wpp"],
     );
     for g in shard_grids(quick) {
         let plan = Arc::new(ShardPlan::new(&dims, &g, stencil.radius()));
@@ -53,10 +57,49 @@ pub fn run(quick: bool) -> Table {
             format!("{measured:.4}"),
             format!("{bound:.4}"),
             format!("{ratio:.2}"),
+            format!("{:.4}", out.halo_redundant_words as f64 / steps as f64 / points),
         ]);
     }
     println!("{}", table.to_text());
     save_csv(&table, "halo");
+    table
+}
+
+/// Superstep-depth ladder (DESIGN.md §2.12): the same 2×2×2 decomposition
+/// swept `k` steps per exchange round. Exchange rounds drop to `⌈steps/k⌉`
+/// while ghost cells inside the deepened halo are recomputed redundantly —
+/// the table shows both sides of that trade, plus the final norm, which is
+/// identical down the ladder because the superstep path is bitwise equal
+/// to `k` classic steps.
+pub fn run_temporal(quick: bool) -> Table {
+    let n: usize = if quick { 24 } else { 48 };
+    let dims = vec![n, n, n];
+    let stencil = Stencil::star13();
+    let steps = 8usize;
+    let alpha = NativeBackend::stable_alpha(&stencil);
+    let pool = ThreadPool::with_default_parallelism();
+    let g = vec![2usize, 2, 2];
+    let mut table = Table::new(
+        &format!("HALO-TEMPORAL: exchange rounds vs redundant recompute, {n}³ star13, grid 2x2x2, {steps} steps"),
+        &["k", "rounds", "rounds/step", "exchanged wpp/step", "redundant wpp/step", "final ||u||"],
+    );
+    for k in [1usize, 2, 4, 8] {
+        let plan = Arc::new(ShardPlan::with_depth(&dims, &g, stencil.radius(), k));
+        let out = shard::solve_blocks(&plan, &stencil, alpha, steps, 0xBEEF, &ShardStorage::InMemory, &pool, None)
+            .expect("in-memory superstep solve");
+        let points = plan.num_points() as f64;
+        let rounds = out.halo_words_loaded / plan.halo_words().max(1);
+        table.add_row(vec![
+            k.to_string(),
+            rounds.to_string(),
+            format!("{:.3}", rounds as f64 / steps as f64),
+            format!("{:.4}", out.halo_words_loaded as f64 / steps as f64 / points),
+            format!("{:.4}", out.halo_redundant_words as f64 / steps as f64 / points),
+            format!("{:.6}", out.final_norm),
+        ]);
+    }
+    println!("{}", table.to_text());
+    save_csv(&table, "halo_temporal");
     table
 }
 
@@ -72,6 +115,35 @@ mod tests {
             let measured: f64 = row[3].parse().unwrap();
             let bound: f64 = row[4].parse().unwrap();
             assert!(measured <= bound * 1.0001, "clipped halo must sit under the PEM bound: {row:?}");
+        }
+    }
+
+    #[test]
+    fn classic_ladder_recomputes_nothing() {
+        let t = run(true);
+        for row in t.rows() {
+            assert_eq!(row[6], "0.0000", "depth-1 exchange must not recompute ghost cells: {row:?}");
+        }
+    }
+
+    #[test]
+    fn temporal_ladder_trades_rounds_for_recompute_at_fixed_answer() {
+        let t = run_temporal(true);
+        let rows = t.rows();
+        assert_eq!(rows.len(), 4);
+        // k = 1 is the classic path: one round per step, zero recompute.
+        assert_eq!(rows[0][0], "1");
+        assert_eq!(rows[0][2], "1.000");
+        assert_eq!(rows[0][4], "0.0000");
+        for w in rows.windows(2) {
+            let (k0, k1): (usize, usize) = (w[0][0].parse().unwrap(), w[1][0].parse().unwrap());
+            let (r0, r1): (u64, u64) = (w[0][1].parse().unwrap(), w[1][1].parse().unwrap());
+            assert_eq!(r0 as usize, 8usize.div_ceil(k0), "rounds must be ceil(steps/k): {:?}", w[0]);
+            assert_eq!(r1 as usize, 8usize.div_ceil(k1), "rounds must be ceil(steps/k): {:?}", w[1]);
+            let (c0, c1): (f64, f64) = (w[0][4].parse().unwrap(), w[1][4].parse().unwrap());
+            assert!(c1 > c0, "deeper halos must recompute more ghost cells: {c0} vs {c1}");
+            // the answer itself does not move down the ladder
+            assert_eq!(w[0][5], w[1][5], "superstep depth must not change the solution");
         }
     }
 

@@ -129,7 +129,7 @@ pub fn run(id: &str, quick: bool) -> Result<Vec<Table>, String> {
         "bounds" => Ok(vec![bounds_table::run(quick)]),
         "multirhs" => Ok(vec![multirhs::run(quick)]),
         "appb" => Ok(vec![appb::run()]),
-        "halo" => Ok(vec![halo::run(quick)]),
+        "halo" => Ok(vec![halo::run(quick), halo::run_temporal(quick)]),
         // serving-layer replay (not a paper artifact, so not part of "all";
         // the `stencilcache replay` subcommand exposes the full knob set)
         "replay" => Ok(vec![replay::run(&replay::ReplayConfig::paper(quick)).table]),

@@ -11,7 +11,7 @@
 //! stencilcache experiment <fig4|fig5a|fig5b|fig5corr|sec3|bounds|multirhs|appb|all> [--quick]
 //!     regenerate a paper figure/table
 //! stencilcache solve --n 64 --steps 100 [--shard-grid 2,2,2] [--ram-budget-mb 256]
-//!                    [--prefetch-distance W]
+//!                    [--prefetch-distance W] [--time-tile K] [--numa]
 //!     run the heat solver (PJRT when artifacts exist, native otherwise).
 //!     --shard-grid forces the block decomposition (DESIGN.md §2.9);
 //!     --ram-budget-mb caps resident field memory — solves whose working
@@ -19,6 +19,11 @@
 //!     --prefetch-distance overrides how many words ahead the native row
 //!     kernel software-prefetches (0 disables; default: the machine
 //!     model's choice, see DESIGN.md §2.11).
+//!     --time-tile forces the sharded superstep depth k (halos deepen to
+//!     k·r and shards exchange once per k steps; default: the planner
+//!     chooses k from the machine model, see DESIGN.md §2.12).
+//!     --numa pins shard workers to cores so first-touch keeps each
+//!     shard's pages on its worker's node.
 //! stencilcache serve-demo [--requests 64]
 //!     demo of the serving layer (submit/drain) over a mixed workload
 //! stencilcache serve [--port 7077] [--cap 64] [--workers N]
@@ -63,7 +68,7 @@ use stencilcache::util::logger;
 
 fn main() {
     logger::init();
-    let args = match Args::from_env(&["quick", "verbose", "no-auto-pad", "bless", "open-loop"]) {
+    let args = match Args::from_env(&["quick", "verbose", "no-auto-pad", "bless", "open-loop", "numa"]) {
         Ok(a) => a,
         Err(e) => {
             eprintln!("error: {e}");
@@ -213,10 +218,19 @@ fn cmd_solve(args: &Args) -> i32 {
             Some(_) => Some(args.get_usize("prefetch-distance", 0)?),
             None => None,
         };
+        // --time-tile forces the sharded superstep depth; without it the
+        // planner picks k from the machine model (DESIGN.md §2.12).
+        let time_tile = match args.get("time-tile") {
+            Some(_) => Some(args.get_usize("time-tile", 1)?.max(1)),
+            None => None,
+        };
+        let numa = args.flag("numa");
         let mk_config = || PlannerConfig {
             shard_grid: shard_grid.clone(),
             ram_budget_words,
             prefetch_distance,
+            time_tile,
+            numa,
             ..PlannerConfig::default()
         };
         // PJRT when artifacts are available, the native backend otherwise;
@@ -244,8 +258,9 @@ fn cmd_solve(args: &Args) -> i32 {
         // only on an explicit shard grid or an out-of-core verdict
         if shard_grid.is_some() || resp.plan.out_of_core {
             println!(
-                "(block-decomposed solve: shard grid {:?}{})",
+                "(block-decomposed solve: shard grid {:?}, time tile k={}{})",
                 resp.plan.shard_grid,
+                resp.plan.shard_time_tile,
                 if resp.plan.out_of_core { ", out-of-core disk tiles" } else { "" }
             );
         }

@@ -65,7 +65,7 @@ mod profile_tests {
         p.push(Level::L1, mk(10, 5));
         p.push(Level::L2, mk(3, 1));
         p.push(Level::Tlb, mk(2, 0));
-        let lat = Latency { l2: 10, mem: 100, tlb: 50, prefetch: 0 };
+        let lat = Latency { l2: 10, mem: 100, tlb: 50, prefetch: 0, remote: 300 };
         let t = load_profile_table("profile", &p, 50, lat);
         assert_eq!(t.num_rows(), 3);
         assert_eq!(t.rows()[0][0], "L1");

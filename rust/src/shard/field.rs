@@ -31,8 +31,8 @@ use std::fs::{self, File};
 use std::io::{BufWriter, Read, Seek, SeekFrom, Write};
 use std::ops::Range;
 use std::path::PathBuf;
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Arc;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 /// Storage backend selector for a [`ShardedField`].
@@ -373,11 +373,18 @@ pub struct BlockSolveOutcome {
     pub steps: Vec<StepNorms>,
     /// ‖u‖₂ after the last step (input norm when `steps == 0`).
     pub final_norm: f64,
-    /// Ghost words carried by [`HaloMsg`]s, summed over shards and steps —
-    /// equals `steps · plan.halo_words()` (the exchange is exact).
+    /// Ghost words carried by [`HaloMsg`]s, summed over shards and
+    /// exchange rounds — equals `rounds · plan.halo_words()` with
+    /// `rounds = ⌈steps / depth⌉` (the exchange is exact; one full
+    /// `depth·r`-deep exchange per superstep, `steps` rounds classic).
     pub halo_words_loaded: u64,
-    /// Number of [`HaloMsg`]s exchanged, summed over shards and steps.
+    /// Number of [`HaloMsg`]s exchanged, summed over shards and rounds.
     pub halo_exchanges: u64,
+    /// Ghost-zone stencil points recomputed redundantly by deep sweeps —
+    /// work a classic per-step exchange would not do, counted separately
+    /// from the exchanged words so the measured-vs-PEM ladder stays
+    /// honest. Always 0 for depth-1 plans.
+    pub halo_redundant_words: u64,
 }
 
 struct ShardStepOut {
@@ -386,6 +393,18 @@ struct ShardStepOut {
     r2: f64,
     halo_words: u64,
     halo_msgs: u64,
+}
+
+/// Per-shard result of one `kk`-step deep-halo superstep.
+struct ShardSuperOut {
+    block: Option<Vec<f64>>,
+    /// Per sweep-step `(Σ u'², Σ (Ku)²)` partials over *owned* points, in
+    /// the exact add order of the classic per-step sweep.
+    norms: Vec<(f64, f64)>,
+    halo_words: u64,
+    halo_msgs: u64,
+    /// Stencil applications beyond what `kk` classic steps would compute.
+    redundant: u64,
 }
 
 /// Copy a column-major `region` payload into the halo-extended buffer.
@@ -521,6 +540,200 @@ fn step_shard(
     }
 }
 
+/// Superstep scheduling unit for the in-memory dependency graph: packs
+/// deliver ghost regions, computes run the moment their inbox fills.
+enum SuperTask {
+    /// Read the shard's outbound ghost regions from its old block and
+    /// deliver one [`HaloMsg`] per destination (no dependencies).
+    Pack(usize),
+    /// Every inbound halo landed: run the shard's deep sweep.
+    Compute(usize),
+}
+
+/// Advance one shard `kk` steps from a *single* deep-halo exchange.
+///
+/// The `depth·r`-deep halo buffer is assembled once — the shard's own old
+/// block plus one [`HaloMsg`] per source (pre-delivered by pack tasks on
+/// the in-memory graph path, or pulled straight from the immutable `cur`
+/// field on the out-of-core wave path) — then a trapezoidal sweep runs
+/// `kk` steps ping-ponging two halo-box-sized buffers: sweep-step `s`
+/// rewrites the owned box grown by `(kk − s)·r` (clipped to the grid), so
+/// every operand of step `s + 1` is already updated and step `kk` lands
+/// exactly on the owned box.
+///
+/// Bitwise contract (pinned by `tests/shard.rs`): every K-interior point
+/// goes through [`kernel::update_row`], whose per-point values are
+/// position-independent; boundary-shell points copy through; and norms
+/// accumulate **only at owned points**, in exactly the scalar add order
+/// of [`step_shard`] — so both the extracted block and the per-step norm
+/// partials are bitwise equal to `kk` classic exchanged steps.
+#[allow(clippy::too_many_arguments)]
+fn superstep_shard(
+    plan: &ShardPlan,
+    stencil: &Stencil,
+    alpha: f64,
+    cur: &ShardedField,
+    next: &ShardedField,
+    s: usize,
+    kk: usize,
+    interior: &[Range<i64>],
+    msgs: Option<Vec<HaloMsg>>,
+    cfg: &KernelCfg,
+) -> Result<ShardSuperOut> {
+    let d = plan.ndim();
+    let ext = plan.halo_box(s);
+    let estrides = box_strides(&ext);
+    let ext_len = box_words(&ext) as usize;
+    let mut a = vec![0.0f64; ext_len];
+    let owned = plan.owned_box(s);
+    let own_data = cur.read_box(s, &owned)?;
+    unpack_region(&mut a, &ext, &estrides, &owned, &own_data);
+    drop(own_data);
+    let (mut halo_words, mut halo_msgs) = (0u64, 0u64);
+    match msgs {
+        Some(list) => {
+            for m in &list {
+                debug_assert_eq!(m.dst, s);
+                halo_words += m.words();
+                halo_msgs += 1;
+                unpack_region(&mut a, &ext, &estrides, &m.region, &m.data);
+            }
+        }
+        None => {
+            for (src, region) in plan.sources_for(s) {
+                let data = cur.read_box(src, &region)?;
+                let m = HaloMsg { src, dst: s, region, data };
+                halo_words += m.words();
+                halo_msgs += 1;
+                unpack_region(&mut a, &ext, &estrides, &m.region, &m.data);
+            }
+        }
+    }
+    let mut b = vec![0.0f64; ext_len];
+    let coeffs = stencil.coeffs();
+    let deltas: Vec<i64> =
+        stencil.offsets().iter().map(|k| k.iter().zip(&estrides).map(|(&ki, &st)| ki * st as i64).sum()).collect();
+    // |owned ∩ interior| — what one classic exchanged step computes here
+    let classic_points: u64 = box_words(
+        &owned.iter().zip(interior).map(|(o, i)| o.start.max(i.start)..o.end.min(i.end)).collect::<Vec<_>>(),
+    );
+    let mut norms = Vec::with_capacity(kk);
+    let mut redundant = 0u64;
+    let mut flip = false; // false: a → b, true: b → a
+    for step in 1..=kk {
+        let bx = plan.sweep_box(s, kk, step);
+        let (src, dst): (&[f64], *mut f64) = if flip { (&b, a.as_mut_ptr()) } else { (&a, b.as_mut_ptr()) };
+        let mut acc = (0.0f64, 0.0f64);
+        let mut computed = 0u64;
+        let mut x: Vec<i64> = bx.iter().map(|rg| rg.start).collect();
+        'sweep: loop {
+            let mut base: i64 =
+                x.iter().zip(&ext).zip(&estrides).map(|((xi, e), st)| (xi - e.start) * *st as i64).sum();
+            let hi_int = (1..d).all(|i| x[i] >= interior[i].start && x[i] < interior[i].end);
+            let hi_own = (1..d).all(|i| x[i] >= owned[i].start && x[i] < owned[i].end);
+            // the dim-0 K-interior run of this row (empty off the shell)
+            let (ilo, ihi) = if hi_int {
+                let lo = interior[0].start.max(bx[0].start);
+                let hi = interior[0].end.min(bx[0].end);
+                if lo < hi {
+                    (lo, hi)
+                } else {
+                    (bx[0].start, bx[0].start)
+                }
+            } else {
+                (bx[0].start, bx[0].start)
+            };
+            // prefix copy-through (boundary shell or pure ghost rind);
+            // Σ v² continues only at owned points, like the classic sweep
+            for x0 in bx[0].start..ilo {
+                let v = src[base as usize];
+                // SAFETY: base indexes inside the ext buffer (x ∈ bx ⊆ ext).
+                unsafe { dst.add(base as usize).write(v) };
+                if hi_own && x0 >= owned[0].start && x0 < owned[0].end {
+                    acc.0 += v * v;
+                }
+                base += 1;
+            }
+            let run = (ihi - ilo) as usize;
+            if run > 0 {
+                // norm window: the owned sub-run (empty on off-owned rows)
+                let (nlo, nhi) = if hi_own {
+                    let lo = owned[0].start.max(ilo);
+                    let hi = owned[0].end.min(ihi);
+                    if lo < hi {
+                        (lo, hi)
+                    } else {
+                        (ilo, ilo)
+                    }
+                } else {
+                    (ilo, ilo)
+                };
+                // SAFETY: dst spans the ext buffer and never aliases src
+                // (ping-pong pair); every fold at `base + j + delta` stays
+                // inside the buffer because step-`s` operands lie one
+                // radius inside the previous sweep box, which was fully
+                // (re)written — or assembled, for step 1 — beforehand.
+                unsafe {
+                    kernel::update_row(
+                        coeffs,
+                        &deltas,
+                        src,
+                        base,
+                        alpha,
+                        run,
+                        (nlo - ilo) as usize,
+                        (nhi - ilo) as usize,
+                        dst.add(base as usize),
+                        &mut acc,
+                        cfg,
+                    );
+                }
+                computed += run as u64;
+                base += run as i64;
+            }
+            // suffix copy-through
+            for x0 in ihi..bx[0].end {
+                let v = src[base as usize];
+                // SAFETY: as above — base stays inside the ext buffer.
+                unsafe { dst.add(base as usize).write(v) };
+                if hi_own && x0 >= owned[0].start && x0 < owned[0].end {
+                    acc.0 += v * v;
+                }
+                base += 1;
+            }
+            let mut i = 1;
+            loop {
+                if i == d {
+                    break 'sweep;
+                }
+                x[i] += 1;
+                if x[i] < bx[i].end {
+                    break;
+                }
+                x[i] = bx[i].start;
+                i += 1;
+            }
+        }
+        norms.push(acc);
+        redundant += computed - classic_points;
+        flip = !flip;
+    }
+    // extract the owned block from the final ping-pong buffer
+    let fin: &[f64] = if flip { &b } else { &a };
+    let mut out = Vec::with_capacity(box_words(&owned) as usize);
+    for_each_row(&owned, |x, len| {
+        let off: usize =
+            x.iter().zip(&ext).zip(&estrides).map(|((xi, e), st)| (xi - e.start) as usize * *st as usize).sum();
+        out.extend_from_slice(&fin[off..off + len]);
+    });
+    if next.is_disk() {
+        next.write_block_shared(s, &out)?;
+        Ok(ShardSuperOut { block: None, norms, halo_words, halo_msgs, redundant })
+    } else {
+        Ok(ShardSuperOut { block: Some(out), norms, halo_words, halo_msgs, redundant })
+    }
+}
+
 /// Run `steps` explicit steps `u ← u + α·Ku` over the decomposition,
 /// returning the outcome **and** the final field (tests compare it
 /// bitwise against the unsharded path). See [`solve_blocks`] for the
@@ -599,36 +812,141 @@ pub fn solve_blocks_with_field_cfg(
     };
     let ids: Vec<usize> = (0..n).collect();
     let mut step_norms = Vec::with_capacity(steps);
-    let (mut hw, mut hx) = (0u64, 0u64);
-    for _ in 0..steps {
-        let t0 = Instant::now();
-        let (mut u2, mut r2) = (0.0f64, 0.0f64);
-        for wave in ids.chunks(conc.max(1)) {
-            let results = pool.scope_map(wave.len(), |w| {
-                step_shard(plan, stencil, alpha, &cur, &next, wave[w], interior.as_deref(), cfg)
-            });
-            for (w, res) in results.into_iter().enumerate() {
-                let r = res?;
-                if let Some(b) = r.block {
-                    next.set_block(wave[w], b);
+    let (mut hw, mut hx, mut hr) = (0u64, 0u64, 0u64);
+    if plan.depth() > 1 && interior.is_some() {
+        // ------- deep-halo superstep path (parallel temporal blocking) --
+        // One full depth·r exchange per superstep of up to `depth` sweep
+        // steps: exchange rounds drop to ⌈steps/depth⌉ and
+        // halo_words_loaded to rounds · plan.halo_words() exactly (tail
+        // supersteps still exchange the full deep halo — the accounting
+        // invariant the bench gate pins).
+        let ir = interior.as_deref().unwrap();
+        let k = plan.depth();
+        let mut done = 0usize;
+        while done < steps {
+            let kk = k.min(steps - done);
+            let t0 = Instant::now();
+            let supers: Vec<ShardSuperOut> = if cur.is_disk() {
+                // out-of-core: chunked waves under the RAM budget; halos
+                // are pulled straight from `cur`, which stays immutable
+                // for the whole superstep
+                let mut slots: Vec<Option<ShardSuperOut>> = (0..n).map(|_| None).collect();
+                for wave in ids.chunks(conc.max(1)) {
+                    let results = pool.scope_map(wave.len(), |w| {
+                        superstep_shard(plan, stencil, alpha, &cur, &next, wave[w], kk, ir, None, cfg)
+                    });
+                    for (w, res) in results.into_iter().enumerate() {
+                        slots[wave[w]] = Some(res?);
+                    }
                 }
-                // partials combine in shard order — independent of the
-                // wave size, so norms don't depend on the RAM budget
-                u2 += r.u2;
-                r2 += r.r2;
+                slots.into_iter().map(|o| o.expect("missing shard result")).collect()
+            } else {
+                // in-memory: dependency-driven pack/compute graph on the
+                // pool — no wave barrier; a shard's deep sweep launches
+                // the moment its own neighbors' buffers land, not when
+                // the slowest shard of a wave finishes
+                let srcs: Vec<Vec<(usize, Vec<Range<i64>>)>> =
+                    ids.iter().map(|&sh| plan.sources_for(sh)).collect();
+                let mut outbound: Vec<Vec<(usize, Vec<Range<i64>>)>> = vec![Vec::new(); n];
+                for (dst, list) in srcs.iter().enumerate() {
+                    for (src, region) in list {
+                        outbound[*src].push((dst, region.clone()));
+                    }
+                }
+                let pending: Vec<AtomicUsize> = srcs.iter().map(|l| AtomicUsize::new(l.len())).collect();
+                let inbox: Vec<Mutex<Vec<HaloMsg>>> = (0..n).map(|_| Mutex::new(Vec::new())).collect();
+                let slots: Vec<Mutex<Option<Result<ShardSuperOut>>>> = (0..n).map(|_| Mutex::new(None)).collect();
+                let mut seed_tasks: Vec<SuperTask> =
+                    (0..n).filter(|&sh| !outbound[sh].is_empty()).map(SuperTask::Pack).collect();
+                seed_tasks.extend((0..n).filter(|&sh| srcs[sh].is_empty()).map(SuperTask::Compute));
+                pool.scope_tasks(seed_tasks, |task, sink| match task {
+                    SuperTask::Pack(src) => {
+                        for (dst, region) in &outbound[src] {
+                            let data =
+                                cur.read_box(src, region).expect("in-memory halo pack cannot fail");
+                            inbox[*dst].lock().unwrap().push(HaloMsg {
+                                src,
+                                dst: *dst,
+                                region: region.clone(),
+                                data,
+                            });
+                            if pending[*dst].fetch_sub(1, Ordering::SeqCst) == 1 {
+                                sink.push(SuperTask::Compute(*dst));
+                            }
+                        }
+                    }
+                    SuperTask::Compute(sh) => {
+                        let msgs = std::mem::take(&mut *inbox[sh].lock().unwrap());
+                        let res = superstep_shard(plan, stencil, alpha, &cur, &next, sh, kk, ir, Some(msgs), cfg);
+                        *slots[sh].lock().unwrap() = Some(res);
+                    }
+                });
+                let mut out = Vec::with_capacity(n);
+                for m in slots {
+                    out.push(m.into_inner().unwrap().expect("missing shard result")?);
+                }
+                out
+            };
+            // combine per-step partials in shard order — the same add
+            // sequence as the classic per-step loop, so norms are bitwise
+            // independent of the scheduling
+            let mut per_step = vec![(0.0f64, 0.0f64); kk];
+            for (sh, r) in supers.into_iter().enumerate() {
+                if let Some(bk) = r.block {
+                    next.set_block(sh, bk);
+                }
+                for (t, &(u2, r2)) in r.norms.iter().enumerate() {
+                    per_step[t].0 += u2;
+                    per_step[t].1 += r2;
+                }
                 hw += r.halo_words;
                 hx += r.halo_msgs;
+                hr += r.redundant;
             }
+            let micros = (t0.elapsed().as_micros() as u64 / kk as u64).max(1);
+            for &(u2, r2) in &per_step {
+                step_norms.push(StepNorms { u2, r2, micros });
+            }
+            std::mem::swap(&mut cur, &mut next);
+            done += kk;
         }
-        step_norms.push(StepNorms { u2, r2, micros: t0.elapsed().as_micros() as u64 });
-        std::mem::swap(&mut cur, &mut next);
+    } else {
+        // ----------------- classic one-exchange-per-step path ----------
+        for _ in 0..steps {
+            let t0 = Instant::now();
+            let (mut u2, mut r2) = (0.0f64, 0.0f64);
+            for wave in ids.chunks(conc.max(1)) {
+                let results = pool.scope_map(wave.len(), |w| {
+                    step_shard(plan, stencil, alpha, &cur, &next, wave[w], interior.as_deref(), cfg)
+                });
+                for (w, res) in results.into_iter().enumerate() {
+                    let r = res?;
+                    if let Some(b) = r.block {
+                        next.set_block(wave[w], b);
+                    }
+                    // partials combine in shard order — independent of the
+                    // wave size, so norms don't depend on the RAM budget
+                    u2 += r.u2;
+                    r2 += r.r2;
+                    hw += r.halo_words;
+                    hx += r.halo_msgs;
+                }
+            }
+            step_norms.push(StepNorms { u2, r2, micros: t0.elapsed().as_micros() as u64 });
+            std::mem::swap(&mut cur, &mut next);
+        }
     }
     let final_norm = match step_norms.last() {
         Some(sn) => sn.u2.sqrt(),
         None => cur.norm_sq()?.sqrt(),
     };
-    let outcome =
-        BlockSolveOutcome { steps: step_norms, final_norm, halo_words_loaded: hw, halo_exchanges: hx };
+    let outcome = BlockSolveOutcome {
+        steps: step_norms,
+        final_norm,
+        halo_words_loaded: hw,
+        halo_exchanges: hx,
+        halo_redundant_words: hr,
+    };
     Ok((outcome, cur))
 }
 

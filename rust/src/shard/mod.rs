@@ -109,12 +109,23 @@ pub struct ShardPlan {
     /// to `dims[i]`; axis-shard `k` owns `cuts[i][k]..cuts[i][k+1]`.
     cuts: Vec<Vec<i64>>,
     r: usize,
+    /// Temporal halo depth: halo boxes extend `depth · r` per side so one
+    /// exchange feeds a `depth`-step sweep. Classic single-step exchange
+    /// is `depth == 1`.
+    depth: usize,
 }
 
 impl ShardPlan {
     /// Decompose `dims` into `shard_grid[i]` slabs per axis with ghost
     /// width `r`. Axis counts are clamped to `1..=dims[i]`.
     pub fn new(dims: &[usize], shard_grid: &[usize], r: usize) -> ShardPlan {
+        ShardPlan::with_depth(dims, shard_grid, r, 1)
+    }
+
+    /// [`ShardPlan::new`] with a temporal halo depth: ghost regions are
+    /// `depth · r` wide, sized for `depth` stencil applications between
+    /// exchanges. `depth` is clamped to ≥ 1.
+    pub fn with_depth(dims: &[usize], shard_grid: &[usize], r: usize, depth: usize) -> ShardPlan {
         assert!(!dims.is_empty(), "zero-dimensional shard plan");
         assert_eq!(dims.len(), shard_grid.len(), "shard grid arity mismatch");
         assert!(dims.iter().all(|&n| n >= 1), "dims must be positive: {dims:?}");
@@ -127,7 +138,7 @@ impl ShardPlan {
             c.push(n as i64);
             cuts.push(c);
         }
-        ShardPlan { dims: dims.to_vec(), grid, cuts, r }
+        ShardPlan { dims: dims.to_vec(), grid, cuts, r, depth: depth.max(1) }
     }
 
     pub fn ndim(&self) -> usize {
@@ -146,6 +157,11 @@ impl ShardPlan {
     /// Ghost width (stencil radius).
     pub fn radius(&self) -> usize {
         self.r
+    }
+
+    /// Temporal halo depth (steps one exchange feeds); 1 = classic.
+    pub fn depth(&self) -> usize {
+        self.depth
     }
 
     /// Ascending cut coordinates along `axis`: `shard_grid()[axis] + 1`
@@ -196,16 +212,29 @@ impl ShardPlan {
         c.iter().zip(&self.cuts).map(|(&k, cut)| cut[k]..cut[k + 1]).collect()
     }
 
-    /// The owned box grown by `r` per side, clipped to the grid — the
-    /// region shard `s` must hold to apply the stencil at every owned
-    /// interior point.
+    /// The owned box grown by `depth · r` per side, clipped to the grid —
+    /// the region shard `s` must hold to apply `depth` stencil sweeps at
+    /// every owned interior point without a fresh exchange.
     pub fn halo_box(&self, s: usize) -> Vec<Range<i64>> {
-        let r = self.r as i64;
+        self.grown_box(s, (self.depth * self.r) as i64)
+    }
+
+    /// The owned box grown by `g` per side, clipped to the grid.
+    fn grown_box(&self, s: usize, g: i64) -> Vec<Range<i64>> {
         self.owned_box(s)
             .iter()
             .zip(&self.dims)
-            .map(|(rg, &n)| (rg.start - r).max(0)..(rg.end + r).min(n as i64))
+            .map(|(rg, &n)| (rg.start - g).max(0)..(rg.end + g).min(n as i64))
             .collect()
+    }
+
+    /// The box sweep-step `s` (1-based) of a `kk`-step superstep writes
+    /// for shard `shard`: the owned box grown by `(kk − s) · r`, clipped.
+    /// Step `kk` writes exactly the owned box; step 1 writes the widest
+    /// rind, one diameter inside the `kk·r`-deep halo box.
+    pub fn sweep_box(&self, shard: usize, kk: usize, s: usize) -> Vec<Range<i64>> {
+        debug_assert!(s >= 1 && s <= kk && kk <= self.depth);
+        self.grown_box(shard, ((kk - s) * self.r) as i64)
     }
 
     /// Which shard owns logical point `x`.
@@ -274,19 +303,45 @@ impl ShardPlan {
     }
 
     /// The PEM surface-to-volume bound on one exchange:
-    /// `shards · (Π(ŵ_i + 2r) − Π ŵ_i)` with `ŵ_i = ⌈n_i / g_i⌉` the
-    /// largest owned extent per axis. Boundary clipping only shrinks halo
-    /// boxes and the surface term is monotone in the extents, so
+    /// `shards · (Π(ŵ_i + 2·depth·r) − Π ŵ_i)` with `ŵ_i = ⌈n_i / g_i⌉`
+    /// the largest owned extent per axis. Boundary clipping only shrinks
+    /// halo boxes and the surface term is monotone in the extents, so
     /// [`ShardPlan::halo_words`] ≤ this bound always.
     pub fn pem_halo_bound(&self) -> u64 {
         let grown: u64 = self
             .dims
             .iter()
             .zip(&self.grid)
-            .map(|(&n, &g)| (n.div_ceil(g) + 2 * self.r) as u64)
+            .map(|(&n, &g)| (n.div_ceil(g) + 2 * self.depth * self.r) as u64)
             .product();
         let owned: u64 = self.dims.iter().zip(&self.grid).map(|(&n, &g)| n.div_ceil(g) as u64).product();
         self.num_shards() as u64 * (grown - owned)
+    }
+
+    /// Stencil-interior points a `kk`-step superstep computes *beyond*
+    /// what `kk` classic single steps would — the redundant ghost-zone
+    /// recompute that deep halos trade against exchange rounds:
+    /// `Σ_shards Σ_{s=1..kk} (|sweep_box(s) ∩ I| − |owned ∩ I|)` with `I`
+    /// the global stencil interior `[r, n_i − r)`.
+    pub fn redundant_points(&self, kk: usize) -> u64 {
+        let r = self.r as i64;
+        let interior: Vec<Range<i64>> = self.dims.iter().map(|&n| r..(n as i64 - r)).collect();
+        let clip = |b: &[Range<i64>]| -> u64 {
+            box_words(
+                &b.iter()
+                    .zip(&interior)
+                    .map(|(x, i)| x.start.max(i.start)..x.end.min(i.end))
+                    .collect::<Vec<_>>(),
+            )
+        };
+        let mut extra = 0u64;
+        for shard in 0..self.num_shards() {
+            let owned_i = clip(&self.owned_box(shard));
+            for s in 1..=kk.min(self.depth) {
+                extra += clip(&self.sweep_box(shard, kk.min(self.depth), s)) - owned_i;
+            }
+        }
+        extra
     }
 
     /// Measured halo words per grid point per exchange — the
@@ -303,10 +358,22 @@ impl ShardPlan {
     /// Peak resident words one shard's step needs: the halo-extended
     /// read buffer, the owned write block, and the transient [`HaloMsg`]
     /// payloads (which sum to halo-box minus owned words) — `2·|ext|` per
-    /// concurrently processed shard. The out-of-core driver divides the
-    /// RAM budget by this to pick its concurrency.
+    /// concurrently processed shard. A deep plan (`depth > 1`) ping-pongs
+    /// two halo-box buffers *and* extracts the owned block at the end, so
+    /// its peak is `2·|ext| + |owned|`. The out-of-core driver divides
+    /// the RAM budget by this to pick its concurrency.
     pub fn peak_working_words(&self) -> u64 {
-        (0..self.num_shards()).map(|s| 2 * box_words(&self.halo_box(s))).max().unwrap_or(0)
+        (0..self.num_shards())
+            .map(|s| {
+                let ext = 2 * box_words(&self.halo_box(s));
+                if self.depth > 1 {
+                    ext + box_words(&self.owned_box(s))
+                } else {
+                    ext
+                }
+            })
+            .max()
+            .unwrap_or(0)
     }
 }
 
@@ -512,6 +579,35 @@ mod tests {
         let p = ShardPlan::new(&[128, 128, 128], &[2, 2, 2], 2);
         assert_eq!(p.halo_words(), 8 * (66u64.pow(3) - 64u64.pow(3)));
         assert_eq!(p.pem_halo_bound(), 8 * (68u64.pow(3) - 64u64.pow(3)));
+    }
+
+    #[test]
+    fn deep_plan_grows_halo_by_depth_times_radius() {
+        let shallow = ShardPlan::new(&[32, 32], &[2, 2], 2);
+        let deep = ShardPlan::with_depth(&[32, 32], &[2, 2], 2, 3);
+        assert_eq!(shallow.depth(), 1);
+        assert_eq!(deep.depth(), 3);
+        for s in 0..deep.num_shards() {
+            let o = deep.owned_box(s);
+            let h = deep.halo_box(s);
+            for i in 0..2 {
+                assert_eq!(h[i].start, (o[i].start - 6).max(0));
+                assert_eq!(h[i].end, (o[i].end + 6).min(32));
+            }
+            // sweep boxes shrink by r per step down to the owned box
+            assert_eq!(deep.sweep_box(s, 3, 3), o);
+            let s1 = deep.sweep_box(s, 3, 1);
+            for i in 0..2 {
+                assert_eq!(s1[i].start, (o[i].start - 4).max(0));
+                assert_eq!(s1[i].end, (o[i].end + 4).min(32));
+            }
+        }
+        // depth scales the PEM surface term too
+        assert!(deep.pem_halo_bound() > shallow.pem_halo_bound());
+        assert_eq!(deep.pem_halo_bound(), 4 * ((16 + 12) * (16 + 12) - 16 * 16));
+        // a 1-step superstep recomputes nothing
+        assert_eq!(deep.redundant_points(1), 0);
+        assert!(deep.redundant_points(3) > deep.redundant_points(2));
     }
 
     #[test]

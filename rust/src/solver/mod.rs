@@ -89,10 +89,17 @@ pub struct NumericOutcome {
     pub executions: u64,
     /// Ghost words carried across shard boundaries by typed `HaloMsg`s —
     /// nonzero only for block-decomposed solves (`crate::shard`), where it
-    /// equals `steps · ShardPlan::halo_words()` exactly.
+    /// equals `rounds · ShardPlan::halo_words()` exactly, with
+    /// `rounds = ⌈steps / depth⌉` superstep exchange rounds (depth 1 — the
+    /// classic path — degenerates to `steps · halo_words()`).
     pub halo_words_loaded: u64,
     /// `HaloMsg` exchanges performed (block-decomposed solves only).
     pub halo_exchanges: u64,
+    /// Ghost-zone points recomputed redundantly by deep-halo (k-step)
+    /// supersteps — compute traded for exchange rounds, counted separately
+    /// from `halo_words_loaded` so the measured-vs-PEM ladder stays honest.
+    /// Zero for depth-1 solves and for the non-decomposed paths.
+    pub halo_redundant_words: u64,
 }
 
 /// A numeric execution backend: applies the stencil once, or runs an
@@ -291,6 +298,7 @@ impl<'a> NativeBackend<'a> {
             executions: steps as u64,
             halo_words_loaded: 0,
             halo_exchanges: 0,
+            halo_redundant_words: 0,
         })
     }
 
@@ -304,6 +312,10 @@ impl<'a> NativeBackend<'a> {
     /// (`engine::kernel`, same `KernelCfg`), and α are the classic path's
     /// own, so the result field is bitwise identical to
     /// [`NumericBackend::solve`] on the same job.
+    ///
+    /// `time_tile` (k ≥ 1) sets the superstep depth: halos deepen to `k·r`
+    /// and each exchange round advances up to k steps (DESIGN.md §2.12).
+    /// k = 1 is the classic one-exchange-per-step solver, bit for bit.
     pub fn solve_decomposed(
         &self,
         job: &NumericJob<'_>,
@@ -311,8 +323,14 @@ impl<'a> NativeBackend<'a> {
         shard_grid: &[usize],
         storage: &crate::shard::ShardStorage,
         ram_budget_words: Option<u64>,
+        time_tile: usize,
     ) -> Result<NumericOutcome> {
-        let plan = Arc::new(crate::shard::ShardPlan::new(job.dims, shard_grid, job.stencil.radius()));
+        let plan = Arc::new(crate::shard::ShardPlan::with_depth(
+            job.dims,
+            shard_grid,
+            job.stencil.radius(),
+            time_tile.max(1),
+        ));
         let alpha = Self::stable_alpha(job.stencil);
         let out = crate::shard::solve_blocks_cfg(
             &plan,
@@ -339,6 +357,7 @@ impl<'a> NativeBackend<'a> {
             executions: steps as u64,
             halo_words_loaded: out.halo_words_loaded,
             halo_exchanges: out.halo_exchanges,
+            halo_redundant_words: out.halo_redundant_words,
         })
     }
 }
@@ -373,6 +392,7 @@ impl NumericBackend for NativeBackend<'_> {
             executions: 1,
             halo_words_loaded: 0,
             halo_exchanges: 0,
+            halo_redundant_words: 0,
         })
     }
 
@@ -421,6 +441,7 @@ impl NumericBackend for NativeBackend<'_> {
             executions: steps as u64,
             halo_words_loaded: 0,
             halo_exchanges: 0,
+            halo_redundant_words: 0,
         })
     }
 }
@@ -470,6 +491,7 @@ impl NumericBackend for PjrtBackend {
             executions: 1,
             halo_words_loaded: 0,
             halo_exchanges: 0,
+            halo_redundant_words: 0,
         })
     }
 
@@ -493,6 +515,7 @@ impl NumericBackend for PjrtBackend {
             executions: steps as u64,
             halo_words_loaded: 0,
             halo_exchanges: 0,
+            halo_redundant_words: 0,
         })
     }
 }

@@ -160,6 +160,86 @@ fn out_of_core_solve_bitwise_equals_in_memory() {
     }
 }
 
+/// TENTPOLE (DESIGN.md §2.12): the k-deep superstep solve is **bitwise
+/// identical** to k classic single steps across dimensionality, radius,
+/// depth, and shard grids — fields exact, per-step norms within 1e-9 —
+/// while exchanging exactly `⌈steps/k⌉` full-depth halo rounds. Ghost
+/// recompute appears only when a superstep actually sweeps more than one
+/// step between exchanges.
+#[test]
+fn sharded_temporal_superstep_bitwise_equals_classic() {
+    let pool = ThreadPool::new(3);
+    let steps = 5usize; // not a multiple of k: the tail superstep runs short
+    let cases: &[(&[usize], &[usize])] = &[(&[48], &[3]), (&[26, 22], &[2, 2]), (&[16, 14, 12], &[2, 1, 2])];
+    for &(dims, grid) in cases {
+        for r in [1usize, 2, 4] {
+            let g = GridDesc::new(dims);
+            let s = Stencil::star(dims.len(), r);
+            let alpha = NativeBackend::stable_alpha(&s);
+            let u0 = solver::deterministic_field(&g, r, 0xBEEF);
+            let (u_ref, norms_ref) = classic_steps(&g, &s, &u0, alpha, steps);
+            for k in [1usize, 2, 4] {
+                let plan = Arc::new(ShardPlan::with_depth(dims, grid, r, k));
+                let (out, f) =
+                    solve_blocks_with_field(&plan, &s, alpha, steps, 0xBEEF, &ShardStorage::InMemory, &pool, None)
+                        .unwrap();
+                assert_eq!(
+                    f.gather().unwrap(),
+                    u_ref,
+                    "{dims:?} grid {grid:?} r={r} k={k}: field must be bitwise equal to {steps} classic steps"
+                );
+                assert_eq!(out.steps.len(), steps, "supersteps must still report per-step norms");
+                for (i, (sn, (u2, r2))) in out.steps.iter().zip(&norms_ref).enumerate() {
+                    assert!(
+                        close(sn.u2, *u2) && close(sn.r2, *r2),
+                        "{dims:?} grid {grid:?} r={r} k={k} step {i}: norm drift"
+                    );
+                }
+                let rounds = steps.div_ceil(k) as u64;
+                assert_eq!(
+                    out.halo_words_loaded,
+                    rounds * plan.halo_words(),
+                    "{dims:?} grid {grid:?} r={r} k={k}: exchange rounds must be ceil(steps/k)"
+                );
+                if k == 1 {
+                    assert_eq!(out.halo_redundant_words, 0, "depth-1 must not recompute ghost cells");
+                } else {
+                    assert!(
+                        out.halo_redundant_words > 0,
+                        "{dims:?} grid {grid:?} r={r} k={k}: deep supersteps recompute the halo rind"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// The deep-halo superstep path survives the out-of-core backend at the
+/// tightest budget (waves of one shard): same bits, same norms, same
+/// exchange-round accounting as the in-memory deep solve.
+#[test]
+fn out_of_core_temporal_solve_bitwise_equals_in_memory() {
+    let dims = vec![12usize, 10, 8];
+    let s = Stencil::star13();
+    let alpha = NativeBackend::stable_alpha(&s);
+    let plan = Arc::new(ShardPlan::with_depth(&dims, &[2, 2, 2], 2, 2));
+    let pool = ThreadPool::new(4);
+    let (mem_out, mem_f) =
+        solve_blocks_with_field(&plan, &s, alpha, 5, 0xBEEF, &ShardStorage::InMemory, &pool, None).unwrap();
+    let storage = ShardStorage::temp();
+    // budget of one deep working set ⇒ waves of exactly one shard at a time
+    let budget = plan.peak_working_words();
+    let (ooc_out, ooc_f) = solve_blocks_with_field(&plan, &s, alpha, 5, 0xBEEF, &storage, &pool, Some(budget)).unwrap();
+    assert_eq!(mem_f.gather().unwrap(), ooc_f.gather().unwrap(), "deep disk tiles must hold the same bits");
+    for (a, b) in mem_out.steps.iter().zip(&ooc_out.steps) {
+        assert_eq!(a.u2, b.u2);
+        assert_eq!(a.r2, b.r2);
+    }
+    assert_eq!(mem_out.halo_words_loaded, 3 * plan.halo_words(), "ceil(5/2) = 3 exchange rounds");
+    assert_eq!(ooc_out.halo_words_loaded, mem_out.halo_words_loaded);
+    assert_eq!(ooc_out.halo_redundant_words, mem_out.halo_redundant_words);
+}
+
 /// ACCEPTANCE (nightly): a 512³ star13 solve completes out-of-core under a
 /// 256 MiB RAM budget — 1/16 of the 4 GiB the in-memory ping-pong would
 /// need — with the planner-refined shard grid and energy decay intact.
@@ -189,6 +269,54 @@ fn out_of_core_512_cubed_under_ram_budget() {
     assert!(out.steps[0].u2.is_finite() && out.steps[0].u2 > 0.0);
     assert!(out.steps[1].u2 <= out.steps[0].u2 * 1.0001, "explicit heat step must not grow energy");
     assert_eq!(out.halo_words_loaded, 2 * plan.halo_words());
+    if let ShardStorage::OutOfCore { dir } = &storage {
+        assert!(!dir.exists(), "tile directory must be cleaned up");
+    }
+}
+
+/// ACCEPTANCE (nightly): the k-deep superstep path holds at scale — a 512³
+/// star13 solve runs out-of-core under the same 256 MiB budget with k = 2,
+/// exchanging one full-depth round per two steps. Run with:
+///
+/// ```text
+/// cargo test --release -q --test shard -- --ignored out_of_core_512_cubed_temporal
+/// ```
+#[test]
+#[ignore = "large: 512³ disk tiles (~2 GiB under $TMPDIR) + 4 full sweeps; nightly CI runs it in release"]
+fn out_of_core_512_cubed_temporal_k2_under_ram_budget() {
+    let dims = vec![512usize, 512, 512];
+    let s = Stencil::star13();
+    let alpha = NativeBackend::stable_alpha(&s);
+    let budget: u64 = 32 << 20; // 32 Mi words = 256 MiB of f64
+    // refine until the *deep* working set (halos at 2·r) fits the budget;
+    // deep peaks run a little above the classic peak the refiner targets
+    let mut refine_budget = budget;
+    let mut grid = shard::refine_grid_for_budget(&dims, 2, shard::choose_shard_grid(&dims, 2, 8), refine_budget);
+    for _ in 0..8 {
+        if ShardPlan::with_depth(&dims, &grid, 2, 2).peak_working_words() <= budget {
+            break;
+        }
+        refine_budget /= 2;
+        grid = shard::refine_grid_for_budget(&dims, 2, grid, refine_budget);
+    }
+    let plan = Arc::new(ShardPlan::with_depth(&dims, &grid, 2, 2));
+    assert!(
+        plan.peak_working_words() <= budget,
+        "refined grid {grid:?} must fit the deep working set: {} > {budget}",
+        plan.peak_working_words()
+    );
+    let pool = ThreadPool::with_default_parallelism();
+    let storage = ShardStorage::temp();
+    let steps = 4usize;
+    let out = solve_blocks(&plan, &s, alpha, steps, 0xBEEF, &storage, &pool, Some(budget)).unwrap();
+    assert_eq!(out.steps.len(), steps);
+    assert!(out.steps[0].u2.is_finite() && out.steps[0].u2 > 0.0);
+    assert!(
+        out.steps[steps - 1].u2 <= out.steps[0].u2 * 1.0001,
+        "explicit heat step must not grow energy"
+    );
+    assert_eq!(out.halo_words_loaded, 2 * plan.halo_words(), "ceil(4/2) = 2 full-depth exchange rounds");
+    assert!(out.halo_redundant_words > 0, "k = 2 supersteps recompute the halo rind");
     if let ShardStorage::OutOfCore { dir } = &storage {
         assert!(!dir.exists(), "tile directory must be cleaned up");
     }
