@@ -449,7 +449,13 @@ pub fn plan(config: &PlannerConfig, dims: &[usize], stencil: &Stencil, p: usize)
     // the deep plan's ping-pong working set would blow the RAM budget the
     // out-of-core concurrency divides by.
     let mut shard_time_tile = match config.time_tile {
-        Some(k) => k.max(1),
+        // A deep superstep needs a nonempty interior (every dim ≥ 2r+1);
+        // below that the solve would run classic per-step sweeps while
+        // still carrying k·r-deep halo boxes — all cost, no amortization.
+        // choose_shard_time_tile already refuses such grids; the explicit
+        // override must not sneak past the same guard.
+        Some(k) if dims.iter().all(|&n| n > 2 * stencil.radius()) => k.max(1),
+        Some(_) => 1,
         None => choose_shard_time_tile(&config.machine, dims, &shard_grid, stencil.radius()),
     };
     if config.time_tile.is_none() {
@@ -724,6 +730,20 @@ mod tests {
         // single-shard plans never deepen: there is no exchange to amortize
         let full = MachineModel::r10000_full();
         assert_eq!(choose_shard_time_tile(&full, &[32, 32, 32], &[1, 1, 1], 2), 1);
+    }
+
+    #[test]
+    fn time_tile_override_degrades_to_one_without_a_full_interior() {
+        // Any dim ≤ 2r means the superstep path cannot run; the explicit
+        // --time-tile override must clamp to 1 like the model path does,
+        // so tiny grids never carry k·r-deep halos through the classic
+        // per-step loop.
+        let c = PlannerConfig { shard_grid: Some(vec![2, 1]), time_tile: Some(4), ..cfg() };
+        let p = plan(&c, &[4, 16], &Stencil::star(2, 2), 1);
+        assert_eq!(p.shard_time_tile, 1);
+        // a grid that clears 2r+1 on every dim keeps the override verbatim
+        let p = plan(&c, &[16, 16], &Stencil::star(2, 2), 1);
+        assert_eq!(p.shard_time_tile, 4);
     }
 
     #[test]

@@ -785,6 +785,21 @@ pub fn solve_blocks_with_field_cfg(
 ) -> Result<(BlockSolveOutcome, ShardedField)> {
     assert_eq!(plan.ndim(), stencil.ndim(), "plan/stencil arity mismatch");
     assert_eq!(plan.radius(), stencil.radius(), "ghost width must equal the stencil radius");
+    // A deep plan only pays off when every dim has a nonempty interior
+    // (≥ 2r+1); below that the superstep path cannot run and the classic
+    // loop would exchange depth·r-deep halos every step, breaking the
+    // rounds = ⌈steps/depth⌉ invariant documented on BlockSolveOutcome.
+    // Degrade such plans to an equivalent depth-1 plan up front — the
+    // planner never emits one, but direct ShardPlan::with_depth callers
+    // (benches, CLI overrides) can.
+    let has_interior = plan.dims().iter().all(|&nn| nn >= 2 * plan.radius() + 1);
+    let clamped: Arc<ShardPlan>;
+    let plan: &Arc<ShardPlan> = if plan.depth() > 1 && !has_interior {
+        clamped = Arc::new(ShardPlan::with_depth(plan.dims(), plan.shard_grid(), plan.radius(), 1));
+        &clamped
+    } else {
+        plan
+    };
     let n = plan.num_shards();
     let conc = match (storage, ram_budget_words) {
         (ShardStorage::OutOfCore { .. }, Some(b)) => {
@@ -802,13 +817,11 @@ pub fn solve_blocks_with_field_cfg(
     };
     let mut cur = ShardedField::deterministic(plan.clone(), seed, storage, "a")?;
     let mut next = ShardedField::empty(plan.clone(), storage, "b")?;
-    let interior: Option<Vec<Range<i64>>> = {
+    let interior: Option<Vec<Range<i64>>> = if has_interior {
         let r = plan.radius();
-        if plan.dims().iter().all(|&nn| nn >= 2 * r + 1) {
-            Some(plan.dims().iter().map(|&nn| r as i64..(nn - r) as i64).collect())
-        } else {
-            None
-        }
+        Some(plan.dims().iter().map(|&nn| r as i64..(nn - r) as i64).collect())
+    } else {
+        None
     };
     let ids: Vec<usize> = (0..n).collect();
     let mut step_norms = Vec::with_capacity(steps);

@@ -255,14 +255,25 @@ impl ThreadPool {
                             }
                         };
                         let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| worker(task, sink)));
+                        // The termination predicates (abort, outstanding==0)
+                        // are checked under the queue mutex before cond.wait,
+                        // so every change to them must also happen while
+                        // holding that mutex — otherwise the notify can land
+                        // between a waiter's check and its wait (lost wakeup)
+                        // and the scope never joins.
                         if let Err(p) = out {
                             let mut slot = payload.lock().unwrap_or_else(PoisonError::into_inner);
                             slot.get_or_insert(p);
+                            let q = sink.queue.lock().unwrap_or_else(PoisonError::into_inner);
                             sink.abort.store(true, Ordering::Release);
+                            drop(q);
                             sink.cond.notify_all();
                             return;
                         }
-                        if sink.outstanding.fetch_sub(1, Ordering::SeqCst) == 1 {
+                        let q = sink.queue.lock().unwrap_or_else(PoisonError::into_inner);
+                        let last = sink.outstanding.fetch_sub(1, Ordering::SeqCst) == 1;
+                        drop(q);
+                        if last {
                             // last task retired: wake idle workers to exit
                             sink.cond.notify_all();
                         }
@@ -339,7 +350,13 @@ fn worker_loop(shared: &Shared) {
 
 impl Drop for ThreadPool {
     fn drop(&mut self) {
+        // shutdown is a termination predicate checked under the queue
+        // mutex in worker_loop; store it while holding that mutex so the
+        // notify cannot land between a worker's check and its wait (the
+        // same lost-wakeup window scope_tasks guards against).
+        let q = self.shared.queue.lock().unwrap_or_else(PoisonError::into_inner);
         self.shared.shutdown.store(true, Ordering::Release);
+        drop(q);
         self.shared.cond.notify_all();
         for w in self.workers.drain(..) {
             let _ = w.join();
@@ -479,6 +496,41 @@ mod tests {
                 panic!("graph boom");
             }
         });
+    }
+
+    #[test]
+    fn scope_tasks_terminates_under_rapid_repeated_drains() {
+        // Regression guard for the drain-end lost-wakeup race: the final
+        // outstanding decrement must be serialized with the waiters'
+        // predicate check (via the queue mutex), or an idle worker can
+        // sleep through the last notify and the scope never joins. Tiny
+        // tasks and many drains maximize contention on that edge — a
+        // regression shows up as this test hanging.
+        let pool = ThreadPool::new(4);
+        for round in 0..300u64 {
+            let count = AtomicU64::new(0);
+            pool.scope_tasks((0..8u64).collect(), |t, sink| {
+                count.fetch_add(1, Ordering::Relaxed);
+                if t < 8 {
+                    sink.push(t + 100);
+                }
+            });
+            assert_eq!(count.load(Ordering::Relaxed), 16, "round {round}");
+        }
+    }
+
+    #[test]
+    fn scope_tasks_panicking_drains_always_unwind() {
+        // The abort flag is a termination predicate too: storing it must
+        // hold the queue mutex so every waiter observes it, and the
+        // caller must get the payload back on every single drain.
+        let pool = ThreadPool::new(4);
+        for round in 0..100 {
+            let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                pool.scope_tasks(vec![0usize; 8], |_, _| panic!("abort drain"));
+            }));
+            assert!(r.is_err(), "round {round} must re-raise the task panic");
+        }
     }
 
     #[test]

@@ -214,6 +214,36 @@ fn sharded_temporal_superstep_bitwise_equals_classic() {
     }
 }
 
+/// A deep plan on a grid with no full interior (some dim < 2r+1) cannot
+/// run supersteps; the solve must degrade it to depth-1 halos rather than
+/// exchanging k·r-deep ghost boxes every classic step — bits equal to the
+/// classic reference, traffic equal to a depth-1 plan, nothing recomputed.
+#[test]
+fn degenerate_deep_plan_degrades_to_classic_depth_one_accounting() {
+    let pool = ThreadPool::new(3);
+    let steps = 4usize;
+    // dim 0 = 4 < 2r+1 = 5 ⇒ no interior anywhere along that axis
+    let (dims, grid, r) = (vec![4usize, 12], vec![2usize, 2], 2usize);
+    let g = GridDesc::new(&dims);
+    let s = Stencil::star(2, r);
+    let alpha = NativeBackend::stable_alpha(&s);
+    let u0 = solver::deterministic_field(&g, r, 0xBEEF);
+    let (u_ref, norms_ref) = classic_steps(&g, &s, &u0, alpha, steps);
+    let deep = Arc::new(ShardPlan::with_depth(&dims, &grid, r, 3));
+    let (out, f) = solve_blocks_with_field(&deep, &s, alpha, steps, 0xBEEF, &ShardStorage::InMemory, &pool, None).unwrap();
+    assert_eq!(f.gather().unwrap(), u_ref, "degenerate deep plan must still match the classic field");
+    for (sn, (u2, r2)) in out.steps.iter().zip(&norms_ref) {
+        assert!(close(sn.u2, *u2) && close(sn.r2, *r2), "norm drift on the degenerate path");
+    }
+    let shallow = ShardPlan::new(&dims, &grid, r);
+    assert_eq!(
+        out.halo_words_loaded,
+        steps as u64 * shallow.halo_words(),
+        "tiny grids must pay depth-1 halo traffic, not the deep plan's"
+    );
+    assert_eq!(out.halo_redundant_words, 0, "no superstep ⇒ no ghost recompute");
+}
+
 /// The deep-halo superstep path survives the out-of-core backend at the
 /// tightest budget (waves of one shard): same bits, same norms, same
 /// exchange-round accounting as the in-memory deep solve.
